@@ -1,0 +1,86 @@
+//! Ablation laboratory: λ sweep, course-alteration settings, and routing
+//! policies on one benchmark — a fast interactive version of Appendices
+//! D, F, and G.
+//!
+//!     cargo run --release --offline --example ablation_lab
+
+use litecoop::coordinator::{run_one, RunSpec, Searcher};
+use litecoop::sim::Target;
+
+fn main() {
+    let bench = "deepseek_moe";
+    let budget = 150;
+
+    println!("== λ sweep (Appendix D) on {bench}, CPU, LiteCoOp(8) ==");
+    for lambda in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let mut spec = RunSpec::new(
+            bench,
+            Target::Cpu,
+            Searcher::Coop {
+                n: 8,
+                largest: "gpt-5.2".into(),
+            },
+            budget,
+            7,
+        );
+        spec.lambda = lambda;
+        let r = run_one(&spec);
+        let total: usize = r.call_counts.iter().map(|(_, a, b)| a + b).sum();
+        let (lr, lc) = r.invocation_rate("gpt-5.2");
+        println!(
+            "λ={lambda:.2}: speedup {:.2}x  cost ${:.3}  largest share {:.1}% ({} calls total)",
+            r.best_speedup,
+            r.api_cost_usd,
+            (lr + lc) * 100.0,
+            total
+        );
+    }
+
+    println!("\n== course alteration (Appendix F) ==");
+    for (label, ca) in [("off", None), ("every-1", Some(1)), ("every-2", Some(2))] {
+        let mut spec = RunSpec::new(
+            bench,
+            Target::Cpu,
+            Searcher::Coop {
+                n: 8,
+                largest: "gpt-5.2".into(),
+            },
+            budget,
+            7,
+        );
+        spec.ca_threshold = ca;
+        let r = run_one(&spec);
+        println!(
+            "CA {label:<8}: speedup {:.2}x  CA events {}  time {:.0}s  cost ${:.3}",
+            r.best_speedup, r.n_ca_events, r.compile_time_s, r.api_cost_usd
+        );
+    }
+
+    println!("\n== routing (Appendix G) ==");
+    let routers = [
+        Searcher::Coop {
+            n: 8,
+            largest: "gpt-5.2".into(),
+        },
+        Searcher::RandomRouting {
+            n: 8,
+            largest: "gpt-5.2".into(),
+        },
+        Searcher::RoundRobinRouting {
+            n: 8,
+            largest: "gpt-5.2".into(),
+        },
+    ];
+    for s in routers {
+        let spec = RunSpec::new(bench, Target::Cpu, s.clone(), budget, 7);
+        let r = run_one(&spec);
+        println!(
+            "{:<12}: speedup {:.2}x  time {:.0}s  cost ${:.3}",
+            s.label(),
+            r.best_speedup,
+            r.compile_time_s,
+            r.api_cost_usd
+        );
+    }
+    println!("\nablation_lab OK");
+}

@@ -1,0 +1,63 @@
+//! Full collaborative search demo: 8 heterogeneous LLMs on the Llama-3-8B
+//! attention layer, GPU and CPU targets, with invocation-rate breakdown —
+//! the scenario of the paper's Figure 1/Table 2.
+//!
+//!     cargo run --release --offline --example collab_search [budget]
+
+use litecoop::baselines;
+use litecoop::mcts::SearchConfig;
+use litecoop::schedule::Schedule;
+use litecoop::sim::Target;
+use litecoop::workloads;
+use std::sync::Arc;
+
+fn main() {
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(300);
+    for target in [Target::Gpu, Target::Cpu] {
+        let w = Arc::new(workloads::attention::llama3_attention());
+        let root = Schedule::initial(w);
+        let cfg = SearchConfig {
+            budget,
+            seed: 7,
+            ..SearchConfig::default()
+        };
+        println!("== 8-LLM collaborative search, {} target, {budget} samples ==", target.name());
+        let single = baselines::single_llm(
+            "gpt-5.2",
+            target,
+            root.clone(),
+            cfg.clone(),
+            "llama3_attention",
+        );
+        let coop = baselines::litecoop(8, "gpt-5.2", target, root, cfg, "llama3_attention");
+        println!(
+            "single gpt-5.2 : speedup {:.2}x  time {:.0}s  cost ${:.2}",
+            single.best_speedup, single.compile_time_s, single.api_cost_usd
+        );
+        println!(
+            "LiteCoOp(8)    : speedup {:.2}x  time {:.0}s  cost ${:.2}  (time red {:.2}x, cost red {:.2}x)",
+            coop.best_speedup,
+            coop.compile_time_s,
+            coop.api_cost_usd,
+            single.compile_time_s / coop.compile_time_s,
+            single.api_cost_usd / coop.api_cost_usd
+        );
+        let total: usize = coop.call_counts.iter().map(|(_, a, b)| a + b).sum();
+        println!("invocation rates:");
+        for (name, reg, ca) in &coop.call_counts {
+            if reg + ca > 0 {
+                println!(
+                    "  {:<32} {:>5.1}%  ({} regular, {} course-alteration)",
+                    name,
+                    (reg + ca) as f64 / total as f64 * 100.0,
+                    reg,
+                    ca
+                );
+            }
+        }
+        println!("speedup vs samples: {:?}\n", coop.curve);
+    }
+}

@@ -1,0 +1,88 @@
+//! END-TO-END driver (the required full-system workload): compile the
+//! Llama-3-8B layer graph with LiteCoOp(8 LLMs), report speedup /
+//! compile-time / API-cost vs the single-large baseline (paper Table 3),
+//! and then prove all three layers compose by loading the AOT Llama block
+//! artifact (Layer-2 JAX + Layer-1 Pallas flash-attention) and serving
+//! batched executions through the PJRT runtime with latency stats.
+//!
+//!     make artifacts && cargo run --release --offline --example e2e_llama
+
+use litecoop::coordinator::{run_e2e, Searcher};
+use litecoop::runtime::Runtime;
+use litecoop::sim::Target;
+use litecoop::workloads::llama_e2e;
+
+fn main() -> litecoop::Result<()> {
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(240);
+
+    // ---- Part 1: end-to-end schedule search over the layer graph --------
+    let graph = llama_e2e::llama3_8b_graph();
+    println!(
+        "== e2e Llama-3-8B: {} unique tasks, {:.1} TFLOP total ==",
+        graph.tasks.len(),
+        graph.flops() / 1e12
+    );
+    for target in [Target::Gpu, Target::Cpu] {
+        let single = run_e2e(
+            &graph,
+            target,
+            &Searcher::Single("gpt-5.2".into()),
+            budget,
+            7,
+        );
+        let coop = run_e2e(
+            &graph,
+            target,
+            &Searcher::Coop {
+                n: 8,
+                largest: "gpt-5.2".into(),
+            },
+            budget,
+            7,
+        );
+        println!(
+            "{}: single {:.2}x | LiteCoOp(8) {:.2}x ({:.2}x vs single), time red {:.2}x, cost red {:.2}x",
+            target.name(),
+            single.speedup,
+            coop.speedup,
+            coop.speedup / single.speedup,
+            single.compile_time_s / coop.compile_time_s,
+            single.api_cost_usd / coop.api_cost_usd
+        );
+    }
+
+    // ---- Part 2: serve the real AOT artifact through PJRT ----------------
+    println!("\n== PJRT serving: llama_block artifact (L2 JAX + L1 Pallas) ==");
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("artifacts unavailable ({e}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let art = rt.load("llama_block")?;
+    let mut latencies = Vec::new();
+    for batch in 0..8u64 {
+        let inputs = rt.random_inputs(&art, 100 + batch)?;
+        let t = std::time::Instant::now();
+        let out = rt.execute(&art, &inputs)?;
+        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        assert!(out.iter().all(|x| x.is_finite()), "non-finite output");
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean: f64 = latencies.iter().sum::<f64>() / latencies.len() as f64;
+    println!(
+        "served {} requests: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms, throughput {:.1} req/s",
+        latencies.len(),
+        mean,
+        latencies[latencies.len() / 2],
+        latencies[latencies.len() - 1],
+        1000.0 / mean
+    );
+    println!("e2e_llama OK");
+    Ok(())
+}

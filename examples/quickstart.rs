@@ -1,0 +1,28 @@
+//! Quickstart: collaborative 2-LLM search on a plain GEMM, 120 samples.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use litecoop::baselines;
+use litecoop::mcts::SearchConfig;
+use litecoop::schedule::Schedule;
+use litecoop::sim::Target;
+use litecoop::workloads::gemm;
+use std::sync::Arc;
+
+fn main() {
+    let root = Schedule::initial(Arc::new(gemm::gemm(1024, 1024, 1024)));
+    let cfg = SearchConfig {
+        budget: 120,
+        seed: 1,
+        ..SearchConfig::default()
+    };
+    println!("== LiteCoOp quickstart: GEMM 1024^3 on the CPU model, 2 LLMs ==");
+    let r = baselines::litecoop(2, "gpt-5.2", Target::Cpu, root, cfg, "gemm");
+    println!("speedup over unoptimized : {:.2}x", r.best_speedup);
+    println!("simulated compile time   : {:.0}s", r.compile_time_s);
+    println!("simulated API cost       : ${:.3}", r.api_cost_usd);
+    println!("samples searched         : {}", r.n_samples);
+    println!("\nbest schedule trace:\n{}", r.best_schedule.trace.render_tail(10));
+    assert!(r.best_speedup > 1.0);
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,80 @@
+"""AOT pipeline: lower every L2 workload to HLO *text* under artifacts/.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``). The HLO text parser on the rust side reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+Python runs exactly once, at build time; the rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_workload(name: str):
+    fn, args_fn = model.WORKLOADS[name]
+    args = args_fn()
+    # Wrap in a 1-tuple so the rust side can always unwrap with to_tuple1().
+    tupled = lambda *a: (fn(*a),)
+    lowered = jax.jit(tupled).lower(*args)
+    return to_hlo_text(lowered), args
+
+
+def arg_manifest(args) -> list[dict]:
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", nargs="*", default=None,
+                   help="subset of workload names")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    names = args.only or list(model.WORKLOADS)
+    for name in names:
+        text, ex_args = lower_workload(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest[name] = {
+            "hlo": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "args": arg_manifest(ex_args),
+        }
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+All kernels run under ``interpret=True`` so they lower to plain HLO that the
+rust PJRT CPU client can execute (real-TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot run; see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .attention import flash_attention
+from .matmul import matmul
+
+__all__ = ["flash_attention", "matmul"]

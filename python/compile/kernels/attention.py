@@ -1,0 +1,118 @@
+"""Flash-attention Pallas kernel (Layer 1).
+
+Online-softmax attention: for each Q tile we stream K/V tiles through VMEM,
+maintaining a running max and running sum so the full (seq_q, seq_kv) score
+matrix never materializes. This is the TPU re-think of the CUDA
+flash-attention insight: BlockSpec expresses the HBM->VMEM schedule that the
+original paper expressed with threadblocks + shared memory, and the (bq, d)
+x (d, bk) products target the MXU.
+
+Grid: (batch*heads, seq_q/bq, seq_kv/bk) with the KV axis innermost so each
+Q tile revisits its output block while the online-softmax state (m, l) lives
+in VMEM scratch.
+
+Runs under ``interpret=True`` on this image (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, n_kv: int, causal: bool, bq: int, bk: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0].astype(jnp.float32)          # (bk, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    if causal:
+        q_idx = pl.program_id(1)
+        rows = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, _NEG_INF)
+
+    m_prev = m_ref[...]                       # (bq,)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    p = jnp.exp(s - m_new[:, None])           # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)           # rescale of old accumulator
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finalize():
+        # Guard against fully-masked rows (l == 0 can only happen with an
+        # all -inf row, which causal masking never produces for valid rows).
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, bq: int = 128,
+                    bk: int = 128) -> jax.Array:
+    """Softmax(Q K^T / sqrt(d)) V with online softmax.
+
+    Shapes: q, k, v are (batch_heads, seq, d) -> (batch_heads, seq, d).
+    Callers with separate batch/head dims reshape before/after.
+    """
+    bh, sq, d = q.shape
+    bh2, skv, d2 = k.shape
+    assert (bh, d) == (bh2, d2), "q/k shape mismatch"
+    assert v.shape == k.shape, "k/v shape mismatch"
+    if causal:
+        assert sq == skv, "causal attention requires square score matrix"
+    bq = _pick_block(sq, bq)
+    bk_ = _pick_block(skv, bk)
+    n_kv = skv // bk_
+    grid = (bh, sq // bq, n_kv)
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, n_kv=n_kv,
+                          causal=causal, bq=bq, bk=bk_),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk_, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max  m
+            pltpu.VMEM((bq,), jnp.float32),      # running sum  l
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,76 @@
+"""Tiled matmul Pallas kernel (Layer 1).
+
+TPU-idiomatic tiling: blocks are chosen to keep the working set in VMEM and
+to feed the MXU systolic array with (bm, bk) x (bk, bn) tiles whose lane
+dimensions are multiples of the 128-wide MXU where shapes allow. On this
+image the kernel always runs under ``interpret=True`` (CPU PJRT); the VMEM /
+MXU analysis lives in DESIGN.md §Perf.
+
+The grid walks (M/bm, N/bn, K/bk); the K axis is the innermost grid
+dimension so each (i, j) output tile sees its K-partials in order and can
+accumulate in place — the canonical Pallas revisiting-output pattern, which
+double-buffers the A/B tiles between HBM and VMEM automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One grid step: accumulate a (bm, bk) @ (bk, bn) partial product."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # fp32 accumulation regardless of input dtype: this is the MXU contract
+    # (bf16 inputs, f32 accumulate).
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (>= 1)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jax.Array:
+    """C = A @ B with a Pallas tiled kernel (interpret mode).
+
+    Shapes: a (M, K), b (K, N) -> (M, N). Block sizes are clipped to the
+    largest divisors of the respective dims so odd shapes still work.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,
+    )(a, b)

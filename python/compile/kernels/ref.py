@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 workloads.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+and the composed models match these references to float tolerance.
+No pallas, no tricks — straight jnp so the math is auditable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)).astype(
+        jnp.promote_types(a.dtype, b.dtype))
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False) -> jax.Array:
+    """Softmax(Q K^T / sqrt(d)) V over (batch_heads, seq, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, skv), dtype=bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_mlp_ref(x, w_gate, w_up, w_down):
+    """Llama-style gated MLP: (silu(x W_g) * (x W_u)) W_d."""
+    x32 = x.astype(jnp.float32)
+    g = jax.nn.silu(x32 @ w_gate.astype(jnp.float32))
+    u = x32 @ w_up.astype(jnp.float32)
+    return ((g * u) @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_ref(x, w_router, experts_gate, experts_up, experts_down, *, top_k=2):
+    """Dense-evaluated mixture-of-experts with softmax-of-top-k routing.
+
+    Every expert is evaluated and the result is mixed by the (renormalized)
+    top-k gate — the standard dense MoE reference used to validate sparse
+    dispatch implementations.
+    """
+    x32 = x.astype(jnp.float32)
+    logits = x32 @ w_router.astype(jnp.float32)         # (tokens, n_exp)
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)           # (tokens, top_k)
+    mix = jnp.zeros_like(logits).at[
+        jnp.arange(logits.shape[0])[:, None], top_idx].set(gates)
+
+    def one_expert(wg, wu, wd):
+        g = jax.nn.silu(x32 @ wg.astype(jnp.float32))
+        u = x32 @ wu.astype(jnp.float32)
+        return (g * u) @ wd.astype(jnp.float32)
+
+    outs = jax.vmap(one_expert)(experts_gate, experts_up, experts_down)
+    return jnp.einsum("te,etd->td", mix, outs).astype(x.dtype)
+
+
+def conv2d_ref(x, w, *, stride=1):
+    """NHWC conv with HWIO weights, VALID padding."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+
+
+def im2col_ref(x, kh, kw, stride=1):
+    """Extract conv patches: (N, OH, OW, KH*KW*C) for VALID padding."""
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                x[:, i:i + stride * oh:stride, j:j + stride * ow:stride, :])
+    return jnp.concatenate(patches, axis=-1).reshape(n, oh, ow, kh * kw * c)

@@ -1,0 +1,265 @@
+"""Layer-2 JAX models: the paper's five benchmark kernels + a Llama block.
+
+Each workload is a jit-able function whose compute hot-spots go through the
+Layer-1 Pallas kernels (flash_attention, tiled matmul). `aot.py` lowers each
+of these to HLO text under `artifacts/` where the rust runtime
+(rust/src/runtime/) loads and executes them via PJRT — Python never runs on
+the request path.
+
+Shapes are reduced replicas of the paper's benchmarks (§3.1):
+  llama3_attention    — self-attention layer of Llama-3-8B   (GQA heads)
+  deepseek_moe        — MoE layer of DeepSeek-R1             (top-2 routing)
+  flux_attention      — self-attention layer of FLUX          (non-causal)
+  flux_conv           — convolution layer of FLUX             (im2col + matmul)
+  llama4_mlp          — MLP layer of Llama-4-Scout            (SwiGLU)
+  llama_block         — one full Llama block (e2e anchor)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, matmul
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Reduced shape configs. dims chosen so pallas tiles divide evenly and AOT
+# compile stays fast; the rust-side search operates on the *full-size*
+# workload descriptions (rust/src/workloads/), these artifacts anchor
+# absolute latency + numerics.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    batch: int = 1
+    heads: int = 8
+    seq: int = 128
+    head_dim: int = 64
+    causal: bool = True
+
+    @property
+    def d_model(self) -> int:
+        return self.heads * self.head_dim
+
+
+LLAMA3_ATTN = AttnConfig(batch=1, heads=8, seq=128, head_dim=64, causal=True)
+FLUX_ATTN = AttnConfig(batch=1, heads=8, seq=256, head_dim=64, causal=False)
+
+
+def attention_layer(cfg: AttnConfig, x, wq, wk, wv, wo):
+    """x:(B,S,D) -> (B,S,D); projections via the pallas matmul, core via
+    the pallas flash-attention kernel."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    q = matmul(x2, wq).reshape(b, s, cfg.heads, cfg.head_dim)
+    k = matmul(x2, wk).reshape(b, s, cfg.heads, cfg.head_dim)
+    v = matmul(x2, wv).reshape(b, s, cfg.heads, cfg.head_dim)
+    # (B,S,H,Dh) -> (B*H, S, Dh)
+    def to_bh(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * cfg.heads, s, cfg.head_dim)
+    o = flash_attention(to_bh(q), to_bh(k), to_bh(v), causal=cfg.causal)
+    o = o.reshape(b, cfg.heads, s, cfg.head_dim).transpose(0, 2, 1, 3)
+    o = o.reshape(b * s, d)
+    return matmul(o, wo).reshape(b, s, d)
+
+
+def llama3_attention(x, wq, wk, wv, wo):
+    return attention_layer(LLAMA3_ATTN, x, wq, wk, wv, wo)
+
+
+def flux_attention(x, wq, wk, wv, wo):
+    return attention_layer(FLUX_ATTN, x, wq, wk, wv, wo)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    tokens: int = 128
+    d_model: int = 256
+    d_ff: int = 512
+    n_experts: int = 4
+    top_k: int = 2
+
+
+DEEPSEEK_MOE = MoeConfig()
+
+
+def deepseek_moe(x, w_router, eg, eu, ed):
+    """Dense-compute MoE (all experts evaluated, mixed by top-k gates).
+
+    Dense evaluation keeps shapes static for AOT lowering; the rust-side
+    search space still models the sparse-dispatch schedule axis.
+    Expert FFNs run through the pallas matmul kernel.
+    """
+    cfg = DEEPSEEK_MOE
+    x32 = x.astype(jnp.float32)
+    logits = matmul(x32, w_router)
+    top_vals, top_idx = jax.lax.top_k(logits, cfg.top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    mix = jnp.zeros_like(logits).at[
+        jnp.arange(logits.shape[0])[:, None], top_idx].set(gates)
+
+    outs = []
+    for e in range(cfg.n_experts):
+        g = jax.nn.silu(matmul(x32, eg[e]))
+        u = matmul(x32, eu[e])
+        outs.append(matmul(g * u, ed[e]))
+    stacked = jnp.stack(outs, axis=0)                 # (E, T, D)
+    return jnp.einsum("te,etd->td", mix, stacked).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    batch: int = 1
+    h: int = 32
+    w: int = 32
+    c_in: int = 64
+    c_out: int = 128
+    kh: int = 3
+    kw: int = 3
+    stride: int = 1
+
+
+FLUX_CONV = ConvConfig()
+
+
+def flux_conv(x, w):
+    """NHWC conv as im2col + pallas matmul (the classic GEMM lowering)."""
+    cfg = FLUX_CONV
+    patches = ref.im2col_ref(x, cfg.kh, cfg.kw, cfg.stride)
+    n, oh, ow, kdim = patches.shape
+    flat = patches.reshape(n * oh * ow, kdim)
+    w2 = w.reshape(kdim, cfg.c_out)
+    out = matmul(flat, w2)
+    return out.reshape(n, oh, ow, cfg.c_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    tokens: int = 128
+    d_model: int = 256
+    d_ff: int = 1024
+
+
+LLAMA4_MLP = MlpConfig()
+
+
+def llama4_mlp(x, w_gate, w_up, w_down):
+    """SwiGLU MLP through the pallas matmul kernel."""
+    g = jax.nn.silu(matmul(x, w_gate))
+    u = matmul(x, w_up)
+    return matmul(g * u, w_down)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    batch: int = 1
+    heads: int = 4
+    seq: int = 64
+    head_dim: int = 32
+    d_ff: int = 256
+
+    @property
+    def d_model(self) -> int:
+        return self.heads * self.head_dim
+
+
+LLAMA_BLOCK = BlockConfig()
+
+
+def llama_block(x, w_attn_norm, wq, wk, wv, wo, w_mlp_norm, wg, wu, wd):
+    """One pre-norm Llama decoder block: the e2e numeric anchor."""
+    cfg = LLAMA_BLOCK
+    acfg = AttnConfig(batch=cfg.batch, heads=cfg.heads, seq=cfg.seq,
+                      head_dim=cfg.head_dim, causal=True)
+    h = x + attention_layer(acfg, ref.rmsnorm_ref(x, w_attn_norm),
+                            wq, wk, wv, wo)
+    b, s, d = h.shape
+    h2 = ref.rmsnorm_ref(h, w_mlp_norm).reshape(b * s, d)
+    return h + llama4_mlp_like(h2, wg, wu, wd).reshape(b, s, d)
+
+
+def llama4_mlp_like(x, wg, wu, wd):
+    g = jax.nn.silu(matmul(x, wg))
+    u = matmul(x, wu)
+    return matmul(g * u, wd)
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (shared by aot.py and the tests).
+# ---------------------------------------------------------------------------
+
+def _key(seed: int):
+    return jax.random.PRNGKey(seed)
+
+
+def attn_example_args(cfg: AttnConfig, seed: int = 0):
+    ks = jax.random.split(_key(seed), 5)
+    d = cfg.d_model
+    scale = 1.0 / (d ** 0.5)
+    x = jax.random.normal(ks[0], (cfg.batch, cfg.seq, d), jnp.float32)
+    mk = lambda k: jax.random.normal(k, (d, d), jnp.float32) * scale
+    return (x, mk(ks[1]), mk(ks[2]), mk(ks[3]), mk(ks[4]))
+
+
+def moe_example_args(seed: int = 0):
+    cfg = DEEPSEEK_MOE
+    ks = jax.random.split(_key(seed), 5)
+    s1 = 1.0 / (cfg.d_model ** 0.5)
+    s2 = 1.0 / (cfg.d_ff ** 0.5)
+    x = jax.random.normal(ks[0], (cfg.tokens, cfg.d_model), jnp.float32)
+    w_router = jax.random.normal(ks[1], (cfg.d_model, cfg.n_experts)) * s1
+    eg = jax.random.normal(ks[2], (cfg.n_experts, cfg.d_model, cfg.d_ff)) * s1
+    eu = jax.random.normal(ks[3], (cfg.n_experts, cfg.d_model, cfg.d_ff)) * s1
+    ed = jax.random.normal(ks[4], (cfg.n_experts, cfg.d_ff, cfg.d_model)) * s2
+    return (x, w_router, eg, eu, ed)
+
+
+def conv_example_args(seed: int = 0):
+    cfg = FLUX_CONV
+    ks = jax.random.split(_key(seed), 2)
+    x = jax.random.normal(ks[0], (cfg.batch, cfg.h, cfg.w, cfg.c_in))
+    w = jax.random.normal(
+        ks[1], (cfg.kh, cfg.kw, cfg.c_in, cfg.c_out)) / (cfg.kh * cfg.kw * cfg.c_in) ** 0.5
+    return (x, w)
+
+
+def mlp_example_args(seed: int = 0):
+    cfg = LLAMA4_MLP
+    ks = jax.random.split(_key(seed), 4)
+    s1 = 1.0 / (cfg.d_model ** 0.5)
+    s2 = 1.0 / (cfg.d_ff ** 0.5)
+    x = jax.random.normal(ks[0], (cfg.tokens, cfg.d_model))
+    wg = jax.random.normal(ks[1], (cfg.d_model, cfg.d_ff)) * s1
+    wu = jax.random.normal(ks[2], (cfg.d_model, cfg.d_ff)) * s1
+    wd = jax.random.normal(ks[3], (cfg.d_ff, cfg.d_model)) * s2
+    return (x, wg, wu, wd)
+
+
+def block_example_args(seed: int = 0):
+    cfg = LLAMA_BLOCK
+    ks = jax.random.split(_key(seed), 10)
+    d, f = cfg.d_model, cfg.d_ff
+    s1, s2 = 1.0 / d ** 0.5, 1.0 / f ** 0.5
+    x = jax.random.normal(ks[0], (cfg.batch, cfg.seq, d))
+    norm1 = jnp.ones((d,), jnp.float32)
+    norm2 = jnp.ones((d,), jnp.float32)
+    mk = lambda k, shape, s: jax.random.normal(k, shape) * s
+    return (x, norm1, mk(ks[1], (d, d), s1), mk(ks[2], (d, d), s1),
+            mk(ks[3], (d, d), s1), mk(ks[4], (d, d), s1), norm2,
+            mk(ks[5], (d, f), s1), mk(ks[6], (d, f), s1), mk(ks[7], (f, d), s2))
+
+
+WORKLOADS = {
+    "llama3_attention": (llama3_attention,
+                         lambda: attn_example_args(LLAMA3_ATTN)),
+    "flux_attention": (flux_attention,
+                       lambda: attn_example_args(FLUX_ATTN, seed=1)),
+    "deepseek_moe": (deepseek_moe, moe_example_args),
+    "flux_conv": (flux_conv, conv_example_args),
+    "llama4_mlp": (llama4_mlp, mlp_example_args),
+    "llama_block": (llama_block, block_example_args),
+}

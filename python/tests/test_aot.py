@@ -1,0 +1,42 @@
+"""AOT pipeline contract: every workload lowers to parseable HLO text with
+the entry signature the rust runtime expects."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", list(model.WORKLOADS))
+def test_lowering_produces_hlo_text(name):
+    text, args = aot.lower_workload(name)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True must yield a tuple root so rust can to_tuple1()
+    assert "tuple(" in text or "tuple(" in text.lower()
+    assert len(args) >= 1
+
+
+def test_manifest_arg_shapes_roundtrip():
+    _, args = aot.lower_workload("llama4_mlp")
+    man = aot.arg_manifest(args)
+    assert man[0]["shape"] == [model.LLAMA4_MLP.tokens, model.LLAMA4_MLP.d_model]
+    assert all(m["dtype"] == "float32" for m in man)
+
+
+def test_artifacts_dir_contents_if_built():
+    """If `make artifacts` has run, the manifest must agree with disk."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built yet")
+    with open(man_path) as f:
+        man = json.load(f)
+    for name, entry in man.items():
+        hlo = os.path.join(art, entry["hlo"])
+        assert os.path.exists(hlo), hlo
+        with open(hlo) as f:
+            head = f.read(4096)
+        assert "HloModule" in head

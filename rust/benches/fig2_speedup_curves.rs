@@ -1,0 +1,18 @@
+//! Bench wrapper for Figure 2: runs the experiment harness end-to-end at a
+//! reduced budget and reports wall-clock (cargo bench target per paper
+//! artifact — see DESIGN.md §Experiment-index). Full-fidelity numbers come
+//! from `cargo run --release --bin experiments -- fig2`.
+
+use litecoop::benchutil::time_once;
+use std::process::Command;
+
+fn main() {
+    let exe = env!("CARGO_BIN_EXE_experiments");
+    time_once("fig2_speedup_curves(end-to-end, reduced budget)", || {
+        let status = Command::new(exe)
+            .args(["fig2", "--budget", "60", "--reps", "1"])
+            .status()
+            .expect("spawn experiments");
+        assert!(status.success(), "fig2 failed");
+    });
+}

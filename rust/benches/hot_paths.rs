@@ -1,0 +1,100 @@
+//! Hot-path microbenchmarks (§Perf): MCTS iteration components, GBT
+//! inference, simulator eval, featurization, schedule apply, prompt
+//! render. Run with `cargo bench --bench hot_paths`.
+
+use litecoop::benchutil::bench_fn;
+use litecoop::costmodel::{features, CostModel};
+use litecoop::llm::prompts;
+use litecoop::llm::registry::paper_config;
+use litecoop::llm::ModelSet;
+use litecoop::mcts::{Mcts, SearchConfig};
+use litecoop::schedule::printer::print_dominant;
+use litecoop::schedule::transforms::{apply, TransformKind};
+use litecoop::schedule::Schedule;
+use litecoop::sim::{Simulator, Target};
+use litecoop::util::Rng;
+use litecoop::workloads;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let w = Arc::new(workloads::attention::llama3_attention());
+    let base = Schedule::initial(w.clone());
+    let sim_cpu = Simulator::new(Target::Cpu);
+    let sim_gpu = Simulator::new(Target::Gpu);
+    let mut rng = Rng::new(1);
+
+    // a moderately-transformed schedule (realistic hot-path input)
+    let mut sched = base.clone();
+    let vocab = TransformKind::vocabulary(false);
+    for _ in 0..12 {
+        if let Ok(n) = apply(&sched, *rng.choice(&vocab), &mut rng, false) {
+            sched = n;
+        }
+    }
+
+    bench_fn("schedule_apply_tilesize", budget, || {
+        let _ = apply(&sched, TransformKind::TileSize, &mut rng, false);
+    });
+
+    bench_fn("sim_latency_cpu_attention", budget, || {
+        std::hint::black_box(sim_cpu.latency(&sched));
+    });
+    bench_fn("sim_latency_gpu_attention", budget, || {
+        std::hint::black_box(sim_gpu.latency(&sched));
+    });
+
+    bench_fn("featurize_attention", budget, || {
+        std::hint::black_box(features::featurize(&sched, Target::Cpu));
+    });
+
+    // trained cost model inference
+    let mut cm = CostModel::new(Target::Cpu, 7);
+    let mut r2 = Rng::new(2);
+    for _ in 0..120 {
+        let seq: Vec<_> = (0..3).map(|_| *r2.choice(&vocab)).collect();
+        if let Ok(s) =
+            litecoop::schedule::transforms::apply_sequence(&base, &seq, &mut r2, false)
+        {
+            cm.measure(&sim_cpu, &s);
+        }
+    }
+    bench_fn("costmodel_predict", budget, || {
+        std::hint::black_box(cm.predict_latency(&sched));
+    });
+
+    // prompt rendering
+    let set = ModelSet::new(paper_config(8, "gpt-5.2"));
+    let ctx = prompts::PromptCtx {
+        current: prompts::VariantCtx {
+            code: print_dominant(&sched, false),
+            trace_tail: sched.trace.render_tail(8),
+            score: 0.42,
+        },
+        parent: None,
+        grandparent: None,
+        vocabulary: vocab.clone(),
+        leaf_depth: 4,
+        trials_done: 100,
+        trials_budget: 300,
+        model_stats: set.stat_lines(),
+        local_models: [None, None, None],
+    };
+    bench_fn("prompt_render_regular", budget, || {
+        std::hint::black_box(prompts::regular_prompt(&ctx));
+    });
+
+    // one full MCTS iteration (selection→expansion→rollout→backprop)
+    let models = ModelSet::new(paper_config(8, "gpt-5.2"));
+    let cfg = SearchConfig {
+        budget: usize::MAX / 2,
+        seed: 3,
+        checkpoints: vec![],
+        ..SearchConfig::default()
+    };
+    let mut engine = Mcts::new(cfg, models, Simulator::new(Target::Cpu), base.clone());
+    bench_fn("mcts_full_iteration", Duration::from_millis(800), || {
+        engine.step();
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench wrapper for Tables 10-12 (Appendix G): runs the experiment harness end-to-end at a
+//! reduced budget and reports wall-clock (cargo bench target per paper
+//! artifact — see DESIGN.md §Experiment-index). Full-fidelity numbers come
+//! from `cargo run --release --bin experiments -- llm_selection`.
+
+use litecoop::benchutil::time_once;
+use std::process::Command;
+
+fn main() {
+    let exe = env!("CARGO_BIN_EXE_experiments");
+    time_once("table10_llm_selection(end-to-end, reduced budget)", || {
+        let status = Command::new(exe)
+            .args(["llm_selection", "--budget", "60", "--reps", "1"])
+            .status()
+            .expect("spawn experiments");
+        assert!(status.success(), "llm_selection failed");
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench wrapper for Tables 13-15 (Appendix H): runs the experiment harness end-to-end at a
+//! reduced budget and reports wall-clock (cargo bench target per paper
+//! artifact — see DESIGN.md §Experiment-index). Full-fidelity numbers come
+//! from `cargo run --release --bin experiments -- call_counts`.
+
+use litecoop::benchutil::time_once;
+use std::process::Command;
+
+fn main() {
+    let exe = env!("CARGO_BIN_EXE_experiments");
+    time_once("table13_call_counts(end-to-end, reduced budget)", || {
+        let status = Command::new(exe)
+            .args(["call_counts", "--budget", "60", "--reps", "1"])
+            .status()
+            .expect("spawn experiments");
+        assert!(status.success(), "call_counts failed");
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench wrapper for Table 3: runs the experiment harness end-to-end at a
+//! reduced budget and reports wall-clock (cargo bench target per paper
+//! artifact — see DESIGN.md §Experiment-index). Full-fidelity numbers come
+//! from `cargo run --release --bin experiments -- table3`.
+
+use litecoop::benchutil::time_once;
+use std::process::Command;
+
+fn main() {
+    let exe = env!("CARGO_BIN_EXE_experiments");
+    time_once("table3_e2e(end-to-end, reduced budget)", || {
+        let status = Command::new(exe)
+            .args(["table3", "--budget", "60", "--reps", "1"])
+            .status()
+            .expect("spawn experiments");
+        assert!(status.success(), "table3 failed");
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench wrapper for Table 4/5 (Appendix D): runs the experiment harness end-to-end at a
+//! reduced budget and reports wall-clock (cargo bench target per paper
+//! artifact — see DESIGN.md §Experiment-index). Full-fidelity numbers come
+//! from `cargo run --release --bin experiments -- lambda`.
+
+use litecoop::benchutil::time_once;
+use std::process::Command;
+
+fn main() {
+    let exe = env!("CARGO_BIN_EXE_experiments");
+    time_once("table4_lambda(end-to-end, reduced budget)", || {
+        let status = Command::new(exe)
+            .args(["lambda", "--budget", "60", "--reps", "1"])
+            .status()
+            .expect("spawn experiments");
+        assert!(status.success(), "lambda failed");
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench wrapper for Table 6 (Appendix E): runs the experiment harness end-to-end at a
+//! reduced budget and reports wall-clock (cargo bench target per paper
+//! artifact — see DESIGN.md §Experiment-index). Full-fidelity numbers come
+//! from `cargo run --release --bin experiments -- significance`.
+
+use litecoop::benchutil::time_once;
+use std::process::Command;
+
+fn main() {
+    let exe = env!("CARGO_BIN_EXE_experiments");
+    time_once("table6_significance(end-to-end, reduced budget)", || {
+        let status = Command::new(exe)
+            .args(["significance", "--budget", "60", "--reps", "1"])
+            .status()
+            .expect("spawn experiments");
+        assert!(status.success(), "significance failed");
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench wrapper for Tables 7-9 (Appendix F): runs the experiment harness end-to-end at a
+//! reduced budget and reports wall-clock (cargo bench target per paper
+//! artifact — see DESIGN.md §Experiment-index). Full-fidelity numbers come
+//! from `cargo run --release --bin experiments -- course_alteration`.
+
+use litecoop::benchutil::time_once;
+use std::process::Command;
+
+fn main() {
+    let exe = env!("CARGO_BIN_EXE_experiments");
+    time_once("table7_course_alteration(end-to-end, reduced budget)", || {
+        let status = Command::new(exe)
+            .args(["course_alteration", "--budget", "60", "--reps", "1"])
+            .status()
+            .expect("spawn experiments");
+        assert!(status.success(), "course_alteration failed");
+    });
+}

@@ -1,0 +1,156 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean / stddev / min reporting,
+//! and a `bench_fn` entry point that the `cargo bench` targets use. Output
+//! format is a stable, grep-friendly line per benchmark:
+//!
+//! `bench <name> ... mean 12.34us  std 0.56us  min 11.90us  iters 1000`
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub iters: usize,
+}
+
+impl Summary {
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<44} mean {:>12}  std {:>12}  min {:>12}  iters {}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark a closure: auto-calibrated iteration count targeting
+/// ~`budget` of total measurement time, with 10% warmup.
+pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Summary {
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1) as f64;
+    let target = budget.as_nanos() as f64;
+    let iters = ((target / one) as usize).clamp(5, 100_000);
+
+    // warmup
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+
+    // measure in batches to reduce timer overhead for fast closures
+    let batch = if one < 1_000.0 { 100 } else { 1 };
+    let rounds = (iters / batch).max(5);
+    let mut samples = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let s = Summary {
+        name: name.to_string(),
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: min,
+        iters: rounds * batch,
+    };
+    println!("{}", s.line());
+    s
+}
+
+/// Time a single long-running operation (end-to-end experiment benches).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    let dt = t.elapsed();
+    println!(
+        "bench {:<44} once {:>12}",
+        name,
+        fmt_ns(dt.as_nanos() as f64)
+    );
+    (out, dt)
+}
+
+/// Tiny deterministic property-testing helper (proptest is unavailable
+/// offline): run `cases` random cases through `prop`, reporting the seed of
+/// the first failure so it can be replayed exactly.
+pub fn check_prop<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut crate::util::Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = crate::util::Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_summary() {
+        let s = bench_fn("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns + 1.0);
+        assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with('s'));
+    }
+
+    #[test]
+    fn check_prop_passes() {
+        check_prop("rng-in-range", 50, 1, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_prop_reports_seed() {
+        check_prop("always-fails", 3, 9, |_| Err("nope".into()));
+    }
+}

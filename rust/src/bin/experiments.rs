@@ -1,0 +1,587 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §Experiment-index).
+//!
+//! Usage:
+//!   experiments <id> [--budget N] [--reps K] [--threads T] [--quick]
+//! ids: fig2 table1 table2 table3 fig3 lambda significance
+//!      course_alteration llm_selection call_counts sample_efficiency all
+//!
+//! Absolute numbers come from the simulated substrate (DESIGN.md
+//! §Substitutions); the *shape* (who wins, routing fractions, reduction
+//! factors) is the reproduction target. Reports land in reports/<id>.md.
+
+use litecoop::coordinator::{self, report, RunSpec, Searcher};
+use litecoop::mcts::SearchResult;
+use litecoop::sim::Target;
+use litecoop::stats;
+use litecoop::util::cli::Args;
+use litecoop::util::table::Table;
+use litecoop::workloads::{self, PAPER_BENCH_LABELS};
+
+const BENCH_NAMES: [&str; 5] = [
+    "llama3_attention",
+    "deepseek_moe",
+    "flux_attention",
+    "flux_conv",
+    "llama4_mlp",
+];
+
+#[derive(Clone)]
+struct Opts {
+    budget: usize,
+    reps: u64,
+    threads: usize,
+    largest: String,
+}
+
+fn coop(n: usize, largest: &str) -> Searcher {
+    Searcher::Coop {
+        n,
+        largest: largest.to_string(),
+    }
+}
+
+fn matrix(benches: &[&str], searchers: &[Searcher], targets: &[Target], o: &Opts) -> Vec<RunSpec> {
+    let mut specs = Vec::new();
+    for b in benches {
+        for s in searchers {
+            for &t in targets {
+                for rep in 0..o.reps {
+                    specs.push(RunSpec::new(b, t, s.clone(), o.budget, rep * 1000 + 7));
+                }
+            }
+        }
+    }
+    specs
+}
+
+fn group<'a>(
+    specs: &[RunSpec],
+    results: &'a [SearchResult],
+    bench: &str,
+    searcher: &Searcher,
+    target: Target,
+) -> Vec<&'a SearchResult> {
+    specs
+        .iter()
+        .zip(results)
+        .filter(|(sp, _)| sp.workload == bench && &sp.searcher == searcher && sp.target == target)
+        .map(|(_, r)| r)
+        .collect()
+}
+
+// ------------------------------------------------------------------ fig2/3
+
+fn fig_speedup_curves(o: &Opts, id: &str) {
+    let searchers = vec![
+        Searcher::Single(o.largest.clone()),
+        Searcher::Single("gpt-5-mini".into()),
+        coop(2, &o.largest),
+        coop(4, &o.largest),
+        coop(8, &o.largest),
+    ];
+    let targets: Vec<Target> = if id == "fig3" {
+        vec![Target::Gpu]
+    } else {
+        vec![Target::Gpu, Target::Cpu]
+    };
+    let specs = matrix(&BENCH_NAMES, &searchers, &targets, o);
+    let results = coordinator::run_many(&specs, o.threads);
+    let mut out = format!(
+        "# {id}: speedup vs searched samples (largest = {})\n\n",
+        o.largest
+    );
+    for (bi, bench) in BENCH_NAMES.iter().enumerate() {
+        for &t in &targets {
+            let series: Vec<(String, Vec<(usize, f64)>)> = searchers
+                .iter()
+                .map(|s| {
+                    let runs = group(&specs, &results, bench, s, t);
+                    (s.label(), report::mean_curve(&runs))
+                })
+                .collect();
+            let title = format!("{} — {} ({})", id, PAPER_BENCH_LABELS[bi], t.name());
+            out.push_str(&report::curve_table(&title, &series).to_markdown());
+            out.push('\n');
+        }
+    }
+    report::emit(id, &out).unwrap();
+}
+
+// ------------------------------------------------------------------ table1
+
+fn table1(o: &Opts) {
+    let searchers = vec![
+        Searcher::Single(o.largest.clone()),
+        coop(8, &o.largest),
+        coop(4, &o.largest),
+        coop(2, &o.largest),
+    ];
+    let targets = [Target::Gpu, Target::Cpu];
+    let specs = matrix(&BENCH_NAMES, &searchers, &targets, o);
+    let results = coordinator::run_many(&specs, o.threads);
+
+    let mut t = Table::new(
+        &format!(
+            "Table 1: compile-time and API-cost reduction vs single {} (GPU/CPU)",
+            o.largest
+        ),
+        &["Benchmark", "Metric", "LiteCoOp(8)", "LiteCoOp(4)", "LiteCoOp(2)"],
+    );
+    let mut agg: Vec<Vec<f64>> = vec![vec![]; 6];
+    for (bi, bench) in BENCH_NAMES.iter().enumerate() {
+        let base: Vec<f64> = targets
+            .iter()
+            .map(|&tg| report::mean_time(&group(&specs, &results, bench, &searchers[0], tg)))
+            .collect();
+        let base_cost: Vec<f64> = targets
+            .iter()
+            .map(|&tg| report::mean_cost(&group(&specs, &results, bench, &searchers[0], tg)))
+            .collect();
+        let mut time_row = vec![PAPER_BENCH_LABELS[bi].to_string(), "Comp. Time ↓(×)".into()];
+        let mut cost_row = vec![PAPER_BENCH_LABELS[bi].to_string(), "API Cost ↓(×)".into()];
+        for (si, s) in searchers[1..].iter().enumerate() {
+            let tr: Vec<f64> = targets
+                .iter()
+                .enumerate()
+                .map(|(ti, &tg)| base[ti] / report::mean_time(&group(&specs, &results, bench, s, tg)))
+                .collect();
+            let cr: Vec<f64> = targets
+                .iter()
+                .enumerate()
+                .map(|(ti, &tg)| {
+                    base_cost[ti] / report::mean_cost(&group(&specs, &results, bench, s, tg))
+                })
+                .collect();
+            time_row.push(format!("{:.2}/{:.2}", tr[0], tr[1]));
+            cost_row.push(format!("{:.2}/{:.2}", cr[0], cr[1]));
+            agg[si * 2].extend(&tr);
+            agg[si * 2 + 1].extend(&cr);
+        }
+        t.row(time_row);
+        t.row(cost_row);
+    }
+    let mut out = t.to_markdown();
+    out.push_str("\nGeometric means over all benchmark-target pairs:\n");
+    for (i, label) in [
+        "8-LLM time",
+        "8-LLM cost",
+        "4-LLM time",
+        "4-LLM cost",
+        "2-LLM time",
+        "2-LLM cost",
+    ]
+    .iter()
+    .enumerate()
+    {
+        out.push_str(&format!("- {label} reduction: {:.2}x\n", stats::geomean(&agg[i])));
+    }
+    report::emit("table1", &out).unwrap();
+}
+
+// ------------------------------------------------------------------ table2
+
+fn table2(o: &Opts) {
+    let searchers = [coop(8, &o.largest), coop(4, &o.largest), coop(2, &o.largest)];
+    let targets = [Target::Gpu, Target::Cpu];
+    let specs = matrix(&BENCH_NAMES, &searchers, &targets, o);
+    let results = coordinator::run_many(&specs, o.threads);
+
+    let mut out = format!(
+        "# Table 2: invocation rates (%) averaged across the five benchmarks (largest = {})\n\n",
+        o.largest
+    );
+    for &tg in &targets {
+        let mut t = Table::new(
+            &format!("{} target", tg.name()),
+            &["Model", "LiteCoOp(8)", "LiteCoOp(4)", "LiteCoOp(2)"],
+        );
+        let runs8: Vec<&SearchResult> = BENCH_NAMES
+            .iter()
+            .flat_map(|b| group(&specs, &results, b, &searchers[0], tg))
+            .collect();
+        let names: Vec<String> = report::mean_invocation_rates(&runs8)
+            .into_iter()
+            .map(|(n, _, _)| n)
+            .collect();
+        let mut largest_rows = vec![
+            vec![format!("{} (Regular)", o.largest)],
+            vec![format!("{} (C.A.)", o.largest)],
+            vec![format!("{} (Total)", o.largest)],
+        ];
+        let mut rows: Vec<Vec<String>> = vec![Vec::new(); names.len()];
+        for s in &searchers {
+            let runs: Vec<&SearchResult> = BENCH_NAMES
+                .iter()
+                .flat_map(|b| group(&specs, &results, b, s, tg))
+                .collect();
+            let rates = report::mean_invocation_rates(&runs);
+            let find = |n: &str| {
+                rates
+                    .iter()
+                    .find(|(nm, _, _)| nm == n)
+                    .map(|&(_, r, c)| (r, c))
+                    .unwrap_or((0.0, 0.0))
+            };
+            let (lr, lc) = find(&o.largest);
+            largest_rows[0].push(format!("{:.1}", lr * 100.0));
+            largest_rows[1].push(format!("{:.1}", lc * 100.0));
+            largest_rows[2].push(format!("{:.1}", (lr + lc) * 100.0));
+            for (ni, name) in names.iter().enumerate() {
+                if name == &o.largest {
+                    continue;
+                }
+                if rows[ni].is_empty() {
+                    rows[ni].push(name.clone());
+                }
+                let (r, c) = find(name);
+                if r + c > 0.0 {
+                    rows[ni].push(format!("{:.1}", (r + c) * 100.0));
+                } else {
+                    rows[ni].push("–".into());
+                }
+            }
+        }
+        for r in largest_rows {
+            t.row(r);
+        }
+        for r in rows.into_iter().filter(|r| !r.is_empty()) {
+            t.row(r);
+        }
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    report::emit("table2", &out).unwrap();
+}
+
+// --------------------------------------------------------------- table3/16
+
+fn table3(o: &Opts) {
+    let graph = workloads::llama_e2e::llama3_8b_graph();
+    let searchers = vec![
+        Searcher::Single(o.largest.clone()),
+        Searcher::Single("gpt-5-mini".into()),
+        coop(8, &o.largest),
+        coop(4, &o.largest),
+        coop(2, &o.largest),
+    ];
+    let mut out = format!(
+        "# Table 3 + Table 16: end-to-end Llama-3-8B (largest = {})\n\n",
+        o.largest
+    );
+    for &tg in &[Target::Gpu, Target::Cpu] {
+        let mut t = Table::new(
+            &format!("{} target", tg.name()),
+            &[
+                "Config",
+                "Speedup ×",
+                "vs single ×",
+                "Comp.Time ↓×",
+                "API Cost ↓×",
+                "# Samples",
+                "Sample-eff gain ×",
+            ],
+        );
+        let results: Vec<_> = searchers
+            .iter()
+            .map(|s| coordinator::run_e2e(&graph, tg, s, o.budget, 7))
+            .collect();
+        let single = &results[0];
+        let mini = &results[1];
+        let mini_eff = mini.speedup / mini.n_samples as f64;
+        for r in &results {
+            let eff = r.speedup / r.n_samples as f64;
+            t.row(vec![
+                r.label.clone(),
+                format!("{:.2}", r.speedup),
+                format!("{:.2}", r.speedup / single.speedup),
+                format!("{:.2}", single.compile_time_s / r.compile_time_s),
+                format!("{:.2}", single.api_cost_usd / r.api_cost_usd.max(1e-9)),
+                format!("{}", r.n_samples),
+                format!("{:.2}", eff / mini_eff),
+            ]);
+        }
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    report::emit("table3", &out).unwrap();
+}
+
+// ------------------------------------------------------------------ lambda
+
+fn lambda_ablation(o: &Opts) {
+    let lambdas = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let mut out = String::from("# Appendix D (Tables 4/5): λ ablation, LiteCoOp(8 LLMs), CPU\n\n");
+    let mut t = Table::new(
+        "Table 4: final speedup by λ",
+        &["Benchmark", "λ=0.0", "λ=0.25", "λ=0.5", "λ=0.75", "λ=1.0"],
+    );
+    let mut specs = Vec::new();
+    for b in &BENCH_NAMES {
+        for &l in &lambdas {
+            for rep in 0..o.reps {
+                let mut sp =
+                    RunSpec::new(b, Target::Cpu, coop(8, &o.largest), o.budget, rep * 1000 + 7);
+                sp.lambda = l;
+                specs.push(sp);
+            }
+        }
+    }
+    let results = coordinator::run_many(&specs, o.threads);
+    let mut rates_out = String::new();
+    for (bi, bench) in BENCH_NAMES.iter().enumerate() {
+        let mut row = vec![PAPER_BENCH_LABELS[bi].to_string()];
+        for &l in &lambdas {
+            let runs: Vec<&SearchResult> = specs
+                .iter()
+                .zip(&results)
+                .filter(|(sp, _)| sp.workload == *bench && sp.lambda == l)
+                .map(|(_, r)| r)
+                .collect();
+            row.push(format!("{:.2}", report::mean_speedup(&runs)));
+            if (l - 0.5).abs() < 1e-9 {
+                let rates = report::mean_invocation_rates(&runs);
+                let largest_total: f64 = rates
+                    .iter()
+                    .filter(|(n, _, _)| n == &o.largest)
+                    .map(|(_, r, c)| r + c)
+                    .sum();
+                rates_out.push_str(&format!(
+                    "- {}: λ=0.5 largest-model total invocation {:.1}%\n",
+                    PAPER_BENCH_LABELS[bi],
+                    largest_total * 100.0
+                ));
+            }
+        }
+        t.row(row);
+    }
+    out.push_str(&t.to_markdown());
+    out.push_str("\nTable 5 digest (invocation share of the largest model at λ=0.5):\n");
+    out.push_str(&rates_out);
+    report::emit("lambda", &out).unwrap();
+}
+
+// ------------------------------------------------------------ significance
+
+fn significance(o: &Opts) {
+    let reps = o.reps.max(10);
+    let searchers = vec![
+        Searcher::Single(o.largest.clone()),
+        coop(8, &o.largest),
+        coop(4, &o.largest),
+        coop(2, &o.largest),
+    ];
+    let opts = Opts { reps, ..o.clone() };
+    let specs = matrix(&BENCH_NAMES, &searchers, &[Target::Cpu], &opts);
+    let results = coordinator::run_many(&specs, o.threads);
+    let mut t = Table::new(
+        "Table 6: Dunnett-adjusted one-sided tests vs single-largest control (CPU)",
+        &["Benchmark", "Config", "ratio", "95% CI", "p-value"],
+    );
+    for (bi, bench) in BENCH_NAMES.iter().enumerate() {
+        let control: Vec<f64> = group(&specs, &results, bench, &searchers[0], Target::Cpu)
+            .iter()
+            .map(|r| r.best_speedup)
+            .collect();
+        for (si, label) in [
+            (1usize, "LiteCoOp(8 LLMs)"),
+            (2, "LiteCoOp(4 LLMs)"),
+            (3, "LiteCoOp(2 LLMs)"),
+        ] {
+            let treat: Vec<f64> = group(&specs, &results, bench, &searchers[si], Target::Cpu)
+                .iter()
+                .map(|r| r.best_speedup)
+                .collect();
+            let res = stats::dunnett_test(&treat, &control, 3);
+            t.row(vec![
+                PAPER_BENCH_LABELS[bi].to_string(),
+                label.to_string(),
+                format!("{:.3}", res.ratio),
+                format!("[{:.3}, {:.3}]", res.ci_low, res.ci_high),
+                format!("{:.2e}", res.p_value),
+            ]);
+        }
+    }
+    report::emit("significance", &t.to_markdown()).unwrap();
+}
+
+// ------------------------------------------------------- course alteration
+
+fn course_alteration(o: &Opts) {
+    let settings: [(&str, Option<usize>); 3] = [
+        ("No Course Alteration", None),
+        ("Every 1 Small Model Regression", Some(1)),
+        ("Every 2 Small Model Regressions", Some(2)),
+    ];
+    let mut specs = Vec::new();
+    for b in &BENCH_NAMES {
+        for (_, ca) in &settings {
+            for rep in 0..o.reps {
+                let mut sp =
+                    RunSpec::new(b, Target::Cpu, coop(8, &o.largest), o.budget, rep * 1000 + 7);
+                sp.ca_threshold = *ca;
+                specs.push(sp);
+            }
+        }
+    }
+    let results = coordinator::run_many(&specs, o.threads);
+    let mut t = Table::new(
+        "Appendix F (Tables 7–9): course-alteration ablation, LiteCoOp(8 LLMs), CPU",
+        &["Benchmark", "Setting", "Speedup ×", "CA rate %", "Comp.Time s", "API Cost $"],
+    );
+    for (bi, bench) in BENCH_NAMES.iter().enumerate() {
+        for (label, ca) in &settings {
+            let runs: Vec<&SearchResult> = specs
+                .iter()
+                .zip(&results)
+                .filter(|(sp, _)| sp.workload == *bench && sp.ca_threshold == *ca)
+                .map(|(_, r)| r)
+                .collect();
+            let ca_rate: f64 = runs
+                .iter()
+                .map(|r| {
+                    let total: usize = r.call_counts.iter().map(|(_, a, b)| a + b).sum();
+                    r.n_ca_events as f64 / total.max(1) as f64
+                })
+                .sum::<f64>()
+                / runs.len() as f64;
+            t.row(vec![
+                PAPER_BENCH_LABELS[bi].to_string(),
+                label.to_string(),
+                format!("{:.2}", report::mean_speedup(&runs)),
+                format!("{:.1}", ca_rate * 100.0),
+                format!("{:.0}", report::mean_time(&runs)),
+                format!("{:.3}", report::mean_cost(&runs)),
+            ]);
+        }
+    }
+    report::emit("course_alteration", &t.to_markdown()).unwrap();
+}
+
+// ----------------------------------------------------------- llm selection
+
+fn llm_selection(o: &Opts) {
+    let searchers = vec![
+        coop(8, &o.largest),
+        Searcher::RandomRouting {
+            n: 8,
+            largest: o.largest.clone(),
+        },
+        Searcher::RoundRobinRouting {
+            n: 8,
+            largest: o.largest.clone(),
+        },
+    ];
+    let specs = matrix(&BENCH_NAMES, &searchers, &[Target::Cpu], o);
+    let results = coordinator::run_many(&specs, o.threads);
+    let mut t = Table::new(
+        "Appendix G (Tables 10–12): routing ablation, 8-LLM pool, CPU",
+        &["Benchmark", "Routing", "Speedup ×", "Comp.Time s", "API Cost $"],
+    );
+    for (bi, bench) in BENCH_NAMES.iter().enumerate() {
+        for s in &searchers {
+            let runs = group(&specs, &results, bench, s, Target::Cpu);
+            t.row(vec![
+                PAPER_BENCH_LABELS[bi].to_string(),
+                s.label(),
+                format!("{:.2}", report::mean_speedup(&runs)),
+                format!("{:.0}", report::mean_time(&runs)),
+                format!("{:.3}", report::mean_cost(&runs)),
+            ]);
+        }
+    }
+    report::emit("llm_selection", &t.to_markdown()).unwrap();
+}
+
+// ------------------------------------------------------------- call counts
+
+fn call_counts(o: &Opts) {
+    let searchers = [coop(8, &o.largest), coop(4, &o.largest), coop(2, &o.largest)];
+    let mut out = format!(
+        "# Appendix H (Tables 13–15): raw call counts per configuration (largest = {})\n\n",
+        o.largest
+    );
+    for &tg in &[Target::Gpu, Target::Cpu] {
+        let specs = matrix(&BENCH_NAMES, &searchers, &[tg], o);
+        let results = coordinator::run_many(&specs, o.threads);
+        out.push_str(&format!("## {} target\n\n", tg.name()));
+        for (bi, bench) in BENCH_NAMES.iter().enumerate() {
+            out.push_str(&format!("### {}\n", PAPER_BENCH_LABELS[bi]));
+            for s in &searchers {
+                let runs = group(&specs, &results, bench, s, tg);
+                let r0 = runs[0];
+                let counts: Vec<String> = r0
+                    .call_counts
+                    .iter()
+                    .filter(|(_, a, b)| a + b > 0)
+                    .map(|(n, a, b)| {
+                        if *b > 0 {
+                            format!("{n}: {a} reg + {b} CA")
+                        } else {
+                            format!("{n}: {a}")
+                        }
+                    })
+                    .collect();
+                out.push_str(&format!("- {}: {}\n", s.label(), counts.join(", ")));
+            }
+            out.push('\n');
+        }
+    }
+    report::emit("call_counts", &out).unwrap();
+}
+
+fn main() {
+    let args = Args::parse();
+    let quick = args.has("quick");
+    let o = Opts {
+        budget: args.usize_or("budget", if quick { 120 } else { 300 }),
+        reps: args.u64_or("reps", if quick { 2 } else { 3 }),
+        threads: args.usize_or("threads", coordinator::default_threads()),
+        largest: args.str_or("largest", "gpt-5.2"),
+    };
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "all".into());
+    let t0 = std::time::Instant::now();
+    match cmd.as_str() {
+        "fig2" => fig_speedup_curves(&o, "fig2"),
+        "fig3" => {
+            let o = Opts {
+                largest: "Llama-3.3-70B-Instruct".into(),
+                ..o
+            };
+            fig_speedup_curves(&o, "fig3");
+        }
+        "table1" => table1(&o),
+        "table2" => table2(&o),
+        "table3" => table3(&o),
+        "lambda" => lambda_ablation(&o),
+        "significance" => significance(&o),
+        "course_alteration" => course_alteration(&o),
+        "llm_selection" => llm_selection(&o),
+        "call_counts" => call_counts(&o),
+        "sample_efficiency" => table3(&o), // Table 16 is emitted with Table 3
+        "all" => {
+            fig_speedup_curves(&o, "fig2");
+            table1(&o);
+            table2(&o);
+            table3(&o);
+            let o3 = Opts {
+                largest: "Llama-3.3-70B-Instruct".into(),
+                ..o.clone()
+            };
+            fig_speedup_curves(&o3, "fig3");
+            lambda_ablation(&o);
+            significance(&o);
+            course_alteration(&o);
+            llm_selection(&o);
+            call_counts(&o);
+        }
+        other => {
+            eprintln!("unknown experiment id: {other}");
+            std::process::exit(2);
+        }
+    }
+    eprintln!(
+        "[experiments {cmd}] done in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

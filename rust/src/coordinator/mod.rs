@@ -1,0 +1,257 @@
+//! Experiment coordinator: run specifications, a thread-pooled runner, and
+//! the end-to-end (full-model) tuning driver.
+//!
+//! Every paper table/figure is a matrix of [`RunSpec`]s; the runner
+//! executes them across OS threads (each run is independent and
+//! deterministic in its seed) and the `experiments` binary assembles the
+//! paper-shaped tables from the [`SearchResult`]s.
+
+pub mod report;
+
+use crate::baselines;
+use crate::mcts::{Routing, SearchConfig, SearchResult};
+use crate::schedule::Schedule;
+use crate::sim::Target;
+use crate::workloads::{self, llama_e2e::E2eGraph};
+use std::sync::Arc;
+
+/// Which searcher to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Searcher {
+    /// Single-LLM MCTS baseline with the given model.
+    Single(String),
+    /// LiteCoOp with n models under the given largest model.
+    Coop { n: usize, largest: String },
+    /// Appendix-G ablation: same pool, random routing.
+    RandomRouting { n: usize, largest: String },
+    /// Appendix-G ablation: same pool, round-robin routing.
+    RoundRobinRouting { n: usize, largest: String },
+    /// LLM-free evolutionary baseline.
+    Evolutionary,
+}
+
+impl Searcher {
+    pub fn label(&self) -> String {
+        match self {
+            Searcher::Single(m) => format!("Single({m})"),
+            Searcher::Coop { n, .. } => format!("LiteCoOp({n} LLMs)"),
+            Searcher::RandomRouting { .. } => "Random".into(),
+            Searcher::RoundRobinRouting { .. } => "Round-Robin".into(),
+            Searcher::Evolutionary => "Evolutionary".into(),
+        }
+    }
+}
+
+/// One experiment run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub workload: String,
+    pub target: Target,
+    pub searcher: Searcher,
+    pub budget: usize,
+    pub seed: u64,
+    pub lambda: f64,
+    /// Course-alteration threshold (None = disabled).
+    pub ca_threshold: Option<usize>,
+}
+
+impl RunSpec {
+    pub fn new(workload: &str, target: Target, searcher: Searcher, budget: usize, seed: u64) -> RunSpec {
+        RunSpec {
+            workload: workload.to_string(),
+            target,
+            searcher,
+            budget,
+            seed,
+            lambda: 0.5,
+            ca_threshold: Some(2),
+        }
+    }
+
+    fn config(&self) -> SearchConfig {
+        SearchConfig {
+            budget: self.budget,
+            seed: self.seed,
+            lambda: self.lambda,
+            ca_threshold: self.ca_threshold,
+            checkpoints: vec![50, 100, 250, 500, 750, 1000]
+                .into_iter()
+                .filter(|&c| c <= self.budget)
+                .collect(),
+            ..SearchConfig::default()
+        }
+    }
+}
+
+/// Execute one run.
+pub fn run_one(spec: &RunSpec) -> SearchResult {
+    let workload = workloads::by_name(&spec.workload)
+        .unwrap_or_else(|| panic!("unknown workload {}", spec.workload));
+    let root = Schedule::initial(Arc::new(workload));
+    let cfg = spec.config();
+    match &spec.searcher {
+        Searcher::Single(m) => baselines::single_llm(m, spec.target, root, cfg, &spec.workload),
+        Searcher::Coop { n, largest } => {
+            baselines::litecoop(*n, largest, spec.target, root, cfg, &spec.workload)
+        }
+        Searcher::RandomRouting { n, largest } => {
+            let mut cfg = cfg;
+            cfg.routing = Routing::Random;
+            baselines::litecoop(*n, largest, spec.target, root, cfg, &spec.workload)
+        }
+        Searcher::RoundRobinRouting { n, largest } => {
+            let mut cfg = cfg;
+            cfg.routing = Routing::RoundRobin;
+            baselines::litecoop(*n, largest, spec.target, root, cfg, &spec.workload)
+        }
+        Searcher::Evolutionary => {
+            baselines::evolutionary(spec.target, root, spec.budget, spec.seed, &spec.workload)
+        }
+    }
+}
+
+/// Execute a matrix of runs across `threads` OS threads (work-stealing by
+/// index). Results are returned in spec order.
+pub fn run_many(specs: &[RunSpec], threads: usize) -> Vec<SearchResult> {
+    let n = specs.len();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<SearchResult>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1).min(n.max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = run_one(&specs[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("run missing"))
+        .collect()
+}
+
+/// Aggregated e2e result (paper Table 3 / 16).
+#[derive(Clone, Debug)]
+pub struct E2eResult {
+    pub label: String,
+    pub speedup: f64,
+    pub compile_time_s: f64,
+    pub api_cost_usd: f64,
+    pub n_samples: usize,
+}
+
+/// Tune every unique task of an e2e graph (budget split by FLOP share)
+/// and combine into whole-model numbers.
+pub fn run_e2e(
+    graph: &E2eGraph,
+    target: Target,
+    searcher: &Searcher,
+    total_budget: usize,
+    seed: u64,
+) -> E2eResult {
+    let mut naive = 0.0;
+    let mut tuned = 0.0;
+    let mut time = 0.0;
+    let mut cost = 0.0;
+    let mut samples = 0usize;
+    for (ti, task) in graph.tasks.iter().enumerate() {
+        let budget = ((total_budget as f64 * task.budget_frac).round() as usize).max(20);
+        let root = Schedule::initial(Arc::new(task.workload.clone()));
+        let cfg = SearchConfig {
+            budget,
+            seed: seed ^ ((ti as u64) << 8),
+            checkpoints: vec![budget],
+            ..SearchConfig::default()
+        };
+        let r = match searcher {
+            Searcher::Single(m) => {
+                baselines::single_llm(m, target, root, cfg, &task.workload.name)
+            }
+            Searcher::Coop { n, largest } => {
+                baselines::litecoop(*n, largest, target, root, cfg, &task.workload.name)
+            }
+            Searcher::RandomRouting { n, largest } => {
+                let mut cfg = cfg;
+                cfg.routing = Routing::Random;
+                baselines::litecoop(*n, largest, target, root, cfg, &task.workload.name)
+            }
+            Searcher::RoundRobinRouting { n, largest } => {
+                let mut cfg = cfg;
+                cfg.routing = Routing::RoundRobin;
+                baselines::litecoop(*n, largest, target, root, cfg, &task.workload.name)
+            }
+            Searcher::Evolutionary => {
+                baselines::evolutionary(target, root, budget, seed, &task.workload.name)
+            }
+        };
+        naive += r.baseline_latency_s * task.count as f64;
+        tuned += r.best_latency_s * task.count as f64;
+        time += r.compile_time_s;
+        cost += r.api_cost_usd;
+        samples += r.n_samples;
+    }
+    E2eResult {
+        label: searcher.label(),
+        speedup: naive / tuned,
+        compile_time_s: time,
+        api_cost_usd: cost,
+        n_samples: samples,
+    }
+}
+
+/// Default parallelism for experiment matrices.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_matrix_parallel_matches_serial() {
+        let specs: Vec<RunSpec> = (0..3)
+            .map(|seed| {
+                RunSpec::new(
+                    "gemm",
+                    Target::Cpu,
+                    Searcher::Coop {
+                        n: 2,
+                        largest: "gpt-5.2".into(),
+                    },
+                    40,
+                    seed,
+                )
+            })
+            .collect();
+        let par = run_many(&specs, 3);
+        let ser: Vec<_> = specs.iter().map(run_one).collect();
+        for (p, s) in par.iter().zip(&ser) {
+            assert_eq!(p.best_speedup, s.best_speedup);
+        }
+    }
+
+    #[test]
+    fn e2e_graph_runs() {
+        let graph = crate::workloads::llama_e2e::llama3_8b_graph();
+        let r = run_e2e(
+            &graph,
+            Target::Cpu,
+            &Searcher::Coop {
+                n: 2,
+                largest: "gpt-5.2".into(),
+            },
+            60,
+            1,
+        );
+        assert!(r.speedup > 1.0, "{}", r.speedup);
+        assert!(r.api_cost_usd > 0.0);
+    }
+}

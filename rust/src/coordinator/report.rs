@@ -1,0 +1,145 @@
+//! Report assembly: aggregate [`SearchResult`]s into the paper's
+//! table/figure shapes and emit markdown.
+
+use crate::mcts::SearchResult;
+use crate::stats;
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+
+/// Mean best-speedup over repetitions.
+pub fn mean_speedup(runs: &[&SearchResult]) -> f64 {
+    stats::mean(&runs.iter().map(|r| r.best_speedup).collect::<Vec<_>>())
+}
+
+pub fn mean_time(runs: &[&SearchResult]) -> f64 {
+    stats::mean(&runs.iter().map(|r| r.compile_time_s).collect::<Vec<_>>())
+}
+
+pub fn mean_cost(runs: &[&SearchResult]) -> f64 {
+    stats::mean(&runs.iter().map(|r| r.api_cost_usd).collect::<Vec<_>>())
+}
+
+/// Mean speedup at each curve checkpoint (runs must share checkpoints).
+pub fn mean_curve(runs: &[&SearchResult]) -> Vec<(usize, f64)> {
+    let mut acc: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+    for r in runs {
+        for &(s, v) in &r.curve {
+            let e = acc.entry(s).or_insert((0.0, 0));
+            e.0 += v;
+            e.1 += 1;
+        }
+    }
+    acc.into_iter()
+        .map(|(s, (sum, n))| (s, sum / n as f64))
+        .collect()
+}
+
+/// Average invocation rates (regular, CA) per model over runs.
+pub fn mean_invocation_rates(runs: &[&SearchResult]) -> Vec<(String, f64, f64)> {
+    let mut names: Vec<String> = Vec::new();
+    for r in runs {
+        for (n, _, _) in &r.call_counts {
+            if !names.contains(n) {
+                names.push(n.clone());
+            }
+        }
+    }
+    names
+        .into_iter()
+        .map(|name| {
+            let mut reg = 0.0;
+            let mut ca = 0.0;
+            for r in runs {
+                let (rr, cc) = r.invocation_rate(&name);
+                reg += rr;
+                ca += cc;
+            }
+            (name, reg / runs.len() as f64, ca / runs.len() as f64)
+        })
+        .collect()
+}
+
+/// Render a speedup-vs-samples figure as a markdown table (one row per
+/// series, one column per checkpoint) — the textual form of Figure 2/3.
+pub fn curve_table(
+    title: &str,
+    series: &[(String, Vec<(usize, f64)>)],
+) -> Table {
+    let checkpoints: Vec<usize> = series
+        .first()
+        .map(|(_, c)| c.iter().map(|&(s, _)| s).collect())
+        .unwrap_or_default();
+    let mut header: Vec<String> = vec!["Config".into()];
+    header.extend(checkpoints.iter().map(|c| c.to_string()));
+    let hdr_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(title, &hdr_refs);
+    for (label, curve) in series {
+        let mut row = vec![label.clone()];
+        for &cp in &checkpoints {
+            let v = curve
+                .iter()
+                .find(|&&(s, _)| s == cp)
+                .map(|&(_, v)| v)
+                .unwrap_or(f64::NAN);
+            row.push(format!("{v:.2}"));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Write a markdown report section to `reports/<id>.md` and echo it.
+pub fn emit(id: &str, content: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all("reports")?;
+    std::fs::write(format!("reports/{id}.md"), content)?;
+    println!("{content}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::workloads::gemm;
+    use std::sync::Arc;
+
+    fn fake(speedup: f64, curve: Vec<(usize, f64)>) -> SearchResult {
+        SearchResult {
+            workload: "w".into(),
+            best_speedup: speedup,
+            best_latency_s: 1.0,
+            baseline_latency_s: speedup,
+            curve,
+            compile_time_s: 100.0,
+            api_cost_usd: 1.0,
+            n_samples: 100,
+            n_ca_events: 0,
+            n_errors: 0,
+            call_counts: vec![("m".into(), 10, 2)],
+            best_schedule: Schedule::initial(Arc::new(gemm::gemm(8, 8, 8))),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let a = fake(2.0, vec![(50, 1.0), (100, 2.0)]);
+        let b = fake(4.0, vec![(50, 3.0), (100, 4.0)]);
+        let runs = vec![&a, &b];
+        assert_eq!(mean_speedup(&runs), 3.0);
+        assert_eq!(mean_curve(&runs), vec![(50, 2.0), (100, 3.0)]);
+        let rates = mean_invocation_rates(&runs);
+        assert_eq!(rates.len(), 1);
+        assert!((rates[0].1 - 10.0 / 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn curve_table_renders() {
+        let t = curve_table(
+            "Fig 2a",
+            &[("LiteCoOp(8 LLMs)".into(), vec![(50, 7.5), (100, 10.6)])],
+        );
+        let md = t.to_markdown();
+        assert!(md.contains("7.50"));
+        assert!(md.contains("| 50"));
+    }
+}

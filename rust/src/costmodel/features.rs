@@ -1,0 +1,157 @@
+//! Schedule featurization — the feature-extraction stage of the cost
+//! model (the stand-in for TVM's per-buffer-access feature vectors fed to
+//! XGBoost).
+//!
+//! Produces a fixed-length vector per schedule: per-block structural and
+//! traffic features, FLOP-weighted across blocks, all magnitudes
+//! log-compressed.
+
+use crate::schedule::{LoopKind, Schedule};
+use crate::sim::footprint;
+use crate::sim::Target;
+
+/// Number of features per schedule.
+pub const N_FEATURES: usize = 26;
+
+fn log1p(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).ln()
+}
+
+/// Extract the feature vector for one block.
+fn block_features(s: &Schedule, b: usize, target: Target) -> [f64; N_FEATURES] {
+    let blk = &s.workload.blocks[b];
+    let bs = &s.blocks[b];
+    let gpu = target.is_gpu();
+    let nest = s.loop_nest(b, gpu);
+    let (l1, l2) = if gpu {
+        (32.0 * 1024.0, 5.5 * 1024.0 * 1024.0)
+    } else {
+        (48.0 * 1024.0, 2.0 * 1024.0 * 1024.0)
+    };
+    let traffic = footprint::analyze(s, b, &nest, l1, l2);
+
+    let par = nest.parallel_extent() as f64;
+    let threads = nest.thread_extent() as f64;
+    let lanes = nest.vector_lanes() as f64;
+    let unrolled = nest.unrolled_product() as f64;
+    let flops = blk.flops();
+    let inner_axis = nest.loops.last().map(|l| l.axis);
+    let write_contig = inner_axis
+        .map(|ax| blk.writes[0].axis_is_contiguous(ax))
+        .unwrap_or(false);
+    let reads_contig = inner_axis
+        .map(|ax| {
+            blk.reads
+                .iter()
+                .filter(|r| r.axis_is_contiguous(ax) || !r.uses_axis(ax))
+                .count() as f64
+                / blk.reads.len().max(1) as f64
+        })
+        .unwrap_or(0.0);
+    let n_cached_reads = bs.cache_reads.iter().filter(|c| c.is_some()).count() as f64;
+    let ai = flops / traffic.dram_bytes.max(1.0); // arithmetic intensity
+
+    [
+        log1p(flops),
+        log1p(traffic.dram_bytes),
+        log1p(traffic.l2_bytes),
+        log1p(traffic.inner_tile_bytes),
+        log1p(ai),
+        log1p(par),
+        log1p(threads),
+        log1p(lanes),
+        log1p(unrolled),
+        f64::from(bs.vectorize),
+        f64::from(write_contig),
+        reads_contig,
+        f64::from(bs.cache_write),
+        n_cached_reads,
+        f64::from(bs.decomposed),
+        f64::from(bs.compute_at.is_some()),
+        bs.compute_at.map(|d| d as f64).unwrap_or(0.0),
+        log1p(nest.loops.len() as f64),
+        log1p(nest.loops.iter().map(|l| l.extent as f64).product::<f64>()),
+        // innermost serial extent (loop overhead proxy)
+        log1p(
+            nest.loops
+                .iter()
+                .rev()
+                .find(|l| l.kind == LoopKind::Serial)
+                .map(|l| l.extent as f64)
+                .unwrap_or(1.0),
+        ),
+        match blk.body {
+            crate::tir::BodyKind::Mac => 1.0,
+            crate::tir::BodyKind::Elementwise => 2.0,
+            crate::tir::BodyKind::Transcendental => 3.0,
+            crate::tir::BodyKind::Reduce => 4.0,
+            crate::tir::BodyKind::Copy => 5.0,
+        },
+        f64::from(blk.has_reduction()),
+        log1p(blk.reduction_points() as f64),
+        log1p(blk.spatial_points() as f64),
+        f64::from(gpu),
+        // occupancy-ish proxy: threads per block vs 1024
+        (threads / 1024.0).min(1.0),
+    ]
+}
+
+/// FLOP-weighted aggregate feature vector over all blocks.
+pub fn featurize(s: &Schedule, target: Target) -> Vec<f64> {
+    let total_flops: f64 = s.workload.flops().max(1.0);
+    let mut out = vec![0.0; N_FEATURES];
+    for b in 0..s.workload.blocks.len() {
+        let w = s.workload.blocks[b].flops().max(total_flops * 1e-4) / total_flops;
+        let f = block_features(s, b, target);
+        for (o, x) in out.iter_mut().zip(f.iter()) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::transforms::{apply, TransformKind};
+    use crate::schedule::Schedule;
+    use crate::util::Rng;
+    use crate::workloads::gemm;
+    use std::sync::Arc;
+
+    #[test]
+    fn feature_length_fixed() {
+        let s = Schedule::initial(Arc::new(gemm::gemm(64, 64, 64)));
+        assert_eq!(featurize(&s, Target::Cpu).len(), N_FEATURES);
+        assert_eq!(featurize(&s, Target::Gpu).len(), N_FEATURES);
+    }
+
+    #[test]
+    fn features_respond_to_transforms() {
+        let mut rng = Rng::new(1);
+        let s0 = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+        let f0 = featurize(&s0, Target::Cpu);
+        let s1 = apply(&s0, TransformKind::Vectorize, &mut rng, false).unwrap();
+        let f1 = featurize(&s1, Target::Cpu);
+        assert_ne!(f0, f1);
+    }
+
+    #[test]
+    fn features_finite() {
+        let mut rng = Rng::new(2);
+        let mut s = Schedule::initial(Arc::new(crate::workloads::attention::small_attention(
+            128, 4, 32, true,
+        )));
+        let vocab = TransformKind::vocabulary(true);
+        for _ in 0..50 {
+            if let Ok(n) = apply(&s, *rng.choice(&vocab), &mut rng, true) {
+                s = n;
+            }
+        }
+        for target in [Target::Cpu, Target::Gpu] {
+            for f in featurize(&s, target) {
+                assert!(f.is_finite());
+            }
+        }
+    }
+}

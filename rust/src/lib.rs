@@ -1,0 +1,37 @@
+//! # LiteCoOp — lightweight multi-LLM shared-tree reasoning for
+//! model-serving compiler optimizations.
+//!
+//! Full reproduction of the paper's system as a three-layer Rust + JAX +
+//! Pallas stack (see DESIGN.md):
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a shared MCTS
+//!   tree over joint ⟨program, llm⟩ states with LA-UCT selection, endogenous
+//!   model routing, and course alteration ([`mcts`]), plus every substrate
+//!   it needs: a tensor IR ([`tir`]), schedule transformations
+//!   ([`schedule`]), CPU/GPU performance simulators ([`sim`]), a
+//!   gradient-boosted-trees cost model ([`costmodel`]), and a simulated
+//!   heterogeneous LLM serving substrate ([`llm`]).
+//! * **Layer 2** — JAX workload definitions (python/compile/model.py),
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//! * **Layer 1** — Pallas kernels (flash-attention, tiled matmul) called by
+//!   Layer 2, validated against pure-jnp oracles at build time.
+//!
+//! The experiment harness ([`coordinator`], `bin/experiments.rs`)
+//! regenerates every table and figure of the paper's evaluation.
+
+pub mod util;
+pub mod tir;
+pub mod workloads;
+pub mod schedule;
+pub mod sim;
+pub mod costmodel;
+pub mod llm;
+pub mod mcts;
+pub mod baselines;
+pub mod coordinator;
+pub mod runtime;
+pub mod stats;
+pub mod benchutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

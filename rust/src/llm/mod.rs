@@ -1,0 +1,472 @@
+//! Simulated heterogeneous LLM serving substrate.
+//!
+//! Stands in for the OpenAI / Nscale APIs of the paper (DESIGN.md
+//! §Substitutions). Each call renders the real prompt (token-accounted),
+//! pays the model's latency and USD price, and produces a joint proposal
+//! ⟨transformation sequence, next model⟩ whose *quality* scales with the
+//! model's capability: more capable models explore more candidate
+//! proposals internally and judge them with less noise. Models also carry
+//! idiosyncratic transform affinities (seeded from the model name), so a
+//! heterogeneous set covers the transformation space better than any
+//! single model — the diversity mechanism the paper's scaling results
+//! attribute the 8-LLM gains to.
+
+pub mod registry;
+pub mod prompts;
+
+use crate::schedule::transforms::TransformKind;
+use crate::util::Rng;
+use prompts::{count_tokens, PromptCtx};
+use registry::ModelSpec;
+
+/// Running statistics per model (the prompt's "Global Per-Model Stats").
+#[derive(Clone, Debug, Default)]
+pub struct ModelStats {
+    pub regular_calls: usize,
+    pub regular_hits: usize,
+    pub ca_calls: usize,
+    pub ca_hits: usize,
+    pub errors: usize,
+    pub total_cost_usd: f64,
+    pub total_latency_s: f64,
+    pub tokens_in: f64,
+    pub tokens_out: f64,
+}
+
+impl ModelStats {
+    pub fn regular_hit_rate(&self) -> f64 {
+        if self.regular_calls == 0 {
+            0.0
+        } else {
+            self.regular_hits as f64 / self.regular_calls as f64
+        }
+    }
+    pub fn ca_hit_rate(&self) -> f64 {
+        if self.ca_calls == 0 {
+            0.0
+        } else {
+            self.ca_hits as f64 / self.ca_calls as f64
+        }
+    }
+    pub fn calls(&self) -> usize {
+        self.regular_calls + self.ca_calls
+    }
+}
+
+/// Call type, for invocation-rate accounting (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CallKind {
+    Regular,
+    CourseAlteration,
+}
+
+/// A joint proposal returned by a model.
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    pub transforms: Vec<TransformKind>,
+    /// Index into the model set.
+    pub next_model: usize,
+    /// Errors the model made while producing this (invalid names that the
+    /// engine had to repair) — each costs +1 in the stats.
+    pub n_errors: usize,
+}
+
+/// Accounting record of one simulated API call.
+#[derive(Clone, Debug)]
+pub struct CallRecord {
+    pub model: usize,
+    pub kind: CallKind,
+    pub tokens_in: f64,
+    pub tokens_out: f64,
+    pub cost_usd: f64,
+    pub latency_s: f64,
+}
+
+/// The collaborating model set plus all accounting state.
+#[derive(Clone, Debug)]
+pub struct ModelSet {
+    pub specs: Vec<ModelSpec>,
+    pub stats: Vec<ModelStats>,
+    /// Index of the largest model (course-alteration target).
+    pub largest: usize,
+    /// Per-model, per-transform affinity weights (idiosyncrasy).
+    affinity: Vec<Vec<f64>>,
+}
+
+fn name_hash(name: &str, salt: u64) -> u64 {
+    let mut h = 1469598103934665603u64 ^ salt;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(1099511628211);
+    }
+    h
+}
+
+impl ModelSet {
+    pub fn new(specs: Vec<ModelSpec>) -> ModelSet {
+        assert!(!specs.is_empty());
+        let largest = specs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.params_b.total_cmp(&b.1.params_b))
+            .map(|(i, _)| i)
+            .unwrap();
+        let affinity = specs
+            .iter()
+            .map(|m| {
+                let mut rng = Rng::new(name_hash(m.name, 0xAFF1));
+                TransformKind::ALL.iter().map(|_| 0.5 + rng.f64()).collect()
+            })
+            .collect();
+        let stats = vec![ModelStats::default(); specs.len()];
+        ModelSet {
+            specs,
+            stats,
+            largest,
+            affinity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// φ_small(llm): the paper's normalized small-model preference (§2.3).
+    pub fn phi_small(&self, model: usize) -> f64 {
+        let logs: Vec<f64> = self.specs.iter().map(|m| m.params_b.ln()).collect();
+        let max = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = logs.iter().cloned().fold(f64::INFINITY, f64::min);
+        (max - logs[model]) / (max - min + 1e-9)
+    }
+
+    pub fn idx_by_name(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|m| m.name == name)
+    }
+
+    /// The prompt stats block for the current state.
+    pub fn stat_lines(&self) -> Vec<prompts::ModelStatLine> {
+        self.specs
+            .iter()
+            .zip(&self.stats)
+            .map(|(m, s)| prompts::ModelStatLine {
+                name: m.name.to_string(),
+                params_b: m.params_b,
+                regular_calls: s.regular_calls,
+                regular_hit_rate: s.regular_hit_rate(),
+                ca_calls: s.ca_calls,
+                ca_hit_rate: s.ca_hit_rate(),
+                errors: s.errors,
+            })
+            .collect()
+    }
+
+    /// Record a call's accounting (cost, latency, token counts).
+    fn account(
+        &mut self,
+        model: usize,
+        kind: CallKind,
+        prompt_text: &str,
+        out_tokens: f64,
+    ) -> CallRecord {
+        let tin = count_tokens(prompt_text);
+        let spec = &self.specs[model];
+        let rec = CallRecord {
+            model,
+            kind,
+            tokens_in: tin,
+            tokens_out: out_tokens,
+            cost_usd: spec.call_cost(tin, out_tokens),
+            latency_s: spec.call_latency(tin, out_tokens),
+        };
+        let st = &mut self.stats[model];
+        st.total_cost_usd += rec.cost_usd;
+        st.total_latency_s += rec.latency_s;
+        st.tokens_in += tin;
+        st.tokens_out += out_tokens;
+        match kind {
+            CallKind::Regular => st.regular_calls += 1,
+            CallKind::CourseAlteration => st.ca_calls += 1,
+        }
+        rec
+    }
+
+    /// Credit a hit (child improved over parent) to the producing call.
+    pub fn credit_hit(&mut self, model: usize, kind: CallKind) {
+        match kind {
+            CallKind::Regular => self.stats[model].regular_hits += 1,
+            CallKind::CourseAlteration => self.stats[model].ca_hits += 1,
+        }
+    }
+
+    /// Simulate one model invocation: returns the proposal and the call
+    /// record. `score_candidates` maps a proposed transform sequence to
+    /// the engine's estimate of the resulting child's score — the
+    /// capability-scaled internal deliberation ("which of the moves I can
+    /// think of looks best").
+    pub fn propose(
+        &mut self,
+        model: usize,
+        ctx: &PromptCtx,
+        kind: CallKind,
+        banned: &[TransformKind],
+        score_candidates: &mut dyn FnMut(&[TransformKind]) -> f64,
+        rng: &mut Rng,
+    ) -> (Proposal, CallRecord) {
+        let spec = self.specs[model].clone();
+        let cap = spec.capability;
+        let vocab: Vec<TransformKind> = ctx
+            .vocabulary
+            .iter()
+            .copied()
+            .filter(|t| !banned.contains(t))
+            .collect();
+        let vocab = if vocab.is_empty() {
+            ctx.vocabulary.clone()
+        } else {
+            vocab
+        };
+
+        let mut n_errors = 0usize;
+
+        // --- transformation sequence: capability-scaled lookahead -------
+        let extra = if kind == CallKind::CourseAlteration { 3 } else { 0 };
+        let n_cands = 1 + (cap * cap * 7.0).round() as usize + extra;
+        let noise_sigma = 0.02 + 0.30 * (1.0 - cap);
+        let aff = &self.affinity[model];
+        let mut best_seq: Vec<TransformKind> = Vec::new();
+        let mut best_score = f64::NEG_INFINITY;
+        for _ in 0..n_cands {
+            let len = 1 + rng.below(4);
+            let weights: Vec<f64> = vocab
+                .iter()
+                .map(|t| aff[TransformKind::ALL.iter().position(|a| a == t).unwrap()])
+                .collect();
+            let seq: Vec<TransformKind> =
+                (0..len).map(|_| vocab[rng.weighted(&weights)]).collect();
+            let s = score_candidates(&seq) + rng.normal_ms(0.0, noise_sigma);
+            if s > best_score {
+                best_score = s;
+                best_seq = seq;
+            }
+        }
+        // invalid transformation name emission
+        if rng.chance(spec.error_rate) {
+            n_errors += 1;
+            self.stats[model].errors += 1;
+            // engine repairs by resampling one valid transform
+            if !best_seq.is_empty() {
+                let i = rng.below(best_seq.len());
+                best_seq[i] = *rng.choice(&vocab);
+            }
+        }
+
+        // --- next model: size-aware instruction following ----------------
+        let n = self.len();
+        let mut next_model = model;
+        if n > 1 {
+            if rng.chance(spec.error_rate) {
+                // invalid next_model name: error, engine falls back to self
+                n_errors += 1;
+                self.stats[model].errors += 1;
+            } else {
+                let recent: Vec<&String> = ctx.local_models.iter().flatten().collect();
+                let utilities: Vec<f64> = (0..n)
+                    .map(|j| {
+                        let st = &self.stats[j];
+                        let mut u = 0.75 * self.phi_small(j) + 1.25 * st.regular_hit_rate()
+                            - 0.35 * (st.errors.min(5) as f64 / 5.0);
+                        // cold-start exploration bonus for untried models
+                        if st.regular_calls == 0 {
+                            u += 0.25;
+                        }
+                        // local-context diversity: avoid the models that
+                        // expanded the last two ancestors
+                        if recent.iter().any(|r| r.as_str() == self.specs[j].name) {
+                            u -= 0.15;
+                        }
+                        u
+                    })
+                    .collect();
+                let temp = 0.15 + 0.45 * (1.0 - cap);
+                next_model = rng.softmax_sample(&utilities, temp);
+            }
+        }
+
+        // --- accounting ---------------------------------------------------
+        let prompt_text = match kind {
+            CallKind::Regular => prompts::regular_prompt(ctx),
+            CallKind::CourseAlteration => prompts::course_alteration_prompt(
+                ctx,
+                "small-model",
+                banned,
+                self.specs[next_model].name,
+                0.0,
+            ),
+        };
+        // output: the JSON proposal (~30 tokens) + brief reasoning scaled
+        // by model verbosity
+        let out_tokens = 30.0 + 60.0 * cap;
+        let rec = self.account(model, kind, &prompt_text, out_tokens);
+
+        (
+            Proposal {
+                transforms: best_seq,
+                next_model,
+                n_errors,
+            },
+            rec,
+        )
+    }
+
+    /// Aggregate spend across the whole set.
+    pub fn total_cost_usd(&self) -> f64 {
+        self.stats.iter().map(|s| s.total_cost_usd).sum()
+    }
+
+    /// Aggregate serial LLM latency (the paper's compile-time component:
+    /// calls are serial by design — §1 "all models are invoked serially").
+    pub fn total_latency_s(&self) -> f64 {
+        self.stats.iter().map(|s| s.total_latency_s).sum()
+    }
+
+    pub fn total_calls(&self) -> usize {
+        self.stats.iter().map(|s| s.calls()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use registry::paper_config;
+
+    fn ctx(set: &ModelSet) -> PromptCtx {
+        PromptCtx {
+            current: prompts::VariantCtx {
+                code: "code".into(),
+                trace_tail: String::new(),
+                score: 0.5,
+            },
+            parent: None,
+            grandparent: None,
+            vocabulary: TransformKind::vocabulary(false),
+            leaf_depth: 1,
+            trials_done: 0,
+            trials_budget: 100,
+            model_stats: set.stat_lines(),
+            local_models: [None, None, None],
+        }
+    }
+
+    #[test]
+    fn phi_small_extremes() {
+        let set = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let biggest = set.largest;
+        assert!((set.phi_small(biggest) - 0.0).abs() < 1e-9);
+        let smallest = set
+            .specs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.params_b.total_cmp(&b.1.params_b))
+            .unwrap()
+            .0;
+        assert!((set.phi_small(smallest) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn propose_accounts_cost_and_latency() {
+        let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let c = ctx(&set);
+        let mut rng = Rng::new(1);
+        let (prop, rec) = set.propose(0, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+        assert!(!prop.transforms.is_empty());
+        assert!(rec.cost_usd > 0.0 && rec.latency_s > 0.0);
+        assert_eq!(set.stats[0].regular_calls, 1);
+        assert!(set.total_cost_usd() > 0.0);
+    }
+
+    #[test]
+    fn capable_models_pick_better_sequences() {
+        // random-landscape scoring: the true value of the chosen sequence
+        // should be higher for capable models (more lookahead, less noise)
+        let mut set = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let c = ctx(&set);
+        fn score(seq: &[TransformKind]) -> f64 {
+            // deterministic pseudo-random landscape over sequences
+            let mut h = 0xcbf29ce484222325u64;
+            for t in seq {
+                h ^= t.name().len() as u64 ^ (t.name().as_bytes()[0] as u64) << 8;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            (h >> 11) as f64 / (1u64 << 53) as f64
+        }
+        let small = set.idx_by_name("Llama-3.1-8B-Instruct").unwrap();
+        let largest = set.largest;
+        let mut sum_big = 0.0;
+        let mut sum_small = 0.0;
+        for seed in 0..300 {
+            let mut rng = Rng::new(seed);
+            let (p, _) = set.propose(largest, &c, CallKind::Regular, &[], &mut score, &mut rng);
+            sum_big += score(&p.transforms);
+            let mut rng = Rng::new(seed + 10_000);
+            let (p, _) = set.propose(small, &c, CallKind::Regular, &[], &mut score, &mut rng);
+            sum_small += score(&p.transforms);
+        }
+        assert!(
+            sum_big > sum_small * 1.05,
+            "big {sum_big} vs small {sum_small}"
+        );
+    }
+
+    #[test]
+    fn size_aware_routing_prefers_small_models() {
+        let mut set = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let c = ctx(&set);
+        let mut rng = Rng::new(3);
+        let largest = set.largest;
+        let mut big_picks = 0;
+        for _ in 0..300 {
+            let (p, _) = set.propose(largest, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+            if p.next_model == largest {
+                big_picks += 1;
+            }
+        }
+        assert!(big_picks < 60, "largest picked {big_picks}/300");
+    }
+
+    #[test]
+    fn error_rates_accumulate() {
+        let mut set = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let c = ctx(&set);
+        let small = set.idx_by_name("DeepSeek-R1-Distill-Qwen-7B").unwrap();
+        let mut rng = Rng::new(4);
+        for _ in 0..500 {
+            set.propose(small, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+        }
+        assert!(
+            set.stats[small].errors > 5,
+            "errors {}",
+            set.stats[small].errors
+        );
+    }
+
+    #[test]
+    fn ca_prompt_cheaper_than_regular() {
+        let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let c = ctx(&set);
+        let mut rng = Rng::new(5);
+        let (_, reg) = set.propose(0, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+        let (_, ca) = set.propose(
+            0,
+            &c,
+            CallKind::CourseAlteration,
+            &[TransformKind::Unroll],
+            &mut |_| 0.5,
+            &mut rng,
+        );
+        assert!(ca.tokens_in < reg.tokens_in);
+    }
+}

@@ -1,0 +1,258 @@
+//! Prompt rendering — the paper's Appendix-B templates, reproduced
+//! faithfully and rendered with live search context.
+//!
+//! The simulated models do not parse this text (their behavior is driven
+//! by the structured [`PromptCtx`]), but the rendered prompt is what the
+//! token/cost accounting measures, exactly as a real deployment would pay
+//! for it — including the paper's point that the course-alteration prompt
+//! is *shorter* than a regular large-model prompt.
+
+use crate::schedule::transforms::TransformKind;
+
+/// Program variant summary shown in the prompt (leaf / parent /
+/// grandparent).
+#[derive(Clone, Debug, Default)]
+pub struct VariantCtx {
+    pub code: String,
+    pub trace_tail: String,
+    pub score: f64,
+}
+
+/// Global per-model statistics block.
+#[derive(Clone, Debug)]
+pub struct ModelStatLine {
+    pub name: String,
+    pub params_b: f64,
+    pub regular_calls: usize,
+    pub regular_hit_rate: f64,
+    pub ca_calls: usize,
+    pub ca_hit_rate: f64,
+    pub errors: usize,
+}
+
+/// Everything the active model sees at an expansion.
+#[derive(Clone, Debug)]
+pub struct PromptCtx {
+    pub current: VariantCtx,
+    pub parent: Option<VariantCtx>,
+    pub grandparent: Option<VariantCtx>,
+    pub vocabulary: Vec<TransformKind>,
+    pub leaf_depth: usize,
+    pub trials_done: usize,
+    pub trials_budget: usize,
+    pub model_stats: Vec<ModelStatLine>,
+    /// Names of the models that expanded current / parent / grandparent.
+    pub local_models: [Option<String>; 3],
+}
+
+fn variant_section(title: &str, v: &VariantCtx) -> String {
+    format!(
+        "{title}:\nCode:\n{}\nTransformation history:\n{}\nPredicted score: {:.4}\n",
+        v.code, v.trace_tail, v.score
+    )
+}
+
+fn stats_section(ctx: &PromptCtx) -> String {
+    let mut s = String::from("Global Per-Model Stats\n");
+    for m in &ctx.model_stats {
+        s.push_str(&format!(
+            "Model {}: params={:.1}B, regular_calls={}, regular_hit_rate={:.3}, \
+             course_alteration_calls={}, course_alteration_hit_rate={:.3}, errors={}\n",
+            m.name, m.params_b, m.regular_calls, m.regular_hit_rate, m.ca_calls, m.ca_hit_rate,
+            m.errors
+        ));
+    }
+    s
+}
+
+fn local_section(ctx: &PromptCtx) -> String {
+    let n = |o: &Option<String>| o.clone().unwrap_or_else(|| "N/A".into());
+    format!(
+        "Local Model Context\nModel used to expand the current node: {}\n\
+         Model used to expand the parent node: {}\n\
+         Model used to expand the grandparent node: {}\n",
+        n(&ctx.local_models[0]),
+        n(&ctx.local_models[1]),
+        n(&ctx.local_models[2])
+    )
+}
+
+fn vocab_section(ctx: &PromptCtx) -> String {
+    let names: Vec<String> = ctx
+        .vocabulary
+        .iter()
+        .map(|t| format!("\"{}\"", t.name()))
+        .collect();
+    format!("Available Transformations\n[{}]\n", names.join(", "))
+}
+
+/// The regular model-invocation prompt (Appendix B, first template).
+pub fn regular_prompt(ctx: &PromptCtx) -> String {
+    let mut p = String::new();
+    p.push_str(
+        "You are an AI scheduling assistant to help with a Monte Carlo Tree Search (MCTS) \
+         to find an optimal program in the search space starting from an unoptimized program.\n\
+         In this MCTS, the current program is the leaf we are expanding, while immediate parent \
+         and grandparent refer to the ancestors in the tree.\n\
+         Each program has: a piece of code, a transformation history sequence, a predicted \
+         performance score.\n\n\
+         Task:\n\
+         1. Compare code/transformation history/predicted performance scores to infer what \
+         changes might improve performance.\n\
+         2. Propose a sequence of transformations from the provided list. You may repeat a \
+         transformation to explore different decisions.\n\
+         3. Choose exactly one model from the provided model list as the next model to expand \
+         the child. Use the smallest model that could give best results. Prefer models with \
+         fewer errors.\n\n\
+         Output a single valid JSON object in the EXACT format:\n\
+         {\"transformations\": [\"Fullname1\", \"Fullname2\", \"...\"], \"next_model\": \"...\"}\n\n\
+         Historical Performance Info (Leaf, Parent, Grandparent)\n",
+    );
+    p.push_str(&variant_section("Current Program", &ctx.current));
+    if let Some(par) = &ctx.parent {
+        p.push_str(&variant_section("Immediate Parent Schedule", par));
+    }
+    if let Some(gp) = &ctx.grandparent {
+        p.push_str(&variant_section("Grandparent Schedule", gp));
+    }
+    p.push_str(&vocab_section(ctx));
+    p.push_str(&format!(
+        "Search Context\nLeaf depth: {}\nTrials progress: {} / {}\n",
+        ctx.leaf_depth, ctx.trials_done, ctx.trials_budget
+    ));
+    p.push_str(&stats_section(ctx));
+    p.push_str(&local_section(ctx));
+    p
+}
+
+/// The course-alteration prompt (Appendix B, second template): shorter,
+/// targeted — reuses local program context plus the failed proposal.
+pub fn course_alteration_prompt(
+    ctx: &PromptCtx,
+    failed_model: &str,
+    failed_transforms: &[TransformKind],
+    failed_next_model: &str,
+    failed_child_score: f64,
+) -> String {
+    let mut p = String::new();
+    p.push_str(
+        "You are the largest model invoked for course alteration in a Monte Carlo Tree \
+         Search (MCTS) for compiler optimization. A smaller model has proposed a sequence of \
+         transformations and a next model for expanding the child node. This proposal \
+         triggered course alteration because the predicted score of the resulting child is \
+         lower than the predicted score of the current program.\n\n\
+         Task: Modify the smaller model's proposal by changing the transformation sequence, \
+         the next model, or both.\n\
+         Output a single valid JSON object in the EXACT format:\n\
+         {\"transformations\": [\"Fullname1\", \"Fullname2\", \"...\"], \"next_model\": \"...\"}\n\n",
+    );
+    p.push_str(&variant_section("Current Program", &ctx.current));
+    if let Some(par) = &ctx.parent {
+        p.push_str(&variant_section("Immediate Parent Program", par));
+    }
+    let names: Vec<String> = failed_transforms
+        .iter()
+        .map(|t| format!("\"{}\"", t.name()))
+        .collect();
+    p.push_str(&format!(
+        "Smaller Model Proposal Triggering Course Alteration\n\
+         Smaller model name: {failed_model}\n\
+         Proposed transformations: [{}]\n\
+         Proposed next model: {failed_next_model}\n\
+         Predicted current score: {:.3}\n\
+         Predicted child score from smaller model proposal: {:.3}\n",
+        names.join(", "),
+        ctx.current.score,
+        failed_child_score
+    ));
+    p.push_str(&vocab_section(ctx));
+    p.push_str(&format!(
+        "Search Context\nLeaf depth: {}\nTrials progress: {} / {}\n",
+        ctx.leaf_depth, ctx.trials_done, ctx.trials_budget
+    ));
+    p.push_str(&stats_section(ctx));
+    p.push_str(&local_section(ctx));
+    p
+}
+
+/// Token estimate for accounting: the classic chars/4 heuristic.
+pub fn count_tokens(text: &str) -> f64 {
+    text.len() as f64 / 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> PromptCtx {
+        PromptCtx {
+            current: VariantCtx {
+                code: "@T.prim_func\ndef main(A, B, C): ...".into(),
+                trace_tail: "sch.sample_perfect_tile(loop=j, decision=[1, 64, 1, 64])".into(),
+                score: 0.0739,
+            },
+            parent: Some(VariantCtx {
+                code: "@T.prim_func\ndef main(A, B, C): ...".into(),
+                trace_tail: "sch.vectorize(...)".into(),
+                score: 0.136,
+            }),
+            grandparent: None,
+            vocabulary: vec![
+                TransformKind::TileSize,
+                TransformKind::Parallel,
+                TransformKind::Unroll,
+                TransformKind::ComputeLocation,
+            ],
+            leaf_depth: 3,
+            trials_done: 10,
+            trials_budget: 300,
+            model_stats: vec![ModelStatLine {
+                name: "gpt-5-mini".into(),
+                params_b: 20.0,
+                regular_calls: 12,
+                regular_hit_rate: 0.364,
+                ca_calls: 0,
+                ca_hit_rate: 0.0,
+                errors: 0,
+            }],
+            local_models: [Some("gpt-5.2".into()), Some("gpt-5.2".into()), None],
+        }
+    }
+
+    #[test]
+    fn regular_prompt_has_paper_sections() {
+        let p = regular_prompt(&ctx());
+        for needle in [
+            "AI scheduling assistant",
+            "Predicted score: 0.0739",
+            "Available Transformations",
+            "Trials progress: 10 / 300",
+            "regular_hit_rate=0.364",
+            "Model used to expand the current node: gpt-5.2",
+            "\"next_model\"",
+        ] {
+            assert!(p.contains(needle), "missing: {needle}");
+        }
+    }
+
+    #[test]
+    fn ca_prompt_is_shorter_than_regular() {
+        let c = ctx();
+        let reg = regular_prompt(&c);
+        let ca = course_alteration_prompt(
+            &c,
+            "gpt-5-mini",
+            &[TransformKind::TileSize, TransformKind::Unroll],
+            "gpt-5.2",
+            0.028,
+        );
+        assert!(ca.len() < reg.len(), "ca {} >= regular {}", ca.len(), reg.len());
+        assert!(ca.contains("course alteration"));
+        assert!(ca.contains("Predicted child score from smaller model proposal: 0.028"));
+    }
+
+    #[test]
+    fn token_counting() {
+        assert_eq!(count_tokens("abcdefgh"), 2.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! The heterogeneous LLM catalog (paper §3.1): parameter counts, serving
+//! prices, decoding speeds, and simulated-capability indices.
+//!
+//! Prices/speeds are representative of OpenAI / Nscale serving at the
+//! paper's time (absolute values matter only through the *ratios* they
+//! induce — the paper's own cost-reduction factors are ratios too).
+//! Capability is the simulation stand-in for "how good this model's
+//! schedule-optimization proposals are"; it scales log-linearly in
+//! parameter count with per-model idiosyncrasy, matching the paper's
+//! observation that no small model can drive the search alone.
+
+/// One servable model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Parameter count in billions (the paper's prompt exposes this).
+    pub params_b: f64,
+    /// USD per 1M input tokens.
+    pub usd_per_mtok_in: f64,
+    /// USD per 1M output tokens.
+    pub usd_per_mtok_out: f64,
+    /// Decode speed, output tokens/second.
+    pub tokens_per_sec: f64,
+    /// Fixed API round-trip latency (seconds).
+    pub base_latency_s: f64,
+    /// Proposal quality in [0,1]: drives hit rate in the simulation.
+    pub capability: f64,
+    /// Probability of an invalid transformation / model name per call.
+    pub error_rate: f64,
+}
+
+impl ModelSpec {
+    /// Simulated wall-clock latency of one call.
+    pub fn call_latency(&self, tokens_in: f64, tokens_out: f64) -> f64 {
+        // prefill is ~10x decode throughput
+        self.base_latency_s + tokens_in / (self.tokens_per_sec * 10.0) + tokens_out / self.tokens_per_sec
+    }
+
+    /// Simulated USD cost of one call.
+    pub fn call_cost(&self, tokens_in: f64, tokens_out: f64) -> f64 {
+        tokens_in * self.usd_per_mtok_in / 1e6 + tokens_out * self.usd_per_mtok_out / 1e6
+    }
+}
+
+/// The full catalog, largest models first within each family.
+pub fn catalog() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "gpt-5.2",
+            params_b: 300.0,
+            usd_per_mtok_in: 1.25,
+            usd_per_mtok_out: 10.0,
+            tokens_per_sec: 42.0,
+            base_latency_s: 1.5,
+            capability: 0.95,
+            error_rate: 0.002,
+        },
+        ModelSpec {
+            name: "Llama-3.3-70B-Instruct",
+            params_b: 70.0,
+            usd_per_mtok_in: 0.60,
+            usd_per_mtok_out: 0.70,
+            tokens_per_sec: 70.0,
+            base_latency_s: 0.8,
+            capability: 0.84,
+            error_rate: 0.01,
+        },
+        ModelSpec {
+            name: "DeepSeek-R1-Distill-Qwen-32B",
+            params_b: 32.0,
+            usd_per_mtok_in: 0.30,
+            usd_per_mtok_out: 0.30,
+            tokens_per_sec: 80.0,
+            base_latency_s: 0.6,
+            capability: 0.78,
+            error_rate: 0.015,
+        },
+        ModelSpec {
+            name: "Devstral-Small-2505",
+            params_b: 24.0,
+            usd_per_mtok_in: 0.10,
+            usd_per_mtok_out: 0.30,
+            tokens_per_sec: 95.0,
+            base_latency_s: 0.5,
+            capability: 0.70,
+            error_rate: 0.02,
+        },
+        ModelSpec {
+            name: "gpt-5-mini",
+            params_b: 20.0,
+            usd_per_mtok_in: 0.25,
+            usd_per_mtok_out: 2.0,
+            tokens_per_sec: 110.0,
+            base_latency_s: 0.5,
+            capability: 0.74,
+            error_rate: 0.01,
+        },
+        ModelSpec {
+            name: "Qwen3-14B",
+            params_b: 14.0,
+            usd_per_mtok_in: 0.12,
+            usd_per_mtok_out: 0.12,
+            tokens_per_sec: 120.0,
+            base_latency_s: 0.4,
+            capability: 0.71,
+            error_rate: 0.02,
+        },
+        ModelSpec {
+            name: "Qwen3-8B",
+            params_b: 8.0,
+            usd_per_mtok_in: 0.08,
+            usd_per_mtok_out: 0.08,
+            tokens_per_sec: 140.0,
+            base_latency_s: 0.35,
+            capability: 0.68,
+            error_rate: 0.025,
+        },
+        ModelSpec {
+            name: "Llama-3.1-8B-Instruct",
+            params_b: 8.0,
+            usd_per_mtok_in: 0.05,
+            usd_per_mtok_out: 0.08,
+            tokens_per_sec: 150.0,
+            base_latency_s: 0.35,
+            capability: 0.64,
+            error_rate: 0.03,
+        },
+        ModelSpec {
+            name: "DeepSeek-R1-Distill-Qwen-7B",
+            params_b: 7.0,
+            usd_per_mtok_in: 0.10,
+            usd_per_mtok_out: 0.10,
+            tokens_per_sec: 150.0,
+            base_latency_s: 0.35,
+            capability: 0.66,
+            error_rate: 0.03,
+        },
+    ]
+}
+
+/// Look up a spec by exact name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    catalog().into_iter().find(|m| m.name == name)
+}
+
+/// The paper's three collaborative configurations (§3.1), parameterized by
+/// the largest model ("gpt-5.2" or "Llama-3.3-70B-Instruct").
+pub fn paper_config(n_llms: usize, largest: &str) -> Vec<ModelSpec> {
+    let mut names: Vec<&str> = match n_llms {
+        2 => vec![largest, "gpt-5-mini"],
+        4 => vec![
+            largest,
+            "gpt-5-mini",
+            "DeepSeek-R1-Distill-Qwen-32B",
+            "Llama-3.1-8B-Instruct",
+        ],
+        8 => vec![
+            largest,
+            "gpt-5-mini",
+            "DeepSeek-R1-Distill-Qwen-32B",
+            "Llama-3.1-8B-Instruct",
+            "DeepSeek-R1-Distill-Qwen-7B",
+            "Qwen3-8B",
+            "Qwen3-14B",
+            "Devstral-Small-2505",
+        ],
+        1 => vec![largest],
+        n => panic!("unsupported config size {n}"),
+    };
+    names.dedup();
+    names
+        .into_iter()
+        .map(|n| by_name(n).unwrap_or_else(|| panic!("unknown model {n}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_complete() {
+        assert_eq!(catalog().len(), 9);
+        assert!(by_name("gpt-5.2").is_some());
+        assert!(by_name("gpt-6").is_none());
+    }
+
+    #[test]
+    fn capability_monotone_ish_in_size() {
+        let c = catalog();
+        let biggest = c.iter().max_by(|a, b| a.params_b.total_cmp(&b.params_b)).unwrap();
+        assert_eq!(biggest.name, "gpt-5.2");
+        assert!(biggest.capability >= c.iter().map(|m| m.capability).fold(0.0, f64::max) - 1e-9);
+    }
+
+    #[test]
+    fn big_models_cost_more() {
+        let big = by_name("gpt-5.2").unwrap();
+        let small = by_name("Qwen3-8B").unwrap();
+        assert!(big.call_cost(2000.0, 150.0) > small.call_cost(2000.0, 150.0) * 5.0);
+        assert!(big.call_latency(2000.0, 150.0) > small.call_latency(2000.0, 150.0));
+    }
+
+    #[test]
+    fn paper_configs() {
+        assert_eq!(paper_config(2, "gpt-5.2").len(), 2);
+        assert_eq!(paper_config(4, "gpt-5.2").len(), 4);
+        assert_eq!(paper_config(8, "gpt-5.2").len(), 8);
+        let l = paper_config(8, "Llama-3.3-70B-Instruct");
+        assert_eq!(l[0].name, "Llama-3.3-70B-Instruct");
+        assert_eq!(l.len(), 8);
+    }
+}

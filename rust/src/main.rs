@@ -1,0 +1,108 @@
+//! `litecoop` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   search   --workload <name> --target cpu|gpu --llms N --budget N [--largest M] [--lambda X]
+//!   models   (print the LLM catalog)
+//!   workloads (print the benchmark registry)
+//!   runtime  --artifact <name>  (load + execute an AOT artifact via PJRT)
+
+use litecoop::baselines;
+use litecoop::llm::registry;
+use litecoop::mcts::SearchConfig;
+use litecoop::runtime::Runtime;
+use litecoop::schedule::Schedule;
+use litecoop::sim::Target;
+use litecoop::util::cli::Args;
+use litecoop::workloads;
+use std::sync::Arc;
+
+fn main() -> litecoop::Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("search") | None => cmd_search(&args),
+        Some("models") => {
+            for m in registry::catalog() {
+                println!(
+                    "{:<32} {:>6.1}B  ${:>5.2}/M-in ${:>5.2}/M-out  {:>5.0} tok/s",
+                    m.name, m.params_b, m.usd_per_mtok_in, m.usd_per_mtok_out, m.tokens_per_sec
+                );
+            }
+            Ok(())
+        }
+        Some("workloads") => {
+            for w in workloads::paper_benchmarks() {
+                println!(
+                    "{:<20} {:>8.1} GFLOP  {} blocks",
+                    w.name,
+                    w.flops() / 1e9,
+                    w.blocks.len()
+                );
+            }
+            Ok(())
+        }
+        Some("runtime") => cmd_runtime(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other}; see --help in README");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_search(args: &Args) -> litecoop::Result<()> {
+    let workload_name = args.str_or("workload", "llama3_attention");
+    let target = if args.str_or("target", "cpu") == "gpu" {
+        Target::Gpu
+    } else {
+        Target::Cpu
+    };
+    let n_llms = args.usize_or("llms", 8);
+    let largest = args.str_or("largest", "gpt-5.2");
+    let workload = workloads::by_name(&workload_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {workload_name}"))?;
+    let root = Schedule::initial(Arc::new(workload));
+    let cfg = SearchConfig {
+        budget: args.usize_or("budget", 300),
+        seed: args.u64_or("seed", 7),
+        lambda: args.f64_or("lambda", 0.5),
+        ..SearchConfig::default()
+    };
+    println!(
+        "LiteCoOp search: {workload_name} on {:?}, {n_llms} LLMs (largest {largest}), budget {}",
+        target, cfg.budget
+    );
+    let r = if n_llms == 1 {
+        baselines::single_llm(&largest, target, root, cfg, &workload_name)
+    } else {
+        baselines::litecoop(n_llms, &largest, target, root, cfg, &workload_name)
+    };
+    println!("final speedup      : {:.2}x", r.best_speedup);
+    println!("compile time (sim) : {:.0}s", r.compile_time_s);
+    println!("API cost (sim)     : ${:.3}", r.api_cost_usd);
+    println!("course alterations : {}", r.n_ca_events);
+    println!("model errors       : {}", r.n_errors);
+    let total: usize = r.call_counts.iter().map(|(_, a, b)| a + b).sum();
+    for (name, reg, ca) in &r.call_counts {
+        if reg + ca > 0 {
+            println!(
+                "  {:<32} {:>5.1}% ({} regular, {} CA)",
+                name,
+                (reg + ca) as f64 / total as f64 * 100.0,
+                reg,
+                ca
+            );
+        }
+    }
+    println!("\nbest schedule trace (tail):\n{}", r.best_schedule.trace.render_tail(12));
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> litecoop::Result<()> {
+    let rt = Runtime::new(args.str_or("dir", "artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+    let name = args.str_or("artifact", "llama4_mlp");
+    let art = rt.load(&name)?;
+    let inputs = rt.random_inputs(&art, args.u64_or("seed", 42))?;
+    let lat = rt.measure_latency(&art, &inputs, args.usize_or("iters", 5))?;
+    println!("{name}: mean latency {:.3} ms over {} iters", lat * 1e3, args.usize_or("iters", 5));
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! LA-UCT — the LLM-aware UCT tree policy (paper §2.3, Appendix A).
+//!
+//! For a child with visit count N, cumulative normalized reward W,
+//! assigned model llm, and parent visit count Np:
+//!
+//! ```text
+//! LA-UCT = (1-λ)·W/N + λ·φ_small(llm) + c·√(ln Np / N)
+//! ```
+//!
+//! which (Appendix A) is UCB1 on the transformed reward
+//! `(1-λ)R + λφ_small`, concentrating visits on children maximizing the
+//! surrogate mean `(1-λ)μ + λφ_small` — smaller models are favored when
+//! their downstream reward is competitive; a larger model still wins when
+//! its expected reward overcomes the size-preference term.
+
+/// One child's statistics, as seen by the tree policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ChildStats {
+    pub visits: f64,
+    pub reward_sum: f64,
+    pub phi_small: f64,
+}
+
+/// The LA-UCT score. Unvisited children score +inf (must-visit).
+pub fn la_uct(child: &ChildStats, parent_visits: f64, lambda: f64, c: f64) -> f64 {
+    if child.visits < 1.0 {
+        return f64::INFINITY;
+    }
+    let exploit = (1.0 - lambda) * (child.reward_sum / child.visits)
+        + lambda * child.phi_small;
+    let explore = c * ((parent_visits.max(1.0)).ln() / child.visits).sqrt();
+    exploit + explore
+}
+
+/// Index of the LA-UCT-maximal child among `children`.
+pub fn select(children: &[ChildStats], parent_visits: f64, lambda: f64, c: f64) -> usize {
+    let mut best = 0;
+    let mut best_score = f64::NEG_INFINITY;
+    for (i, ch) in children.iter().enumerate() {
+        let s = la_uct(ch, parent_visits, lambda, c);
+        if s > best_score {
+            best_score = s;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn ch(visits: f64, mean_r: f64, phi: f64) -> ChildStats {
+        ChildStats {
+            visits,
+            reward_sum: mean_r * visits,
+            phi_small: phi,
+        }
+    }
+
+    #[test]
+    fn unvisited_first() {
+        let kids = [ch(5.0, 0.9, 0.0), ch(0.0, 0.0, 0.0)];
+        assert_eq!(select(&kids, 5.0, 0.5, 1.4), 1);
+    }
+
+    #[test]
+    fn lambda_zero_is_reward_only_uct() {
+        // equal phi irrelevance at lambda=0
+        let a = ch(10.0, 0.8, 0.0);
+        let b = ch(10.0, 0.6, 1.0);
+        assert_eq!(select(&[a, b], 20.0, 0.0, 0.0), 0);
+    }
+
+    #[test]
+    fn lambda_one_prefers_small_models() {
+        let a = ch(10.0, 0.9, 0.0); // big model, great reward
+        let b = ch(10.0, 0.1, 1.0); // tiny model, poor reward
+        assert_eq!(select(&[a, b], 20.0, 1.0, 0.0), 1);
+    }
+
+    #[test]
+    fn big_model_wins_when_reward_gap_large() {
+        // λ=0.5: a needs reward advantage > phi advantage
+        let a = ch(10.0, 0.95, 0.0);
+        let b = ch(10.0, 0.2, 0.6);
+        assert_eq!(select(&[a, b], 20.0, 0.5, 0.0), 0);
+    }
+
+    #[test]
+    fn exploration_term_lifts_undervisited() {
+        let a = ch(1000.0, 0.6, 0.5);
+        let b = ch(2.0, 0.55, 0.5);
+        // big c: exploration dominates
+        assert_eq!(select(&[a, b], 1002.0, 0.5, 3.0), 1);
+    }
+
+    #[test]
+    fn asymptotic_concentration_on_surrogate_max() {
+        // simulate UCB1 bandit on transformed reward; arm 1 has the best
+        // surrogate mean — it must receive the majority of pulls
+        let mut rng = Rng::new(1);
+        let lambda = 0.5;
+        let c = 2f64.sqrt();
+        let mu = [0.5, 0.7, 0.3];
+        let phi = [0.2, 0.6, 0.9];
+        let mut kids: Vec<ChildStats> = phi
+            .iter()
+            .map(|&p| ChildStats {
+                visits: 0.0,
+                reward_sum: 0.0,
+                phi_small: p,
+            })
+            .collect();
+        let mut parent = 0.0;
+        for _ in 0..4000 {
+            let i = select(&kids, parent, lambda, c);
+            let r = (mu[i] + rng.normal_ms(0.0, 0.1)).clamp(0.0, 1.0);
+            kids[i].visits += 1.0;
+            kids[i].reward_sum += r;
+            parent += 1.0;
+        }
+        // surrogate means: 0.35, 0.65, 0.60 -> arm 1 wins
+        assert!(
+            kids[1].visits > kids[0].visits && kids[1].visits > kids[2].visits,
+            "visits {:?}",
+            kids.iter().map(|k| k.visits).collect::<Vec<_>>()
+        );
+        assert!(kids[1].visits > 2000.0);
+    }
+}

@@ -1,0 +1,650 @@
+//! Shared-tree MCTS with endogenous model selection — the paper's core
+//! contribution (§2).
+//!
+//! Each node is a joint state ⟨program, llm⟩: the schedule reached so far
+//! plus the model assigned to expand it. One iteration runs
+//! selection (LA-UCT, [`la_uct`]) → expansion (the active LLM proposes a
+//! joint ⟨transform-sequence, next-llm⟩ action) → rollout (random
+//! transforms, cost-model scored) → backpropagation (reward credited along
+//! the selected path, so signal discovered by one model informs all
+//! others). Course alteration (§2.5) prunes persistent small-model
+//! regressions and re-expands from the same parent with the largest model
+//! under a shorter targeted prompt.
+
+pub mod la_uct;
+
+use crate::costmodel::CostModel;
+use crate::llm::prompts::{PromptCtx, VariantCtx};
+use crate::llm::{CallKind, ModelSet};
+use crate::schedule::printer::print_dominant;
+use crate::schedule::transforms::{apply_sequence, TransformKind};
+use crate::schedule::Schedule;
+use crate::sim::Simulator;
+use crate::util::Rng;
+
+/// Next-model routing policy (Appendix G ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Routing {
+    /// The paper's mechanism: the active LLM proposes the next model.
+    Endogenous,
+    /// Ablation: uniform-random next model.
+    Random,
+    /// Ablation: fixed round-robin next model.
+    RoundRobin,
+}
+
+/// Search configuration (paper §3.1 defaults).
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// LA-UCT size-preference weight λ (paper: 0.5).
+    pub lambda: f64,
+    /// UCT exploration constant c (paper: √2).
+    pub exploration_c: f64,
+    /// Tree branching factor B (paper: 2).
+    pub branching: usize,
+    /// Search budget in samples (expanded candidates).
+    pub budget: usize,
+    /// Random-transform rollout depth after expansion.
+    pub rollout_depth: usize,
+    /// Course alteration after this many consecutive small-model
+    /// regressions on a path (paper: Some(2); Appendix F: Some(1)/None).
+    pub ca_threshold: Option<usize>,
+    /// Measure the top-K predicted candidates every this many samples.
+    pub measure_interval: usize,
+    pub measure_top_k: usize,
+    /// Simulated harness time per measured candidate (compile+run).
+    pub measure_overhead_s: f64,
+    pub routing: Routing,
+    pub seed: u64,
+    /// Curve checkpoints (samples) at which best speedup is recorded.
+    pub checkpoints: Vec<usize>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            lambda: 0.5,
+            exploration_c: 2f64.sqrt(),
+            branching: 2,
+            budget: 1000,
+            rollout_depth: 2,
+            ca_threshold: Some(2),
+            measure_interval: 16,
+            measure_top_k: 8,
+            measure_overhead_s: 1.5,
+            routing: Routing::Endogenous,
+            seed: 0,
+            checkpoints: vec![50, 100, 250, 500, 750, 1000],
+        }
+    }
+}
+
+/// One tree node: a joint ⟨program, llm⟩ state.
+#[derive(Clone, Debug)]
+struct Node {
+    parent: Option<usize>,
+    children: Vec<usize>,
+    schedule: Schedule,
+    /// Model assigned to expand this node.
+    llm: usize,
+    visits: f64,
+    reward_sum: f64,
+    predicted_score: f64,
+    /// Which model produced this node, and through what call type.
+    expanded_by: Option<(usize, CallKind)>,
+    depth: usize,
+    /// Consecutive small-model regressions on the path ending here
+    /// (large-model nodes pass their parent's count through unchanged).
+    regression_chain: usize,
+    pruned: bool,
+    measured: bool,
+}
+
+/// Everything a finished search reports.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub workload: String,
+    pub best_speedup: f64,
+    pub best_latency_s: f64,
+    pub baseline_latency_s: f64,
+    /// (samples, best measured speedup) at each checkpoint.
+    pub curve: Vec<(usize, f64)>,
+    /// Total simulated compilation time: serial LLM latency + measurement.
+    pub compile_time_s: f64,
+    pub api_cost_usd: f64,
+    pub n_samples: usize,
+    pub n_ca_events: usize,
+    pub n_errors: usize,
+    /// (model name, regular calls, ca calls) per model.
+    pub call_counts: Vec<(String, usize, usize)>,
+    pub best_schedule: Schedule,
+}
+
+impl SearchResult {
+    /// Invocation rate of a model (fraction of total calls), regular + CA.
+    pub fn invocation_rate(&self, name: &str) -> (f64, f64) {
+        let total: usize = self.call_counts.iter().map(|(_, r, c)| r + c).sum();
+        let (r, c) = self
+            .call_counts
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, r, c)| (*r, *c))
+            .unwrap_or((0, 0));
+        (
+            r as f64 / total.max(1) as f64,
+            c as f64 / total.max(1) as f64,
+        )
+    }
+}
+
+/// The shared-tree search engine.
+pub struct Mcts {
+    pub cfg: SearchConfig,
+    pub models: ModelSet,
+    pub cost: CostModel,
+    pub sim: Simulator,
+    nodes: Vec<Node>,
+    rng: Rng,
+    rr_ptr: usize,
+    samples: usize,
+    measure_time_s: f64,
+    n_ca_events: usize,
+    n_errors: usize,
+    best_latency: f64,
+    best_schedule: Schedule,
+    baseline_latency: f64,
+    unmeasured: Vec<usize>,
+    curve: Vec<(usize, f64)>,
+    max_depth: usize,
+}
+
+impl Mcts {
+    pub fn new(cfg: SearchConfig, models: ModelSet, sim: Simulator, root: Schedule) -> Mcts {
+        let mut cost = CostModel::new(sim.target, cfg.seed);
+        let mut rng = Rng::new(cfg.seed ^ 0x6C17_E600);
+        let baseline_latency = cost.measure(&sim, &root);
+        // start with the largest model driving the root expansion, as a
+        // single-model baseline would
+        let root_llm = models.largest;
+        let root_node = Node {
+            parent: None,
+            children: Vec::new(),
+            schedule: root.clone(),
+            llm: root_llm,
+            visits: 1.0,
+            reward_sum: 0.5,
+            predicted_score: 0.5,
+            expanded_by: None,
+            depth: 0,
+            regression_chain: 0,
+            pruned: false,
+            measured: true,
+        };
+        // seed cost model with a few random variants so early predictions
+        // aren't degenerate
+        let gpu = sim.target.is_gpu();
+        let vocab = TransformKind::vocabulary(gpu);
+        for _ in 0..7 {
+            let seq: Vec<_> = (0..3).map(|_| *rng.choice(&vocab)).collect();
+            if let Ok(s) = apply_sequence(&root, &seq, &mut rng, gpu) {
+                cost.measure(&sim, &s);
+            }
+        }
+        let best_latency = cost.best_latency;
+        Mcts {
+            cfg,
+            models,
+            cost,
+            sim,
+            nodes: vec![root_node],
+            rng,
+            rr_ptr: 0,
+            samples: 0,
+            measure_time_s: 0.0,
+            n_ca_events: 0,
+            n_errors: 0,
+            best_latency,
+            best_schedule: root.clone(),
+            baseline_latency,
+            unmeasured: Vec::new(),
+            curve: Vec::new(),
+            max_depth: 24,
+        }
+    }
+
+    fn phi(&self, model: usize) -> f64 {
+        if self.models.len() == 1 {
+            0.0
+        } else {
+            self.models.phi_small(model)
+        }
+    }
+
+    /// LA-UCT descent: walk from the root until a node with spare
+    /// branching capacity (or the depth cap).
+    fn select(&mut self) -> usize {
+        let mut cur = 0usize;
+        loop {
+            let node = &self.nodes[cur];
+            let live_children: Vec<usize> = node
+                .children
+                .iter()
+                .copied()
+                .filter(|&c| !self.nodes[c].pruned)
+                .collect();
+            if live_children.len() < self.cfg.branching || node.depth >= self.max_depth {
+                return cur;
+            }
+            let stats: Vec<la_uct::ChildStats> = live_children
+                .iter()
+                .map(|&c| la_uct::ChildStats {
+                    visits: self.nodes[c].visits,
+                    reward_sum: self.nodes[c].reward_sum,
+                    phi_small: self.phi(self.nodes[c].llm),
+                })
+                .collect();
+            let pick = la_uct::select(
+                &stats,
+                node.visits,
+                self.cfg.lambda,
+                self.cfg.exploration_c,
+            );
+            cur = live_children[pick];
+        }
+    }
+
+    fn prompt_ctx(&self, node_idx: usize) -> PromptCtx {
+        let gpu = self.sim.target.is_gpu();
+        let node = &self.nodes[node_idx];
+        let variant = |i: usize| VariantCtx {
+            code: print_dominant(&self.nodes[i].schedule, gpu),
+            trace_tail: self.nodes[i].schedule.trace.render_tail(8),
+            score: self.nodes[i].predicted_score,
+        };
+        let parent_idx = node.parent;
+        let gp_idx = parent_idx.and_then(|p| self.nodes[p].parent);
+        let model_name =
+            |i: Option<usize>| i.map(|n| self.models.specs[self.nodes[n].llm].name.to_string());
+        PromptCtx {
+            current: variant(node_idx),
+            parent: parent_idx.map(variant),
+            grandparent: gp_idx.map(variant),
+            vocabulary: TransformKind::vocabulary(gpu),
+            leaf_depth: node.depth,
+            trials_done: self.samples,
+            trials_budget: self.cfg.budget,
+            model_stats: self.models.stat_lines(),
+            local_models: [
+                Some(self.models.specs[node.llm].name.to_string()),
+                model_name(parent_idx),
+                model_name(gp_idx),
+            ],
+        }
+    }
+
+    /// Route the next model according to the configured policy.
+    fn route(&mut self, proposed: usize) -> usize {
+        match self.cfg.routing {
+            Routing::Endogenous => proposed,
+            Routing::Random => self.rng.below(self.models.len()),
+            Routing::RoundRobin => {
+                self.rr_ptr = (self.rr_ptr + 1) % self.models.len();
+                self.rr_ptr
+            }
+        }
+    }
+
+    /// One full MCTS iteration. Returns false once the budget is spent.
+    pub fn step(&mut self) -> bool {
+        if self.samples >= self.cfg.budget {
+            return false;
+        }
+        let leaf = self.select();
+        let gpu = self.sim.target.is_gpu();
+
+        // ---- expansion: query the active LLM ---------------------------
+        let ctx = self.prompt_ctx(leaf);
+        let active = self.nodes[leaf].llm;
+        let parent_sched = self.nodes[leaf].schedule.clone();
+        // The model's internal deliberation scores candidate sequences by
+        // reading the program: emulated as a blend of the learned cost
+        // model and the analytic performance model (an LLM reasons about
+        // code structure directly, not only through the tuner's learned
+        // predictor). Capability-scaled noise is added by the proposer.
+        let cost = &self.cost;
+        let sim = &self.sim;
+        let best_lat = self.best_latency;
+        let mut eval_rng = self.rng.fork(self.samples as u64);
+        let mut score_fn = |seq: &[TransformKind]| -> f64 {
+            match apply_sequence(&parent_sched, seq, &mut eval_rng, gpu) {
+                Ok(s) => {
+                    let reasoned = (best_lat / sim.latency(&s)).clamp(0.0, 1.5);
+                    0.4 * cost.score(&s) + 0.6 * reasoned
+                }
+                Err(_) => 0.0,
+            }
+        };
+        let (proposal, _rec) =
+            self.models
+                .propose(active, &ctx, CallKind::Regular, &[], &mut score_fn, &mut self.rng);
+        self.n_errors += proposal.n_errors;
+
+        let child_sched = match apply_sequence(&parent_sched, &proposal.transforms, &mut self.rng, gpu)
+        {
+            Ok(s) => s,
+            Err(_) => return true, // nothing applicable; spend no sample
+        };
+        let child_score = self.cost.score(&child_sched);
+        let next_llm = self.route(proposal.next_model);
+        let parent_score = self.nodes[leaf].predicted_score;
+        let parent_chain = self.nodes[leaf].regression_chain;
+        let active_is_small = active != self.models.largest;
+        // regression = the child is predicted meaningfully worse than its
+        // parent (hysteresis absorbs cost-model jitter)
+        let regressed = child_score < parent_score - 0.02;
+        if !regressed {
+            self.models.credit_hit(active, CallKind::Regular);
+        }
+
+        // regression chain: small-model regressions accumulate; large-model
+        // nodes pass the count through (paper: "ignoring intervening large
+        // model nodes"); an improvement resets it.
+        let chain = if regressed && active_is_small {
+            parent_chain + 1
+        } else if regressed {
+            parent_chain
+        } else {
+            0
+        };
+
+        // ---- course alteration ------------------------------------------
+        let trigger_ca = self
+            .cfg
+            .ca_threshold
+            .map(|t| active_is_small && regressed && chain >= t)
+            .unwrap_or(false)
+            && self.models.len() > 1;
+
+        let (final_sched, final_score, final_llm, expanded_by, final_chain) = if trigger_ca {
+            // prune the regressive proposal (no node inserted, its value
+            // never backpropagates), re-expand with the largest model
+            self.n_ca_events += 1;
+            let largest = self.models.largest;
+            let banned = proposal.transforms.clone();
+            let cost = &self.cost;
+            let sim = &self.sim;
+            let best_lat = self.best_latency;
+            let mut eval_rng = self.rng.fork(self.samples as u64 ^ 0xCA);
+            let mut ca_score_fn = |seq: &[TransformKind]| -> f64 {
+                match apply_sequence(&parent_sched, seq, &mut eval_rng, gpu) {
+                    Ok(s) => {
+                        let reasoned = (best_lat / sim.latency(&s)).clamp(0.0, 1.5);
+                        0.4 * cost.score(&s) + 0.6 * reasoned
+                    }
+                    Err(_) => 0.0,
+                }
+            };
+            let (ca_prop, _) = self.models.propose(
+                largest,
+                &ctx,
+                CallKind::CourseAlteration,
+                &banned,
+                &mut ca_score_fn,
+                &mut self.rng,
+            );
+            self.n_errors += ca_prop.n_errors;
+            match apply_sequence(&parent_sched, &ca_prop.transforms, &mut self.rng, gpu) {
+                Ok(s) => {
+                    let sc = self.cost.score(&s);
+                    if sc >= parent_score {
+                        self.models.credit_hit(largest, CallKind::CourseAlteration);
+                    }
+                    let next = self.route(ca_prop.next_model);
+                    (s, sc, next, Some((largest, CallKind::CourseAlteration)), 0)
+                }
+                Err(_) => return true,
+            }
+        } else {
+            (
+                child_sched,
+                child_score,
+                next_llm,
+                Some((active, CallKind::Regular)),
+                chain,
+            )
+        };
+
+        // ---- insert child -------------------------------------------------
+        let depth = self.nodes[leaf].depth + 1;
+        let child_idx = self.nodes.len();
+        self.nodes.push(Node {
+            parent: Some(leaf),
+            children: Vec::new(),
+            schedule: final_sched,
+            llm: final_llm,
+            visits: 0.0,
+            reward_sum: 0.0,
+            predicted_score: final_score,
+            expanded_by,
+            depth,
+            regression_chain: final_chain,
+            pruned: false,
+            measured: false,
+        });
+        self.nodes[leaf].children.push(child_idx);
+        self.unmeasured.push(child_idx);
+        self.samples += 1;
+
+        // ---- rollout --------------------------------------------------------
+        let mut roll = self.nodes[child_idx].schedule.clone();
+        let vocab = TransformKind::vocabulary(gpu);
+        for _ in 0..self.cfg.rollout_depth {
+            let k = *self.rng.choice(&vocab);
+            if let Ok(next) = crate::schedule::transforms::apply(&roll, k, &mut self.rng, gpu) {
+                roll = next;
+            }
+        }
+        let rollout_score = self.cost.score(&roll);
+        let reward = final_score.max(rollout_score).clamp(0.0, 1.0);
+
+        // ---- backpropagation -------------------------------------------------
+        let mut cur = Some(child_idx);
+        while let Some(i) = cur {
+            self.nodes[i].visits += 1.0;
+            self.nodes[i].reward_sum += reward;
+            cur = self.nodes[i].parent;
+        }
+
+        // ---- periodic measurement + cost-model retraining ---------------------
+        if self.samples % self.cfg.measure_interval == 0 || self.samples >= self.cfg.budget {
+            self.measure_batch();
+        }
+        // curve checkpoints
+        if self.cfg.checkpoints.contains(&self.samples) {
+            let sp = self.baseline_latency / self.best_latency;
+            self.curve.push((self.samples, sp));
+        }
+        true
+    }
+
+    /// Measure the top-K unmeasured candidates (by predicted score) on the
+    /// simulator; feed the cost model; update the incumbent.
+    fn measure_batch(&mut self) {
+        // rank by predicted score, best first
+        self.unmeasured.sort_by(|&a, &b| {
+            self.nodes[b]
+                .predicted_score
+                .total_cmp(&self.nodes[a].predicted_score)
+        });
+        let take: Vec<usize> = self
+            .unmeasured
+            .drain(..self.cfg.measure_top_k.min(self.unmeasured.len()))
+            .collect();
+        for idx in take {
+            let lat = self.cost.measure(&self.sim, &self.nodes[idx].schedule);
+            self.nodes[idx].measured = true;
+            self.measure_time_s += self.cfg.measure_overhead_s;
+            if lat < self.best_latency {
+                self.best_latency = lat;
+                self.best_schedule = self.nodes[idx].schedule.clone();
+            }
+        }
+        self.unmeasured.clear(); // stale predictions aren't re-ranked
+    }
+
+    /// Run to budget exhaustion and report.
+    pub fn run(mut self, workload_name: &str) -> SearchResult {
+        let mut stall = 0;
+        while self.samples < self.cfg.budget && stall < 10_000 {
+            let before = self.samples;
+            self.step();
+            if self.samples == before {
+                stall += 1;
+            } else {
+                stall = 0;
+            }
+        }
+        self.measure_batch();
+        let final_speedup = self.baseline_latency / self.best_latency;
+        // make sure the final point is on the curve
+        if self.curve.last().map(|&(s, _)| s) != Some(self.samples) {
+            self.curve.push((self.samples, final_speedup));
+        }
+        SearchResult {
+            workload: workload_name.to_string(),
+            best_speedup: final_speedup,
+            best_latency_s: self.best_latency,
+            baseline_latency_s: self.baseline_latency,
+            curve: self.curve,
+            compile_time_s: self.models.total_latency_s() + self.measure_time_s,
+            api_cost_usd: self.models.total_cost_usd(),
+            n_samples: self.samples,
+            n_ca_events: self.n_ca_events,
+            n_errors: self.n_errors,
+            call_counts: self
+                .models
+                .specs
+                .iter()
+                .zip(&self.models.stats)
+                .map(|(m, s)| (m.name.to_string(), s.regular_calls, s.ca_calls))
+                .collect(),
+            best_schedule: self.best_schedule,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::registry::paper_config;
+    use crate::sim::Target;
+    use crate::workloads::gemm;
+    use std::sync::Arc;
+
+    fn quick_cfg(budget: usize, seed: u64) -> SearchConfig {
+        SearchConfig {
+            budget,
+            seed,
+            checkpoints: vec![budget / 2, budget],
+            ..SearchConfig::default()
+        }
+    }
+
+    fn run_search(n_llms: usize, budget: usize, seed: u64) -> SearchResult {
+        let sched = Schedule::initial(Arc::new(gemm::gemm(512, 512, 512)));
+        let models = ModelSet::new(paper_config(n_llms, "gpt-5.2"));
+        let sim = Simulator::new(Target::Cpu);
+        Mcts::new(quick_cfg(budget, seed), models, sim, sched).run("gemm")
+    }
+
+    #[test]
+    fn search_improves_over_baseline() {
+        let r = run_search(2, 60, 1);
+        assert!(r.best_speedup > 1.5, "speedup {}", r.best_speedup);
+        assert_eq!(r.n_samples, 60);
+        assert!(r.api_cost_usd > 0.0);
+        assert!(r.compile_time_s > 0.0);
+    }
+
+    #[test]
+    fn curve_monotone_nondecreasing() {
+        let r = run_search(4, 80, 2);
+        for w in r.curve.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9, "curve {:?}", r.curve);
+        }
+    }
+
+    #[test]
+    fn multi_llm_uses_small_models() {
+        let r = run_search(8, 120, 3);
+        let total: usize = r.call_counts.iter().map(|(_, a, b)| a + b).sum();
+        let (big_r, big_c) = r
+            .call_counts
+            .iter()
+            .find(|(n, _, _)| n == "gpt-5.2")
+            .map(|(_, a, b)| (*a, *b))
+            .unwrap();
+        let big_share = (big_r + big_c) as f64 / total as f64;
+        assert!(big_share < 0.7, "largest share {big_share}");
+        // at least three distinct models used
+        let used = r.call_counts.iter().filter(|(_, a, b)| a + b > 0).count();
+        assert!(used >= 3, "only {used} models used");
+    }
+
+    #[test]
+    fn course_alteration_fires() {
+        let r = run_search(8, 150, 4);
+        assert!(r.n_ca_events > 0, "no CA events in 150 samples");
+        let ca_calls: usize = r.call_counts.iter().map(|(_, _, c)| c).sum();
+        assert_eq!(ca_calls, r.n_ca_events);
+    }
+
+    #[test]
+    fn ca_disabled_means_no_ca_calls() {
+        let sched = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+        let models = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let sim = Simulator::new(Target::Cpu);
+        let cfg = SearchConfig {
+            ca_threshold: None,
+            budget: 80,
+            seed: 5,
+            ..SearchConfig::default()
+        };
+        let r = Mcts::new(cfg, models, sim, sched).run("gemm");
+        assert_eq!(r.n_ca_events, 0);
+    }
+
+    #[test]
+    fn single_model_search_works() {
+        let r = run_search(1, 50, 6);
+        assert!(r.best_speedup >= 1.0);
+        assert_eq!(r.call_counts.iter().filter(|(_, a, b)| a + b > 0).count(), 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_search(4, 40, 7);
+        let b = run_search(4, 40, 7);
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.api_cost_usd, b.api_cost_usd);
+    }
+
+    #[test]
+    fn routing_ablations_run() {
+        for routing in [Routing::Random, Routing::RoundRobin] {
+            let sched = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+            let models = ModelSet::new(paper_config(8, "gpt-5.2"));
+            let sim = Simulator::new(Target::Cpu);
+            let cfg = SearchConfig {
+                routing,
+                budget: 60,
+                seed: 8,
+                ..SearchConfig::default()
+            };
+            let r = Mcts::new(cfg, models, sim, sched).run("gemm");
+            assert!(r.best_speedup >= 1.0);
+            let used = r.call_counts.iter().filter(|(_, a, b)| a + b > 0).count();
+            assert!(used >= 4, "{routing:?} used only {used} models");
+        }
+    }
+}

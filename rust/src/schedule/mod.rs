@@ -1,0 +1,375 @@
+//! Schedule representation: the MetaSchedule-primitive stand-in.
+//!
+//! A [`Schedule`] pairs a [`Workload`](crate::tir::Workload) with one
+//! [`BlockSched`] per block. Transformations ([`transforms`]) are
+//! semantic-preserving structural rewrites recorded in a replayable
+//! [`trace`]. The materialized loop nest ([`LoopNest`]) is what the
+//! simulator evaluates and the printer renders into prompt context.
+
+pub mod transforms;
+pub mod trace;
+pub mod printer;
+
+use crate::tir::{AxisKind, Workload};
+use std::sync::Arc;
+
+/// Annotation on one materialized loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopKind {
+    Serial,
+    Parallel,
+    Vectorized,
+    Unrolled,
+    /// GPU blockIdx binding (maps from `parallel` on the GPU target).
+    BlockIdx,
+    /// GPU threadIdx binding.
+    ThreadIdx,
+}
+
+/// Per-block schedule state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockSched {
+    /// Per original axis: tile factors, outermost -> innermost.
+    /// Invariant: product == axis extent; len >= 1.
+    pub tiles: Vec<Vec<i64>>,
+    /// Loop order as (axis, level) pairs; a permutation of every tile
+    /// level of every axis.
+    pub order: Vec<(usize, usize)>,
+    /// Number of outermost loops fused and parallelized (CPU) or bound to
+    /// blockIdx (GPU).
+    pub parallel: usize,
+    /// Number of loops after the parallel ones bound to threadIdx (GPU
+    /// targets only; ignored by the CPU model).
+    pub thread_tiles: usize,
+    /// Innermost loop is vectorized.
+    pub vectorize: bool,
+    /// Number of innermost (non-vector) loops annotated unroll.
+    pub unroll: usize,
+    /// Output accumulated in a register/local tile then written back.
+    pub cache_write: bool,
+    /// Per read access: Some(depth) = staged into fast scope at that loop
+    /// depth (CPU: L1-resident pack buffer; GPU: shared memory).
+    pub cache_reads: Vec<Option<usize>>,
+    /// None = root (standalone); Some(d) = fused into the consumer's loop
+    /// nest at depth d (ComputeLocation).
+    pub compute_at: Option<usize>,
+    /// Reduction init split out of the update loop.
+    pub decomposed: bool,
+}
+
+impl BlockSched {
+    /// Default (unoptimized) schedule for a block: one tile level per
+    /// axis, original order, all-serial.
+    pub fn default_for(workload: &Workload, block: usize) -> BlockSched {
+        let blk = &workload.blocks[block];
+        BlockSched {
+            tiles: blk.axes.iter().map(|a| vec![a.extent]).collect(),
+            order: (0..blk.axes.len()).map(|i| (i, 0)).collect(),
+            parallel: 0,
+            thread_tiles: 0,
+            vectorize: false,
+            unroll: 0,
+            cache_write: false,
+            cache_reads: vec![None; blk.reads.len()],
+            compute_at: None,
+            decomposed: false,
+        }
+    }
+
+    /// Number of materialized loops.
+    pub fn n_loops(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Extent of the (axis, level) tile.
+    pub fn tile_extent(&self, axis: usize, level: usize) -> i64 {
+        self.tiles[axis][level]
+    }
+
+    /// Re-derive a canonical order after re-tiling an axis: existing
+    /// positions of that axis's levels are replaced in place (old levels
+    /// beyond the new count dropped, new levels appended innermost).
+    pub fn retile(&mut self, axis: usize, factors: Vec<i64>) {
+        let new_n = factors.len();
+        self.tiles[axis] = factors;
+        // Keep the first min(old,new) occurrences, renumbered; drop extras.
+        let mut seen = 0usize;
+        self.order.retain(|&(a, _)| {
+            if a == axis {
+                seen += 1;
+                seen <= new_n
+            } else {
+                true
+            }
+        });
+        // renumber kept levels in appearance order
+        let mut level = 0;
+        for slot in self.order.iter_mut() {
+            if slot.0 == axis {
+                slot.1 = level;
+                level += 1;
+            }
+        }
+        // append any missing levels innermost
+        while level < new_n {
+            self.order.push((axis, level));
+            level += 1;
+        }
+        self.clamp_annotations();
+    }
+
+    /// Keep annotation counts within the loop count.
+    pub fn clamp_annotations(&mut self) {
+        let n = self.n_loops();
+        self.parallel = self.parallel.min(n);
+        self.thread_tiles = self.thread_tiles.min(n - self.parallel);
+        self.unroll = self.unroll.min(n.saturating_sub(self.parallel + self.thread_tiles));
+        for cr in self.cache_reads.iter_mut().flatten() {
+            *cr = (*cr).min(n.saturating_sub(1));
+        }
+    }
+
+    /// Structural sanity: order is a permutation of all tile levels.
+    pub fn validate(&self, workload: &Workload, block: usize) -> Result<(), String> {
+        let blk = &workload.blocks[block];
+        if self.tiles.len() != blk.axes.len() {
+            return Err(format!("{}: tiles len mismatch", blk.name));
+        }
+        for (ai, (t, ax)) in self.tiles.iter().zip(&blk.axes).enumerate() {
+            let prod: i64 = t.iter().product();
+            if prod != ax.extent {
+                return Err(format!(
+                    "{}: axis {ai} factors {:?} product {} != extent {}",
+                    blk.name, t, prod, ax.extent
+                ));
+            }
+            if t.iter().any(|&f| f < 1) {
+                return Err(format!("{}: axis {ai} non-positive factor", blk.name));
+            }
+        }
+        let want: usize = self.tiles.iter().map(Vec::len).sum();
+        if self.order.len() != want {
+            return Err(format!("{}: order len {} != {}", blk.name, self.order.len(), want));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for &(a, l) in &self.order {
+            if a >= self.tiles.len() || l >= self.tiles[a].len() {
+                return Err(format!("{}: order entry ({a},{l}) oob", blk.name));
+            }
+            if !seen.insert((a, l)) {
+                return Err(format!("{}: duplicate order entry ({a},{l})", blk.name));
+            }
+        }
+        if self.cache_reads.len() != blk.reads.len() {
+            return Err(format!("{}: cache_reads len mismatch", blk.name));
+        }
+        Ok(())
+    }
+}
+
+/// One materialized loop of a scheduled block.
+#[derive(Clone, Debug)]
+pub struct LoopInfo {
+    pub axis: usize,
+    pub level: usize,
+    pub extent: i64,
+    pub kind: LoopKind,
+    pub is_reduction: bool,
+}
+
+/// The fully materialized loop nest of one block under its schedule.
+#[derive(Clone, Debug)]
+pub struct LoopNest {
+    pub loops: Vec<LoopInfo>,
+}
+
+impl LoopNest {
+    pub fn parallel_extent(&self) -> i64 {
+        self.loops
+            .iter()
+            .filter(|l| matches!(l.kind, LoopKind::Parallel | LoopKind::BlockIdx))
+            .map(|l| l.extent)
+            .product()
+    }
+
+    pub fn thread_extent(&self) -> i64 {
+        self.loops
+            .iter()
+            .filter(|l| l.kind == LoopKind::ThreadIdx)
+            .map(|l| l.extent)
+            .product()
+    }
+
+    pub fn vector_lanes(&self) -> i64 {
+        self.loops
+            .iter()
+            .rev()
+            .find(|l| l.kind == LoopKind::Vectorized)
+            .map(|l| l.extent)
+            .unwrap_or(0)
+    }
+
+    pub fn unrolled_product(&self) -> i64 {
+        self.loops
+            .iter()
+            .filter(|l| l.kind == LoopKind::Unrolled)
+            .map(|l| l.extent)
+            .product()
+    }
+}
+
+/// A scheduled program: the MCTS search state's "program" component.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub workload: Arc<Workload>,
+    pub blocks: Vec<BlockSched>,
+    pub trace: trace::Trace,
+}
+
+impl Schedule {
+    /// The unoptimized program p1.
+    pub fn initial(workload: Arc<Workload>) -> Schedule {
+        let blocks = (0..workload.blocks.len())
+            .map(|b| BlockSched::default_for(&workload, b))
+            .collect();
+        Schedule {
+            workload,
+            blocks,
+            trace: trace::Trace::default(),
+        }
+    }
+
+    /// Materialize the loop nest of `block` for this target.
+    pub fn loop_nest(&self, block: usize, gpu: bool) -> LoopNest {
+        let bs = &self.blocks[block];
+        let blk = &self.workload.blocks[block];
+        let n = bs.n_loops();
+        let mut loops = Vec::with_capacity(n);
+        let vec_pos = if bs.vectorize && n > 0 { Some(n - 1) } else { None };
+        let unroll_end = n - usize::from(bs.vectorize); // exclusive
+        let unroll_start = unroll_end.saturating_sub(bs.unroll);
+        for (pos, &(axis, level)) in bs.order.iter().enumerate() {
+            let is_red = blk.axes[axis].kind == AxisKind::Reduction;
+            let mut kind = LoopKind::Serial;
+            if pos < bs.parallel && !is_red {
+                kind = if gpu { LoopKind::BlockIdx } else { LoopKind::Parallel };
+            } else if gpu && pos < bs.parallel + bs.thread_tiles && !is_red {
+                kind = LoopKind::ThreadIdx;
+            } else if Some(pos) == vec_pos && !is_red {
+                kind = LoopKind::Vectorized;
+            } else if pos >= unroll_start && pos < unroll_end {
+                kind = LoopKind::Unrolled;
+            }
+            loops.push(LoopInfo {
+                axis,
+                level,
+                extent: bs.tiles[axis][level],
+                kind,
+                is_reduction: is_red,
+            });
+        }
+        LoopNest { loops }
+    }
+
+    /// Structural validation over every block.
+    pub fn validate(&self) -> Result<(), String> {
+        for b in 0..self.blocks.len() {
+            self.blocks[b].validate(&self.workload, b)?;
+        }
+        Ok(())
+    }
+
+    /// A cheap structural fingerprint (used for dedup in search).
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        for bs in &self.blocks {
+            bs.tiles.hash(&mut h);
+            bs.order.hash(&mut h);
+            (bs.parallel, bs.thread_tiles, bs.vectorize, bs.unroll).hash(&mut h);
+            (bs.cache_write, &bs.cache_reads, bs.compute_at, bs.decomposed).hash(&mut h);
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::gemm;
+
+    fn sched() -> Schedule {
+        Schedule::initial(Arc::new(gemm::gemm(64, 64, 64)))
+    }
+
+    #[test]
+    fn initial_schedule_validates() {
+        let s = sched();
+        s.validate().unwrap();
+        assert_eq!(s.blocks[0].n_loops(), 3);
+    }
+
+    #[test]
+    fn retile_keeps_permutation() {
+        let mut s = sched();
+        s.blocks[0].retile(0, vec![4, 4, 4]);
+        s.validate().unwrap();
+        assert_eq!(s.blocks[0].n_loops(), 5);
+        s.blocks[0].retile(0, vec![64]);
+        s.validate().unwrap();
+        assert_eq!(s.blocks[0].n_loops(), 3);
+    }
+
+    #[test]
+    fn loop_nest_kinds() {
+        let mut s = sched();
+        s.blocks[0].retile(0, vec![8, 8]);
+        s.blocks[0].retile(1, vec![8, 8]);
+        s.blocks[0].parallel = 2;
+        s.blocks[0].vectorize = true;
+        // order: i0 i1 j0 j1 k -> reorder so spatial j1 is innermost
+        s.blocks[0].order = vec![(0, 0), (1, 0), (0, 1), (2, 0), (1, 1)];
+        let nest = s.loop_nest(0, false);
+        assert_eq!(nest.parallel_extent(), 64);
+        assert_eq!(nest.vector_lanes(), 8);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn reduction_never_parallel_or_vector() {
+        let mut s = sched();
+        s.blocks[0].parallel = 3; // would cover k
+        s.blocks[0].vectorize = true; // innermost is k
+        let nest = s.loop_nest(0, false);
+        let k_loop = nest.loops.iter().find(|l| l.is_reduction).unwrap();
+        assert_eq!(k_loop.kind, LoopKind::Serial);
+    }
+
+    #[test]
+    fn gpu_thread_binding() {
+        let mut s = sched();
+        s.blocks[0].retile(0, vec![8, 8]);
+        s.blocks[0].retile(1, vec![8, 8]);
+        s.blocks[0].order = vec![(0, 0), (1, 0), (0, 1), (1, 1), (2, 0)];
+        s.blocks[0].parallel = 2;
+        s.blocks[0].thread_tiles = 2;
+        let nest = s.loop_nest(0, true);
+        assert_eq!(nest.parallel_extent(), 64); // blockIdx product
+        assert_eq!(nest.thread_extent(), 64);
+    }
+
+    #[test]
+    fn fingerprints_differ() {
+        let a = sched();
+        let mut b = sched();
+        b.blocks[0].vectorize = true;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn validate_catches_bad_factors() {
+        let mut s = sched();
+        s.blocks[0].tiles[0] = vec![3, 5]; // 15 != 64
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! TVMScript-like rendering of a *scheduled* program — the text the LLM
+//! prompts show for the current/parent/grandparent program variants
+//! (paper Appendix B).
+
+use super::{LoopKind, Schedule};
+
+fn kind_str(k: LoopKind) -> &'static str {
+    match k {
+        LoopKind::Serial => "T.serial",
+        LoopKind::Parallel => "T.parallel",
+        LoopKind::Vectorized => "T.vectorized",
+        LoopKind::Unrolled => "T.unroll",
+        LoopKind::BlockIdx => "T.thread_binding(\"blockIdx.x\")",
+        LoopKind::ThreadIdx => "T.thread_binding(\"threadIdx.x\")",
+    }
+}
+
+/// Render one block's scheduled loop nest.
+pub fn print_block(s: &Schedule, block: usize, gpu: bool) -> String {
+    let blk = &s.workload.blocks[block];
+    let bs = &s.blocks[block];
+    let nest = s.loop_nest(block, gpu);
+    let mut out = String::new();
+    let mut indent = 1usize;
+
+    if bs.cache_write {
+        out.push_str(&"    ".repeat(indent));
+        let buf = &s.workload.buffers[blk.writes[0].buffer];
+        out.push_str(&format!(
+            "{}_local = T.alloc_buffer(({}), scope=\"{}\")\n",
+            buf.name,
+            buf.shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", "),
+            if gpu { "local" } else { "global" }
+        ));
+    }
+    if let Some(d) = bs.compute_at {
+        out.push_str(&"    ".repeat(indent));
+        out.push_str(&format!("# computed at consumer depth {d}\n"));
+    }
+
+    for l in &nest.loops {
+        out.push_str(&"    ".repeat(indent));
+        let var = format!("{}_{}", blk.axes[l.axis].name, l.level);
+        out.push_str(&format!("for {var} in {}({}):\n", kind_str(l.kind), l.extent));
+        indent += 1;
+        // show cache_read staging at the right depth
+        for (ri, cr) in bs.cache_reads.iter().enumerate() {
+            if *cr == Some(indent - 2) {
+                out.push_str(&"    ".repeat(indent));
+                let buf = &s.workload.buffers[blk.reads[ri].buffer];
+                out.push_str(&format!(
+                    "{}_{} = T.cache_read({})\n",
+                    buf.name,
+                    if gpu { "shared" } else { "local" },
+                    buf.name
+                ));
+            }
+        }
+    }
+    out.push_str(&"    ".repeat(indent));
+    out.push_str(&format!("with T.block(\"{}\"):\n", blk.name));
+    out.push_str(&"    ".repeat(indent + 1));
+    // body expression with tiled index names
+    let fmt_access = |acc: &crate::tir::Access| -> String {
+        let idx: Vec<String> = acc
+            .dim_axes
+            .iter()
+            .map(|dims| {
+                if dims.is_empty() {
+                    "0".to_string()
+                } else {
+                    dims.iter()
+                        .map(|&a| blk.axes[a].name.clone())
+                        .collect::<Vec<_>>()
+                        .join(" + ")
+                }
+            })
+            .collect();
+        format!("{}[{}]", s.workload.buffers[acc.buffer].name, idx.join(", "))
+    };
+    let w = fmt_access(&blk.writes[0]);
+    let reads: Vec<String> = blk.reads.iter().map(fmt_access).collect();
+    use crate::tir::BodyKind::*;
+    let body = match blk.body {
+        Mac => format!("{w} = {w} + {}", reads.join(" * ")),
+        Elementwise => format!("{w} = f({})", reads.join(", ")),
+        Transcendental => format!("{w} = T.exp({})", reads.join(", ")),
+        Reduce => format!("{w} = T.max({w}, {})", reads.join(", ")),
+        Copy => format!("{w} = {}", reads.first().cloned().unwrap_or_default()),
+    };
+    out.push_str(&body);
+    out.push('\n');
+    out
+}
+
+/// Render the whole scheduled program (all blocks).
+pub fn print_schedule(s: &Schedule, gpu: bool) -> String {
+    let mut out = String::from("@T.prim_func\n");
+    out.push_str(&crate::tir::printer::signature(&s.workload));
+    out.push('\n');
+    for b in 0..s.workload.blocks.len() {
+        out.push_str(&print_block(s, b, gpu));
+    }
+    out
+}
+
+/// Compact rendering of just the dominant block (prompt budget control).
+pub fn print_dominant(s: &Schedule, gpu: bool) -> String {
+    let mut out = String::from("@T.prim_func\n");
+    out.push_str(&crate::tir::printer::signature(&s.workload));
+    out.push('\n');
+    out.push_str(&print_block(s, s.workload.dominant_block(), gpu));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::transforms::{apply, TransformKind};
+    use crate::util::Rng;
+    use crate::workloads::gemm;
+    use std::sync::Arc;
+
+    #[test]
+    fn prints_scheduled_loops() {
+        let mut rng = Rng::new(1);
+        let s0 = Schedule::initial(Arc::new(gemm::gemm(64, 64, 64)));
+        let s1 = apply(&s0, TransformKind::Vectorize, &mut rng, false).unwrap();
+        let s2 = apply(&s1, TransformKind::Parallel, &mut rng, false).unwrap();
+        let text = print_schedule(&s2, false);
+        assert!(text.contains("T.vectorized"));
+        assert!(text.contains("T.parallel"));
+        assert!(text.contains("with T.block(\"matmul\")"));
+    }
+
+    #[test]
+    fn gpu_bindings_render() {
+        let mut rng = Rng::new(2);
+        let s0 = Schedule::initial(Arc::new(gemm::gemm(64, 64, 64)));
+        let s1 = apply(&s0, TransformKind::Parallel, &mut rng, true).unwrap();
+        let s2 = apply(&s1, TransformKind::ThreadBind, &mut rng, true).unwrap();
+        let text = print_schedule(&s2, true);
+        assert!(text.contains("blockIdx.x"));
+    }
+
+    #[test]
+    fn dominant_print_shorter() {
+        let s = Schedule::initial(Arc::new(crate::workloads::attention::small_attention(
+            64, 2, 16, false,
+        )));
+        assert!(print_dominant(&s, false).len() <= print_schedule(&s, false).len());
+    }
+}

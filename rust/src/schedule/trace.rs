@@ -1,0 +1,89 @@
+//! Transformation trace: the replayable history attached to every
+//! schedule, rendered into LLM prompt context exactly like the paper's
+//! `sch.sample_perfect_tile(loop=j, decision=[1, 64, 1, 64])` lines.
+
+use std::fmt;
+
+/// One applied transformation with its sampled decisions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceStep {
+    /// Canonical transform name (the names exposed to LLMs).
+    pub name: String,
+    /// Target block name.
+    pub block: String,
+    /// Rendered decision string, e.g. `loop=j, decision=[2, 32, 2, 32]`.
+    pub detail: String,
+}
+
+impl fmt::Display for TraceStep {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "sch.{}(block=\"{}\", {})", self.name, self.block, self.detail)
+    }
+}
+
+/// The full history of a schedule (ordered).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    pub fn push(&mut self, name: &str, block: &str, detail: String) {
+        self.steps.push(TraceStep {
+            name: name.to_string(),
+            block: block.to_string(),
+            detail,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Render the last `n` steps (prompt context shows a bounded history).
+    pub fn render_tail(&self, n: usize) -> String {
+        let start = self.steps.len().saturating_sub(n);
+        self.steps[start..]
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+impl fmt::Display for Trace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.render_tail(usize::MAX))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_like_tvm() {
+        let mut t = Trace::default();
+        t.push("sample_perfect_tile", "matmul", "loop=j, decision=[1, 64, 1, 64]".into());
+        t.push("vectorize", "matmul", "loop=j_3".into());
+        let s = t.to_string();
+        assert!(s.contains("sch.sample_perfect_tile(block=\"matmul\", loop=j, decision=[1, 64, 1, 64])"));
+        assert!(s.lines().count() == 2);
+    }
+
+    #[test]
+    fn tail_rendering() {
+        let mut t = Trace::default();
+        for i in 0..10 {
+            t.push("unroll", "b", format!("depth={i}"));
+        }
+        let tail = t.render_tail(3);
+        assert_eq!(tail.lines().count(), 3);
+        assert!(tail.contains("depth=9"));
+        assert!(!tail.contains("depth=6"));
+    }
+}

@@ -1,0 +1,491 @@
+//! The transformation vocabulary exposed to LLMs (the paper's "Available
+//! Transformations" list) and the parameter-sampling machinery behind it.
+//!
+//! LLM proposals name transforms (`"TileSize"`, `"Parallel"`, ...); the
+//! engine samples concrete parameters (which axis, which factors, what
+//! depth) exactly like MetaSchedule's `sample_perfect_tile` — the sampled
+//! decisions are recorded in the trace and shown back to the models in
+//! later prompt context.
+
+use super::{Schedule, trace::TraceStep};
+use crate::tir::AxisKind;
+use crate::util::Rng;
+
+/// All transformation kinds. `ThreadBind` is GPU-only (rejected on CPU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TransformKind {
+    TileSize,
+    Reorder,
+    Parallel,
+    Vectorize,
+    Unroll,
+    CacheWrite,
+    CacheRead,
+    ComputeLocation,
+    DecomposeReduction,
+    ThreadBind,
+}
+
+impl TransformKind {
+    pub const ALL: [TransformKind; 10] = [
+        TransformKind::TileSize,
+        TransformKind::Reorder,
+        TransformKind::Parallel,
+        TransformKind::Vectorize,
+        TransformKind::Unroll,
+        TransformKind::CacheWrite,
+        TransformKind::CacheRead,
+        TransformKind::ComputeLocation,
+        TransformKind::DecomposeReduction,
+        TransformKind::ThreadBind,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransformKind::TileSize => "TileSize",
+            TransformKind::Reorder => "Reorder",
+            TransformKind::Parallel => "Parallel",
+            TransformKind::Vectorize => "Vectorize",
+            TransformKind::Unroll => "Unroll",
+            TransformKind::CacheWrite => "CacheWrite",
+            TransformKind::CacheRead => "CacheRead",
+            TransformKind::ComputeLocation => "ComputeLocation",
+            TransformKind::DecomposeReduction => "DecomposeReduction",
+            TransformKind::ThreadBind => "ThreadBind",
+        }
+    }
+
+    /// Parse an LLM-proposed transform name. `None` = invalid (counts as
+    /// a model error per the paper's prompt stats).
+    pub fn from_name(s: &str) -> Option<TransformKind> {
+        Self::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// The vocabulary valid for a target (ThreadBind is GPU-only).
+    pub fn vocabulary(gpu: bool) -> Vec<TransformKind> {
+        Self::ALL
+            .iter()
+            .copied()
+            .filter(|t| gpu || *t != TransformKind::ThreadBind)
+            .collect()
+    }
+}
+
+/// All divisors of n, ascending.
+pub fn divisors(n: i64) -> Vec<i64> {
+    let mut ds = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            ds.push(i);
+            if i != n / i {
+                ds.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    ds.sort_unstable();
+    ds
+}
+
+/// MetaSchedule-style `sample_perfect_tile`: split `extent` into `parts`
+/// factors whose product is exactly `extent`.
+pub fn sample_perfect_tile(rng: &mut Rng, extent: i64, parts: usize) -> Vec<i64> {
+    let mut remaining = extent;
+    let mut out = Vec::with_capacity(parts);
+    for i in 0..parts {
+        if i == parts - 1 {
+            out.push(remaining);
+            break;
+        }
+        let ds = divisors(remaining);
+        let f = *rng.choice(&ds);
+        out.push(f);
+        remaining /= f;
+    }
+    out
+}
+
+/// Pick a block to transform: weighted by FLOPs so the dominant block gets
+/// most of the attention (as MetaSchedule's task scheduler does).
+fn pick_block(s: &Schedule, rng: &mut Rng) -> usize {
+    let weights: Vec<f64> = s.workload.blocks.iter().map(|b| b.flops().max(1.0)).collect();
+    rng.weighted(&weights)
+}
+
+/// Apply one named transform with sampled parameters. Returns the new
+/// schedule (with the step appended to its trace) or an explanation of why
+/// the transform is inapplicable (not an LLM error — a structural no-fit).
+pub fn apply(s: &Schedule, kind: TransformKind, rng: &mut Rng, gpu: bool) -> Result<Schedule, String> {
+    let mut out = s.clone();
+    let step = apply_in_place(&mut out, kind, rng, gpu)?;
+    out.trace.steps.push(step);
+    Ok(out)
+}
+
+fn apply_in_place(
+    s: &mut Schedule,
+    kind: TransformKind,
+    rng: &mut Rng,
+    gpu: bool,
+) -> Result<TraceStep, String> {
+    let wl = s.workload.clone();
+    match kind {
+        TransformKind::TileSize => {
+            let b = pick_block(s, rng);
+            let blk = &wl.blocks[b];
+            let ax = rng.below(blk.axes.len());
+            let extent = blk.axes[ax].extent;
+            if extent < 2 {
+                return Err("axis too small to tile".into());
+            }
+            let parts = 2 + rng.below(3); // 2..=4 tile levels
+            let factors = sample_perfect_tile(rng, extent, parts);
+            s.blocks[b].retile(ax, factors.clone());
+            Ok(TraceStep {
+                name: "sample_perfect_tile".into(),
+                block: blk.name.clone(),
+                detail: format!("loop={}, decision={:?}", blk.axes[ax].name, factors),
+            })
+        }
+        TransformKind::Reorder => {
+            let b = pick_block(s, rng);
+            let blk = &wl.blocks[b];
+            let bs = &mut s.blocks[b];
+            if bs.order.len() < 3 {
+                return Err("too few loops to reorder".into());
+            }
+            // Good-practice shuffle: keep level-0 loops outermost-ish,
+            // permute the rest. Sample: sort by level with random
+            // tie-breaking among same-level loops.
+            let mut keyed: Vec<(usize, u64, (usize, usize))> = bs
+                .order
+                .iter()
+                .map(|&(a, l)| (l, rng.next_u64(), (a, l)))
+                .collect();
+            keyed.sort_by_key(|&(l, r, _)| (l, r));
+            bs.order = keyed.into_iter().map(|(_, _, al)| al).collect();
+            bs.clamp_annotations();
+            Ok(TraceStep {
+                name: "reorder".into(),
+                block: blk.name.clone(),
+                detail: format!(
+                    "order={:?}",
+                    bs.order
+                        .iter()
+                        .map(|&(a, l)| format!("{}_{}", blk.axes[a].name, l))
+                        .collect::<Vec<_>>()
+                ),
+            })
+        }
+        TransformKind::Parallel => {
+            let b = pick_block(s, rng);
+            let blk = &wl.blocks[b];
+            let bs = &mut s.blocks[b];
+            // bring up to `np` spatial loops to the front and parallelize
+            let spatial_positions: Vec<usize> = bs
+                .order
+                .iter()
+                .enumerate()
+                .filter(|(_, &(a, _))| blk.axes[a].kind == AxisKind::Spatial)
+                .map(|(i, _)| i)
+                .collect();
+            if spatial_positions.is_empty() {
+                return Err("no spatial loops".into());
+            }
+            let np = 1 + rng.below(spatial_positions.len().min(3));
+            // stable partition: selected spatial loops first
+            let chosen: Vec<(usize, usize)> = spatial_positions
+                .iter()
+                .take(np)
+                .map(|&i| bs.order[i])
+                .collect();
+            bs.order.retain(|e| !chosen.contains(e));
+            let mut new_order = chosen.clone();
+            new_order.extend(bs.order.iter().copied());
+            bs.order = new_order;
+            bs.parallel = np;
+            bs.clamp_annotations();
+            Ok(TraceStep {
+                name: "parallel".into(),
+                block: blk.name.clone(),
+                detail: format!("num_loops={np}"),
+            })
+        }
+        TransformKind::Vectorize => {
+            let b = pick_block(s, rng);
+            let blk = &wl.blocks[b];
+            // choose a spatial axis that is contiguous in the write
+            let write = &blk.writes[0];
+            let cand: Vec<usize> = (0..blk.axes.len())
+                .filter(|&a| blk.axes[a].kind == AxisKind::Spatial && write.axis_is_contiguous(a))
+                .collect();
+            let ax = *cand.first().ok_or("no contiguous spatial axis")?;
+            let bs = &mut s.blocks[b];
+            // make sure the axis has an inner factor in {4..64} and move it last
+            let lanes_opts = [4i64, 8, 16, 32, 64];
+            let extent = blk.axes[ax].extent;
+            let lanes = *lanes_opts
+                .iter()
+                .filter(|&&l| extent % l == 0)
+                .max_by_key(|&&l| l.min(16)) // prefer 8/16
+                .ok_or("extent not divisible by any vector width")?;
+            // retile axis: keep existing outer structure, ensure innermost = lanes
+            let mut outer: Vec<i64> = bs.tiles[ax].clone();
+            let prod: i64 = outer.iter().product();
+            debug_assert_eq!(prod, extent);
+            // squash to two levels: [extent/lanes, lanes]
+            outer = vec![extent / lanes, lanes];
+            bs.retile(ax, outer);
+            // move (ax, 1) to the end of the order
+            bs.order.retain(|&e| e != (ax, 1));
+            bs.order.push((ax, 1));
+            bs.vectorize = true;
+            bs.clamp_annotations();
+            Ok(TraceStep {
+                name: "vectorize".into(),
+                block: blk.name.clone(),
+                detail: format!("loop={}_1, lanes={lanes}", blk.axes[ax].name),
+            })
+        }
+        TransformKind::Unroll => {
+            let b = pick_block(s, rng);
+            let bs = &mut s.blocks[b];
+            let depth = 1 + rng.below(3);
+            bs.unroll = depth;
+            bs.clamp_annotations();
+            Ok(TraceStep {
+                name: "unroll".into(),
+                block: wl.blocks[b].name.clone(),
+                detail: format!("depth={depth}"),
+            })
+        }
+        TransformKind::CacheWrite => {
+            let cands: Vec<usize> = (0..wl.blocks.len())
+                .filter(|&b| wl.blocks[b].has_reduction() && !s.blocks[b].cache_write)
+                .collect();
+            let &b = cands.first().ok_or("no reduction block without cache_write")?;
+            s.blocks[b].cache_write = true;
+            Ok(TraceStep {
+                name: "cache_write".into(),
+                block: wl.blocks[b].name.clone(),
+                detail: format!(
+                    "storage_scope=\"{}\"",
+                    if gpu { "local" } else { "global" }
+                ),
+            })
+        }
+        TransformKind::CacheRead => {
+            let b = pick_block(s, rng);
+            let blk = &wl.blocks[b];
+            if blk.reads.is_empty() {
+                return Err("no reads".into());
+            }
+            let r = rng.below(blk.reads.len());
+            let bs = &mut s.blocks[b];
+            let depth = 1 + rng.below(bs.n_loops().max(2) - 1);
+            bs.cache_reads[r] = Some(depth);
+            Ok(TraceStep {
+                name: "cache_read".into(),
+                block: blk.name.clone(),
+                detail: format!(
+                    "read_buffer={}, storage_scope=\"{}\", at_depth={depth}",
+                    wl.buffers[blk.reads[r].buffer].name,
+                    if gpu { "shared" } else { "local" }
+                ),
+            })
+        }
+        TransformKind::ComputeLocation => {
+            // pick a block that has a consumer; move where it's computed
+            let cons = wl.consumers();
+            let cands: Vec<usize> = (0..wl.blocks.len())
+                .filter(|&b| !cons[b].is_empty())
+                .collect();
+            if cands.is_empty() {
+                return Err("no fusable producer".into());
+            }
+            let b = *rng.choice(&cands);
+            let consumer = cons[b][0];
+            let max_depth = s.blocks[consumer].n_loops();
+            let choice = rng.below(max_depth + 1);
+            let bs = &mut s.blocks[b];
+            let detail;
+            if choice == 0 {
+                bs.compute_at = None;
+                detail = "at=root".to_string();
+            } else {
+                bs.compute_at = Some(choice - 1);
+                detail = format!(
+                    "consumer=\"{}\", at_depth={}",
+                    wl.blocks[consumer].name,
+                    choice - 1
+                );
+            }
+            Ok(TraceStep {
+                name: "compute_at".into(),
+                block: wl.blocks[b].name.clone(),
+                detail,
+            })
+        }
+        TransformKind::DecomposeReduction => {
+            let cands: Vec<usize> = (0..wl.blocks.len())
+                .filter(|&b| wl.blocks[b].has_reduction() && !s.blocks[b].decomposed)
+                .collect();
+            let &b = cands.first().ok_or("no undecomposed reduction")?;
+            s.blocks[b].decomposed = true;
+            Ok(TraceStep {
+                name: "decompose_reduction".into(),
+                block: wl.blocks[b].name.clone(),
+                detail: "".into(),
+            })
+        }
+        TransformKind::ThreadBind => {
+            if !gpu {
+                return Err("ThreadBind is GPU-only".into());
+            }
+            let b = pick_block(s, rng);
+            let bs = &mut s.blocks[b];
+            if bs.parallel == 0 {
+                // need blockIdx loops first; promote one spatial loop
+                bs.parallel = 1;
+            }
+            let nt = 1 + rng.below(2);
+            bs.thread_tiles = nt.min(bs.n_loops().saturating_sub(bs.parallel));
+            bs.clamp_annotations();
+            Ok(TraceStep {
+                name: "bind".into(),
+                block: wl.blocks[b].name.clone(),
+                detail: format!("thread_loops={}", bs.thread_tiles),
+            })
+        }
+    }
+}
+
+/// Apply a whole proposal (sequence of transform names) to a schedule.
+/// Inapplicable steps are skipped; at least one must apply or this errors.
+pub fn apply_sequence(
+    s: &Schedule,
+    kinds: &[TransformKind],
+    rng: &mut Rng,
+    gpu: bool,
+) -> Result<Schedule, String> {
+    let mut cur = s.clone();
+    let mut applied = 0;
+    for &k in kinds {
+        match apply(&cur, k, rng, gpu) {
+            Ok(next) => {
+                cur = next;
+                applied += 1;
+            }
+            Err(_) => continue,
+        }
+    }
+    if applied == 0 {
+        Err("no transform in the sequence was applicable".into())
+    } else {
+        Ok(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{attention, gemm};
+    use std::sync::Arc;
+
+    fn sched() -> Schedule {
+        Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)))
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for t in TransformKind::ALL {
+            assert_eq!(TransformKind::from_name(t.name()), Some(t));
+        }
+        assert_eq!(TransformKind::from_name("Fission"), None);
+    }
+
+    #[test]
+    fn vocabulary_excludes_threadbind_on_cpu() {
+        assert!(!TransformKind::vocabulary(false).contains(&TransformKind::ThreadBind));
+        assert!(TransformKind::vocabulary(true).contains(&TransformKind::ThreadBind));
+    }
+
+    #[test]
+    fn perfect_tile_products() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let f = sample_perfect_tile(&mut rng, 384, 4);
+            assert_eq!(f.iter().product::<i64>(), 384);
+            assert_eq!(f.len(), 4);
+        }
+    }
+
+    #[test]
+    fn every_transform_keeps_schedule_valid() {
+        let mut rng = Rng::new(2);
+        for gpu in [false, true] {
+            let base = Schedule::initial(Arc::new(attention::small_attention(128, 4, 32, true)));
+            for kind in TransformKind::vocabulary(gpu) {
+                let mut cur = base.clone();
+                for _ in 0..5 {
+                    if let Ok(next) = apply(&cur, kind, &mut rng, gpu) {
+                        next.validate()
+                            .unwrap_or_else(|e| panic!("{kind:?} broke: {e}"));
+                        cur = next;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_transform_storm_stays_valid() {
+        let mut rng = Rng::new(3);
+        let mut s = sched();
+        let vocab = TransformKind::vocabulary(true);
+        for _ in 0..300 {
+            let k = *rng.choice(&vocab);
+            if let Ok(next) = apply(&s, k, &mut rng, true) {
+                s = next;
+            }
+        }
+        s.validate().unwrap();
+        assert!(s.trace.len() > 50);
+    }
+
+    #[test]
+    fn trace_records_decisions() {
+        let mut rng = Rng::new(4);
+        let s = apply(&sched(), TransformKind::TileSize, &mut rng, false).unwrap();
+        assert_eq!(s.trace.len(), 1);
+        assert!(s.trace.steps[0].detail.contains("decision="));
+    }
+
+    #[test]
+    fn threadbind_rejected_on_cpu() {
+        let mut rng = Rng::new(5);
+        assert!(apply(&sched(), TransformKind::ThreadBind, &mut rng, false).is_err());
+    }
+
+    #[test]
+    fn apply_sequence_partial_ok() {
+        let mut rng = Rng::new(6);
+        let out = apply_sequence(
+            &sched(),
+            &[TransformKind::ThreadBind, TransformKind::TileSize],
+            &mut rng,
+            false,
+        )
+        .unwrap();
+        assert_eq!(out.trace.len(), 1); // ThreadBind skipped on CPU
+    }
+
+    #[test]
+    fn vectorize_sets_lanes() {
+        let mut rng = Rng::new(7);
+        let s = apply(&sched(), TransformKind::Vectorize, &mut rng, false).unwrap();
+        let nest = s.loop_nest(0, false);
+        assert!(nest.vector_lanes() >= 4);
+    }
+}

@@ -1,0 +1,227 @@
+//! Tile-footprint and memory-traffic analysis over a scheduled loop nest —
+//! the analytical cache model both hardware simulators share (the same
+//! style of analysis Ansor/MetaSchedule extract as cost-model features).
+//!
+//! Per-access reuse model: an access's traffic through a cache is the
+//! product of the extents of (a) every loop that indexes it (distinct
+//! elements) and (b) every non-indexing loop across which its inner
+//! footprint does NOT fit in the cache share (the tile cannot stay
+//! resident, so each iteration re-streams it). Loops whose body footprint
+//! fits are free: the data is re-touched every iteration and survives.
+
+use crate::schedule::{LoopNest, Schedule};
+use crate::tir::Access;
+
+/// Live extent of each original axis over loops at positions >= depth.
+fn live_axis_extents(nest: &LoopNest, n_axes: usize, depth: usize) -> Vec<i64> {
+    let mut ext = vec![1i64; n_axes];
+    for l in &nest.loops[depth.min(nest.loops.len())..] {
+        ext[l.axis] *= l.extent;
+    }
+    ext
+}
+
+/// Footprint (elements) of one access at the given depth (= the distinct
+/// elements it touches during one iteration of the loop at depth-1).
+pub fn access_footprint(nest: &LoopNest, acc: &Access, n_axes: usize, depth: usize) -> i64 {
+    let live = live_axis_extents(nest, n_axes, depth);
+    acc.dim_axes
+        .iter()
+        .map(|dims| {
+            if dims.is_empty() {
+                1
+            } else {
+                // sliding-window dims (sum of axes): extents add (minus overlap)
+                dims.iter().map(|&a| live[a]).sum::<i64>() - (dims.len() as i64 - 1)
+            }
+        })
+        .product()
+}
+
+/// Iterations of the loops strictly outside `depth`.
+pub fn outer_iterations(nest: &LoopNest, depth: usize) -> i64 {
+    nest.loops[..depth.min(nest.loops.len())]
+        .iter()
+        .map(|l| l.extent)
+        .product()
+}
+
+/// Traffic (bytes) of one access through a cache of per-access share
+/// `cap_share` bytes.
+pub fn access_traffic(
+    nest: &LoopNest,
+    acc: &Access,
+    n_axes: usize,
+    elem_bytes: f64,
+    cap_share: f64,
+) -> f64 {
+    let n = nest.loops.len();
+    let mut traffic = elem_bytes;
+    for d in (0..n).rev() {
+        let l = &nest.loops[d];
+        if acc.uses_axis(l.axis) {
+            traffic *= l.extent as f64;
+        } else {
+            // body footprint of one iteration of loop d
+            let fp = access_footprint(nest, acc, n_axes, d + 1) as f64 * elem_bytes;
+            if fp > cap_share {
+                traffic *= l.extent as f64;
+            }
+        }
+    }
+    // raw upper bound: one touch per loop iteration
+    let raw: f64 = nest.loops.iter().map(|l| l.extent as f64).product::<f64>() * elem_bytes;
+    traffic.min(raw)
+}
+
+/// Result of the traffic analysis for one block.
+#[derive(Clone, Debug, Default)]
+pub struct Traffic {
+    /// Bytes moved from DRAM (all accesses).
+    pub dram_bytes: f64,
+    /// Bytes moved through the mid-level cache (L2 / shared-memory feed).
+    pub l2_bytes: f64,
+    /// Footprint (bytes) of the innermost two-loop tile (register / VMEM
+    /// pressure proxy).
+    pub inner_tile_bytes: f64,
+    /// Per-read-access DRAM bytes (order matches `BlockDef::reads`).
+    pub per_access_dram: Vec<f64>,
+    /// DRAM bytes attributable to the write access.
+    pub write_dram: f64,
+}
+
+/// Analyze one block's scheduled nest against a two-level cache hierarchy
+/// (`l1_capacity` and `l2_capacity` in bytes).
+pub fn analyze(
+    s: &Schedule,
+    block: usize,
+    nest: &LoopNest,
+    l1_capacity: f64,
+    l2_capacity: f64,
+) -> Traffic {
+    let blk = &s.workload.blocks[block];
+    let n_axes = blk.axes.len();
+    let n_acc = blk.reads.len() + blk.writes.len();
+    let l1_share = l1_capacity / n_acc as f64;
+    let l2_share = l2_capacity / n_acc as f64;
+
+    let mut t = Traffic::default();
+    // inner tile: footprint of the innermost two loops, all accesses
+    let inner_depth = nest.loops.len().saturating_sub(2);
+    for acc in blk.reads.iter().chain(blk.writes.iter()) {
+        let eb = s.workload.buffers[acc.buffer].dtype.bytes() as f64;
+        t.inner_tile_bytes += access_footprint(nest, acc, n_axes, inner_depth) as f64 * eb;
+    }
+
+    for acc in &blk.reads {
+        let eb = s.workload.buffers[acc.buffer].dtype.bytes() as f64;
+        let dram = access_traffic(nest, acc, n_axes, eb, l2_share);
+        let l2 = access_traffic(nest, acc, n_axes, eb, l1_share).max(dram);
+        t.dram_bytes += dram;
+        t.l2_bytes += l2;
+        t.per_access_dram.push(dram);
+    }
+    for acc in &blk.writes {
+        let eb = s.workload.buffers[acc.buffer].dtype.bytes() as f64;
+        let dram = access_traffic(nest, acc, n_axes, eb, l2_share);
+        let l2 = access_traffic(nest, acc, n_axes, eb, l1_share).max(dram);
+        t.dram_bytes += dram;
+        t.l2_bytes += l2;
+        t.write_dram += dram;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::workloads::gemm;
+    use std::sync::Arc;
+
+    const L1: f64 = 32.0 * 1024.0;
+    const L2: f64 = 2.0 * 1024.0 * 1024.0;
+
+    fn base(n: i64) -> Schedule {
+        Schedule::initial(Arc::new(gemm::gemm(n, n, n)))
+    }
+
+    #[test]
+    fn untiled_big_gemm_restreams_b() {
+        let s = base(2048);
+        let nest = s.loop_nest(0, false);
+        let t = analyze(&s, 0, &nest, L1, L2);
+        let buffers = (3.0 * 2048.0 * 2048.0 * 4.0) as f64;
+        // B (16MB) cannot stay resident across the i loop -> re-streamed
+        assert!(t.dram_bytes > buffers * 10.0, "dram {}", t.dram_bytes);
+    }
+
+    #[test]
+    fn small_gemm_fits_and_streams_once() {
+        let s = base(256);
+        let nest = s.loop_nest(0, false);
+        let t = analyze(&s, 0, &nest, L1, L2);
+        let buffers = (3 * 256 * 256 * 4) as f64;
+        // everything resident in L2: each buffer touched ~once
+        assert!(
+            t.dram_bytes < buffers * 1.5,
+            "dram {} vs buffers {}",
+            t.dram_bytes,
+            buffers
+        );
+    }
+
+    #[test]
+    fn tiling_reduces_dram_traffic() {
+        let naive = base(1024);
+        let nest_n = naive.loop_nest(0, false);
+        let t_n = analyze(&naive, 0, &nest_n, L1, L2);
+
+        let mut tiled = base(1024);
+        tiled.blocks[0].retile(0, vec![32, 32]);
+        tiled.blocks[0].retile(1, vec![32, 32]);
+        tiled.blocks[0].retile(2, vec![4, 256]);
+        tiled.blocks[0].order = vec![(0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (2, 1)];
+        tiled.validate().unwrap();
+        let nest_t = tiled.loop_nest(0, false);
+        let t_t = analyze(&tiled, 0, &nest_t, L1, L2);
+
+        assert!(
+            t_t.dram_bytes < t_n.dram_bytes * 0.5,
+            "tiled {} vs naive {}",
+            t_t.dram_bytes,
+            t_n.dram_bytes
+        );
+    }
+
+    #[test]
+    fn traffic_floor_is_distinct_elements() {
+        // with infinite cache every access moves exactly its buffer once
+        let s = base(128);
+        let nest = s.loop_nest(0, false);
+        let t = analyze(&s, 0, &nest, 1e12, 1e12);
+        let expect = (3 * 128 * 128 * 4) as f64;
+        assert!((t.dram_bytes - expect).abs() < 1.0, "{}", t.dram_bytes);
+    }
+
+    #[test]
+    fn sliding_window_footprint() {
+        let w = crate::workloads::conv::flux_conv();
+        let s = Schedule::initial(Arc::new(w));
+        let nest = s.loop_nest(0, false);
+        let blk = &s.workload.blocks[0];
+        let fp = access_footprint(&nest, &blk.reads[0], blk.axes.len(), 0);
+        assert_eq!(fp, 64 * 64 * 320);
+    }
+
+    #[test]
+    fn write_traffic_tracked_separately() {
+        let s = base(512);
+        let nest = s.loop_nest(0, false);
+        let t = analyze(&s, 0, &nest, L1, L2);
+        assert!(t.write_dram > 0.0);
+        assert_eq!(t.per_access_dram.len(), 2);
+        let sum: f64 = t.per_access_dram.iter().sum::<f64>() + t.write_dram;
+        assert!((sum - t.dram_bytes).abs() < 1.0);
+    }
+}

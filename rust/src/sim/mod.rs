@@ -1,0 +1,178 @@
+//! Hardware performance simulators — the measured-latency substitute for
+//! the paper's NVIDIA 2080 Ti and Intel i9 testbeds (DESIGN.md
+//! §Substitutions).
+//!
+//! `Simulator::latency` is the ground-truth objective f(p): deterministic,
+//! schedule-sensitive, with realistic interactions (tiling ↔ cache fit,
+//! vectorize ↔ contiguity, parallel ↔ core/SM saturation, fusion ↔
+//! intermediate traffic). The learned cost model ([`crate::costmodel`]) is
+//! trained against it exactly as TVM's XGBoost model is trained against
+//! hardware runs.
+
+pub mod footprint;
+pub mod cpu;
+pub mod gpu;
+
+use crate::schedule::Schedule;
+
+/// Evaluation target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Target {
+    Cpu,
+    Gpu,
+}
+
+impl Target {
+    pub fn is_gpu(self) -> bool {
+        matches!(self, Target::Gpu)
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Cpu => "CPU",
+            Target::Gpu => "GPU",
+        }
+    }
+}
+
+/// A configured simulator for one target.
+#[derive(Clone, Debug)]
+pub struct Simulator {
+    pub target: Target,
+    pub cpu: cpu::CpuSpec,
+    pub gpu: gpu::GpuSpec,
+}
+
+impl Simulator {
+    pub fn new(target: Target) -> Simulator {
+        Simulator {
+            target,
+            cpu: cpu::CpuSpec::default(),
+            gpu: gpu::GpuSpec::default(),
+        }
+    }
+
+    /// End-to-end latency (seconds) of a scheduled workload: per-block
+    /// latencies summed, with compute_at fusion removing the intermediate
+    /// buffer's DRAM traffic between producer and consumer.
+    pub fn latency(&self, s: &Schedule) -> f64 {
+        let mut total = 0.0;
+        for b in 0..s.workload.blocks.len() {
+            let (mut lat, traffic) = match self.target {
+                Target::Cpu => cpu::block_latency(&self.cpu, s, b),
+                Target::Gpu => gpu::block_latency(&self.gpu, s, b),
+            };
+            // fusion: producer computed inside its consumer's tile —
+            // its output never round-trips DRAM. Model as removing the
+            // write's DRAM time (and the consumer re-read, folded in the
+            // same credit), when the tile actually fits (depth > 0).
+            if let Some(depth) = s.blocks[b].compute_at {
+                if depth > 0 {
+                    let bw = match self.target {
+                        Target::Cpu => self.cpu.dram_gbs,
+                        Target::Gpu => self.gpu.dram_gbs,
+                    } * 1e9;
+                    let saved = 2.0 * traffic.write_dram / bw;
+                    // fusing too deep re-computes the producer: small tax
+                    let tax = 1.0 + 0.03 * depth as f64;
+                    lat = ((lat - saved).max(lat * 0.15)) * tax;
+                }
+            }
+            total += lat;
+        }
+        total
+    }
+
+    /// Speedup of `s` over the unoptimized initial schedule.
+    pub fn speedup(&self, s: &Schedule) -> f64 {
+        let base = Schedule::initial(s.workload.clone());
+        self.latency(&base) / self.latency(s)
+    }
+
+    /// Achieved GFLOP/s of a schedule.
+    pub fn gflops(&self, s: &Schedule) -> f64 {
+        s.workload.flops() / self.latency(s) / 1e9
+    }
+
+    /// Roofline peak for this target (GFLOP/s).
+    pub fn peak_gflops(&self) -> f64 {
+        match self.target {
+            Target::Cpu => self.cpu.peak_gflops(),
+            Target::Gpu => self.gpu.peak_gflops(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::transforms::{apply_sequence, TransformKind};
+    use crate::util::Rng;
+    use crate::workloads;
+    use std::sync::Arc;
+
+    #[test]
+    fn baselines_are_slow_but_finite() {
+        for target in [Target::Cpu, Target::Gpu] {
+            let sim = Simulator::new(target);
+            for w in workloads::paper_benchmarks() {
+                let s = Schedule::initial(Arc::new(w));
+                let lat = sim.latency(&s);
+                assert!(lat.is_finite() && lat > 0.0, "{:?}", target);
+            }
+        }
+    }
+
+    #[test]
+    fn random_search_finds_speedups_on_all_benchmarks() {
+        // sanity: the search space contains real improvements everywhere
+        for target in [Target::Cpu, Target::Gpu] {
+            let sim = Simulator::new(target);
+            for w in workloads::paper_benchmarks() {
+                let name = w.name.clone();
+                let base = Schedule::initial(Arc::new(w));
+                let base_lat = sim.latency(&base);
+                let mut rng = Rng::new(42);
+                let vocab = TransformKind::vocabulary(target.is_gpu());
+                let mut best = f64::INFINITY;
+                for _ in 0..60 {
+                    let seq: Vec<_> = (0..4).map(|_| *rng.choice(&vocab)).collect();
+                    if let Ok(s) = apply_sequence(&base, &seq, &mut rng, target.is_gpu()) {
+                        best = best.min(sim.latency(&s));
+                    }
+                }
+                let speedup = base_lat / best;
+                assert!(
+                    speedup > 1.2,
+                    "{name} on {:?}: random search only reached {speedup:.2}x",
+                    target
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_helps_mlp() {
+        let sim = Simulator::new(Target::Cpu);
+        let w = Arc::new(workloads::mlp::llama4_mlp());
+        let base = Schedule::initial(w.clone());
+        let mut fused = base.clone();
+        // fuse silu_mul into down_proj's tiles
+        let silu = w.blocks.iter().position(|b| b.name == "silu_mul").unwrap();
+        fused.blocks[silu].compute_at = Some(1);
+        assert!(sim.latency(&fused) < sim.latency(&base));
+    }
+
+    #[test]
+    fn speedup_of_initial_is_one() {
+        let sim = Simulator::new(Target::Cpu);
+        let s = Schedule::initial(Arc::new(workloads::gemm::gemm(128, 128, 128)));
+        assert!((sim.speedup(&s) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_faster_than_cpu_when_tuned() {
+        let cpu = Simulator::new(Target::Cpu);
+        let gpu = Simulator::new(Target::Gpu);
+        assert!(gpu.peak_gflops() > cpu.peak_gflops());
+    }
+}

@@ -1,0 +1,289 @@
+//! Statistical machinery for Appendix E: one-sided matched-block tests on
+//! log speedup ratios with Dunnett adjustment for the three planned
+//! comparisons (2/4/8-LLM configs) against the shared single-large-model
+//! control.
+
+use crate::util::Rng;
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+/// Unbiased sample standard deviation.
+pub fn sd(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+}
+
+/// Geometric mean (for the paper's aggregated ratios).
+pub fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len().max(1) as f64).exp()
+}
+
+/// Regularized incomplete beta function via continued fraction
+/// (Lentz's algorithm) — the workhorse behind the t CDF.
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    let fpmin = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < fpmin {
+        d = fpmin;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..200 {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < fpmin {
+            d = fpmin;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < fpmin {
+            c = fpmin;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < fpmin {
+            d = fpmin;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < fpmin {
+            c = fpmin;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 3e-14 {
+            break;
+        }
+    }
+    h
+}
+
+fn ln_gamma(x: f64) -> f64 {
+    // Lanczos approximation
+    let g = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5 - (x + 0.5) * (x + 5.5).ln();
+    let mut ser = 1.000000000190015;
+    for gi in g {
+        y += 1.0;
+        ser += gi / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+/// Regularized incomplete beta I_x(a, b).
+pub fn inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let bt = (ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln()).exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        bt * betacf(a, b, x) / a
+    } else {
+        1.0 - bt * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Student-t CDF with `df` degrees of freedom.
+pub fn t_cdf(t: f64, df: f64) -> f64 {
+    let x = df / (df + t * t);
+    let p = 0.5 * inc_beta(df / 2.0, 0.5, x);
+    if t > 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    // Abramowitz & Stegun 7.1.26
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Result of one matched-block comparison.
+#[derive(Clone, Debug)]
+pub struct TestResult {
+    /// Geometric-mean speedup ratio (config / control).
+    pub ratio: f64,
+    /// 95% CI for the ratio (Dunnett-adjusted, one-sided construction
+    /// reported as the paper's two-sided-style interval).
+    pub ci_low: f64,
+    pub ci_high: f64,
+    /// Dunnett-adjusted one-sided p-value for ratio > 1.
+    pub p_value: f64,
+}
+
+/// One-sided matched-block test on log speedup ratios, Dunnett-adjusted
+/// for `k` planned comparisons against a shared control.
+///
+/// `treat[i]` and `control[i]` are speedups from the same block (seed).
+/// Dunnett adjustment uses the exact equicorrelated (ρ = 0.5) multivariate
+/// structure, evaluated by seeded Monte Carlo (200k draws) — deterministic
+/// and accurate to ~3 decimal places, sufficient for the table.
+pub fn dunnett_test(treat: &[f64], control: &[f64], k: usize) -> TestResult {
+    assert_eq!(treat.len(), control.len());
+    let n = treat.len();
+    let d: Vec<f64> = treat
+        .iter()
+        .zip(control)
+        .map(|(t, c)| (t / c).max(1e-12).ln())
+        .collect();
+    let m = mean(&d);
+    let s = sd(&d).max(1e-9);
+    let se = s / (n as f64).sqrt();
+    let t_stat = m / se;
+    let df = (n - 1) as f64;
+
+    // raw one-sided p
+    let p_raw = 1.0 - t_cdf(t_stat, df);
+    // Dunnett step: P(max_j T_j >= t) under the global null with
+    // equicorrelation 0.5 — Monte Carlo over the shared-control structure.
+    let p_adj = dunnett_p(t_stat, df, k).max(p_raw).min(1.0);
+
+    // Dunnett critical value for the 95% CI
+    let crit = dunnett_quantile(0.05, df, k);
+    TestResult {
+        ratio: m.exp(),
+        ci_low: (m - crit * se).exp(),
+        ci_high: (m + crit * se).exp(),
+        p_value: p_adj,
+    }
+}
+
+/// Monte-Carlo P(max of k equicorrelated (ρ=0.5) t_df variables >= t).
+fn dunnett_p(t: f64, df: f64, k: usize) -> f64 {
+    let mut rng = Rng::new(0xD0_E77);
+    let n = 200_000;
+    let mut count = 0usize;
+    for _ in 0..n {
+        // chi-square_df via sum of squares (df is small: <= 30 here)
+        let dfi = df.round() as usize;
+        let mut chi = 0.0;
+        for _ in 0..dfi.max(1) {
+            let z = rng.normal();
+            chi += z * z;
+        }
+        let scale = (chi / df).sqrt().max(1e-9);
+        let z0 = rng.normal(); // shared control component (rho = 0.5)
+        let mut max_t = f64::NEG_INFINITY;
+        for _ in 0..k {
+            let zi = rng.normal();
+            let corr = (z0 + zi) / std::f64::consts::SQRT_2;
+            max_t = max_t.max(corr / scale);
+        }
+        if max_t >= t {
+            count += 1;
+        }
+    }
+    count as f64 / n as f64
+}
+
+/// Dunnett one-sided critical value at level `alpha` (bisection on the
+/// Monte-Carlo tail probability).
+fn dunnett_quantile(alpha: f64, df: f64, k: usize) -> f64 {
+    let (mut lo, mut hi) = (0.0, 8.0);
+    for _ in 0..20 {
+        let mid = (lo + hi) / 2.0;
+        if dunnett_p(mid, df, k) > alpha {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo + hi) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_cdf_known_values() {
+        // t=0 -> 0.5 for any df
+        assert!((t_cdf(0.0, 9.0) - 0.5).abs() < 1e-9);
+        // large df -> approaches normal: t=1.96, df=1e6 -> ~0.975
+        assert!((t_cdf(1.96, 1e6) - 0.975).abs() < 2e-3);
+        // t_0.975 for df=9 is 2.262
+        assert!((t_cdf(2.262, 9.0) - 0.975).abs() < 2e-3);
+    }
+
+    #[test]
+    fn norm_cdf_sane() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((norm_cdf(1.6449) - 0.95).abs() < 1e-3);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dunnett_detects_real_improvement() {
+        // treatment consistently ~20% better across 10 blocks
+        let control: Vec<f64> = (0..10).map(|i| 10.0 + 0.3 * i as f64).collect();
+        let treat: Vec<f64> = control.iter().map(|c| c * 1.2 * (1.0 + 0.01)).collect();
+        let r = dunnett_test(&treat, &control, 3);
+        assert!(r.p_value < 0.01, "p {}", r.p_value);
+        assert!(r.ci_low > 1.0, "ci_low {}", r.ci_low);
+        assert!((r.ratio - 1.212).abs() < 0.01);
+    }
+
+    #[test]
+    fn dunnett_accepts_null() {
+        // no real difference + noise
+        let mut rng = Rng::new(3);
+        let control: Vec<f64> = (0..10).map(|_| 10.0 + rng.normal()).collect();
+        let treat: Vec<f64> = control.iter().map(|c| c * (1.0 + 0.002 * rng.normal())).collect();
+        let r = dunnett_test(&treat, &control, 3);
+        assert!(r.p_value > 0.05, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn dunnett_adjustment_is_conservative() {
+        let control: Vec<f64> = (0..10).map(|i| 10.0 + 0.5 * (i % 3) as f64).collect();
+        let treat: Vec<f64> = control.iter().enumerate()
+            .map(|(i, c)| c * (1.05 + 0.02 * ((i * 7 % 5) as f64 / 5.0 - 0.4)))
+            .collect();
+        let r1 = dunnett_test(&treat, &control, 1);
+        let r3 = dunnett_test(&treat, &control, 3);
+        assert!(r3.p_value >= r1.p_value * 0.99, "{} vs {}", r3.p_value, r1.p_value);
+    }
+}

@@ -1,0 +1,372 @@
+//! Tensor IR substrate (the TVM-TensorIR stand-in).
+//!
+//! A workload is a set of [`Buffer`]s plus a DAG of [`BlockDef`]s — perfect
+//! loop nests with named spatial/reduction axes and affine buffer accesses
+//! (each buffer dimension is indexed by a sum of axes, which covers dense
+//! matmul, im2col conv, attention, and elementwise epilogues).
+//!
+//! The IR is deliberately *structured* rather than a general AST: the
+//! schedule layer ([`crate::schedule`]) manipulates loop structure
+//! symbolically (tiling, reordering, caching, fusion), the simulator
+//! ([`crate::sim`]) evaluates it analytically, and the printer
+//! ([`printer`]) renders TVMScript-like text for LLM prompt context —
+//! exactly the three consumers TVM's TensorIR serves in the paper.
+
+pub mod printer;
+
+use std::fmt;
+
+/// Element type of a buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(self) -> i64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::BF16 => "bfloat16",
+            DType::F16 => "float16",
+            DType::I32 => "int32",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// A dense tensor in the workload.
+#[derive(Clone, Debug)]
+pub struct Buffer {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+}
+
+impl Buffer {
+    pub fn new(name: &str, shape: &[i64], dtype: DType) -> Buffer {
+        assert!(shape.iter().all(|&d| d > 0), "buffer {name}: bad shape");
+        Buffer {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype,
+        }
+    }
+
+    pub fn elems(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> i64 {
+        self.elems() * self.dtype.bytes()
+    }
+}
+
+/// Axis role within a block's iteration domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AxisKind {
+    Spatial,
+    Reduction,
+}
+
+/// One named loop axis of a block.
+#[derive(Clone, Debug)]
+pub struct Axis {
+    pub name: String,
+    pub extent: i64,
+    pub kind: AxisKind,
+}
+
+impl Axis {
+    pub fn spatial(name: &str, extent: i64) -> Axis {
+        Axis {
+            name: name.to_string(),
+            extent,
+            kind: AxisKind::Spatial,
+        }
+    }
+    pub fn reduction(name: &str, extent: i64) -> Axis {
+        Axis {
+            name: name.to_string(),
+            extent,
+            kind: AxisKind::Reduction,
+        }
+    }
+}
+
+/// An affine access: buffer dimension `d` is indexed by the sum of the
+/// block axes listed in `dim_axes[d]` (e.g. conv's `h_out + kh`).
+/// An empty list means the dimension is broadcast (stride-0).
+#[derive(Clone, Debug)]
+pub struct Access {
+    /// Index into `Workload::buffers`.
+    pub buffer: usize,
+    /// Per buffer-dimension: the block-axis indices whose sum indexes it.
+    pub dim_axes: Vec<Vec<usize>>,
+}
+
+impl Access {
+    pub fn new(buffer: usize, dim_axes: Vec<Vec<usize>>) -> Access {
+        Access { buffer, dim_axes }
+    }
+
+    /// True if the given block axis appears anywhere in this access.
+    pub fn uses_axis(&self, axis: usize) -> bool {
+        self.dim_axes.iter().any(|dims| dims.contains(&axis))
+    }
+
+    /// True if the given block axis indexes the *innermost* buffer
+    /// dimension (stride-1 direction) — the contiguity test the
+    /// vectorizer and GPU-coalescing model rely on.
+    pub fn axis_is_contiguous(&self, axis: usize) -> bool {
+        self.dim_axes
+            .last()
+            .map(|dims| dims.contains(&axis))
+            .unwrap_or(false)
+    }
+}
+
+/// Arithmetic character of a block body (used by the simulator to pick
+/// throughput tables: MAC-heavy vs transcendental vs data movement).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BodyKind {
+    /// Multiply-accumulate contraction (matmul-like).
+    Mac,
+    /// Elementwise arithmetic chain.
+    Elementwise,
+    /// Exp/softmax-style transcendental.
+    Transcendental,
+    /// Max/sum reduction without multiplies.
+    Reduce,
+    /// Pure data movement (layout/copy/im2col).
+    Copy,
+}
+
+/// One perfect-loop-nest compute block.
+#[derive(Clone, Debug)]
+pub struct BlockDef {
+    pub name: String,
+    pub axes: Vec<Axis>,
+    pub reads: Vec<Access>,
+    pub writes: Vec<Access>,
+    pub body: BodyKind,
+    /// FLOPs executed per loop-domain point (2.0 for a MAC).
+    pub flops_per_point: f64,
+    /// Block indices (into `Workload::blocks`) whose output this block
+    /// consumes — the fusion (ComputeLocation) graph.
+    pub producers: Vec<usize>,
+}
+
+impl BlockDef {
+    pub fn domain_points(&self) -> i64 {
+        self.axes.iter().map(|a| a.extent).product()
+    }
+
+    pub fn spatial_points(&self) -> i64 {
+        self.axes
+            .iter()
+            .filter(|a| a.kind == AxisKind::Spatial)
+            .map(|a| a.extent)
+            .product()
+    }
+
+    pub fn reduction_points(&self) -> i64 {
+        self.axes
+            .iter()
+            .filter(|a| a.kind == AxisKind::Reduction)
+            .map(|a| a.extent)
+            .product()
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.domain_points() as f64 * self.flops_per_point
+    }
+
+    pub fn has_reduction(&self) -> bool {
+        self.axes.iter().any(|a| a.kind == AxisKind::Reduction)
+    }
+}
+
+/// A complete workload: buffers + block DAG. This is the paper's
+/// "unoptimized IRModule".
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub buffers: Vec<Buffer>,
+    pub blocks: Vec<BlockDef>,
+}
+
+impl Workload {
+    /// Total FLOPs over all blocks.
+    pub fn flops(&self) -> f64 {
+        self.blocks.iter().map(|b| b.flops()).sum()
+    }
+
+    /// Structural validation: access arities match buffer ranks, axis
+    /// indices in range, producer edges acyclic and in range.
+    pub fn validate(&self) -> Result<(), String> {
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            for acc in blk.reads.iter().chain(blk.writes.iter()) {
+                let buf = self
+                    .buffers
+                    .get(acc.buffer)
+                    .ok_or_else(|| format!("block {}: buffer idx out of range", blk.name))?;
+                if acc.dim_axes.len() != buf.shape.len() {
+                    return Err(format!(
+                        "block {}: access rank {} != buffer {} rank {}",
+                        blk.name,
+                        acc.dim_axes.len(),
+                        buf.name,
+                        buf.shape.len()
+                    ));
+                }
+                for dims in &acc.dim_axes {
+                    for &ax in dims {
+                        if ax >= blk.axes.len() {
+                            return Err(format!("block {}: axis idx {} oob", blk.name, ax));
+                        }
+                    }
+                }
+            }
+            if blk.writes.is_empty() {
+                return Err(format!("block {}: no writes", blk.name));
+            }
+            for &p in &blk.producers {
+                if p >= bi {
+                    return Err(format!(
+                        "block {}: producer {} not earlier in topo order",
+                        blk.name, p
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Buffer index by name (panics if missing — used by workload builders
+    /// and tests where the name is static).
+    pub fn buffer_idx(&self, name: &str) -> usize {
+        self.buffers
+            .iter()
+            .position(|b| b.name == name)
+            .unwrap_or_else(|| panic!("no buffer named {name}"))
+    }
+
+    /// The consumers of each block (inverse of `producers`).
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut cons = vec![Vec::new(); self.blocks.len()];
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            for &p in &blk.producers {
+                cons[p].push(bi);
+            }
+        }
+        cons
+    }
+
+    /// Index of the block doing the most FLOPs — the schedule search's
+    /// primary target ("dominant block").
+    pub fn dominant_block(&self) -> usize {
+        let mut best = 0;
+        let mut best_flops = -1.0;
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.flops() > best_flops {
+                best_flops = b.flops();
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// C[i,j] += A[i,k] * B[k,j] over 64x64x64.
+    pub fn tiny_matmul() -> Workload {
+        let buffers = vec![
+            Buffer::new("A", &[64, 64], DType::F32),
+            Buffer::new("B", &[64, 64], DType::F32),
+            Buffer::new("C", &[64, 64], DType::F32),
+        ];
+        let blocks = vec![BlockDef {
+            name: "matmul".into(),
+            axes: vec![
+                Axis::spatial("i", 64),
+                Axis::spatial("j", 64),
+                Axis::reduction("k", 64),
+            ],
+            reads: vec![
+                Access::new(0, vec![vec![0], vec![2]]),
+                Access::new(1, vec![vec![2], vec![1]]),
+            ],
+            writes: vec![Access::new(2, vec![vec![0], vec![1]])],
+            body: BodyKind::Mac,
+            flops_per_point: 2.0,
+            producers: vec![],
+        }];
+        Workload {
+            name: "tiny_matmul".into(),
+            buffers,
+            blocks,
+        }
+    }
+
+    #[test]
+    fn matmul_flops() {
+        let w = tiny_matmul();
+        assert_eq!(w.flops(), 2.0 * 64.0 * 64.0 * 64.0);
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn contiguity() {
+        let w = tiny_matmul();
+        let blk = &w.blocks[0];
+        // A[i,k]: k is the contiguous axis
+        assert!(blk.reads[0].axis_is_contiguous(2));
+        assert!(!blk.reads[0].axis_is_contiguous(0));
+        // C[i,j]: j contiguous
+        assert!(blk.writes[0].axis_is_contiguous(1));
+    }
+
+    #[test]
+    fn validation_catches_bad_rank() {
+        let mut w = tiny_matmul();
+        w.blocks[0].reads[0].dim_axes.push(vec![0]);
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_axis_oob() {
+        let mut w = tiny_matmul();
+        w.blocks[0].reads[0].dim_axes[0] = vec![9];
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn dominant_block_is_biggest() {
+        let w = tiny_matmul();
+        assert_eq!(w.dominant_block(), 0);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::BF16.bytes(), 2);
+        assert_eq!(DType::F32.name(), "float32");
+    }
+}

@@ -1,0 +1,129 @@
+//! TVMScript-like rendering of an *unscheduled* workload (default loop
+//! order). Scheduled programs are rendered by [`crate::schedule::printer`],
+//! which shows the tiled/annotated loop structure.
+
+use super::{AxisKind, BlockDef, Workload};
+
+/// Render the function signature line.
+pub fn signature(w: &Workload) -> String {
+    let params: Vec<String> = w
+        .buffers
+        .iter()
+        .map(|b| {
+            format!(
+                "{}: T.Buffer(({}), \"{}\")",
+                b.name,
+                b.shape
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                b.dtype.name()
+            )
+        })
+        .collect();
+    format!("def main({}):", params.join(", "))
+}
+
+fn body_expr(w: &Workload, blk: &BlockDef) -> String {
+    let fmt_access = |acc: &super::Access| -> String {
+        let idx: Vec<String> = acc
+            .dim_axes
+            .iter()
+            .map(|dims| {
+                if dims.is_empty() {
+                    "0".to_string()
+                } else {
+                    dims.iter()
+                        .map(|&a| blk.axes[a].name.clone())
+                        .collect::<Vec<_>>()
+                        .join(" + ")
+                }
+            })
+            .collect();
+        format!("{}[{}]", w.buffers[acc.buffer].name, idx.join(", "))
+    };
+    let out = fmt_access(&blk.writes[0]);
+    let ins: Vec<String> = blk.reads.iter().map(fmt_access).collect();
+    use super::BodyKind::*;
+    match blk.body {
+        Mac => format!("{out} = {out} + {}", ins.join(" * ")),
+        Elementwise => format!("{out} = f({})", ins.join(", ")),
+        Transcendental => format!("{out} = T.exp({})", ins.join(", ")),
+        Reduce => format!("{out} = T.max({out}, {})", ins.join(", ")),
+        Copy => format!("{out} = {}", ins.first().cloned().unwrap_or_default()),
+    }
+}
+
+/// Full TVMScript-like text for the unscheduled workload.
+pub fn print_workload(w: &Workload) -> String {
+    let mut s = String::from("@T.prim_func\n");
+    s.push_str(&signature(w));
+    s.push('\n');
+    for blk in &w.blocks {
+        let mut indent = 1;
+        for ax in &blk.axes {
+            let kind = match ax.kind {
+                AxisKind::Spatial => "T.serial",
+                AxisKind::Reduction => "T.serial",
+            };
+            s.push_str(&"    ".repeat(indent));
+            s.push_str(&format!("for {} in {}({}):\n", ax.name, kind, ax.extent));
+            indent += 1;
+        }
+        s.push_str(&"    ".repeat(indent));
+        s.push_str(&format!("with T.block(\"{}\"):\n", blk.name));
+        s.push_str(&"    ".repeat(indent + 1));
+        s.push_str(&body_expr(w, blk));
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{Access, Axis, BlockDef, BodyKind, Buffer, DType};
+
+    fn mm() -> Workload {
+        Workload {
+            name: "mm".into(),
+            buffers: vec![
+                Buffer::new("A", &[8, 8], DType::F32),
+                Buffer::new("B", &[8, 8], DType::F32),
+                Buffer::new("C", &[8, 8], DType::F32),
+            ],
+            blocks: vec![BlockDef {
+                name: "matmul".into(),
+                axes: vec![
+                    Axis::spatial("i", 8),
+                    Axis::spatial("j", 8),
+                    Axis::reduction("k", 8),
+                ],
+                reads: vec![
+                    Access::new(0, vec![vec![0], vec![2]]),
+                    Access::new(1, vec![vec![2], vec![1]]),
+                ],
+                writes: vec![Access::new(2, vec![vec![0], vec![1]])],
+                body: BodyKind::Mac,
+                flops_per_point: 2.0,
+                producers: vec![],
+            }],
+        }
+    }
+
+    #[test]
+    fn prints_loops_and_block() {
+        let text = print_workload(&mm());
+        assert!(text.contains("@T.prim_func"));
+        assert!(text.contains("for i in T.serial(8):"));
+        assert!(text.contains("with T.block(\"matmul\"):"));
+        assert!(text.contains("C[i, j] = C[i, j] + A[i, k] * B[k, j]"));
+    }
+
+    #[test]
+    fn signature_lists_buffers() {
+        let sig = signature(&mm());
+        assert!(sig.contains("A: T.Buffer((8, 8), \"float32\")"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Small CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog [subcommand] [--flag] [--key value]... [positional]...`
+//! Both `--key value` and `--key=value` are accepted.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit arg list (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-taking if the next token isn't another flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("fig2 --budget 500 --target=gpu out.md --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fig2"));
+        assert_eq!(a.usize_or("budget", 0), 500);
+        assert_eq!(a.str_or("target", ""), "gpu");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["out.md"]);
+    }
+
+    #[test]
+    fn bare_flag_at_end() {
+        let a = parse("run --fast");
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.f64_or("lambda", 0.5), 0.5);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // a negative value is not a flag
+        let a = parse("x --offset -3");
+        assert_eq!(a.str_or("offset", ""), "-3");
+    }
+}

@@ -1,0 +1,110 @@
+//! Markdown / aligned-text table rendering for experiment reports.
+
+/// A simple column-aligned table builder. Emits GitHub-flavored markdown.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                s.push(' ');
+                s.push_str(&format!("{:width$}", cells[i], width = widths[i]));
+                s.push_str(" |");
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("**{}**\n\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a ratio like the paper: `1.95` (two decimals).
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a pair of GPU/CPU values like the paper: `1.85/1.48`.
+pub fn pair(gpu: f64, cpu: f64) -> String {
+    format!("{gpu:.2}/{cpu:.2}")
+}
+
+/// Format a percentage like the paper: `23.1`.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["Benchmark", "Speedup"]);
+        t.row(vec!["llama3-attn".into(), "30.1".into()]);
+        t.row(vec!["moe".into(), "10.9".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| Benchmark   | Speedup |"));
+        assert!(md.contains("| llama3-attn | 30.1    |"));
+        assert!(md.starts_with("**Demo**"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(ratio(1.9512), "1.95");
+        assert_eq!(pair(1.85, 1.48), "1.85/1.48");
+        assert_eq!(pct(0.231), "23.1");
+    }
+}

@@ -1,0 +1,241 @@
+//! Self-attention workloads: Llama-3-8B (causal) and FLUX (non-causal
+//! image-token attention).
+//!
+//! Block DAG (the classic 5-stage attention pipeline + residual):
+//!   qkv_proj -> scores -> softmax -> av -> out_proj -> residual
+//!
+//! Weight and activation tensors are declared in their *view* shapes
+//! (e.g. Wqkv as [3, d, heads, head_dim]) so every buffer dimension is
+//! indexed by single block axes — the affine form the footprint analysis
+//! consumes. Causality is modeled as a 0.5× effective KV extent on the
+//! scores / softmax / av blocks (the simulator needs work and traffic, not
+//! the triangular structure itself).
+
+use super::builder::WorkloadBuilder;
+use crate::tir::{Access, Axis, BlockDef, BodyKind, Workload};
+
+/// Parameters of an attention layer.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnParams {
+    pub seq: i64,
+    pub heads: i64,
+    pub head_dim: i64,
+    pub causal: bool,
+}
+
+impl AttnParams {
+    pub fn d_model(&self) -> i64 {
+        self.heads * self.head_dim
+    }
+}
+
+/// Build the 6-block attention workload.
+pub fn attention(name: &str, p: AttnParams) -> Workload {
+    let d = p.d_model();
+    let kv = if p.causal { p.seq / 2 } else { p.seq };
+
+    let mut b = WorkloadBuilder::new(name);
+    let x = b.f32("X", &[p.seq, d]);
+    let wqkv = b.f32("Wqkv", &[3, d, p.heads, p.head_dim]);
+    let qkv = b.f32("QKV", &[3, p.heads, p.seq, p.head_dim]);
+    let s_buf = b.f32("S", &[p.heads, p.seq, kv]);
+    let p_buf = b.f32("P", &[p.heads, p.seq, kv]);
+    let o_buf = b.f32("O", &[p.heads, p.seq, p.head_dim]);
+    let wo = b.f32("Wo", &[p.heads, p.head_dim, d]);
+    let y = b.f32("Y", &[p.seq, d]);
+
+    // qkv_proj: QKV[w,h,s,dh] += X[s,c] * Wqkv[w,c,h,dh]
+    let qkv_blk = b.push_block(BlockDef {
+        name: "qkv_proj".into(),
+        axes: vec![
+            Axis::spatial("w", 3),
+            Axis::spatial("h", p.heads),
+            Axis::spatial("s", p.seq),
+            Axis::spatial("dh", p.head_dim),
+            Axis::reduction("c", d),
+        ],
+        reads: vec![
+            Access::new(x, vec![vec![2], vec![4]]),
+            Access::new(wqkv, vec![vec![0], vec![4], vec![1], vec![3]]),
+        ],
+        writes: vec![Access::new(qkv, vec![vec![0], vec![1], vec![2], vec![3]])],
+        body: BodyKind::Mac,
+        flops_per_point: 2.0,
+        producers: vec![],
+    });
+
+    // scores: S[h,sq,sk] += Q[h,sq,dh] * K[h,sk,dh]
+    let s_blk = b.push_block(BlockDef {
+        name: "scores".into(),
+        axes: vec![
+            Axis::spatial("h", p.heads),
+            Axis::spatial("sq", p.seq),
+            Axis::spatial("sk", kv),
+            Axis::reduction("dh", p.head_dim),
+        ],
+        reads: vec![
+            Access::new(qkv, vec![vec![], vec![0], vec![1], vec![3]]), // Q slab
+            Access::new(qkv, vec![vec![], vec![0], vec![2], vec![3]]), // K slab
+        ],
+        writes: vec![Access::new(s_buf, vec![vec![0], vec![1], vec![2]])],
+        body: BodyKind::Mac,
+        flops_per_point: 2.0,
+        producers: vec![qkv_blk],
+    });
+
+    let sm_blk = b.softmax("softmax", &[p.heads, p.seq], kv, s_buf, p_buf, vec![s_blk]);
+
+    // av: O[h,sq,dh] += P[h,sq,sk] * V[h,sk,dh]
+    let av_blk = b.push_block(BlockDef {
+        name: "av".into(),
+        axes: vec![
+            Axis::spatial("h", p.heads),
+            Axis::spatial("sq", p.seq),
+            Axis::spatial("dh", p.head_dim),
+            Axis::reduction("sk", kv),
+        ],
+        reads: vec![
+            Access::new(p_buf, vec![vec![0], vec![1], vec![3]]),
+            Access::new(qkv, vec![vec![], vec![0], vec![3], vec![2]]), // V slab
+        ],
+        writes: vec![Access::new(o_buf, vec![vec![0], vec![1], vec![2]])],
+        body: BodyKind::Mac,
+        flops_per_point: 2.0,
+        producers: vec![sm_blk],
+    });
+
+    // out_proj: Y[s,j] += O[h,s,dh] * Wo[h,dh,j]
+    let o_blk = b.push_block(BlockDef {
+        name: "out_proj".into(),
+        axes: vec![
+            Axis::spatial("s", p.seq),
+            Axis::spatial("j", d),
+            Axis::reduction("h", p.heads),
+            Axis::reduction("dh", p.head_dim),
+        ],
+        reads: vec![
+            Access::new(o_buf, vec![vec![2], vec![0], vec![3]]),
+            Access::new(wo, vec![vec![2], vec![3], vec![1]]),
+        ],
+        writes: vec![Access::new(y, vec![vec![0], vec![1]])],
+        body: BodyKind::Mac,
+        flops_per_point: 2.0,
+        producers: vec![av_blk],
+    });
+
+    b.elementwise(
+        "residual",
+        &[p.seq, d],
+        &[y, x],
+        y,
+        BodyKind::Elementwise,
+        1.0,
+        vec![o_blk],
+    );
+    b.build()
+}
+
+/// Llama-3-8B self-attention: d_model=4096, 32 heads, head_dim=128,
+/// context 2048, causal.
+pub fn llama3_attention() -> Workload {
+    attention(
+        "llama3_attention",
+        AttnParams {
+            seq: 2048,
+            heads: 32,
+            head_dim: 128,
+            causal: true,
+        },
+    )
+}
+
+/// FLUX (stable diffusion) attention: 24 heads x 128 over 4096 image
+/// tokens, non-causal.
+pub fn flux_attention() -> Workload {
+    attention(
+        "flux_attention",
+        AttnParams {
+            seq: 4096,
+            heads: 24,
+            head_dim: 128,
+            causal: false,
+        },
+    )
+}
+
+/// Scaled-down attention for e2e graphs and fast tests.
+pub fn small_attention(seq: i64, heads: i64, head_dim: i64, causal: bool) -> Workload {
+    attention(
+        "small_attention",
+        AttnParams {
+            seq,
+            heads,
+            head_dim,
+            causal,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_attention_structure() {
+        let w = llama3_attention();
+        w.validate().unwrap();
+        let names: Vec<&str> = w.blocks.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["qkv_proj", "scores", "softmax", "av", "out_proj", "residual"]
+        );
+        assert_eq!(w.blocks[w.dominant_block()].name, "qkv_proj");
+    }
+
+    #[test]
+    fn causal_halves_score_work() {
+        let c = llama3_attention();
+        let f = attention(
+            "nc",
+            AttnParams {
+                seq: 2048,
+                heads: 32,
+                head_dim: 128,
+                causal: false,
+            },
+        );
+        let score_flops = |w: &Workload| {
+            w.blocks.iter().find(|b| b.name == "scores").unwrap().flops()
+        };
+        assert!((score_flops(&c) * 2.0 - score_flops(&f)).abs() < 1.0);
+    }
+
+    #[test]
+    fn flux_attention_bigger_seq() {
+        let w = flux_attention();
+        w.validate().unwrap();
+        assert!(w.flops() > 1e11);
+    }
+
+    #[test]
+    fn producer_graph_is_chain() {
+        let w = llama3_attention();
+        let cons = w.consumers();
+        assert!(cons[0].contains(&1)); // qkv_proj feeds scores
+        assert!(cons[3].contains(&4)); // av feeds out_proj
+    }
+
+    #[test]
+    fn qkv_flops_match_projection_math() {
+        let p = AttnParams {
+            seq: 64,
+            heads: 2,
+            head_dim: 16,
+            causal: false,
+        };
+        let w = attention("t", p);
+        let qkv = w.blocks.iter().find(|b| b.name == "qkv_proj").unwrap();
+        let d = p.d_model();
+        assert_eq!(qkv.flops() as i64, 2 * 3 * p.seq * d * d);
+    }
+}

@@ -1,0 +1,241 @@
+//! Fluent builder for tensor-IR workloads — removes the boilerplate of
+//! hand-writing `Access` index lists for the common block shapes
+//! (matmul, batched matmul, elementwise epilogue, softmax, copy).
+
+use crate::tir::{Access, Axis, BlockDef, BodyKind, Buffer, DType, Workload};
+
+pub struct WorkloadBuilder {
+    name: String,
+    buffers: Vec<Buffer>,
+    blocks: Vec<BlockDef>,
+}
+
+impl WorkloadBuilder {
+    pub fn new(name: &str) -> Self {
+        WorkloadBuilder {
+            name: name.to_string(),
+            buffers: Vec::new(),
+            blocks: Vec::new(),
+        }
+    }
+
+    pub fn buffer(&mut self, name: &str, shape: &[i64], dtype: DType) -> usize {
+        self.buffers.push(Buffer::new(name, shape, dtype));
+        self.buffers.len() - 1
+    }
+
+    pub fn f32(&mut self, name: &str, shape: &[i64]) -> usize {
+        self.buffer(name, shape, DType::F32)
+    }
+
+    /// `out[b?, m, n] += lhs[b?, m, k] * rhs[k, n]` — optionally batched.
+    /// Returns the block index. `producers` are fusion-graph edges.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul(
+        &mut self,
+        name: &str,
+        batch: Option<i64>,
+        m: i64,
+        n: i64,
+        k: i64,
+        lhs: usize,
+        rhs: usize,
+        out: usize,
+        rhs_batched: bool,
+        producers: Vec<usize>,
+    ) -> usize {
+        let mut axes = Vec::new();
+        let mut ai = 0;
+        let b_ax = batch.map(|b| {
+            axes.push(Axis::spatial("b", b));
+            ai += 1;
+            ai - 1
+        });
+        let m_ax = {
+            axes.push(Axis::spatial("i", m));
+            ai += 1;
+            ai - 1
+        };
+        let n_ax = {
+            axes.push(Axis::spatial("j", n));
+            ai += 1;
+            ai - 1
+        };
+        let k_ax = {
+            axes.push(Axis::reduction("k", k));
+            ai += 1;
+            ai - 1
+        };
+
+        let lhs_dims = match b_ax {
+            Some(b) => vec![vec![b], vec![m_ax], vec![k_ax]],
+            None => vec![vec![m_ax], vec![k_ax]],
+        };
+        let rhs_dims = match (b_ax, rhs_batched) {
+            (Some(b), true) => vec![vec![b], vec![k_ax], vec![n_ax]],
+            _ => vec![vec![k_ax], vec![n_ax]],
+        };
+        let out_dims = match b_ax {
+            Some(b) => vec![vec![b], vec![m_ax], vec![n_ax]],
+            None => vec![vec![m_ax], vec![n_ax]],
+        };
+
+        self.blocks.push(BlockDef {
+            name: name.to_string(),
+            axes,
+            reads: vec![Access::new(lhs, lhs_dims), Access::new(rhs, rhs_dims)],
+            writes: vec![Access::new(out, out_dims)],
+            body: BodyKind::Mac,
+            flops_per_point: 2.0,
+            producers,
+        });
+        self.blocks.len() - 1
+    }
+
+    /// Elementwise block over `shape`; reads each input at the same
+    /// coordinates it writes the output.
+    pub fn elementwise(
+        &mut self,
+        name: &str,
+        shape: &[i64],
+        inputs: &[usize],
+        out: usize,
+        body: BodyKind,
+        flops_per_point: f64,
+        producers: Vec<usize>,
+    ) -> usize {
+        let axes: Vec<Axis> = shape
+            .iter()
+            .enumerate()
+            .map(|(i, &e)| Axis::spatial(&format!("e{i}"), e))
+            .collect();
+        let dims: Vec<Vec<usize>> = (0..shape.len()).map(|i| vec![i]).collect();
+        self.blocks.push(BlockDef {
+            name: name.to_string(),
+            axes,
+            reads: inputs
+                .iter()
+                .map(|&b| Access::new(b, dims.clone()))
+                .collect(),
+            writes: vec![Access::new(out, dims)],
+            body,
+            flops_per_point,
+            producers,
+        });
+        self.blocks.len() - 1
+    }
+
+    /// Row-softmax over `rows x cols` (reduction over the last dim, then a
+    /// transcendental rescale). Modeled as one block with a reduction axis.
+    pub fn softmax(
+        &mut self,
+        name: &str,
+        rows_shape: &[i64],
+        cols: i64,
+        input: usize,
+        out: usize,
+        producers: Vec<usize>,
+    ) -> usize {
+        let mut axes: Vec<Axis> = rows_shape
+            .iter()
+            .enumerate()
+            .map(|(i, &e)| Axis::spatial(&format!("r{i}"), e))
+            .collect();
+        axes.push(Axis::reduction("c", cols));
+        let c_ax = axes.len() - 1;
+        let mut dims: Vec<Vec<usize>> = (0..rows_shape.len()).map(|i| vec![i]).collect();
+        dims.push(vec![c_ax]);
+        self.blocks.push(BlockDef {
+            name: name.to_string(),
+            axes,
+            reads: vec![Access::new(input, dims.clone())],
+            writes: vec![Access::new(out, dims)],
+            body: BodyKind::Transcendental,
+            // exp + running max + sum + divide ≈ 8 flops/elem equivalent
+            flops_per_point: 8.0,
+            producers,
+        });
+        self.blocks.len() - 1
+    }
+
+    /// Data-movement block (im2col / layout change): reads `input` via the
+    /// provided dims, writes `out` at its natural coordinates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn copy(
+        &mut self,
+        name: &str,
+        axes: Vec<Axis>,
+        read: Access,
+        write: Access,
+        producers: Vec<usize>,
+    ) -> usize {
+        self.blocks.push(BlockDef {
+            name: name.to_string(),
+            axes,
+            reads: vec![read],
+            writes: vec![write],
+            body: BodyKind::Copy,
+            flops_per_point: 0.0,
+            producers,
+        });
+        self.blocks.len() - 1
+    }
+
+    /// Escape hatch: append a hand-constructed block (for shapes the
+    /// helpers don't cover, e.g. the MoE expert-selection axis).
+    pub fn push_block(&mut self, blk: BlockDef) -> usize {
+        self.blocks.push(blk);
+        self.blocks.len() - 1
+    }
+
+    pub fn build(self) -> Workload {
+        let w = Workload {
+            name: self.name,
+            buffers: self.buffers,
+            blocks: self.blocks,
+        };
+        w.validate()
+            .unwrap_or_else(|e| panic!("workload {} invalid: {e}", w.name));
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_builder_shapes() {
+        let mut b = WorkloadBuilder::new("t");
+        let a = b.f32("A", &[32, 16]);
+        let w = b.f32("B", &[16, 8]);
+        let c = b.f32("C", &[32, 8]);
+        b.matmul("mm", None, 32, 8, 16, a, w, c, false, vec![]);
+        let wl = b.build();
+        assert_eq!(wl.blocks[0].axes.len(), 3);
+        assert_eq!(wl.flops(), 2.0 * 32.0 * 8.0 * 16.0);
+    }
+
+    #[test]
+    fn batched_matmul_rhs_batched() {
+        let mut b = WorkloadBuilder::new("t");
+        let q = b.f32("Q", &[4, 32, 16]);
+        let k = b.f32("K", &[4, 16, 32]);
+        let s = b.f32("S", &[4, 32, 32]);
+        b.matmul("scores", Some(4), 32, 32, 16, q, k, s, true, vec![]);
+        let wl = b.build();
+        assert_eq!(wl.blocks[0].axes.len(), 4);
+        // rhs batched: K read has 3 dims
+        assert_eq!(wl.blocks[0].reads[1].dim_axes.len(), 3);
+    }
+
+    #[test]
+    fn softmax_block_has_reduction() {
+        let mut b = WorkloadBuilder::new("t");
+        let s = b.f32("S", &[4, 32, 32]);
+        let p = b.f32("P", &[4, 32, 32]);
+        b.softmax("softmax", &[4, 32], 32, s, p, vec![]);
+        let wl = b.build();
+        assert!(wl.blocks[0].has_reduction());
+    }
+}

@@ -1,0 +1,128 @@
+//! FLUX (stable-diffusion) convolution layer, lowered as im2col + GEMM —
+//! the lowering both TVM and our Layer-2 JAX model use, so the rust-side
+//! search space matches the executable artifact's structure.
+
+use super::builder::WorkloadBuilder;
+use crate::tir::{Access, Axis, BodyKind, Workload};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConvParams {
+    pub h: i64,
+    pub w: i64,
+    pub c_in: i64,
+    pub c_out: i64,
+    pub kh: i64,
+    pub kw: i64,
+}
+
+pub fn conv2d(name: &str, p: ConvParams) -> Workload {
+    let oh = p.h - p.kh + 1;
+    let ow = p.w - p.kw + 1;
+    let kdim = p.kh * p.kw * p.c_in;
+
+    let mut b = WorkloadBuilder::new(name);
+    let x = b.f32("X", &[p.h, p.w, p.c_in]);
+    let patches = b.f32("Patches", &[oh * ow, kdim]);
+    let wgt = b.f32("W", &[kdim, p.c_out]);
+    let y = b.f32("Y", &[oh * ow, p.c_out]);
+
+    // im2col: axes (oh, ow, kh, kw, c); reads X[oh+kh, ow+kw, c],
+    // writes Patches[oh*ow, (kh kw c)] — modeled with the flattened
+    // output dims indexed by their contributing axes.
+    let im2col = {
+        let axes = vec![
+            Axis::spatial("oh", oh),
+            Axis::spatial("ow", ow),
+            Axis::spatial("kh", p.kh),
+            Axis::spatial("kw", p.kw),
+            Axis::spatial("c", p.c_in),
+        ];
+        let read = Access::new(x, vec![vec![0, 2], vec![1, 3], vec![4]]);
+        let write = Access::new(patches, vec![vec![0, 1], vec![2, 3, 4]]);
+        b.copy("im2col", axes, read, write, vec![])
+    };
+
+    // GEMM: (oh*ow) x c_out x kdim
+    let gemm = b.matmul(
+        "conv_gemm",
+        None,
+        oh * ow,
+        p.c_out,
+        kdim,
+        patches,
+        wgt,
+        y,
+        false,
+        vec![im2col],
+    );
+
+    // epilogue: bias + SiLU
+    b.elementwise(
+        "bias_act",
+        &[oh * ow, p.c_out],
+        &[y],
+        y,
+        BodyKind::Elementwise,
+        4.0,
+        vec![gemm],
+    );
+
+    b.build()
+}
+
+/// FLUX conv layer at representative scale: 64x64 latent, 320 channels, 3x3.
+pub fn flux_conv() -> Workload {
+    conv2d(
+        "flux_conv",
+        ConvParams {
+            h: 64,
+            w: 64,
+            c_in: 320,
+            c_out: 320,
+            kh: 3,
+            kw: 3,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_structure() {
+        let w = flux_conv();
+        w.validate().unwrap();
+        let names: Vec<&str> = w.blocks.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(names, ["im2col", "conv_gemm", "bias_act"]);
+        assert_eq!(w.blocks[w.dominant_block()].name, "conv_gemm");
+    }
+
+    #[test]
+    fn gemm_flops_match_conv_math() {
+        let p = ConvParams {
+            h: 16,
+            w: 16,
+            c_in: 8,
+            c_out: 4,
+            kh: 3,
+            kw: 3,
+        };
+        let wl = conv2d("c", p);
+        let gemm = wl.blocks.iter().find(|b| b.name == "conv_gemm").unwrap();
+        let oh = 14;
+        let ow = 14;
+        assert_eq!(
+            gemm.flops() as i64,
+            2 * oh * ow * p.c_out * p.kh * p.kw * p.c_in
+        );
+    }
+
+    #[test]
+    fn im2col_sliding_window_access() {
+        let wl = flux_conv();
+        let im = &wl.blocks[0];
+        // X's first dim indexed by oh + kh (two axes)
+        assert_eq!(im.reads[0].dim_axes[0], vec![0, 2]);
+    }
+}

@@ -1,0 +1,26 @@
+//! Plain GEMM micro-workload — the quickstart example and the schedule /
+//! simulator unit-test substrate.
+
+use super::builder::WorkloadBuilder;
+use crate::tir::Workload;
+
+/// C[m,n] = A[m,k] @ B[k,n], f32.
+pub fn gemm(m: i64, n: i64, k: i64) -> Workload {
+    let mut b = WorkloadBuilder::new("gemm");
+    let a = b.f32("A", &[m, k]);
+    let w = b.f32("B", &[k, n]);
+    let c = b.f32("C", &[m, n]);
+    b.matmul("matmul", None, m, n, k, a, w, c, false, vec![]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops() {
+        let w = gemm(128, 64, 32);
+        assert_eq!(w.flops() as i64, 2 * 128 * 64 * 32);
+    }
+}

@@ -1,0 +1,126 @@
+//! End-to-end Llama-3-8B compilation target (paper Table 3 / Table 16).
+//!
+//! The full model is a layer graph whose unique kernels are tuned once and
+//! whose end-to-end latency is the count-weighted sum of per-kernel
+//! latencies — exactly how TVM MetaSchedule treats full-model tuning
+//! (tasks extracted per unique subgraph, weighted by occurrence).
+
+use super::{attention, mlp};
+use crate::tir::Workload;
+
+/// One tuning task of the e2e graph.
+#[derive(Clone, Debug)]
+pub struct E2eTask {
+    pub workload: Workload,
+    /// How many times this kernel appears in the full model.
+    pub count: i64,
+    /// Fraction of the total search budget this task receives
+    /// (proportional to count-weighted FLOPs).
+    pub budget_frac: f64,
+}
+
+/// The full-model graph.
+#[derive(Clone, Debug)]
+pub struct E2eGraph {
+    pub name: String,
+    pub tasks: Vec<E2eTask>,
+}
+
+impl E2eGraph {
+    /// Count-weighted total FLOPs.
+    pub fn flops(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| t.workload.flops() * t.count as f64)
+            .sum()
+    }
+
+    /// End-to-end latency given per-task latencies (seconds each run).
+    pub fn latency(&self, per_task: &[f64]) -> f64 {
+        assert_eq!(per_task.len(), self.tasks.len());
+        self.tasks
+            .iter()
+            .zip(per_task)
+            .map(|(t, &l)| l * t.count as f64)
+            .sum()
+    }
+}
+
+/// Llama-3-8B: 32 decoder layers, each = attention + MLP; plus the LM head
+/// GEMM. Unique tasks: one attention kernel, one MLP kernel, one head GEMM.
+pub fn llama3_8b_graph() -> E2eGraph {
+    let attn = attention::attention(
+        "llama3_layer_attn",
+        attention::AttnParams {
+            seq: 2048,
+            heads: 32,
+            head_dim: 128,
+            causal: true,
+        },
+    );
+    let ffn = mlp::mlp(
+        "llama3_layer_mlp",
+        mlp::MlpParams {
+            tokens: 2048,
+            d_model: 4096,
+            d_ff: 14336,
+        },
+    );
+    let head = super::gemm::gemm(2048, 128_256, 4096);
+
+    let mut tasks = vec![
+        E2eTask {
+            workload: attn,
+            count: 32,
+            budget_frac: 0.0,
+        },
+        E2eTask {
+            workload: ffn,
+            count: 32,
+            budget_frac: 0.0,
+        },
+        E2eTask {
+            workload: head,
+            count: 1,
+            budget_frac: 0.0,
+        },
+    ];
+    let total: f64 = tasks
+        .iter()
+        .map(|t| t.workload.flops() * t.count as f64)
+        .sum();
+    for t in &mut tasks {
+        t.budget_frac = t.workload.flops() * t.count as f64 / total;
+    }
+    E2eGraph {
+        name: "llama3_8b".into(),
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_has_three_unique_tasks() {
+        let g = llama3_8b_graph();
+        assert_eq!(g.tasks.len(), 3);
+        assert_eq!(g.tasks[0].count, 32);
+        let frac_sum: f64 = g.tasks.iter().map(|t| t.budget_frac).sum();
+        assert!((frac_sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_weighting() {
+        let g = llama3_8b_graph();
+        let lat = g.latency(&[1.0, 2.0, 10.0]);
+        assert_eq!(lat, 32.0 + 64.0 + 10.0);
+    }
+
+    #[test]
+    fn mlp_budget_dominates_head() {
+        let g = llama3_8b_graph();
+        assert!(g.tasks[1].budget_frac > g.tasks[2].budget_frac);
+    }
+}

@@ -1,0 +1,83 @@
+//! Llama-4-Scout MLP layer: SwiGLU (gate/up matmuls + elementwise silu·mul
+//! + down matmul).
+
+use super::builder::WorkloadBuilder;
+use crate::tir::{BodyKind, Workload};
+
+#[derive(Clone, Copy, Debug)]
+pub struct MlpParams {
+    pub tokens: i64,
+    pub d_model: i64,
+    pub d_ff: i64,
+}
+
+pub fn mlp(name: &str, p: MlpParams) -> Workload {
+    let mut b = WorkloadBuilder::new(name);
+    let x = b.f32("X", &[p.tokens, p.d_model]);
+    let wg = b.f32("Wg", &[p.d_model, p.d_ff]);
+    let wu = b.f32("Wu", &[p.d_model, p.d_ff]);
+    let wd = b.f32("Wd", &[p.d_ff, p.d_model]);
+    let g = b.f32("G", &[p.tokens, p.d_ff]);
+    let u = b.f32("U", &[p.tokens, p.d_ff]);
+    let h = b.f32("H", &[p.tokens, p.d_ff]);
+    let y = b.f32("Y", &[p.tokens, p.d_model]);
+
+    let gate = b.matmul("gate_proj", None, p.tokens, p.d_ff, p.d_model, x, wg, g, false, vec![]);
+    let up = b.matmul("up_proj", None, p.tokens, p.d_ff, p.d_model, x, wu, u, false, vec![]);
+    let act = b.elementwise(
+        "silu_mul",
+        &[p.tokens, p.d_ff],
+        &[g, u],
+        h,
+        BodyKind::Transcendental,
+        6.0, // silu = x * sigmoid(x): exp + div + 2 mul
+        vec![gate, up],
+    );
+    b.matmul("down_proj", None, p.tokens, p.d_model, p.d_ff, h, wd, y, false, vec![act]);
+    b.build()
+}
+
+/// Llama-4-Scout MLP at the paper scale: 1024 tokens, d_model 5120,
+/// d_ff 8192 (the dense shared-expert FFN width).
+pub fn llama4_mlp() -> Workload {
+    mlp(
+        "llama4_mlp",
+        MlpParams {
+            tokens: 1024,
+            d_model: 5120,
+            d_ff: 8192,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_structure() {
+        let w = llama4_mlp();
+        w.validate().unwrap();
+        let names: Vec<&str> = w.blocks.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(names, ["gate_proj", "up_proj", "silu_mul", "down_proj"]);
+    }
+
+    #[test]
+    fn matmul_flops_dominate() {
+        let w = llama4_mlp();
+        let mm_flops: f64 = w
+            .blocks
+            .iter()
+            .filter(|b| b.name.ends_with("proj"))
+            .map(|b| b.flops())
+            .sum();
+        assert!(mm_flops / w.flops() > 0.99);
+    }
+
+    #[test]
+    fn silu_consumes_both_projections() {
+        let w = llama4_mlp();
+        let silu = w.blocks.iter().find(|b| b.name == "silu_mul").unwrap();
+        assert_eq!(silu.producers, vec![0, 1]);
+    }
+}

@@ -1,0 +1,90 @@
+//! The paper's benchmark workloads (§3.1) as tensor-IR definitions.
+//!
+//! Five representative kernels drawn from production-scale networks, at the
+//! paper's full-model dimensions, plus a GEMM micro-workload and the
+//! end-to-end Llama-3-8B layer graph:
+//!
+//! * [`attention::llama3_attention`] — self-attention layer of Llama-3-8B
+//! * [`moe::deepseek_moe`]           — MoE layer of DeepSeek-R1
+//! * [`attention::flux_attention`]   — self-attention layer of FLUX
+//! * [`conv::flux_conv`]             — convolution layer of FLUX
+//! * [`mlp::llama4_mlp`]             — MLP layer of Llama-4-Scout
+//! * [`gemm::gemm`]                  — plain GEMM (tests / quickstart)
+//! * [`llama_e2e::llama3_8b_graph`]  — full-model layer graph (Table 3)
+
+pub mod builder;
+pub mod attention;
+pub mod moe;
+pub mod conv;
+pub mod mlp;
+pub mod gemm;
+pub mod llama_e2e;
+
+use crate::tir::Workload;
+
+/// The five paper benchmarks, in the order the paper's tables list them.
+pub fn paper_benchmarks() -> Vec<Workload> {
+    vec![
+        attention::llama3_attention(),
+        moe::deepseek_moe(),
+        attention::flux_attention(),
+        conv::flux_conv(),
+        mlp::llama4_mlp(),
+    ]
+}
+
+/// Look a workload up by its registry name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    match name {
+        "llama3_attention" => Some(attention::llama3_attention()),
+        "deepseek_moe" => Some(moe::deepseek_moe()),
+        "flux_attention" => Some(attention::flux_attention()),
+        "flux_conv" => Some(conv::flux_conv()),
+        "llama4_mlp" => Some(mlp::llama4_mlp()),
+        "gemm" => Some(gemm::gemm(1024, 1024, 1024)),
+        _ => None,
+    }
+}
+
+/// Paper display names, aligned with `paper_benchmarks()` order.
+pub const PAPER_BENCH_LABELS: [&str; 5] = [
+    "Llama-3-8B Attention Layer",
+    "DeepSeek-R1 MoE Layer",
+    "FLUX Attention Layer",
+    "FLUX Convolution Layer",
+    "Llama-4-Scout MLP Layer",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benchmarks_validate() {
+        for w in paper_benchmarks() {
+            w.validate().unwrap_or_else(|e| panic!("{}: {e}", w.name));
+            assert!(w.flops() > 1e9, "{} suspiciously small", w.name);
+        }
+    }
+
+    #[test]
+    fn registry_lookup() {
+        for name in [
+            "llama3_attention",
+            "deepseek_moe",
+            "flux_attention",
+            "flux_conv",
+            "llama4_mlp",
+            "gemm",
+        ] {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn labels_align() {
+        let benches = paper_benchmarks();
+        assert_eq!(benches.len(), PAPER_BENCH_LABELS.len());
+    }
+}

@@ -1,0 +1,182 @@
+//! DeepSeek-R1-style mixture-of-experts layer.
+//!
+//! Router matmul + gate softmax + top-k expert FFN (SwiGLU) + weighted
+//! combine. The expert compute is modeled with an explicit `expert_sel`
+//! axis of extent `top_k` — every token flows through `top_k` experts, the
+//! standard dense formulation of the sparse dispatch (capacity factor 1.0).
+
+use super::builder::WorkloadBuilder;
+use crate::tir::{Access, Axis, BlockDef, BodyKind, Workload};
+
+#[derive(Clone, Copy, Debug)]
+pub struct MoeParams {
+    pub tokens: i64,
+    pub d_model: i64,
+    pub d_ff: i64,
+    pub n_experts: i64,
+    pub top_k: i64,
+}
+
+pub fn moe(name: &str, p: MoeParams) -> Workload {
+    let mut b = WorkloadBuilder::new(name);
+    let x = b.f32("X", &[p.tokens, p.d_model]);
+    let w_router = b.f32("Wr", &[p.d_model, p.n_experts]);
+    let logits = b.f32("L", &[p.tokens, p.n_experts]);
+    let gates = b.f32("G", &[p.tokens, p.n_experts]);
+    let w_gate = b.f32("Wg", &[p.n_experts, p.d_model, p.d_ff]);
+    let w_up = b.f32("Wu", &[p.n_experts, p.d_model, p.d_ff]);
+    let w_down = b.f32("Wd", &[p.n_experts, p.d_ff, p.d_model]);
+    let h = b.f32("H", &[p.top_k, p.tokens, p.d_ff]);
+    let ff = b.f32("F", &[p.top_k, p.tokens, p.d_model]);
+    let y = b.f32("Y", &[p.tokens, p.d_model]);
+
+    let router = b.matmul(
+        "router",
+        None,
+        p.tokens,
+        p.n_experts,
+        p.d_model,
+        x,
+        w_router,
+        logits,
+        false,
+        vec![],
+    );
+    let gate_sm = b.softmax("gate_softmax", &[p.tokens], p.n_experts, logits, gates, vec![router]);
+
+    // expert gate+up matmul: axes (sel, token, ff, red d_model); the
+    // selected expert's weight slab is indexed by `sel` (stride into the
+    // per-expert weight tensor).
+    let gate_up = {
+        let axes = vec![
+            Axis::spatial("sel", p.top_k),
+            Axis::spatial("t", p.tokens),
+            Axis::spatial("f", p.d_ff),
+            Axis::reduction("c", p.d_model),
+        ];
+        b_block(
+            &mut b,
+            BlockDef {
+                name: "expert_gate_up".into(),
+                axes,
+                reads: vec![
+                    Access::new(x, vec![vec![1], vec![3]]),
+                    Access::new(w_gate, vec![vec![0], vec![3], vec![2]]),
+                    Access::new(w_up, vec![vec![0], vec![3], vec![2]]),
+                ],
+                writes: vec![Access::new(h, vec![vec![0], vec![1], vec![2]])],
+                body: BodyKind::Mac,
+                flops_per_point: 4.0, // two fused matmuls
+                producers: vec![gate_sm],
+            },
+        )
+    };
+
+    // silu(gate) * up folded into gate_up's flops; down projection:
+    let down = {
+        let axes = vec![
+            Axis::spatial("sel", p.top_k),
+            Axis::spatial("t", p.tokens),
+            Axis::spatial("d", p.d_model),
+            Axis::reduction("f", p.d_ff),
+        ];
+        b_block(
+            &mut b,
+            BlockDef {
+                name: "expert_down".into(),
+                axes,
+                reads: vec![
+                    Access::new(h, vec![vec![0], vec![1], vec![3]]),
+                    Access::new(w_down, vec![vec![0], vec![3], vec![2]]),
+                ],
+                writes: vec![Access::new(ff, vec![vec![0], vec![1], vec![2]])],
+                body: BodyKind::Mac,
+                flops_per_point: 2.0,
+                producers: vec![gate_up],
+            },
+        )
+    };
+
+    // combine: y[t,d] = sum_sel gate * ff[sel,t,d]
+    let axes = vec![
+        Axis::spatial("t", p.tokens),
+        Axis::spatial("d", p.d_model),
+        Axis::reduction("sel", p.top_k),
+    ];
+    b_block(
+        &mut b,
+        BlockDef {
+            name: "combine".into(),
+            axes,
+            reads: vec![
+                Access::new(ff, vec![vec![2], vec![0], vec![1]]),
+                Access::new(gates, vec![vec![0], vec![]]),
+            ],
+            writes: vec![Access::new(y, vec![vec![0], vec![1]])],
+            body: BodyKind::Mac,
+            flops_per_point: 2.0,
+            producers: vec![down],
+        },
+    );
+
+    b.build()
+}
+
+/// Escape hatch: push a hand-built block through the builder.
+fn b_block(b: &mut WorkloadBuilder, blk: BlockDef) -> usize {
+    b.push_block(blk)
+}
+
+/// DeepSeek-R1-style MoE layer at representative scale: 1024 tokens,
+/// d_model 2048, per-expert FFN 4096, 8 routed experts, top-2.
+pub fn deepseek_moe() -> Workload {
+    moe(
+        "deepseek_moe",
+        MoeParams {
+            tokens: 1024,
+            d_model: 2048,
+            d_ff: 4096,
+            n_experts: 8,
+            top_k: 2,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moe_structure() {
+        let w = deepseek_moe();
+        w.validate().unwrap();
+        let names: Vec<&str> = w.blocks.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["router", "gate_softmax", "expert_gate_up", "expert_down", "combine"]
+        );
+        assert_eq!(w.blocks[w.dominant_block()].name, "expert_gate_up");
+    }
+
+    #[test]
+    fn expert_flops_scale_with_topk() {
+        let base = MoeParams {
+            tokens: 64,
+            d_model: 128,
+            d_ff: 256,
+            n_experts: 8,
+            top_k: 2,
+        };
+        let w2 = moe("m2", base);
+        let w4 = moe("m4", MoeParams { top_k: 4, ..base });
+        assert!(w4.flops() > w2.flops() * 1.8);
+    }
+
+    #[test]
+    fn broadcast_gate_access() {
+        let w = deepseek_moe();
+        let combine = w.blocks.iter().find(|b| b.name == "combine").unwrap();
+        // gates access second dim is broadcast (empty axis list)
+        assert!(combine.reads[1].dim_axes[1].is_empty());
+    }
+}

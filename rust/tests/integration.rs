@@ -1,0 +1,255 @@
+//! Cross-module integration tests: search-over-simulator end-to-end,
+//! paper-shape invariants, coordinator matrices, and property-based
+//! storms over the full transform → simulate → featurize → predict path.
+
+use litecoop::baselines;
+use litecoop::benchutil::check_prop;
+use litecoop::coordinator::{self, RunSpec, Searcher};
+use litecoop::costmodel::{features, CostModel};
+use litecoop::mcts::SearchConfig;
+use litecoop::schedule::transforms::{apply, apply_sequence, TransformKind};
+use litecoop::schedule::Schedule;
+use litecoop::sim::{Simulator, Target};
+use litecoop::util::Rng;
+use litecoop::workloads;
+use std::sync::Arc;
+
+fn cfg(budget: usize, seed: u64) -> SearchConfig {
+    SearchConfig {
+        budget,
+        seed,
+        ..SearchConfig::default()
+    }
+}
+
+#[test]
+fn coop_beats_or_matches_single_small_model() {
+    // a single small model should not dominate the 8-model collaboration
+    let root = Schedule::initial(Arc::new(workloads::gemm::gemm(512, 512, 512)));
+    let mut coop_sum = 0.0;
+    let mut mini_sum = 0.0;
+    for seed in 0..3 {
+        coop_sum += baselines::litecoop(
+            8,
+            "gpt-5.2",
+            Target::Cpu,
+            root.clone(),
+            cfg(100, seed),
+            "gemm",
+        )
+        .best_speedup;
+        mini_sum += baselines::single_llm(
+            "gpt-5-mini",
+            Target::Cpu,
+            root.clone(),
+            cfg(100, seed),
+            "gemm",
+        )
+        .best_speedup;
+    }
+    assert!(
+        coop_sum > mini_sum * 0.9,
+        "coop {coop_sum} vs mini {mini_sum}"
+    );
+}
+
+#[test]
+fn coop_is_cheaper_than_single_large() {
+    let root = Schedule::initial(Arc::new(workloads::mlp::llama4_mlp()));
+    let single = baselines::single_llm(
+        "gpt-5.2",
+        Target::Cpu,
+        root.clone(),
+        cfg(120, 1),
+        "llama4_mlp",
+    );
+    let coop = baselines::litecoop(8, "gpt-5.2", Target::Cpu, root, cfg(120, 1), "llama4_mlp");
+    assert!(
+        coop.api_cost_usd < single.api_cost_usd,
+        "coop ${} !< single ${}",
+        coop.api_cost_usd,
+        single.api_cost_usd
+    );
+    assert!(
+        coop.compile_time_s < single.compile_time_s,
+        "coop {}s !< single {}s",
+        coop.compile_time_s,
+        single.compile_time_s
+    );
+}
+
+#[test]
+fn largest_model_share_drops_with_pool_size() {
+    let root = Schedule::initial(Arc::new(workloads::moe::deepseek_moe()));
+    let share = |n: usize| {
+        // average over seeds: single runs are noisy
+        (0..4)
+            .map(|seed| {
+                let r = baselines::litecoop(
+                    n,
+                    "gpt-5.2",
+                    Target::Cpu,
+                    root.clone(),
+                    cfg(150, seed),
+                    "moe",
+                );
+                let (reg, ca) = r.invocation_rate("gpt-5.2");
+                reg + ca
+            })
+            .sum::<f64>()
+            / 4.0
+    };
+    let s2 = share(2);
+    let s8 = share(8);
+    assert!(s8 < s2, "8-LLM largest share {s8} !< 2-LLM {s2}");
+}
+
+#[test]
+fn every_paper_benchmark_searchable_on_both_targets() {
+    for target in [Target::Cpu, Target::Gpu] {
+        for w in workloads::paper_benchmarks() {
+            let name = w.name.clone();
+            let root = Schedule::initial(Arc::new(w));
+            let r = baselines::litecoop(2, "gpt-5.2", target, root, cfg(40, 5), &name);
+            assert!(
+                r.best_speedup >= 1.0,
+                "{name} on {target:?}: {}",
+                r.best_speedup
+            );
+            assert!(r.best_schedule.validate().is_ok());
+        }
+    }
+}
+
+#[test]
+fn coordinator_matrix_deterministic_across_thread_counts() {
+    let specs: Vec<RunSpec> = (0..4)
+        .map(|i| {
+            RunSpec::new(
+                "gemm",
+                Target::Cpu,
+                Searcher::Coop {
+                    n: 4,
+                    largest: "gpt-5.2".into(),
+                },
+                40,
+                i,
+            )
+        })
+        .collect();
+    let a = coordinator::run_many(&specs, 1);
+    let b = coordinator::run_many(&specs, 4);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.best_speedup, y.best_speedup);
+    }
+}
+
+#[test]
+fn prop_transform_storm_preserves_semantics_invariants() {
+    // any sequence of transforms keeps: valid schedule, positive finite
+    // latency on both targets, finite features
+    check_prop("transform-storm", 30, 0xBEEF, |rng| {
+        let w = workloads::paper_benchmarks()
+            .into_iter()
+            .nth(rng.below(5))
+            .unwrap();
+        let gpu = rng.chance(0.5);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        let sim = Simulator::new(target);
+        let mut s = Schedule::initial(Arc::new(w));
+        let vocab = TransformKind::vocabulary(gpu);
+        for _ in 0..rng.below(20) + 1 {
+            let k = *rng.choice(&vocab);
+            if let Ok(n) = apply(&s, k, rng, gpu) {
+                s = n;
+            }
+        }
+        s.validate().map_err(|e| format!("invalid: {e}"))?;
+        let lat = sim.latency(&s);
+        if !(lat.is_finite() && lat > 0.0) {
+            return Err(format!("bad latency {lat}"));
+        }
+        let f = features::featurize(&s, target);
+        if f.iter().any(|x| !x.is_finite()) {
+            return Err("non-finite feature".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_scores_bounded() {
+    check_prop("score-bounded", 10, 0xCAFE, |rng| {
+        let sim = Simulator::new(Target::Cpu);
+        let mut cm = CostModel::new(Target::Cpu, rng.next_u64());
+        let base = Schedule::initial(Arc::new(workloads::gemm::gemm(256, 256, 256)));
+        let vocab = TransformKind::vocabulary(false);
+        for _ in 0..30 {
+            let seq: Vec<_> = (0..1 + rng.below(3)).map(|_| *rng.choice(&vocab)).collect();
+            if let Ok(s) = apply_sequence(&base, &seq, rng, false) {
+                cm.measure(&sim, &s);
+                let sc = cm.score(&s);
+                if !(0.0..=1.0).contains(&sc) {
+                    return Err(format!("score {sc} out of [0,1]"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_replay_length_matches_applied() {
+    check_prop("trace-grows", 20, 0xD00D, |rng| {
+        let base = Schedule::initial(Arc::new(workloads::gemm::gemm(128, 128, 128)));
+        let vocab = TransformKind::vocabulary(false);
+        let mut s = base.clone();
+        let mut applied = 0;
+        for _ in 0..10 {
+            if let Ok(n) = apply(&s, *rng.choice(&vocab), rng, false) {
+                s = n;
+                applied += 1;
+            }
+        }
+        if s.trace.len() != applied {
+            return Err(format!("trace {} != applied {applied}", s.trace.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn e2e_graph_speedup_composes() {
+    let graph = workloads::llama_e2e::llama3_8b_graph();
+    let r = coordinator::run_e2e(
+        &graph,
+        Target::Cpu,
+        &Searcher::Coop {
+            n: 4,
+            largest: "gpt-5.2".into(),
+        },
+        90,
+        11,
+    );
+    assert!(r.speedup > 1.0, "e2e speedup {}", r.speedup);
+    assert!(r.n_samples >= 60);
+}
+
+#[test]
+fn lambda_extremes_change_routing() {
+    // λ=1 must route more to small models than λ=0
+    let root = Schedule::initial(Arc::new(workloads::gemm::gemm(512, 512, 512)));
+    let share_at = |lambda: f64| {
+        let mut c = cfg(120, 13);
+        c.lambda = lambda;
+        let r = baselines::litecoop(8, "gpt-5.2", Target::Cpu, root.clone(), c, "gemm");
+        let (reg, ca) = r.invocation_rate("gpt-5.2");
+        reg + ca
+    };
+    let s0 = share_at(0.0);
+    let s1 = share_at(1.0);
+    assert!(
+        s1 <= s0 + 0.05,
+        "λ=1 largest share {s1} should not exceed λ=0 share {s0}"
+    );
+}
