@@ -2,37 +2,52 @@
 //! attention layer, GPU and CPU targets, with invocation-rate breakdown —
 //! the scenario of the paper's Figure 1/Table 2.
 //!
+//! All four searches (2 targets × {single-large, 8-LLM}) fan out through
+//! the parallel multi-workload driver ([`litecoop::runtime::driver`]), so
+//! the demo scales with cores while staying byte-identical to running
+//! them serially.
+//!
 //!     cargo run --release --offline --example collab_search [budget]
 
-use litecoop::baselines;
-use litecoop::mcts::SearchConfig;
-use litecoop::schedule::Schedule;
+use litecoop::coordinator::{RunSpec, Searcher};
+use litecoop::runtime::driver;
 use litecoop::sim::Target;
-use litecoop::workloads;
-use std::sync::Arc;
 
 fn main() {
     let budget: usize = std::env::args()
         .nth(1)
         .and_then(|a| a.parse().ok())
         .unwrap_or(300);
+
+    // one spec per (target, searcher); the driver merges results in order
+    let mut specs = Vec::new();
     for target in [Target::Gpu, Target::Cpu] {
-        let w = Arc::new(workloads::attention::llama3_attention());
-        let root = Schedule::initial(w);
-        let cfg = SearchConfig {
-            budget,
-            seed: 7,
-            ..SearchConfig::default()
-        };
-        println!("== 8-LLM collaborative search, {} target, {budget} samples ==", target.name());
-        let single = baselines::single_llm(
-            "gpt-5.2",
-            target,
-            root.clone(),
-            cfg.clone(),
+        specs.push(RunSpec::new(
             "llama3_attention",
+            target,
+            Searcher::Single("gpt-5.2".into()),
+            budget,
+            7,
+        ));
+        specs.push(RunSpec::new(
+            "llama3_attention",
+            target,
+            Searcher::Coop {
+                n: 8,
+                largest: "gpt-5.2".into(),
+            },
+            budget,
+            7,
+        ));
+    }
+    let results = driver::run_specs(&specs, driver::default_threads());
+
+    for (pair, target) in results.chunks(2).zip([Target::Gpu, Target::Cpu]) {
+        let (single, coop) = (&pair[0], &pair[1]);
+        println!(
+            "== 8-LLM collaborative search, {} target, {budget} samples ==",
+            target.name()
         );
-        let coop = baselines::litecoop(8, "gpt-5.2", target, root, cfg, "llama3_attention");
         println!(
             "single gpt-5.2 : speedup {:.2}x  time {:.0}s  cost ${:.2}",
             single.best_speedup, single.compile_time_s, single.api_cost_usd
@@ -58,6 +73,21 @@ fn main() {
                 );
             }
         }
+        println!(
+            "eval cache     : {} hits / {} misses ({:.1}% hit rate)",
+            coop.eval_cache.hits,
+            coop.eval_cache.misses,
+            coop.eval_cache.hit_rate() * 100.0
+        );
         println!("speedup vs samples: {:?}\n", coop.curve);
     }
+
+    let agg = driver::aggregate_cache(&results);
+    println!(
+        "driver total: {} runs, eval-cache {:.1}% hit rate ({} hits / {} misses)",
+        results.len(),
+        agg.hit_rate() * 100.0,
+        agg.hits,
+        agg.misses
+    );
 }

@@ -73,7 +73,7 @@ fn main() -> litecoop::Result<()> {
         latencies.push(t.elapsed().as_secs_f64() * 1e3);
         assert!(out.iter().all(|x| x.is_finite()), "non-finite output");
     }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(|a, b| a.total_cmp(b));
     let mean: f64 = latencies.iter().sum::<f64>() / latencies.len() as f64;
     println!(
         "served {} requests: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms, throughput {:.1} req/s",

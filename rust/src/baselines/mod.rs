@@ -73,14 +73,17 @@ pub fn round_robin_routing(
 }
 
 /// Evolutionary-search baseline (MetaSchedule-default stand-in): mutate a
-/// population of schedules, cost-model-rank, measure the elite.
+/// population of schedules, cost-model-rank, measure the elite. Budget,
+/// seed, and curve checkpoints come from `cfg` like every other searcher.
 pub fn evolutionary(
     target: Target,
     root: Schedule,
-    budget: usize,
-    seed: u64,
+    cfg: SearchConfig,
     workload: &str,
 ) -> SearchResult {
+    let budget = cfg.budget;
+    let seed = cfg.seed;
+    let checkpoints = cfg.checkpoints;
     let sim = Simulator::new(target);
     let mut cost = CostModel::new(target, seed);
     let mut rng = Rng::new(seed ^ 0xEE0);
@@ -94,7 +97,6 @@ pub fn evolutionary(
     let mut best_schedule = root.clone();
     let mut samples = 0usize;
     let mut curve = Vec::new();
-    let checkpoints = [50, 100, 250, 500, 750, 1000];
     let mut measure_time = 0.0;
 
     while samples < budget {
@@ -141,6 +143,7 @@ pub fn evolutionary(
             }
         }
     }
+    crate::mcts::fill_missing_checkpoints(&mut curve, &checkpoints, baseline / best_latency);
     SearchResult {
         workload: workload.to_string(),
         best_speedup: baseline / best_latency,
@@ -153,6 +156,7 @@ pub fn evolutionary(
         n_ca_events: 0,
         n_errors: 0,
         call_counts: vec![],
+        eval_cache: crate::mcts::evalcache::CacheStats::default(),
         best_schedule,
     }
 }
@@ -199,7 +203,7 @@ mod tests {
 
     #[test]
     fn evolutionary_baseline_improves() {
-        let r = evolutionary(Target::Cpu, root(), 200, 3, "gemm");
+        let r = evolutionary(Target::Cpu, root(), cfg(200, 3), "gemm");
         assert!(r.best_speedup > 1.2, "{}", r.best_speedup);
         assert_eq!(r.api_cost_usd, 0.0);
     }

@@ -105,6 +105,8 @@ fn fig_speedup_curves(o: &Opts, id: &str) {
             out.push('\n');
         }
     }
+    let all: Vec<&SearchResult> = results.iter().collect();
+    out.push_str(&format!("\n{}\n", report::cache_line(&all)));
     report::emit(id, &out).unwrap();
 }
 
@@ -176,6 +178,8 @@ fn table1(o: &Opts) {
     {
         out.push_str(&format!("- {label} reduction: {:.2}x\n", stats::geomean(&agg[i])));
     }
+    let all: Vec<&SearchResult> = results.iter().collect();
+    out.push_str(&format!("\n{}\n", report::cache_line(&all)));
     report::emit("table1", &out).unwrap();
 }
 
@@ -284,7 +288,7 @@ fn table3(o: &Opts) {
         );
         let results: Vec<_> = searchers
             .iter()
-            .map(|s| coordinator::run_e2e(&graph, tg, s, o.budget, 7))
+            .map(|s| coordinator::run_e2e_threaded(&graph, tg, s, o.budget, 7, o.threads))
             .collect();
         let single = &results[0];
         let mini = &results[1];

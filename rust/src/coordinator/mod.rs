@@ -83,56 +83,50 @@ impl RunSpec {
     }
 }
 
+/// Dispatch one search according to `searcher` — the single home of the
+/// searcher → baseline mapping, shared by [`run_one`] and the e2e task
+/// fan-out. Every searcher, including the evolutionary baseline, draws
+/// its budget/seed/checkpoints from `cfg`.
+fn dispatch(
+    searcher: &Searcher,
+    target: Target,
+    root: Schedule,
+    cfg: SearchConfig,
+    workload: &str,
+) -> SearchResult {
+    match searcher {
+        Searcher::Single(m) => baselines::single_llm(m, target, root, cfg, workload),
+        Searcher::Coop { n, largest } => {
+            baselines::litecoop(*n, largest, target, root, cfg, workload)
+        }
+        Searcher::RandomRouting { n, largest } => {
+            let mut cfg = cfg;
+            cfg.routing = Routing::Random;
+            baselines::litecoop(*n, largest, target, root, cfg, workload)
+        }
+        Searcher::RoundRobinRouting { n, largest } => {
+            let mut cfg = cfg;
+            cfg.routing = Routing::RoundRobin;
+            baselines::litecoop(*n, largest, target, root, cfg, workload)
+        }
+        Searcher::Evolutionary => baselines::evolutionary(target, root, cfg, workload),
+    }
+}
+
 /// Execute one run.
 pub fn run_one(spec: &RunSpec) -> SearchResult {
     let workload = workloads::by_name(&spec.workload)
         .unwrap_or_else(|| panic!("unknown workload {}", spec.workload));
     let root = Schedule::initial(Arc::new(workload));
-    let cfg = spec.config();
-    match &spec.searcher {
-        Searcher::Single(m) => baselines::single_llm(m, spec.target, root, cfg, &spec.workload),
-        Searcher::Coop { n, largest } => {
-            baselines::litecoop(*n, largest, spec.target, root, cfg, &spec.workload)
-        }
-        Searcher::RandomRouting { n, largest } => {
-            let mut cfg = cfg;
-            cfg.routing = Routing::Random;
-            baselines::litecoop(*n, largest, spec.target, root, cfg, &spec.workload)
-        }
-        Searcher::RoundRobinRouting { n, largest } => {
-            let mut cfg = cfg;
-            cfg.routing = Routing::RoundRobin;
-            baselines::litecoop(*n, largest, spec.target, root, cfg, &spec.workload)
-        }
-        Searcher::Evolutionary => {
-            baselines::evolutionary(spec.target, root, spec.budget, spec.seed, &spec.workload)
-        }
-    }
+    dispatch(&spec.searcher, spec.target, root, spec.config(), &spec.workload)
 }
 
-/// Execute a matrix of runs across `threads` OS threads (work-stealing by
-/// index). Results are returned in spec order.
+/// Execute a matrix of runs across `threads` OS threads. Results are
+/// returned in spec order. Delegates to the parallel search driver
+/// ([`crate::runtime::driver::run_specs`]), which guarantees the results
+/// are byte-identical to running the specs serially.
 pub fn run_many(specs: &[RunSpec], threads: usize) -> Vec<SearchResult> {
-    let n = specs.len();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<SearchResult>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads.max(1).min(n.max(1)) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = run_one(&specs[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("run missing"))
-        .collect()
+    crate::runtime::driver::run_specs(specs, threads)
 }
 
 /// Aggregated e2e result (paper Table 3 / 16).
@@ -146,7 +140,8 @@ pub struct E2eResult {
 }
 
 /// Tune every unique task of an e2e graph (budget split by FLOP share)
-/// and combine into whole-model numbers.
+/// and combine into whole-model numbers, fanning tasks out across one
+/// worker per available core. See [`run_e2e_threaded`].
 pub fn run_e2e(
     graph: &E2eGraph,
     target: Target,
@@ -154,41 +149,47 @@ pub fn run_e2e(
     total_budget: usize,
     seed: u64,
 ) -> E2eResult {
+    run_e2e_threaded(graph, target, searcher, total_budget, seed, default_threads())
+}
+
+/// [`run_e2e`] with an explicit thread cap. Per-task searches fan out
+/// through the parallel driver; each task keeps its own deterministic
+/// seed, so the result is identical to tuning the tasks serially.
+pub fn run_e2e_threaded(
+    graph: &E2eGraph,
+    target: Target,
+    searcher: &Searcher,
+    total_budget: usize,
+    seed: u64,
+    threads: usize,
+) -> E2eResult {
+    let jobs: Vec<_> = graph
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(ti, task)| {
+            let searcher = searcher.clone();
+            move || {
+                let budget = ((total_budget as f64 * task.budget_frac).round() as usize).max(20);
+                let root = Schedule::initial(Arc::new(task.workload.clone()));
+                let cfg = SearchConfig {
+                    budget,
+                    seed: seed ^ ((ti as u64) << 8),
+                    checkpoints: vec![budget],
+                    ..SearchConfig::default()
+                };
+                dispatch(&searcher, target, root, cfg, &task.workload.name)
+            }
+        })
+        .collect();
+    let results = crate::runtime::driver::run_jobs(jobs, threads);
+
     let mut naive = 0.0;
     let mut tuned = 0.0;
     let mut time = 0.0;
     let mut cost = 0.0;
     let mut samples = 0usize;
-    for (ti, task) in graph.tasks.iter().enumerate() {
-        let budget = ((total_budget as f64 * task.budget_frac).round() as usize).max(20);
-        let root = Schedule::initial(Arc::new(task.workload.clone()));
-        let cfg = SearchConfig {
-            budget,
-            seed: seed ^ ((ti as u64) << 8),
-            checkpoints: vec![budget],
-            ..SearchConfig::default()
-        };
-        let r = match searcher {
-            Searcher::Single(m) => {
-                baselines::single_llm(m, target, root, cfg, &task.workload.name)
-            }
-            Searcher::Coop { n, largest } => {
-                baselines::litecoop(*n, largest, target, root, cfg, &task.workload.name)
-            }
-            Searcher::RandomRouting { n, largest } => {
-                let mut cfg = cfg;
-                cfg.routing = Routing::Random;
-                baselines::litecoop(*n, largest, target, root, cfg, &task.workload.name)
-            }
-            Searcher::RoundRobinRouting { n, largest } => {
-                let mut cfg = cfg;
-                cfg.routing = Routing::RoundRobin;
-                baselines::litecoop(*n, largest, target, root, cfg, &task.workload.name)
-            }
-            Searcher::Evolutionary => {
-                baselines::evolutionary(target, root, budget, seed, &task.workload.name)
-            }
-        };
+    for (task, r) in graph.tasks.iter().zip(&results) {
         naive += r.baseline_latency_s * task.count as f64;
         tuned += r.best_latency_s * task.count as f64;
         time += r.compile_time_s;
@@ -206,9 +207,7 @@ pub fn run_e2e(
 
 /// Default parallelism for experiment matrices.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
+    crate::runtime::driver::default_threads()
 }
 
 #[cfg(test)]

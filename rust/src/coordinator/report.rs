@@ -1,6 +1,7 @@
 //! Report assembly: aggregate [`SearchResult`]s into the paper's
 //! table/figure shapes and emit markdown.
 
+use crate::mcts::evalcache::CacheStats;
 use crate::mcts::SearchResult;
 use crate::stats;
 use crate::util::table::Table;
@@ -17,6 +18,28 @@ pub fn mean_time(runs: &[&SearchResult]) -> f64 {
 
 pub fn mean_cost(runs: &[&SearchResult]) -> f64 {
     stats::mean(&runs.iter().map(|r| r.api_cost_usd).collect::<Vec<_>>())
+}
+
+/// Aggregate eval-cache counters over runs (see
+/// [`crate::mcts::evalcache`]).
+pub fn total_cache(runs: &[&SearchResult]) -> CacheStats {
+    let mut total = CacheStats::default();
+    for r in runs {
+        total.merge(&r.eval_cache);
+    }
+    total
+}
+
+/// One-line eval-cache digest for a report footer.
+pub fn cache_line(runs: &[&SearchResult]) -> String {
+    let t = total_cache(runs);
+    format!(
+        "eval-cache: {} hits / {} misses ({:.1}% hit rate) across {} runs",
+        t.hits,
+        t.misses,
+        t.hit_rate() * 100.0,
+        runs.len()
+    )
 }
 
 /// Mean speedup at each curve checkpoint (runs must share checkpoints).
@@ -116,6 +139,7 @@ mod tests {
             n_ca_events: 0,
             n_errors: 0,
             call_counts: vec![("m".into(), 10, 2)],
+            eval_cache: CacheStats { hits: 3, misses: 7 },
             best_schedule: Schedule::initial(Arc::new(gemm::gemm(8, 8, 8))),
         }
     }
@@ -130,6 +154,9 @@ mod tests {
         let rates = mean_invocation_rates(&runs);
         assert_eq!(rates.len(), 1);
         assert!((rates[0].1 - 10.0 / 12.0).abs() < 1e-9);
+        let cache = total_cache(&runs);
+        assert_eq!(cache, CacheStats { hits: 6, misses: 14 });
+        assert!(cache_line(&runs).contains("30.0% hit rate"));
     }
 
     #[test]

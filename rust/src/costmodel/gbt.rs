@@ -174,9 +174,11 @@ fn split_node(
 
     let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, gain)
     for f in 0..n_features {
-        // candidate thresholds: random quantiles of this feature
+        // candidate thresholds: random quantiles of this feature.
+        // total_cmp keeps this panic-free when a feature is NaN (NaNs sort
+        // last and the min_samples_leaf guard discards their thresholds).
         let mut vals: Vec<f64> = rows.iter().map(|&i| x[i][f]).collect();
-        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.sort_by(|a, b| a.total_cmp(b));
         vals.dedup();
         if vals.len() < 2 {
             continue;
@@ -283,5 +285,22 @@ mod tests {
         let m1 = Gbt::fit(GbtParams::default(), &x, &y, &mut Rng::new(5));
         let m2 = Gbt::fit(GbtParams::default(), &x, &y, &mut Rng::new(5));
         assert_eq!(m1.predict(&x[0]), m2.predict(&x[0]));
+    }
+
+    #[test]
+    fn nan_features_do_not_panic() {
+        // regression: threshold sorting used partial_cmp().unwrap(), which
+        // panicked as soon as one row carried a NaN feature
+        let mut rng = Rng::new(6);
+        let (mut x, y) = synth(120, &mut rng);
+        x[3][0] = f64::NAN;
+        x[40][2] = f64::NAN;
+        let model = Gbt::fit(GbtParams::default(), &x, &y, &mut rng);
+        // clean rows still get finite predictions
+        assert!(model.predict(&x[0]).is_finite());
+        // a NaN query routes through comparisons (NaN <= thr is false)
+        // without panicking
+        let p = model.predict(&[f64::NAN, 0.5, 0.5]);
+        assert!(p.is_finite());
     }
 }

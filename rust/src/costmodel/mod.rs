@@ -19,6 +19,12 @@ use gbt::{Gbt, GbtParams};
 /// retrained every `retrain_interval` measured samples.
 pub struct CostModel {
     pub target: Target,
+    /// Identity nonce unique to this model instance — keys this model's
+    /// cached predictions in a shared
+    /// [`EvalCache`](crate::mcts::evalcache::EvalCache) so another
+    /// model's predictions (even one built from the same seed, whose
+    /// training trajectory may differ) are never served in its place.
+    pub salt: u64,
     params: GbtParams,
     model: Option<Gbt>,
     xs: Vec<Vec<f64>>,
@@ -36,8 +42,10 @@ pub struct CostModel {
 
 impl CostModel {
     pub fn new(target: Target, seed: u64) -> CostModel {
+        static NEXT_SALT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         CostModel {
             target,
+            salt: NEXT_SALT.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             params: GbtParams::default(),
             model: None,
             xs: Vec::new(),
@@ -106,10 +114,23 @@ impl CostModel {
         }
     }
 
+    /// Retraining generation, used to key cached predictions: `Some(n)`
+    /// once a model is fitted (predictions are pure until the next
+    /// retrain), `None` before the first fit (predictions track the latest
+    /// observation and must not be cached).
+    pub fn generation(&self) -> Option<usize> {
+        self.model.as_ref().map(|_| self.n_trainings)
+    }
+
     /// Normalized predicted performance score in (0, 1]: higher = better.
     /// This is the number shown in prompts and used for rewards.
     pub fn score(&self, s: &Schedule) -> f64 {
-        let pred = self.predict_latency(s).max(1e-12);
+        self.score_of_prediction(self.predict_latency(s))
+    }
+
+    /// Score from an already-computed (possibly cached) predicted latency.
+    pub fn score_of_prediction(&self, predicted_latency: f64) -> f64 {
+        let pred = predicted_latency.max(1e-12);
         if self.best_latency.is_finite() {
             (self.best_latency / pred).clamp(0.0, 1.0)
         } else {
@@ -187,7 +208,7 @@ mod tests {
         }
         let frac = conc as f64 / total.max(1) as f64;
         assert!(frac > 0.65, "rank agreement only {frac}");
-        pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        pairs.sort_by(|a, b| a.1.total_cmp(&b.1));
     }
 
     #[test]

@@ -33,5 +33,5 @@ pub mod runtime;
 pub mod stats;
 pub mod benchutil;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias (see [`util::error`] for the error type).
+pub type Result<T> = std::result::Result<T, util::error::Error>;

@@ -58,7 +58,7 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
     let n_llms = args.usize_or("llms", 8);
     let largest = args.str_or("largest", "gpt-5.2");
     let workload = workloads::by_name(&workload_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown workload {workload_name}"))?;
+        .ok_or_else(|| litecoop::err!("unknown workload {workload_name}"))?;
     let root = Schedule::initial(Arc::new(workload));
     let cfg = SearchConfig {
         budget: args.usize_or("budget", 300),
@@ -80,6 +80,12 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
     println!("API cost (sim)     : ${:.3}", r.api_cost_usd);
     println!("course alterations : {}", r.n_ca_events);
     println!("model errors       : {}", r.n_errors);
+    println!(
+        "eval cache         : {} hits / {} misses ({:.1}% hit rate)",
+        r.eval_cache.hits,
+        r.eval_cache.misses,
+        r.eval_cache.hit_rate() * 100.0
+    );
     let total: usize = r.call_counts.iter().map(|(_, a, b)| a + b).sum();
     for (name, reg, ca) in &r.call_counts {
         if reg + ca > 0 {

@@ -1,0 +1,432 @@
+//! Shared evaluation cache + the [`Evaluator`] abstraction the search
+//! engine talks to.
+//!
+//! COLT's shared tree lets many LLMs extend each other's transformation
+//! prefixes — but that only pays off at the systems level if re-visiting a
+//! prefix is cheap. This module makes prefix reuse real: a
+//! transposition-style cache keyed by a canonical hash of the schedule's
+//! transform trace memoizes every ground-truth simulator evaluation
+//! (shared across everything, including repeated searches over one
+//! cache) and every cost-model prediction (keyed per model instance and
+//! retraining generation — shared within a search, never leaked between
+//! different models' training trajectories). Identical candidate
+//! programs — re-proposed by different LLMs, re-scored during
+//! course-alteration re-expansion, or re-searched across repeated runs —
+//! are evaluated exactly once.
+//!
+//! # The `Evaluator` trait
+//!
+//! [`Evaluator`] is the single surface through which the MCTS engine
+//! ([`crate::mcts::Mcts`]) reaches the cost model and the hardware
+//! simulator:
+//!
+//! * [`Evaluator::measure`] — ground-truth evaluation that also trains the
+//!   learned cost model and advances the incumbent (the paper's
+//!   on-hardware measurement step),
+//! * [`Evaluator::true_latency`] — ground-truth latency *without*
+//!   training (the oracle blended into expansion scoring),
+//! * [`Evaluator::score`] — the normalized predicted performance score
+//!   from the learned cost model.
+//!
+//! [`CachedEvaluator`] is the production implementation: a
+//! [`CostModel`] + [`Simulator`] pair fronted by an [`EvalCache`]. All
+//! cached values are pure functions of their key (the simulator is
+//! deterministic; predictions are memoized per retraining generation and
+//! per cost-model identity), so enabling the cache never changes a search
+//! result — it only removes redundant evaluation work.
+//!
+//! # Cache knobs
+//!
+//! * capacity — [`EvalCache::with_capacity`] bounds the number of entries
+//!   per map (default [`EvalCache::DEFAULT_CAPACITY`]); once full, new
+//!   values are still computed and returned but not inserted.
+//! * sharing — an [`EvalCache`] can be built externally and passed to
+//!   [`crate::mcts::Mcts::with_cache`] to persist ground-truth hits
+//!   across repeated searches of the same workload; retrieve the warm
+//!   cache afterwards from [`crate::mcts::Mcts::run_with_cache`].
+//! * counters — [`CacheStats`] hit/miss counters are surfaced in
+//!   [`crate::mcts::SearchResult::eval_cache`] and aggregated by the
+//!   parallel driver ([`crate::runtime::driver`]).
+
+use crate::costmodel::CostModel;
+use crate::schedule::Schedule;
+use crate::sim::{Simulator, Target};
+use std::collections::HashMap;
+
+/// Hit/miss counters for one cache (or an aggregate over many).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0 when never consulted).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fold another counter into this one (driver-level aggregation).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_str(mut h: u64, s: &str) -> u64 {
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    // field separator so ("ab","c") and ("a","bc") hash differently
+    h ^= 0x1f;
+    h.wrapping_mul(FNV_PRIME)
+}
+
+fn fnv_u64(mut h: u64, x: u64) -> u64 {
+    for i in 0..8 {
+        h ^= (x >> (8 * i)) & 0xff;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Canonical 64-bit key of a scheduled program on a target.
+///
+/// Mixes the workload identity, the target, every transform-trace step
+/// (name, block, and the sampled decision string — the trace records every
+/// decision, so it replays to exactly one program), and the schedule's
+/// structural fingerprint (which disambiguates the rare trace renderings
+/// that don't pin the structure, e.g. two reads of the same buffer).
+pub fn trace_key(s: &Schedule, target: Target) -> u64 {
+    let mut h = FNV_OFFSET;
+    h = fnv_str(h, &s.workload.name);
+    h = fnv_str(h, target.name());
+    for step in &s.trace.steps {
+        h = fnv_str(h, &step.name);
+        h = fnv_str(h, &step.block);
+        h = fnv_str(h, &step.detail);
+    }
+    fnv_u64(h, s.fingerprint())
+}
+
+/// Key of one cost-model prediction: program key + cost-model identity
+/// (its seed salt) + retraining generation. Predictions are pure between
+/// retrains, so this triple fully determines the value.
+pub type PredKey = (u64, u64, usize);
+
+/// Bounded transposition cache over ground-truth latencies and cost-model
+/// predictions. See the module docs for the soundness argument and knobs.
+#[derive(Clone, Debug)]
+pub struct EvalCache {
+    lat: HashMap<u64, f64>,
+    pred: HashMap<PredKey, f64>,
+    stats: CacheStats,
+    max_entries: usize,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+}
+
+impl EvalCache {
+    /// Default per-map entry bound: generous for multi-thousand-sample
+    /// searches, small next to the tree itself (~16 B/entry).
+    pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Cache with an explicit per-map entry bound. Once a map is full, new
+    /// values are computed and returned but not inserted.
+    pub fn with_capacity(max_entries: usize) -> EvalCache {
+        EvalCache {
+            lat: HashMap::new(),
+            pred: HashMap::new(),
+            stats: CacheStats::default(),
+            max_entries,
+        }
+    }
+
+    /// Total entries currently held (both maps).
+    pub fn len(&self) -> usize {
+        self.lat.len() + self.pred.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lat.is_empty() && self.pred.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Reset the hit/miss counters (entries are kept) — used when one
+    /// shared cache serves several searches that each report their own
+    /// stats.
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Drop prediction entries not belonging to the cost model with the
+    /// given identity `salt`. Prediction keys are per model instance, so
+    /// when a shared cache is adopted by a new search, prior searches'
+    /// entries are unreachable — pruning them keeps the map from filling
+    /// up with dead entries (which would eventually block inserts).
+    pub fn retain_predictions_of(&mut self, salt: u64) {
+        self.pred.retain(|k, _| k.1 == salt);
+    }
+
+    /// Ground-truth latency for `key`, computing (and caching) via `f` on
+    /// a miss.
+    pub fn latency_or(&mut self, key: u64, f: impl FnOnce() -> f64) -> f64 {
+        if let Some(&v) = self.lat.get(&key) {
+            self.stats.hits += 1;
+            return v;
+        }
+        self.stats.misses += 1;
+        let v = f();
+        if self.lat.len() < self.max_entries {
+            self.lat.insert(key, v);
+        }
+        v
+    }
+
+    /// Cost-model predicted latency for `key`, computing (and caching) via
+    /// `f` on a miss.
+    pub fn prediction_or(&mut self, key: PredKey, f: impl FnOnce() -> f64) -> f64 {
+        if let Some(&v) = self.pred.get(&key) {
+            self.stats.hits += 1;
+            return v;
+        }
+        self.stats.misses += 1;
+        let v = f();
+        if self.pred.len() < self.max_entries {
+            self.pred.insert(key, v);
+        }
+        v
+    }
+}
+
+/// The single surface through which the search engine evaluates programs.
+/// See the module docs.
+pub trait Evaluator {
+    /// Ground-truth measurement: evaluate on the hardware model, feed the
+    /// learned cost model, advance the incumbent. Returns latency (s).
+    fn measure(&mut self, s: &Schedule) -> f64;
+
+    /// Ground-truth latency *without* training — the deterministic oracle
+    /// used in expansion and rollout scoring, served through the cache.
+    fn true_latency(&mut self, s: &Schedule) -> f64;
+
+    /// Normalized predicted performance score in [0, 1] from the learned
+    /// cost model (higher = better), with per-generation prediction
+    /// caching.
+    fn score(&mut self, s: &Schedule) -> f64;
+
+    /// Best (lowest) measured latency seen so far.
+    fn best_latency(&self) -> f64;
+
+    /// The evaluation target.
+    fn target(&self) -> Target;
+
+    /// Cache hit/miss counters accumulated so far.
+    fn cache_stats(&self) -> CacheStats;
+}
+
+/// Production [`Evaluator`]: learned cost model + hardware simulator,
+/// fronted by an [`EvalCache`].
+pub struct CachedEvaluator {
+    pub cost: CostModel,
+    pub sim: Simulator,
+    pub cache: EvalCache,
+}
+
+impl CachedEvaluator {
+    pub fn new(cost: CostModel, sim: Simulator) -> CachedEvaluator {
+        CachedEvaluator::with_cache(cost, sim, EvalCache::default())
+    }
+
+    /// Use an externally owned cache (shared across searches). Stale
+    /// prediction entries from other cost-model instances are pruned and
+    /// the hit/miss counters reset — entries persist across searches, but
+    /// each search reports only its own counters; ground-truth latency
+    /// entries — the shareable part — are kept.
+    pub fn with_cache(cost: CostModel, sim: Simulator, mut cache: EvalCache) -> CachedEvaluator {
+        cache.retain_predictions_of(cost.salt);
+        cache.reset_stats();
+        CachedEvaluator { cost, sim, cache }
+    }
+
+    /// Hand the cache back (e.g. to reuse it for a follow-up search).
+    pub fn into_cache(self) -> EvalCache {
+        self.cache
+    }
+}
+
+impl Evaluator for CachedEvaluator {
+    fn measure(&mut self, s: &Schedule) -> f64 {
+        let key = trace_key(s, self.sim.target);
+        let sim = &self.sim;
+        let lat = self.cache.latency_or(key, || sim.latency(s));
+        self.cost.observe(s, lat);
+        lat
+    }
+
+    fn true_latency(&mut self, s: &Schedule) -> f64 {
+        let key = trace_key(s, self.sim.target);
+        let sim = &self.sim;
+        self.cache.latency_or(key, || sim.latency(s))
+    }
+
+    fn score(&mut self, s: &Schedule) -> f64 {
+        let pred = match self.cost.generation() {
+            Some(gen) => {
+                let key = (trace_key(s, self.sim.target), self.cost.salt, gen);
+                let cost = &self.cost;
+                self.cache.prediction_or(key, || cost.predict_latency(s))
+            }
+            // before the first fit, predictions track the latest
+            // observation and aren't pure — don't cache them
+            None => self.cost.predict_latency(s),
+        };
+        self.cost.score_of_prediction(pred)
+    }
+
+    fn best_latency(&self) -> f64 {
+        self.cost.best_latency
+    }
+
+    fn target(&self) -> Target {
+        self.sim.target
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::transforms::{apply, TransformKind};
+    use crate::util::Rng;
+    use crate::workloads::gemm;
+    use std::sync::Arc;
+
+    fn base() -> Schedule {
+        Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)))
+    }
+
+    #[test]
+    fn key_is_stable_across_calls_and_clones() {
+        let mut rng = Rng::new(1);
+        let s = apply(&base(), TransformKind::TileSize, &mut rng, false).unwrap();
+        let k1 = trace_key(&s, Target::Cpu);
+        let k2 = trace_key(&s, Target::Cpu);
+        let k3 = trace_key(&s.clone(), Target::Cpu);
+        assert_eq!(k1, k2);
+        assert_eq!(k1, k3);
+    }
+
+    #[test]
+    fn key_distinguishes_targets_and_traces() {
+        let mut rng = Rng::new(2);
+        let s0 = base();
+        let s1 = apply(&s0, TransformKind::Vectorize, &mut rng, false).unwrap();
+        assert_ne!(trace_key(&s0, Target::Cpu), trace_key(&s0, Target::Gpu));
+        assert_ne!(trace_key(&s0, Target::Cpu), trace_key(&s1, Target::Cpu));
+    }
+
+    #[test]
+    fn hit_on_identical_trace() {
+        let mut rng = Rng::new(3);
+        let s = apply(&base(), TransformKind::Parallel, &mut rng, false).unwrap();
+        let mut ev = CachedEvaluator::new(
+            CostModel::new(Target::Cpu, 7),
+            Simulator::new(Target::Cpu),
+        );
+        let a = ev.true_latency(&s);
+        let b = ev.true_latency(&s.clone());
+        assert_eq!(a, b);
+        let stats = ev.cache_stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn miss_on_divergent_trace() {
+        let mut rng = Rng::new(4);
+        let s0 = base();
+        let s1 = apply(&s0, TransformKind::Unroll, &mut rng, false).unwrap();
+        let s2 = apply(&s1, TransformKind::Vectorize, &mut rng, false).unwrap();
+        let mut ev = CachedEvaluator::new(
+            CostModel::new(Target::Cpu, 8),
+            Simulator::new(Target::Cpu),
+        );
+        ev.true_latency(&s0);
+        ev.true_latency(&s1);
+        ev.true_latency(&s2);
+        let stats = ev.cache_stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 3);
+    }
+
+    #[test]
+    fn measure_trains_but_caches_ground_truth() {
+        let s = base();
+        let sim = Simulator::new(Target::Cpu);
+        let expect = sim.latency(&s);
+        let mut ev = CachedEvaluator::new(CostModel::new(Target::Cpu, 9), sim);
+        let a = ev.measure(&s);
+        let b = ev.measure(&s);
+        assert_eq!(a, expect);
+        assert_eq!(b, expect);
+        // both measures still fed the cost model, only the sim run was
+        // deduplicated
+        assert_eq!(ev.cost.n_measured, 2);
+        assert_eq!(ev.cache_stats().hits, 1);
+    }
+
+    #[test]
+    fn capacity_zero_disables_insertion_but_not_correctness() {
+        let s = base();
+        let sim = Simulator::new(Target::Cpu);
+        let mut ev = CachedEvaluator::with_cache(
+            CostModel::new(Target::Cpu, 10),
+            sim,
+            EvalCache::with_capacity(0),
+        );
+        let a = ev.true_latency(&s);
+        let b = ev.true_latency(&s);
+        assert_eq!(a, b);
+        assert_eq!(ev.cache_stats().hits, 0);
+        assert_eq!(ev.cache_stats().misses, 2);
+        assert!(ev.cache.is_empty());
+    }
+
+    #[test]
+    fn stats_merge_and_reset() {
+        let mut a = CacheStats { hits: 2, misses: 3 };
+        let b = CacheStats { hits: 1, misses: 0 };
+        a.merge(&b);
+        assert_eq!(a, CacheStats { hits: 3, misses: 3 });
+        let mut c = EvalCache::new();
+        c.latency_or(1, || 1.0);
+        c.reset_stats();
+        assert_eq!(c.stats(), CacheStats::default());
+        assert!(!c.is_empty());
+    }
+}

@@ -33,6 +33,10 @@ pub fn la_uct(child: &ChildStats, parent_visits: f64, lambda: f64, c: f64) -> f6
 }
 
 /// Index of the LA-UCT-maximal child among `children`.
+///
+/// Ties break deterministically to the lowest index (strict `>`), so a
+/// search replayed from the same seed always descends the same path; a
+/// NaN score never replaces the incumbent.
 pub fn select(children: &[ChildStats], parent_visits: f64, lambda: f64, c: f64) -> usize {
     let mut best = 0;
     let mut best_score = f64::NEG_INFINITY;
@@ -94,6 +98,33 @@ mod tests {
         let b = ch(2.0, 0.55, 0.5);
         // big c: exploration dominates
         assert_eq!(select(&[a, b], 1002.0, 0.5, 3.0), 1);
+    }
+
+    #[test]
+    fn tie_breaking_deterministic_across_seeds() {
+        // equal-scored children must always resolve to the lowest index,
+        // however the (identical) stats were produced
+        for seed in 0..32u64 {
+            let mut rng = Rng::new(seed);
+            let visits = 1.0 + (rng.next_u64() % 50) as f64;
+            let mean_r = rng.f64();
+            let phi = rng.f64();
+            let kids = vec![ch(visits, mean_r, phi); 4];
+            assert_eq!(select(&kids, 4.0 * visits, 0.5, 1.4), 0, "seed {seed}");
+        }
+        // several unvisited children (all +inf) also tie-break to index 0
+        let kids = [ch(0.0, 0.0, 0.1), ch(0.0, 0.0, 0.9), ch(0.0, 0.0, 0.5)];
+        assert_eq!(select(&kids, 3.0, 0.5, 1.4), 0);
+    }
+
+    #[test]
+    fn nan_scores_never_win_and_never_panic() {
+        let nan = ch(10.0, f64::NAN, 0.0);
+        let ok = ch(10.0, 0.2, 0.0);
+        // NaN first: falls through to the finite child
+        assert_eq!(select(&[nan, ok], 20.0, 0.0, 0.0), 1);
+        // all-NaN: still returns a valid index
+        assert_eq!(select(&[nan, nan], 20.0, 0.0, 0.0), 0);
     }
 
     #[test]

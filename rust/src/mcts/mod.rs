@@ -11,6 +11,7 @@
 //! regressions and re-expands from the same parent with the largest model
 //! under a shorter targeted prompt.
 
+pub mod evalcache;
 pub mod la_uct;
 
 use crate::costmodel::CostModel;
@@ -21,6 +22,7 @@ use crate::schedule::transforms::{apply_sequence, TransformKind};
 use crate::schedule::Schedule;
 use crate::sim::Simulator;
 use crate::util::Rng;
+use evalcache::{CacheStats, CachedEvaluator, EvalCache, Evaluator};
 
 /// Next-model routing policy (Appendix G ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -117,7 +119,29 @@ pub struct SearchResult {
     pub n_errors: usize,
     /// (model name, regular calls, ca calls) per model.
     pub call_counts: Vec<(String, usize, usize)>,
+    /// Evaluation-cache hit/miss counters for this search (see
+    /// [`evalcache`]): nonzero hits mean candidate programs were
+    /// re-proposed and served without re-evaluation.
+    pub eval_cache: CacheStats,
     pub best_schedule: Schedule,
+}
+
+/// Fill `curve` with every configured checkpoint it is missing, carrying
+/// `final_speedup` forward for checkpoints the search never reached
+/// (instead of silently dropping them), and keep it sorted by sample
+/// count. Shared by the MCTS engine and the evolutionary baseline so the
+/// [`SearchResult::curve`] contract lives in one place.
+pub fn fill_missing_checkpoints(
+    curve: &mut Vec<(usize, f64)>,
+    checkpoints: &[usize],
+    final_speedup: f64,
+) {
+    for &cp in checkpoints {
+        if !curve.iter().any(|&(s, _)| s == cp) {
+            curve.push((cp, final_speedup));
+        }
+    }
+    curve.sort_by_key(|&(s, _)| s);
 }
 
 impl SearchResult {
@@ -137,12 +161,15 @@ impl SearchResult {
     }
 }
 
-/// The shared-tree search engine.
+/// The shared-tree search engine. All cost-model / simulator access goes
+/// through the [`Evaluator`] trait (see [`evalcache`]), so every
+/// evaluation — expansion scoring, rollout scoring, course-alteration
+/// re-expansion, and periodic measurement — shares one transposition
+/// cache.
 pub struct Mcts {
     pub cfg: SearchConfig,
     pub models: ModelSet,
-    pub cost: CostModel,
-    pub sim: Simulator,
+    pub eval: CachedEvaluator,
     nodes: Vec<Node>,
     rng: Rng,
     rr_ptr: usize,
@@ -160,9 +187,24 @@ pub struct Mcts {
 
 impl Mcts {
     pub fn new(cfg: SearchConfig, models: ModelSet, sim: Simulator, root: Schedule) -> Mcts {
-        let mut cost = CostModel::new(sim.target, cfg.seed);
+        Mcts::with_cache(cfg, models, sim, root, EvalCache::default())
+    }
+
+    /// Build a search that shares an externally owned evaluation cache
+    /// (e.g. across repeated searches of the same workload); finish with
+    /// [`Mcts::run_with_cache`] to get the warmed cache back.
+    pub fn with_cache(
+        cfg: SearchConfig,
+        models: ModelSet,
+        sim: Simulator,
+        root: Schedule,
+        cache: EvalCache,
+    ) -> Mcts {
+        let cost = CostModel::new(sim.target, cfg.seed);
+        let gpu = sim.target.is_gpu();
+        let mut eval = CachedEvaluator::with_cache(cost, sim, cache);
         let mut rng = Rng::new(cfg.seed ^ 0x6C17_E600);
-        let baseline_latency = cost.measure(&sim, &root);
+        let baseline_latency = eval.measure(&root);
         // start with the largest model driving the root expansion, as a
         // single-model baseline would
         let root_llm = models.largest;
@@ -182,20 +224,18 @@ impl Mcts {
         };
         // seed cost model with a few random variants so early predictions
         // aren't degenerate
-        let gpu = sim.target.is_gpu();
         let vocab = TransformKind::vocabulary(gpu);
         for _ in 0..7 {
             let seq: Vec<_> = (0..3).map(|_| *rng.choice(&vocab)).collect();
             if let Ok(s) = apply_sequence(&root, &seq, &mut rng, gpu) {
-                cost.measure(&sim, &s);
+                eval.measure(&s);
             }
         }
-        let best_latency = cost.best_latency;
+        let best_latency = eval.best_latency();
         Mcts {
             cfg,
             models,
-            cost,
-            sim,
+            eval,
             nodes: vec![root_node],
             rng,
             rr_ptr: 0,
@@ -254,7 +294,7 @@ impl Mcts {
     }
 
     fn prompt_ctx(&self, node_idx: usize) -> PromptCtx {
-        let gpu = self.sim.target.is_gpu();
+        let gpu = self.eval.target().is_gpu();
         let node = &self.nodes[node_idx];
         let variant = |i: usize| VariantCtx {
             code: print_dominant(&self.nodes[i].schedule, gpu),
@@ -300,7 +340,7 @@ impl Mcts {
             return false;
         }
         let leaf = self.select();
-        let gpu = self.sim.target.is_gpu();
+        let gpu = self.eval.target().is_gpu();
 
         // ---- expansion: query the active LLM ---------------------------
         let ctx = self.prompt_ctx(leaf);
@@ -311,15 +351,16 @@ impl Mcts {
         // model and the analytic performance model (an LLM reasons about
         // code structure directly, not only through the tuner's learned
         // predictor). Capability-scaled noise is added by the proposer.
-        let cost = &self.cost;
-        let sim = &self.sim;
+        // Candidates that re-propose an already-seen program are served
+        // from the shared evaluation cache.
         let best_lat = self.best_latency;
         let mut eval_rng = self.rng.fork(self.samples as u64);
+        let eval = &mut self.eval;
         let mut score_fn = |seq: &[TransformKind]| -> f64 {
             match apply_sequence(&parent_sched, seq, &mut eval_rng, gpu) {
                 Ok(s) => {
-                    let reasoned = (best_lat / sim.latency(&s)).clamp(0.0, 1.5);
-                    0.4 * cost.score(&s) + 0.6 * reasoned
+                    let reasoned = (best_lat / eval.true_latency(&s)).clamp(0.0, 1.5);
+                    0.4 * eval.score(&s) + 0.6 * reasoned
                 }
                 Err(_) => 0.0,
             }
@@ -334,7 +375,7 @@ impl Mcts {
             Ok(s) => s,
             Err(_) => return true, // nothing applicable; spend no sample
         };
-        let child_score = self.cost.score(&child_sched);
+        let child_score = self.eval.score(&child_sched);
         let next_llm = self.route(proposal.next_model);
         let parent_score = self.nodes[leaf].predicted_score;
         let parent_chain = self.nodes[leaf].regression_chain;
@@ -371,15 +412,14 @@ impl Mcts {
             self.n_ca_events += 1;
             let largest = self.models.largest;
             let banned = proposal.transforms.clone();
-            let cost = &self.cost;
-            let sim = &self.sim;
             let best_lat = self.best_latency;
             let mut eval_rng = self.rng.fork(self.samples as u64 ^ 0xCA);
+            let eval = &mut self.eval;
             let mut ca_score_fn = |seq: &[TransformKind]| -> f64 {
                 match apply_sequence(&parent_sched, seq, &mut eval_rng, gpu) {
                     Ok(s) => {
-                        let reasoned = (best_lat / sim.latency(&s)).clamp(0.0, 1.5);
-                        0.4 * cost.score(&s) + 0.6 * reasoned
+                        let reasoned = (best_lat / eval.true_latency(&s)).clamp(0.0, 1.5);
+                        0.4 * eval.score(&s) + 0.6 * reasoned
                     }
                     Err(_) => 0.0,
                 }
@@ -395,7 +435,7 @@ impl Mcts {
             self.n_errors += ca_prop.n_errors;
             match apply_sequence(&parent_sched, &ca_prop.transforms, &mut self.rng, gpu) {
                 Ok(s) => {
-                    let sc = self.cost.score(&s);
+                    let sc = self.eval.score(&s);
                     if sc >= parent_score {
                         self.models.credit_hit(largest, CallKind::CourseAlteration);
                     }
@@ -444,7 +484,7 @@ impl Mcts {
                 roll = next;
             }
         }
-        let rollout_score = self.cost.score(&roll);
+        let rollout_score = self.eval.score(&roll);
         let reward = final_score.max(rollout_score).clamp(0.0, 1.0);
 
         // ---- backpropagation -------------------------------------------------
@@ -481,7 +521,7 @@ impl Mcts {
             .drain(..self.cfg.measure_top_k.min(self.unmeasured.len()))
             .collect();
         for idx in take {
-            let lat = self.cost.measure(&self.sim, &self.nodes[idx].schedule);
+            let lat = self.eval.measure(&self.nodes[idx].schedule);
             self.nodes[idx].measured = true;
             self.measure_time_s += self.cfg.measure_overhead_s;
             if lat < self.best_latency {
@@ -493,7 +533,14 @@ impl Mcts {
     }
 
     /// Run to budget exhaustion and report.
-    pub fn run(mut self, workload_name: &str) -> SearchResult {
+    pub fn run(self, workload_name: &str) -> SearchResult {
+        self.run_with_cache(workload_name).0
+    }
+
+    /// Like [`Mcts::run`], but also hands back the warmed evaluation
+    /// cache so a follow-up search ([`Mcts::with_cache`]) can reuse every
+    /// ground-truth evaluation this one performed.
+    pub fn run_with_cache(mut self, workload_name: &str) -> (SearchResult, EvalCache) {
         let mut stall = 0;
         while self.samples < self.cfg.budget && stall < 10_000 {
             let before = self.samples;
@@ -506,16 +553,18 @@ impl Mcts {
         }
         self.measure_batch();
         let final_speedup = self.baseline_latency / self.best_latency;
+        let mut curve = std::mem::take(&mut self.curve);
         // make sure the final point is on the curve
-        if self.curve.last().map(|&(s, _)| s) != Some(self.samples) {
-            self.curve.push((self.samples, final_speedup));
+        if !curve.iter().any(|&(s, _)| s == self.samples) {
+            curve.push((self.samples, final_speedup));
         }
-        SearchResult {
+        fill_missing_checkpoints(&mut curve, &self.cfg.checkpoints, final_speedup);
+        let result = SearchResult {
             workload: workload_name.to_string(),
             best_speedup: final_speedup,
             best_latency_s: self.best_latency,
             baseline_latency_s: self.baseline_latency,
-            curve: self.curve,
+            curve,
             compile_time_s: self.models.total_latency_s() + self.measure_time_s,
             api_cost_usd: self.models.total_cost_usd(),
             n_samples: self.samples,
@@ -528,8 +577,10 @@ impl Mcts {
                 .zip(&self.models.stats)
                 .map(|(m, s)| (m.name.to_string(), s.regular_calls, s.ca_calls))
                 .collect(),
+            eval_cache: self.eval.cache_stats(),
             best_schedule: self.best_schedule,
-        }
+        };
+        (result, self.eval.into_cache())
     }
 }
 
@@ -627,6 +678,65 @@ mod tests {
         let b = run_search(4, 40, 7);
         assert_eq!(a.best_speedup, b.best_speedup);
         assert_eq!(a.api_cost_usd, b.api_cost_usd);
+        assert_eq!(a.eval_cache, b.eval_cache);
+    }
+
+    #[test]
+    fn curve_emits_all_checkpoints_with_carry_forward() {
+        let sched = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+        let models = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let sim = Simulator::new(Target::Cpu);
+        let cfg = SearchConfig {
+            budget: 30,
+            seed: 9,
+            checkpoints: vec![10, 30, 100, 1000],
+            ..SearchConfig::default()
+        };
+        let r = Mcts::new(cfg, models, sim, sched).run("gemm");
+        let at = |cp: usize| {
+            r.curve
+                .iter()
+                .find(|&&(s, _)| s == cp)
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| panic!("checkpoint {cp} missing from {:?}", r.curve))
+        };
+        // checkpoints past the 30-sample budget carry the final speedup
+        assert_eq!(at(100), r.best_speedup);
+        assert_eq!(at(1000), r.best_speedup);
+        assert!(at(10) <= r.best_speedup + 1e-9);
+        // curve stays sorted and monotone
+        for w in r.curve.windows(2) {
+            assert!(w[1].0 > w[0].0, "unsorted curve {:?}", r.curve);
+            assert!(w[1].1 >= w[0].1 - 1e-9, "curve {:?}", r.curve);
+        }
+    }
+
+    #[test]
+    fn repeated_search_with_shared_cache_reports_hits() {
+        let mk = |cache: EvalCache| {
+            let sched = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+            let models = ModelSet::new(paper_config(2, "gpt-5.2"));
+            let sim = Simulator::new(Target::Cpu);
+            Mcts::with_cache(quick_cfg(40, 11), models, sim, sched, cache)
+        };
+        // first search hands back its fully warmed cache
+        let (baseline, cache) = mk(EvalCache::new()).run_with_cache("gemm");
+        assert!(!cache.is_empty());
+        // replay the identical search against the shared cache: adoption
+        // resets the counters, and every ground-truth evaluation is
+        // already present
+        let (r, _) = mk(cache).run_with_cache("gemm");
+        assert!(r.eval_cache.hits > 0, "no cache hits: {:?}", r.eval_cache);
+        assert!(
+            r.eval_cache.hits > baseline.eval_cache.hits,
+            "warm run {:?} should out-hit cold run {:?}",
+            r.eval_cache,
+            baseline.eval_cache
+        );
+        // caching is transparent: results are identical to the cold run
+        assert_eq!(r.best_speedup, baseline.best_speedup);
+        assert_eq!(r.curve, baseline.curve);
+        assert_eq!(r.api_cost_usd, baseline.api_cost_usd);
     }
 
     #[test]

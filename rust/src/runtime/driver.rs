@@ -1,0 +1,196 @@
+//! Parallel multi-workload search driver.
+//!
+//! Searches many workloads (or whole experiment matrices of
+//! [`RunSpec`]s) concurrently on std scoped threads. Determinism is
+//! preserved by construction:
+//!
+//! * every run is a pure function of its spec — each search derives its
+//!   own RNG streams from the spec's seed, and [`lane_seed`] gives each
+//!   workload lane an independent deterministic stream regardless of how
+//!   the OS schedules threads;
+//! * workers pull work by atomic index and write into a per-spec result
+//!   slot, so results come back **in spec order**, byte-identical to the
+//!   serial path.
+//!
+//! The experiment harness (`bin/experiments.rs`, via
+//! [`crate::coordinator::run_many`]) and the `collab_search` example fan
+//! out through this driver, which is how `table3_e2e`-style sweeps scale
+//! with cores.
+
+use crate::coordinator::{run_one, RunSpec, Searcher};
+use crate::mcts::evalcache::CacheStats;
+use crate::mcts::SearchResult;
+use crate::sim::Target;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default parallelism: one worker per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Independent deterministic seed for workload lane `lane` under
+/// `base_seed` (one [`crate::util::rng::splitmix64`] step from a
+/// lane-offset state — streams don't overlap and don't depend on thread
+/// scheduling).
+pub fn lane_seed(base_seed: u64, lane: u64) -> u64 {
+    let mut state = base_seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(lane));
+    crate::util::rng::splitmix64(&mut state)
+}
+
+/// Run independent jobs across up to `threads` scoped OS threads
+/// (work-stealing by atomic index). Results come back in job order; since
+/// every job is pure, the output is byte-identical to running the jobs
+/// serially.
+pub fn run_jobs<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
+                *slots[i].lock().unwrap() = Some(job());
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job missing"))
+        .collect()
+}
+
+/// Execute a matrix of runs across up to `threads` OS threads. Results are
+/// returned in spec order and are byte-identical to running the specs
+/// serially.
+pub fn run_specs(specs: &[RunSpec], threads: usize) -> Vec<SearchResult> {
+    run_jobs(specs.iter().map(|sp| move || run_one(sp)).collect(), threads)
+}
+
+/// Search many workloads concurrently with one searcher configuration:
+/// workload lane `i` runs under the deterministic seed
+/// `lane_seed(base_seed, i)`, and results come back in workload order.
+pub fn search_workloads(
+    workloads: &[&str],
+    target: Target,
+    searcher: &Searcher,
+    budget: usize,
+    base_seed: u64,
+    threads: usize,
+) -> Vec<SearchResult> {
+    let specs: Vec<RunSpec> = workloads
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            RunSpec::new(
+                w,
+                target,
+                searcher.clone(),
+                budget,
+                lane_seed(base_seed, i as u64),
+            )
+        })
+        .collect();
+    run_specs(&specs, threads)
+}
+
+/// Aggregate eval-cache counters over a driver batch (the owned-slice
+/// face of [`crate::coordinator::report::total_cache`]).
+pub fn aggregate_cache(results: &[SearchResult]) -> CacheStats {
+    crate::coordinator::report::total_cache(&results.iter().collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(n: u64) -> Vec<RunSpec> {
+        (0..n)
+            .map(|seed| {
+                RunSpec::new(
+                    "gemm",
+                    Target::Cpu,
+                    Searcher::Coop {
+                        n: 2,
+                        largest: "gpt-5.2".into(),
+                    },
+                    40,
+                    seed,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_results_byte_identical_to_serial() {
+        let sp = specs(3);
+        let par = run_specs(&sp, 3);
+        let ser = run_specs(&sp, 1);
+        assert_eq!(par.len(), ser.len());
+        for (p, s) in par.iter().zip(&ser) {
+            assert_eq!(p.workload, s.workload);
+            assert_eq!(p.best_speedup, s.best_speedup);
+            assert_eq!(p.best_latency_s, s.best_latency_s);
+            assert_eq!(p.curve, s.curve);
+            assert_eq!(p.api_cost_usd, s.api_cost_usd);
+            assert_eq!(p.compile_time_s, s.compile_time_s);
+            assert_eq!(p.n_samples, s.n_samples);
+            assert_eq!(p.eval_cache, s.eval_cache);
+        }
+    }
+
+    #[test]
+    fn lane_seeds_deterministic_and_distinct() {
+        let a: Vec<u64> = (0..16).map(|i| lane_seed(7, i)).collect();
+        let b: Vec<u64> = (0..16).map(|i| lane_seed(7, i)).collect();
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), a.len());
+        assert_ne!(lane_seed(7, 0), lane_seed(8, 0));
+    }
+
+    #[test]
+    fn search_workloads_returns_in_workload_order() {
+        let searcher = Searcher::Coop {
+            n: 2,
+            largest: "gpt-5.2".into(),
+        };
+        let names = ["gemm", "llama4_mlp"];
+        let rs = search_workloads(&names, Target::Cpu, &searcher, 30, 5, 2);
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].workload, "gemm");
+        assert_eq!(rs[1].workload, "llama4_mlp");
+        // same call again is fully deterministic
+        let rs2 = search_workloads(&names, Target::Cpu, &searcher, 30, 5, 1);
+        for (a, b) in rs.iter().zip(&rs2) {
+            assert_eq!(a.best_speedup, b.best_speedup);
+            assert_eq!(a.eval_cache, b.eval_cache);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        assert!(run_specs(&[], 4).is_empty());
+        assert_eq!(aggregate_cache(&[]), CacheStats::default());
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (python/compile/aot.py → HLO text) and execute them on the CPU PJRT
+//! client — the Layer-2/Layer-1 executables on the rust request path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! Compiled only with the `pjrt` cargo feature (requires the vendored
+//! `xla` crate in [dependencies]); see [`super::pjrt_stub`] for the
+//! default build.
+
+use crate::err;
+use crate::util::error::Context;
+use crate::util::{Json, Rng};
+use crate::Result;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Input/output literal type — the same `runtime::Literal` name the stub
+/// build exports, so callers can name it under either build.
+pub use xla::Literal;
+
+/// Shape+dtype of one executable argument (from the artifacts manifest).
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One loaded, compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed executor for all artifacts in a directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Parse the manifest written by aot.py.
+    pub fn manifest(&self) -> Result<Vec<(String, Vec<ArgSpec>)>> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.json"))
+            .context("reading artifacts/manifest.json — run `make artifacts` first")?;
+        let json = Json::parse(&text).map_err(|e| err!("manifest parse: {e}"))?;
+        let obj = json.as_obj().ok_or_else(|| err!("manifest not an object"))?;
+        let mut out = Vec::new();
+        for (name, entry) in obj {
+            let args = entry
+                .get("args")
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| err!("{name}: no args"))?
+                .iter()
+                .map(|a| {
+                    let shape = a
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|s| s.iter().filter_map(|d| d.as_f64()).map(|d| d as usize).collect())
+                        .unwrap_or_default();
+                    let dtype = a
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    ArgSpec { shape, dtype }
+                })
+                .collect();
+            out.push((name.clone(), args));
+        }
+        Ok(out)
+    }
+
+    /// Load and compile one artifact by name.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let manifest = self.manifest()?;
+        let (_, args) = manifest
+            .iter()
+            .find(|(n, _)| n == name)
+            .ok_or_else(|| err!("artifact {name} not in manifest"))?
+            .clone();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| err!("bad path"))?,
+        )
+        .map_err(|e| err!("hlo parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| err!("compile {name}: {e:?}"))?;
+        Ok(Artifact {
+            name: name.to_string(),
+            args,
+            exe,
+        })
+    }
+
+    /// Build deterministic random f32 inputs matching the arg specs.
+    pub fn random_inputs(&self, art: &Artifact, seed: u64) -> Result<Vec<xla::Literal>> {
+        let mut rng = Rng::new(seed);
+        art.args
+            .iter()
+            .map(|spec| {
+                let data: Vec<f32> = (0..spec.elems())
+                    .map(|_| (rng.normal() * 0.1) as f32)
+                    .collect();
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&data)
+                    .reshape(&dims)
+                    .map_err(|e| err!("reshape: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Execute once; returns the flattened f32 output.
+    pub fn execute(&self, art: &Artifact, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = art
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| err!("execute {}: {e:?}", art.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("to_literal: {e:?}"))?;
+        // aot.py wraps outputs in a 1-tuple (return_tuple=True)
+        let out = result.to_tuple1().map_err(|e| err!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| err!("to_vec: {e:?}"))
+    }
+
+    /// Measure mean wall-clock latency over `iters` runs (after 1 warmup).
+    pub fn measure_latency(&self, art: &Artifact, inputs: &[xla::Literal], iters: usize) -> Result<f64> {
+        self.execute(art, inputs)?; // warmup
+        let t = Instant::now();
+        for _ in 0..iters.max(1) {
+            let bufs = art
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| err!("execute: {e:?}"))?;
+            // force completion
+            let _ = bufs[0][0].to_literal_sync();
+        }
+        Ok(t.elapsed().as_secs_f64() / iters.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_if_built() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        let man = rt.manifest().unwrap();
+        assert!(man.iter().any(|(n, _)| n == "llama4_mlp"));
+        for (_, args) in &man {
+            assert!(!args.is_empty());
+        }
+    }
+
+    #[test]
+    fn mlp_artifact_executes_with_finite_output() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        let art = rt.load("llama4_mlp").unwrap();
+        let inputs = rt.random_inputs(&art, 42).unwrap();
+        let out = rt.execute(&art, &inputs).unwrap();
+        assert!(!out.is_empty());
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn latency_measurement_positive() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        let art = rt.load("flux_conv").unwrap();
+        let inputs = rt.random_inputs(&art, 7).unwrap();
+        let lat = rt.measure_latency(&art, &inputs, 2).unwrap();
+        assert!(lat > 0.0 && lat < 60.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Stub PJRT runtime for builds without the `pjrt` cargo feature.
+//!
+//! Mirrors the API of [`super::pjrt`] exactly so that the CLI `runtime`
+//! subcommand and the `e2e_llama` example compile unchanged; the
+//! constructor reports that real execution is unavailable, and callers
+//! degrade gracefully (the offline build environment has no vendored
+//! `xla` crate to link against).
+
+use crate::err;
+use crate::Result;
+use std::path::Path;
+
+/// Shape+dtype of one executable argument (from the artifacts manifest).
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Placeholder for `xla::Literal` in the stub build.
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+/// One loaded, compiled artifact (never constructed in the stub build).
+pub struct Artifact {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+}
+
+/// The PJRT-backed executor; its constructor always errors in the stub
+/// build.
+pub struct Runtime {
+    _private: (),
+}
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: rebuild with `--features pjrt` and the vendored `xla` crate";
+
+impl Runtime {
+    pub fn new<P: AsRef<Path>>(_artifacts_dir: P) -> Result<Runtime> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn manifest(&self) -> Result<Vec<(String, Vec<ArgSpec>)>> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn load(&self, _name: &str) -> Result<Artifact> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn random_inputs(&self, _art: &Artifact, _seed: u64) -> Result<Vec<Literal>> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn execute(&self, _art: &Artifact, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn measure_latency(
+        &self,
+        _art: &Artifact,
+        _inputs: &[Literal],
+        _iters: usize,
+    ) -> Result<f64> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = Runtime::new("artifacts").err().unwrap();
+        assert!(e.to_string().contains("pjrt"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal error type — the `anyhow` substitute for this offline build
+//! (DESIGN.md §Substitutions).
+//!
+//! A single string-carrying error is all the crate needs: errors here are
+//! terminal diagnostics for a CLI / experiment harness, never matched on.
+//! The [`err!`](crate::err) macro builds one with `format!` syntax, and
+//! [`Context`] adds `anyhow::Context`-style annotation to any
+//! `Result<_, E: Display>`.
+
+use std::fmt;
+
+/// A boxed-string error.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::new(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::new(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+/// `anyhow::Context`-style annotation: prefix an error with what was being
+/// attempted when it occurred.
+pub trait Context<T> {
+    fn context(self, what: &str) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context(self, what: &str) -> Result<T, Error> {
+        self.map_err(|e| Error::new(format!("{what}: {e}")))
+    }
+}
+
+/// Build an [`Error`] with `format!` syntax (the `anyhow!` substitute).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = err!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+    }
+
+    #[test]
+    fn converts_from_string() {
+        let e: Error = "boom".into();
+        assert_eq!(e.to_string(), "boom");
+        let e: Error = String::from("boom2").into();
+        assert_eq!(e.to_string(), "boom2");
+    }
+}

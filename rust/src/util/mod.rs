@@ -1,17 +1,21 @@
 //! Self-implemented utility substrates.
 //!
-//! This build environment is fully offline: the only third-party crates
-//! available are the vendored closure of the `xla` crate. Everything a
-//! project of this shape would normally pull from crates.io — a PRNG
-//! (`rand`), JSON (`serde_json`), config parsing (`toml`), CLI parsing
-//! (`clap`) — is implemented here from scratch, tested, and treated as a
-//! first-class substrate (DESIGN.md §Substitutions).
+//! This build environment is fully offline and the crate is
+//! dependency-free. Everything a project of this shape would normally pull
+//! from crates.io — a PRNG (`rand`), JSON (`serde_json`), config parsing
+//! (`toml`), CLI parsing (`clap`), error plumbing (`anyhow`) — is
+//! implemented here from scratch, tested, and treated as a first-class
+//! substrate (DESIGN.md §Substitutions). Real PJRT execution (the `xla`
+//! crate) is gated behind the optional `pjrt` cargo feature; see
+//! [`crate::runtime`].
 
+pub mod error;
 pub mod rng;
 pub mod json;
 pub mod tomlmini;
 pub mod cli;
 pub mod table;
 
+pub use error::Error;
 pub use rng::Rng;
 pub use json::Json;

@@ -145,6 +145,32 @@ fn coordinator_matrix_deterministic_across_thread_counts() {
 }
 
 #[test]
+fn driver_multi_workload_parallel_matches_serial() {
+    use litecoop::runtime::driver;
+    let searcher = Searcher::Coop {
+        n: 2,
+        largest: "gpt-5.2".into(),
+    };
+    let names = ["gemm", "llama4_mlp"];
+    let par = driver::search_workloads(&names, Target::Cpu, &searcher, 40, 3, 4);
+    let ser = driver::search_workloads(&names, Target::Cpu, &searcher, 40, 3, 1);
+    for (x, y) in par.iter().zip(&ser) {
+        assert_eq!(x.workload, y.workload);
+        assert_eq!(x.best_speedup, y.best_speedup);
+        assert_eq!(x.curve, y.curve);
+        assert_eq!(x.api_cost_usd, y.api_cost_usd);
+        assert_eq!(x.eval_cache, y.eval_cache);
+    }
+    // per-lane seeds are independent and deterministic; every search
+    // consulted the evaluation cache
+    assert_eq!(par[0].workload, "gemm");
+    assert_eq!(par[1].workload, "llama4_mlp");
+    assert!(par
+        .iter()
+        .all(|r| r.eval_cache.hits + r.eval_cache.misses > 0));
+}
+
+#[test]
 fn prop_transform_storm_preserves_semantics_invariants() {
     // any sequence of transforms keeps: valid schedule, positive finite
     // latency on both targets, finite features
