@@ -1,12 +1,19 @@
 //! Hot-path microbenchmarks (§Perf): MCTS iteration components, GBT
 //! inference, simulator eval, featurization, schedule apply, prompt
-//! render. Run with `cargo bench --bench hot_paths`.
+//! render, and the allocation-light search-loop primitives (O(1) trace
+//! keys, copy-on-write schedule apply/clone, iteration throughput at
+//! depth). Run with `cargo bench --bench hot_paths`.
+//!
+//! Besides the human-readable `bench ...` lines, this target writes every
+//! summary to `BENCH_hotpaths.json` (machine-readable, stable layout) so
+//! the perf trajectory of the hot loop is tracked across PRs.
 
-use litecoop::benchutil::bench_fn;
+use litecoop::benchutil::{bench_fn, write_json_report, Summary};
 use litecoop::costmodel::{features, CostModel};
 use litecoop::llm::prompts;
 use litecoop::llm::registry::paper_config;
 use litecoop::llm::ModelSet;
+use litecoop::mcts::evalcache::trace_key;
 use litecoop::mcts::{Mcts, SearchConfig};
 use litecoop::schedule::printer::print_dominant;
 use litecoop::schedule::transforms::{apply, TransformKind};
@@ -17,8 +24,24 @@ use litecoop::workloads;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Apply `n` random (applicable) transforms to `base`.
+fn transformed(base: &Schedule, n: usize, seed: u64) -> Schedule {
+    let mut rng = Rng::new(seed);
+    let vocab = TransformKind::vocabulary(false);
+    let mut s = base.clone();
+    let mut applied = 0;
+    while applied < n {
+        if let Ok(next) = apply(&s, *rng.choice(&vocab), &mut rng, false) {
+            s = next;
+            applied += 1;
+        }
+    }
+    s
+}
+
 fn main() {
     let budget = Duration::from_millis(400);
+    let mut all: Vec<Summary> = Vec::new();
     let w = Arc::new(workloads::attention::llama3_attention());
     let base = Schedule::initial(w.clone());
     let sim_cpu = Simulator::new(Target::Cpu);
@@ -26,32 +49,56 @@ fn main() {
     let mut rng = Rng::new(1);
 
     // a moderately-transformed schedule (realistic hot-path input)
-    let mut sched = base.clone();
-    let vocab = TransformKind::vocabulary(false);
-    for _ in 0..12 {
-        if let Ok(n) = apply(&sched, *rng.choice(&vocab), &mut rng, false) {
-            sched = n;
-        }
-    }
+    let sched = transformed(&base, 12, 1);
 
-    bench_fn("schedule_apply_tilesize", budget, || {
+    all.push(bench_fn("schedule_apply_tilesize", budget, || {
         let _ = apply(&sched, TransformKind::TileSize, &mut rng, false);
-    });
+    }));
 
-    bench_fn("sim_latency_cpu_attention", budget, || {
+    // ---- allocation-light search-loop primitives ---------------------------
+    // trace_key must be O(1) in trace depth: it reads the trace's cached
+    // running hash and the schedule's cached fingerprint. The depth-2 /
+    // depth-16 / depth-48 numbers should be flat (within noise).
+    let shallow = transformed(&base, 2, 2);
+    let deep16 = transformed(&base, 16, 3);
+    let deep48 = transformed(&base, 48, 4);
+    shallow.fingerprint(); // warm the lazy fingerprint caches so the
+    deep16.fingerprint(); // bench isolates steady-state key cost
+    deep48.fingerprint();
+    all.push(bench_fn("trace_key_depth2", budget, || {
+        std::hint::black_box(trace_key(&shallow, Target::Cpu));
+    }));
+    all.push(bench_fn("trace_key_depth16", budget, || {
+        std::hint::black_box(trace_key(&deep16, Target::Cpu));
+    }));
+    all.push(bench_fn("trace_key_depth48", budget, || {
+        std::hint::black_box(trace_key(&deep48, Target::Cpu));
+    }));
+
+    // copy-on-write: cloning a deep schedule copies Arcs, applying a
+    // transform deep-clones only the mutated block
+    all.push(bench_fn("schedule_clone_depth48", budget, || {
+        std::hint::black_box(deep48.clone());
+    }));
+    all.push(bench_fn("schedule_apply_deep48_unroll", budget, || {
+        let _ = apply(&deep48, TransformKind::Unroll, &mut rng, false);
+    }));
+
+    all.push(bench_fn("sim_latency_cpu_attention", budget, || {
         std::hint::black_box(sim_cpu.latency(&sched));
-    });
-    bench_fn("sim_latency_gpu_attention", budget, || {
+    }));
+    all.push(bench_fn("sim_latency_gpu_attention", budget, || {
         std::hint::black_box(sim_gpu.latency(&sched));
-    });
+    }));
 
-    bench_fn("featurize_attention", budget, || {
+    all.push(bench_fn("featurize_attention", budget, || {
         std::hint::black_box(features::featurize(&sched, Target::Cpu));
-    });
+    }));
 
     // trained cost model inference
     let mut cm = CostModel::new(Target::Cpu, 7);
     let mut r2 = Rng::new(2);
+    let vocab = TransformKind::vocabulary(false);
     for _ in 0..120 {
         let seq: Vec<_> = (0..3).map(|_| *r2.choice(&vocab)).collect();
         if let Ok(s) =
@@ -60,16 +107,16 @@ fn main() {
             cm.measure(&sim_cpu, &s);
         }
     }
-    bench_fn("costmodel_predict", budget, || {
+    all.push(bench_fn("costmodel_predict", budget, || {
         std::hint::black_box(cm.predict_latency(&sched));
-    });
+    }));
 
     // prompt rendering
     let set = ModelSet::new(paper_config(8, "gpt-5.2"));
     let ctx = prompts::PromptCtx {
         current: prompts::VariantCtx {
-            code: print_dominant(&sched, false),
-            trace_tail: sched.trace.render_tail(8),
+            code: print_dominant(&sched, false).into(),
+            trace_tail: sched.trace.render_tail(8).into(),
             score: 0.42,
         },
         parent: None,
@@ -81,9 +128,9 @@ fn main() {
         model_stats: set.stat_lines(),
         local_models: [None, None, None],
     };
-    bench_fn("prompt_render_regular", budget, || {
+    all.push(bench_fn("prompt_render_regular", budget, || {
         std::hint::black_box(prompts::regular_prompt(&ctx));
-    });
+    }));
 
     // one full MCTS iteration (selection→expansion→rollout→backprop)
     let models = ModelSet::new(paper_config(8, "gpt-5.2"));
@@ -94,7 +141,54 @@ fn main() {
         ..SearchConfig::default()
     };
     let mut engine = Mcts::new(cfg, models, Simulator::new(Target::Cpu), base.clone());
-    bench_fn("mcts_full_iteration", Duration::from_millis(800), || {
+    all.push(bench_fn("mcts_full_iteration", Duration::from_millis(800), || {
         engine.step();
-    });
+    }));
+
+    // iteration throughput at depth: branching=1 forces a single chain, so
+    // every measured iteration selects through (and extends) a path at
+    // least 14 nodes deep — the regime where deep-clone schedules and
+    // O(depth) trace keys used to make each step O(depth). Timed by hand
+    // rather than through bench_fn: each 8-step window stays below the
+    // engine's depth cap (past it, expansions pile children onto one node
+    // and per-step cost grows with iteration count), and the engine
+    // rebuild between windows happens OUTSIDE the timed region so the
+    // reported numbers measure iteration cost only.
+    let mk_deep = || {
+        let cfg = SearchConfig {
+            branching: 1,
+            budget: usize::MAX / 2,
+            seed: 5,
+            checkpoints: vec![],
+            ..SearchConfig::default()
+        };
+        let models = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let mut e = Mcts::new(cfg, models, Simulator::new(Target::Cpu), base.clone());
+        for _ in 0..14 {
+            e.step();
+        }
+        e
+    };
+    const DEEP_WINDOW: usize = 8;
+    const DEEP_ROUNDS: usize = 40;
+    let mut samples_ns = Vec::with_capacity(DEEP_ROUNDS);
+    for _ in 0..DEEP_ROUNDS {
+        let mut deep_engine = mk_deep();
+        let t = std::time::Instant::now();
+        for _ in 0..DEEP_WINDOW {
+            deep_engine.step();
+        }
+        samples_ns.push(t.elapsed().as_nanos() as f64 / DEEP_WINDOW as f64);
+    }
+    let deep_summary = Summary::from_samples(
+        "mcts_iteration_at_depth14",
+        &samples_ns,
+        DEEP_ROUNDS * DEEP_WINDOW,
+    );
+    println!("{}", deep_summary.line());
+    all.push(deep_summary);
+
+    write_json_report("BENCH_hotpaths.json", "hot_paths", &all)
+        .expect("write BENCH_hotpaths.json");
+    println!("wrote BENCH_hotpaths.json ({} benchmarks)", all.len());
 }

@@ -5,6 +5,10 @@
 //! format is a stable, grep-friendly line per benchmark:
 //!
 //! `bench <name> ... mean 12.34us  std 0.56us  min 11.90us  iters 1000`
+//!
+//! Bench targets that track a perf trajectory over time additionally
+//! collect their [`Summary`]s and emit a machine-readable JSON report via
+//! [`write_json_report`] (e.g. `hot_paths` writes `BENCH_hotpaths.json`).
 
 use std::time::{Duration, Instant};
 
@@ -19,6 +23,24 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize raw per-iteration samples (nanoseconds, non-empty) into a
+    /// [`Summary`] — the single source of the mean/std/min statistics used
+    /// by [`bench_fn`] and by hand-timed benches (e.g. the deep-iteration
+    /// bench in `hot_paths`).
+    pub fn from_samples(name: &str, samples_ns: &[f64], iters: usize) -> Summary {
+        let n = samples_ns.len() as f64;
+        let mean = samples_ns.iter().sum::<f64>() / n;
+        let var = samples_ns.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let min = samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+        Summary {
+            name: name.to_string(),
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: min,
+            iters,
+        }
+    }
+
     pub fn line(&self) -> String {
         format!(
             "bench {:<44} mean {:>12}  std {:>12}  min {:>12}  iters {}",
@@ -70,19 +92,37 @@ pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Summary {
         samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
     }
 
-    let n = samples.len() as f64;
-    let mean = samples.iter().sum::<f64>() / n;
-    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
-    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
-    let s = Summary {
-        name: name.to_string(),
-        mean_ns: mean,
-        std_ns: var.sqrt(),
-        min_ns: min,
-        iters: rounds * batch,
-    };
+    let s = Summary::from_samples(name, &samples, rounds * batch);
     println!("{}", s.line());
     s
+}
+
+/// Serialize a bench run to machine-readable JSON:
+/// `{"bench": <id>, "results": [{"name", "mean_ns", "std_ns", "min_ns",
+/// "iters"}, ...]}` with results in run order. Deterministic layout (the
+/// writer sorts object keys), so diffs between runs show only the numbers.
+pub fn json_report(bench: &str, summaries: &[Summary]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let results: Vec<Json> = summaries
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("name", s.name.as_str().into())
+                .set("mean_ns", s.mean_ns.into())
+                .set("std_ns", s.std_ns.into())
+                .set("min_ns", s.min_ns.into())
+                .set("iters", s.iters.into());
+            o
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("bench", bench.into()).set("results", Json::Arr(results));
+    root
+}
+
+/// Write [`json_report`] to `path` (with a trailing newline).
+pub fn write_json_report(path: &str, bench: &str, summaries: &[Summary]) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", json_report(bench, summaries)))
 }
 
 /// Time a single long-running operation (end-to-end experiment benches).
@@ -134,6 +174,66 @@ mod tests {
         assert!(fmt_ns(12_000.0).ends_with("us"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
         assert!(fmt_ns(2_000_000_000.0).ends_with('s'));
+    }
+
+    #[test]
+    fn from_samples_stats() {
+        let s = Summary::from_samples("x", &[10.0, 20.0, 30.0], 3);
+        assert!((s.mean_ns - 20.0).abs() < 1e-9);
+        assert_eq!(s.min_ns, 10.0);
+        assert!((s.std_ns - (200.0f64 / 3.0).sqrt()).abs() < 1e-9);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.name, "x");
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        use crate::util::json::Json;
+        let summaries = vec![
+            Summary {
+                name: "trace_key_depth16".into(),
+                mean_ns: 42.5,
+                std_ns: 1.25,
+                min_ns: 40.0,
+                iters: 1000,
+            },
+            Summary {
+                name: "apply_deep".into(),
+                mean_ns: 900.0,
+                std_ns: 10.0,
+                min_ns: 880.0,
+                iters: 500,
+            },
+        ];
+        let j = json_report("hot_paths", &summaries);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("hot_paths"));
+        let rs = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("trace_key_depth16"));
+        assert_eq!(rs[0].get("mean_ns").unwrap().as_f64(), Some(42.5));
+        assert_eq!(rs[1].get("iters").unwrap().as_f64(), Some(500.0));
+    }
+
+    #[test]
+    fn write_json_report_writes_parseable_file() {
+        use crate::util::json::Json;
+        // pid-suffixed so concurrent test runs on one machine don't race
+        let path = std::env::temp_dir()
+            .join(format!("litecoop_bench_report_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let summaries = vec![Summary {
+            name: "n".into(),
+            mean_ns: 1.0,
+            std_ns: 0.0,
+            min_ns: 1.0,
+            iters: 5,
+        }];
+        write_json_report(&path, "t", &summaries).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert!(Json::parse(text.trim_end()).is_ok());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

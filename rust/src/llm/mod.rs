@@ -347,7 +347,7 @@ mod tests {
         PromptCtx {
             current: prompts::VariantCtx {
                 code: "code".into(),
-                trace_tail: String::new(),
+                trace_tail: "".into(),
                 score: 0.5,
             },
             parent: None,

@@ -8,13 +8,17 @@
 //! is *shorter* than a regular large-model prompt.
 
 use crate::schedule::transforms::TransformKind;
+use std::sync::Arc;
 
 /// Program variant summary shown in the prompt (leaf / parent /
-/// grandparent).
-#[derive(Clone, Debug, Default)]
+/// grandparent). The renderings are shared `Arc<str>`s: the search engine
+/// renders each node's code/trace once at insertion and every prompt
+/// context built from it afterwards is a refcount bump, not a string
+/// copy.
+#[derive(Clone, Debug)]
 pub struct VariantCtx {
-    pub code: String,
-    pub trace_tail: String,
+    pub code: Arc<str>,
+    pub trace_tail: Arc<str>,
     pub score: f64,
 }
 

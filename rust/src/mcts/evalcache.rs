@@ -5,7 +5,10 @@
 //! prefixes — but that only pays off at the systems level if re-visiting a
 //! prefix is cheap. This module makes prefix reuse real: a
 //! transposition-style cache keyed by a canonical hash of the schedule's
-//! transform trace memoizes every ground-truth simulator evaluation
+//! transform trace (computed in **O(1) per lookup** from the trace's
+//! incrementally maintained running hash and the schedule's cached
+//! structural fingerprint — see [`trace_key`]) memoizes every
+//! ground-truth simulator evaluation
 //! (shared across everything, including repeated searches over one
 //! cache) and every cost-model prediction (keyed per model instance and
 //! retraining generation — shared within a search, never leaked between
@@ -49,6 +52,7 @@
 //!   parallel driver ([`crate::runtime::driver`]).
 
 use crate::costmodel::CostModel;
+use crate::schedule::trace::{fnv_str, fnv_u64};
 use crate::schedule::Schedule;
 use crate::sim::{Simulator, Target};
 use std::collections::HashMap;
@@ -78,43 +82,31 @@ impl CacheStats {
     }
 }
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-fn fnv_str(mut h: u64, s: &str) -> u64 {
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    // field separator so ("ab","c") and ("a","bc") hash differently
-    h ^= 0x1f;
-    h.wrapping_mul(FNV_PRIME)
-}
-
-fn fnv_u64(mut h: u64, x: u64) -> u64 {
-    for i in 0..8 {
-        h ^= (x >> (8 * i)) & 0xff;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
-}
-
 /// Canonical 64-bit key of a scheduled program on a target.
 ///
-/// Mixes the workload identity, the target, every transform-trace step
-/// (name, block, and the sampled decision string — the trace records every
-/// decision, so it replays to exactly one program), and the schedule's
-/// structural fingerprint (which disambiguates the rare trace renderings
-/// that don't pin the structure, e.g. two reads of the same buffer).
+/// Mixes the trace's **cached running hash** (which already folds in every
+/// transform-trace step: name, block, and the sampled decision string —
+/// the trace records every decision, so it replays to exactly one
+/// program), the workload identity, the target, and the schedule's
+/// **lazily cached** structural fingerprint (which disambiguates the rare
+/// trace renderings that don't pin the structure, e.g. two reads of the
+/// same buffer).
+///
+/// # O(1) contract
+///
+/// This function is O(1) in trace depth and (amortized) in program size:
+/// the per-step hashing happened incrementally at
+/// [`Trace::push_step`](crate::schedule::trace::Trace::push_step) time and
+/// the fingerprint is computed at most once per schedule instance
+/// ([`Schedule::fingerprint`]), so a lookup touches two cached u64s plus
+/// the workload and target names. Nothing here iterates over trace steps
+/// — keep it that way: the search performs several key computations per
+/// MCTS iteration, and O(depth) keys make aggregate work along a path
+/// quadratic.
 pub fn trace_key(s: &Schedule, target: Target) -> u64 {
-    let mut h = FNV_OFFSET;
+    let mut h = s.trace.running_hash();
     h = fnv_str(h, &s.workload.name);
     h = fnv_str(h, target.name());
-    for step in &s.trace.steps {
-        h = fnv_str(h, &step.name);
-        h = fnv_str(h, &step.block);
-        h = fnv_str(h, &step.detail);
-    }
     fnv_u64(h, s.fingerprint())
 }
 
@@ -141,7 +133,12 @@ impl Default for EvalCache {
 
 impl EvalCache {
     /// Default per-map entry bound: generous for multi-thousand-sample
-    /// searches, small next to the tree itself (~16 B/entry).
+    /// searches, small next to the tree itself. An entry is a u64 (or
+    /// `PredKey` triple) key plus an f64 value — roughly 16–32 B of
+    /// payload, which `HashMap`'s open-addressing table grows to ~1.5–2×
+    /// with control bytes and load-factor slack — so a full latency map
+    /// at this bound costs on the order of 10 MB, not the "~16 B/entry"
+    /// naive figure.
     pub const DEFAULT_CAPACITY: usize = 1 << 18;
 
     pub fn new() -> EvalCache {
@@ -191,16 +188,26 @@ impl EvalCache {
     /// Ground-truth latency for `key`, computing (and caching) via `f` on
     /// a miss.
     pub fn latency_or(&mut self, key: u64, f: impl FnOnce() -> f64) -> f64 {
+        self.latency_or_served(key, f).0
+    }
+
+    /// Like [`EvalCache::latency_or`], but also reports whether the value
+    /// was served from the cache (`true` = hit, `f` never ran). This is
+    /// the authoritative hit signal for callers that account for the cost
+    /// of running `f` — it is returned from the lookup itself rather than
+    /// inferred from counter deltas, so it stays correct no matter how
+    /// many other cache interactions surround the call.
+    pub fn latency_or_served(&mut self, key: u64, f: impl FnOnce() -> f64) -> (f64, bool) {
         if let Some(&v) = self.lat.get(&key) {
             self.stats.hits += 1;
-            return v;
+            return (v, true);
         }
         self.stats.misses += 1;
         let v = f();
         if self.lat.len() < self.max_entries {
             self.lat.insert(key, v);
         }
-        v
+        (v, false)
     }
 
     /// Cost-model predicted latency for `key`, computing (and caching) via
@@ -219,12 +226,25 @@ impl EvalCache {
     }
 }
 
+/// Outcome of one ground-truth measurement: the latency plus whether the
+/// shared cache served it. When `cache_hit` is true no simulator (i.e.
+/// simulated compile-and-run harness) invocation happened, so callers
+/// accounting for harness wall-clock must not charge measurement overhead
+/// for it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measured {
+    pub latency_s: f64,
+    pub cache_hit: bool,
+}
+
 /// The single surface through which the search engine evaluates programs.
 /// See the module docs.
 pub trait Evaluator {
     /// Ground-truth measurement: evaluate on the hardware model, feed the
-    /// learned cost model, advance the incumbent. Returns latency (s).
-    fn measure(&mut self, s: &Schedule) -> f64;
+    /// learned cost model, advance the incumbent. Reports the latency (s)
+    /// and whether the cache served it (see [`Measured`]) — the cost
+    /// model is fed either way, the harness overhead only on a miss.
+    fn measure(&mut self, s: &Schedule) -> Measured;
 
     /// Ground-truth latency *without* training — the deterministic oracle
     /// used in expansion and rollout scoring, served through the cache.
@@ -276,12 +296,15 @@ impl CachedEvaluator {
 }
 
 impl Evaluator for CachedEvaluator {
-    fn measure(&mut self, s: &Schedule) -> f64 {
+    fn measure(&mut self, s: &Schedule) -> Measured {
         let key = trace_key(s, self.sim.target);
         let sim = &self.sim;
-        let lat = self.cache.latency_or(key, || sim.latency(s));
+        let (lat, cache_hit) = self.cache.latency_or_served(key, || sim.latency(s));
         self.cost.observe(s, lat);
-        lat
+        Measured {
+            latency_s: lat,
+            cache_hit,
+        }
     }
 
     fn true_latency(&mut self, s: &Schedule) -> f64 {
@@ -392,12 +415,36 @@ mod tests {
         let mut ev = CachedEvaluator::new(CostModel::new(Target::Cpu, 9), sim);
         let a = ev.measure(&s);
         let b = ev.measure(&s);
-        assert_eq!(a, expect);
-        assert_eq!(b, expect);
+        assert_eq!(a.latency_s, expect);
+        assert_eq!(b.latency_s, expect);
+        // measure reports what actually happened at the harness level:
+        // the first run hit the simulator, the repeat was cache-served
+        assert!(!a.cache_hit);
+        assert!(b.cache_hit);
         // both measures still fed the cost model, only the sim run was
         // deduplicated
         assert_eq!(ev.cost.n_measured, 2);
         assert_eq!(ev.cache_stats().hits, 1);
+    }
+
+    #[test]
+    fn trace_key_reads_cached_hashes() {
+        // trace_key must be a pure function of (running trace hash,
+        // workload, target, fingerprint) — recomputing it on a clone that
+        // shares the trace nodes gives the identical key, and a trace
+        // rebuilt from the same decisions (fresh nodes, same strings) too.
+        let mut rng_a = Rng::new(12);
+        let mut rng_b = Rng::new(12);
+        let a = apply(&base(), TransformKind::TileSize, &mut rng_a, false).unwrap();
+        let b = apply(&base(), TransformKind::TileSize, &mut rng_b, false).unwrap();
+        assert_eq!(a.trace.running_hash(), b.trace.running_hash());
+        assert_eq!(trace_key(&a, Target::Cpu), trace_key(&b, Target::Cpu));
+        // a divergent decision changes the running hash and therefore the
+        // key — built deterministically so the assertion always runs
+        let mut c = a.clone();
+        c.trace.push("sample_perfect_tile", "matmul", "loop=i, decision=[2, 128]".into());
+        assert_ne!(c.trace.running_hash(), a.trace.running_hash());
+        assert_ne!(trace_key(&a, Target::Cpu), trace_key(&c, Target::Cpu));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::schedule::Schedule;
 use crate::sim::Simulator;
 use crate::util::Rng;
 use evalcache::{CacheStats, CachedEvaluator, EvalCache, Evaluator};
+use std::sync::Arc;
 
 /// Next-model routing policy (Appendix G ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,11 +83,24 @@ impl Default for SearchConfig {
 }
 
 /// One tree node: a joint ⟨program, llm⟩ state.
+///
+/// The schedule sits behind an `Arc`: selection, expansion, rollout, and
+/// measurement all borrow or refcount-share it instead of deep-cloning,
+/// and the prompt renderings the node contributes to LLM context
+/// (`code`, `trace_tail`) are computed once here at insertion rather
+/// than re-rendered every iteration the node appears as leaf, parent, or
+/// grandparent.
 #[derive(Clone, Debug)]
 struct Node {
     parent: Option<usize>,
     children: Vec<usize>,
-    schedule: Schedule,
+    schedule: Arc<Schedule>,
+    /// [`print_dominant`] rendering of `schedule`, cached at insertion
+    /// and shared into prompt contexts by refcount.
+    code: Arc<str>,
+    /// `trace.render_tail(PROMPT_TRACE_TAIL)` of `schedule`, cached at
+    /// insertion and shared into prompt contexts by refcount.
+    trace_tail: Arc<str>,
     /// Model assigned to expand this node.
     llm: usize,
     visits: f64,
@@ -178,12 +192,24 @@ pub struct Mcts {
     n_ca_events: usize,
     n_errors: usize,
     best_latency: f64,
-    best_schedule: Schedule,
+    best_schedule: Arc<Schedule>,
     baseline_latency: f64,
     unmeasured: Vec<usize>,
     curve: Vec<(usize, f64)>,
     max_depth: usize,
+    /// `cfg.checkpoints`, sorted and deduped, consumed front-to-back by
+    /// `checkpoint_cursor` — the per-step curve check is O(1) instead of
+    /// scanning the checkpoint list every sample.
+    checkpoints_sorted: Vec<usize>,
+    checkpoint_cursor: usize,
+    /// Scratch buffers reused across `select()` descents (one tree level
+    /// used to allocate two fresh `Vec`s).
+    sel_children: Vec<usize>,
+    sel_stats: Vec<la_uct::ChildStats>,
 }
+
+/// How many trailing trace steps a node contributes to prompt context.
+const PROMPT_TRACE_TAIL: usize = 8;
 
 impl Mcts {
     pub fn new(cfg: SearchConfig, models: ModelSet, sim: Simulator, root: Schedule) -> Mcts {
@@ -204,14 +230,17 @@ impl Mcts {
         let gpu = sim.target.is_gpu();
         let mut eval = CachedEvaluator::with_cache(cost, sim, cache);
         let mut rng = Rng::new(cfg.seed ^ 0x6C17_E600);
-        let baseline_latency = eval.measure(&root);
+        let root = Arc::new(root);
+        let baseline_latency = eval.measure(root.as_ref()).latency_s;
         // start with the largest model driving the root expansion, as a
         // single-model baseline would
         let root_llm = models.largest;
         let root_node = Node {
             parent: None,
             children: Vec::new(),
-            schedule: root.clone(),
+            schedule: Arc::clone(&root),
+            code: print_dominant(root.as_ref(), gpu).into(),
+            trace_tail: root.trace.render_tail(PROMPT_TRACE_TAIL).into(),
             llm: root_llm,
             visits: 1.0,
             reward_sum: 0.5,
@@ -227,11 +256,14 @@ impl Mcts {
         let vocab = TransformKind::vocabulary(gpu);
         for _ in 0..7 {
             let seq: Vec<_> = (0..3).map(|_| *rng.choice(&vocab)).collect();
-            if let Ok(s) = apply_sequence(&root, &seq, &mut rng, gpu) {
+            if let Ok(s) = apply_sequence(root.as_ref(), &seq, &mut rng, gpu) {
                 eval.measure(&s);
             }
         }
         let best_latency = eval.best_latency();
+        let mut checkpoints_sorted = cfg.checkpoints.clone();
+        checkpoints_sorted.sort_unstable();
+        checkpoints_sorted.dedup();
         Mcts {
             cfg,
             models,
@@ -244,11 +276,15 @@ impl Mcts {
             n_ca_events: 0,
             n_errors: 0,
             best_latency,
-            best_schedule: root.clone(),
+            best_schedule: root,
             baseline_latency,
             unmeasured: Vec::new(),
             curve: Vec::new(),
             max_depth: 24,
+            checkpoints_sorted,
+            checkpoint_cursor: 0,
+            sel_children: Vec::new(),
+            sel_stats: Vec::new(),
         }
     }
 
@@ -261,44 +297,51 @@ impl Mcts {
     }
 
     /// LA-UCT descent: walk from the root until a node with spare
-    /// branching capacity (or the depth cap).
+    /// branching capacity (or the depth cap). Reuses the engine's scratch
+    /// buffers — a descent allocates nothing.
     fn select(&mut self) -> usize {
+        let mut kids = std::mem::take(&mut self.sel_children);
+        let mut stats = std::mem::take(&mut self.sel_stats);
         let mut cur = 0usize;
         loop {
-            let node = &self.nodes[cur];
-            let live_children: Vec<usize> = node
-                .children
-                .iter()
-                .copied()
-                .filter(|&c| !self.nodes[c].pruned)
-                .collect();
-            if live_children.len() < self.cfg.branching || node.depth >= self.max_depth {
-                return cur;
+            kids.clear();
+            kids.extend(
+                self.nodes[cur]
+                    .children
+                    .iter()
+                    .copied()
+                    .filter(|&c| !self.nodes[c].pruned),
+            );
+            if kids.len() < self.cfg.branching || self.nodes[cur].depth >= self.max_depth {
+                break;
             }
-            let stats: Vec<la_uct::ChildStats> = live_children
-                .iter()
-                .map(|&c| la_uct::ChildStats {
-                    visits: self.nodes[c].visits,
-                    reward_sum: self.nodes[c].reward_sum,
-                    phi_small: self.phi(self.nodes[c].llm),
-                })
-                .collect();
+            stats.clear();
+            stats.extend(kids.iter().map(|&c| la_uct::ChildStats {
+                visits: self.nodes[c].visits,
+                reward_sum: self.nodes[c].reward_sum,
+                phi_small: self.phi(self.nodes[c].llm),
+            }));
             let pick = la_uct::select(
                 &stats,
-                node.visits,
+                self.nodes[cur].visits,
                 self.cfg.lambda,
                 self.cfg.exploration_c,
             );
-            cur = live_children[pick];
+            cur = kids[pick];
         }
+        self.sel_children = kids;
+        self.sel_stats = stats;
+        cur
     }
 
     fn prompt_ctx(&self, node_idx: usize) -> PromptCtx {
         let gpu = self.eval.target().is_gpu();
         let node = &self.nodes[node_idx];
+        // code / trace_tail were rendered once when the node was inserted;
+        // sharing them here is a refcount bump, not a string copy
         let variant = |i: usize| VariantCtx {
-            code: print_dominant(&self.nodes[i].schedule, gpu),
-            trace_tail: self.nodes[i].schedule.trace.render_tail(8),
+            code: Arc::clone(&self.nodes[i].code),
+            trace_tail: Arc::clone(&self.nodes[i].trace_tail),
             score: self.nodes[i].predicted_score,
         };
         let parent_idx = node.parent;
@@ -345,7 +388,9 @@ impl Mcts {
         // ---- expansion: query the active LLM ---------------------------
         let ctx = self.prompt_ctx(leaf);
         let active = self.nodes[leaf].llm;
-        let parent_sched = self.nodes[leaf].schedule.clone();
+        // refcount bump, not a deep copy: the node keeps its program, the
+        // expansion borrows it
+        let parent_sched = Arc::clone(&self.nodes[leaf].schedule);
         // The model's internal deliberation scores candidate sequences by
         // reading the program: emulated as a blend of the learned cost
         // model and the analytic performance model (an LLM reasons about
@@ -357,7 +402,7 @@ impl Mcts {
         let mut eval_rng = self.rng.fork(self.samples as u64);
         let eval = &mut self.eval;
         let mut score_fn = |seq: &[TransformKind]| -> f64 {
-            match apply_sequence(&parent_sched, seq, &mut eval_rng, gpu) {
+            match apply_sequence(parent_sched.as_ref(), seq, &mut eval_rng, gpu) {
                 Ok(s) => {
                     let reasoned = (best_lat / eval.true_latency(&s)).clamp(0.0, 1.5);
                     0.4 * eval.score(&s) + 0.6 * reasoned
@@ -370,8 +415,12 @@ impl Mcts {
                 .propose(active, &ctx, CallKind::Regular, &[], &mut score_fn, &mut self.rng);
         self.n_errors += proposal.n_errors;
 
-        let child_sched = match apply_sequence(&parent_sched, &proposal.transforms, &mut self.rng, gpu)
-        {
+        let child_sched = match apply_sequence(
+            parent_sched.as_ref(),
+            &proposal.transforms,
+            &mut self.rng,
+            gpu,
+        ) {
             Ok(s) => s,
             Err(_) => return true, // nothing applicable; spend no sample
         };
@@ -416,7 +465,7 @@ impl Mcts {
             let mut eval_rng = self.rng.fork(self.samples as u64 ^ 0xCA);
             let eval = &mut self.eval;
             let mut ca_score_fn = |seq: &[TransformKind]| -> f64 {
-                match apply_sequence(&parent_sched, seq, &mut eval_rng, gpu) {
+                match apply_sequence(parent_sched.as_ref(), seq, &mut eval_rng, gpu) {
                     Ok(s) => {
                         let reasoned = (best_lat / eval.true_latency(&s)).clamp(0.0, 1.5);
                         0.4 * eval.score(&s) + 0.6 * reasoned
@@ -433,7 +482,7 @@ impl Mcts {
                 &mut self.rng,
             );
             self.n_errors += ca_prop.n_errors;
-            match apply_sequence(&parent_sched, &ca_prop.transforms, &mut self.rng, gpu) {
+            match apply_sequence(parent_sched.as_ref(), &ca_prop.transforms, &mut self.rng, gpu) {
                 Ok(s) => {
                     let sc = self.eval.score(&s);
                     if sc >= parent_score {
@@ -457,10 +506,16 @@ impl Mcts {
         // ---- insert child -------------------------------------------------
         let depth = self.nodes[leaf].depth + 1;
         let child_idx = self.nodes.len();
+        // render prompt context once, at insertion (re-used every time
+        // this node later appears as current/parent/grandparent)
+        let code: Arc<str> = print_dominant(&final_sched, gpu).into();
+        let trace_tail: Arc<str> = final_sched.trace.render_tail(PROMPT_TRACE_TAIL).into();
         self.nodes.push(Node {
             parent: Some(leaf),
             children: Vec::new(),
-            schedule: final_sched,
+            schedule: Arc::new(final_sched),
+            code,
+            trace_tail,
             llm: final_llm,
             visits: 0.0,
             reward_sum: 0.0,
@@ -476,7 +531,8 @@ impl Mcts {
         self.samples += 1;
 
         // ---- rollout --------------------------------------------------------
-        let mut roll = self.nodes[child_idx].schedule.clone();
+        // CoW clone: O(blocks) pointer copies, not a deep program copy
+        let mut roll = (*self.nodes[child_idx].schedule).clone();
         let vocab = TransformKind::vocabulary(gpu);
         for _ in 0..self.cfg.rollout_depth {
             let k = *self.rng.choice(&vocab);
@@ -499,10 +555,18 @@ impl Mcts {
         if self.samples % self.cfg.measure_interval == 0 || self.samples >= self.cfg.budget {
             self.measure_batch();
         }
-        // curve checkpoints
-        if self.cfg.checkpoints.contains(&self.samples) {
-            let sp = self.baseline_latency / self.best_latency;
-            self.curve.push((self.samples, sp));
+        // curve checkpoints: `samples` grows by one per spent sample, so a
+        // sorted cursor replaces the per-step O(checkpoints) list scan;
+        // passed (sub-sample-count) checkpoints are skipped exactly like
+        // the scan skipped them.
+        while self.checkpoint_cursor < self.checkpoints_sorted.len()
+            && self.checkpoints_sorted[self.checkpoint_cursor] <= self.samples
+        {
+            if self.checkpoints_sorted[self.checkpoint_cursor] == self.samples {
+                let sp = self.baseline_latency / self.best_latency;
+                self.curve.push((self.samples, sp));
+            }
+            self.checkpoint_cursor += 1;
         }
         true
     }
@@ -521,12 +585,18 @@ impl Mcts {
             .drain(..self.cfg.measure_top_k.min(self.unmeasured.len()))
             .collect();
         for idx in take {
-            let lat = self.eval.measure(&self.nodes[idx].schedule);
+            let m = self.eval.measure(&*self.nodes[idx].schedule);
             self.nodes[idx].measured = true;
-            self.measure_time_s += self.cfg.measure_overhead_s;
-            if lat < self.best_latency {
-                self.best_latency = lat;
-                self.best_schedule = self.nodes[idx].schedule.clone();
+            // harness overhead (simulated compile+run wall-clock) is only
+            // charged when the simulator actually ran — a measurement
+            // served by the shared eval cache costs no harness time, so
+            // warm-cache searches report honest compile_time_s
+            if !m.cache_hit {
+                self.measure_time_s += self.cfg.measure_overhead_s;
+            }
+            if m.latency_s < self.best_latency {
+                self.best_latency = m.latency_s;
+                self.best_schedule = Arc::clone(&self.nodes[idx].schedule);
             }
         }
         self.unmeasured.clear(); // stale predictions aren't re-ranked
@@ -558,7 +628,9 @@ impl Mcts {
         if !curve.iter().any(|&(s, _)| s == self.samples) {
             curve.push((self.samples, final_speedup));
         }
-        fill_missing_checkpoints(&mut curve, &self.cfg.checkpoints, final_speedup);
+        // use the same normalized (sorted, deduped) checkpoint list the
+        // step() cursor consumed — one source of truth for the curve grid
+        fill_missing_checkpoints(&mut curve, &self.checkpoints_sorted, final_speedup);
         let result = SearchResult {
             workload: workload_name.to_string(),
             best_speedup: final_speedup,
@@ -578,7 +650,7 @@ impl Mcts {
                 .map(|(m, s)| (m.name.to_string(), s.regular_calls, s.ca_calls))
                 .collect(),
             eval_cache: self.eval.cache_stats(),
-            best_schedule: self.best_schedule,
+            best_schedule: (*self.best_schedule).clone(),
         };
         (result, self.eval.into_cache())
     }
@@ -737,6 +809,68 @@ mod tests {
         assert_eq!(r.best_speedup, baseline.best_speedup);
         assert_eq!(r.curve, baseline.curve);
         assert_eq!(r.api_cost_usd, baseline.api_cost_usd);
+    }
+
+    #[test]
+    fn warm_cache_search_reports_honest_compile_time() {
+        // a measurement served by the shared cache runs no simulator, so
+        // it must not be charged measure_overhead_s
+        let mk = |cache: EvalCache| {
+            let sched = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+            let models = ModelSet::new(paper_config(2, "gpt-5.2"));
+            let sim = Simulator::new(Target::Cpu);
+            Mcts::with_cache(quick_cfg(40, 21), models, sim, sched, cache)
+        };
+        let (cold, cache) = mk(EvalCache::new()).run_with_cache("gemm");
+        let (warm, _) = mk(cache).run_with_cache("gemm");
+        // caching stays observationally transparent on the search outcome
+        assert_eq!(warm.best_speedup, cold.best_speedup);
+        assert_eq!(warm.curve, cold.curve);
+        // but the warm run's harness time is honest: every ground-truth
+        // measurement was cache-served, so only LLM latency remains
+        assert!(
+            warm.compile_time_s < cold.compile_time_s,
+            "warm {} !< cold {}",
+            warm.compile_time_s,
+            cold.compile_time_s
+        );
+        assert_eq!(warm.api_cost_usd, cold.api_cost_usd);
+    }
+
+    #[test]
+    fn unsorted_duplicate_checkpoints_recorded_once_in_order() {
+        let sched = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+        let models = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let sim = Simulator::new(Target::Cpu);
+        let cfg = SearchConfig {
+            budget: 30,
+            seed: 9,
+            checkpoints: vec![30, 10, 10, 20],
+            ..SearchConfig::default()
+        };
+        let r = Mcts::new(cfg, models, sim, sched).run("gemm");
+        let samples: Vec<usize> = r.curve.iter().map(|&(s, _)| s).collect();
+        assert_eq!(samples, vec![10, 20, 30], "curve {:?}", r.curve);
+    }
+
+    #[test]
+    fn deterministic_at_depth_with_rollout_and_ca() {
+        // transparency of the CoW/Arc/caching refactor: a fixed-seed
+        // search that exercises deep selection, rollouts, and the
+        // course-alteration path is bit-for-bit repeatable (same
+        // configuration as course_alteration_fires, which pins that this
+        // seed triggers CA)
+        let a = run_search(8, 150, 4);
+        let b = run_search(8, 150, 4);
+        assert!(a.n_ca_events > 0, "CA path never exercised");
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.eval_cache, b.eval_cache);
+        assert_eq!(a.call_counts, b.call_counts);
+        assert_eq!(a.compile_time_s, b.compile_time_s);
+        assert_eq!(a.api_cost_usd, b.api_cost_usd);
+        assert_eq!(a.n_samples, b.n_samples);
+        assert_eq!(a.best_schedule.trace.running_hash(), b.best_schedule.trace.running_hash());
     }
 
     #[test]

@@ -5,13 +5,19 @@
 //! semantic-preserving structural rewrites recorded in a replayable
 //! [`trace`]. The materialized loop nest ([`LoopNest`]) is what the
 //! simulator evaluates and the printer renders into prompt context.
+//!
+//! Schedules are **copy-on-write**: per-block state sits behind `Arc`s,
+//! so cloning a schedule copies pointers and applying a transform clones
+//! only the block it mutates (via [`Schedule::block_mut`]). Together with
+//! the persistent [`trace`] this makes the search's pervasive
+//! clone-then-extend pattern O(1) + O(one block) instead of O(program).
 
 pub mod transforms;
 pub mod trace;
 pub mod printer;
 
 use crate::tir::{AxisKind, Workload};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Annotation on one materialized loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -219,24 +225,47 @@ impl LoopNest {
 }
 
 /// A scheduled program: the MCTS search state's "program" component.
+///
+/// Cloning is cheap (copy-on-write): `blocks` holds `Arc`s, the trace is
+/// a persistent list, and the structural fingerprint is lazily cached.
+/// All mutation of block state must go through [`Schedule::block_mut`],
+/// which clones only the target block and invalidates the fingerprint.
 #[derive(Clone, Debug)]
 pub struct Schedule {
     pub workload: Arc<Workload>,
-    pub blocks: Vec<BlockSched>,
+    /// Per-block schedule state, shared with ancestor schedules until
+    /// mutated. Read through plain indexing (`&s.blocks[b]` auto-derefs);
+    /// write ONLY through [`Schedule::block_mut`] — writing through the
+    /// `Arc` directly (e.g. `Arc::make_mut`) would leave the cached
+    /// fingerprint stale and corrupt evaluation-cache keys, which is why
+    /// this field is crate-private.
+    pub(crate) blocks: Vec<Arc<BlockSched>>,
     pub trace: trace::Trace,
+    /// Lazily computed structural fingerprint; reset on mutation.
+    fp: OnceLock<u64>,
 }
 
 impl Schedule {
     /// The unoptimized program p1.
     pub fn initial(workload: Arc<Workload>) -> Schedule {
         let blocks = (0..workload.blocks.len())
-            .map(|b| BlockSched::default_for(&workload, b))
+            .map(|b| Arc::new(BlockSched::default_for(&workload, b)))
             .collect();
         Schedule {
             workload,
             blocks,
             trace: trace::Trace::default(),
+            fp: OnceLock::new(),
         }
+    }
+
+    /// Mutable access to one block's schedule state. Copy-on-write: if the
+    /// block is shared with another schedule (the common case — every
+    /// child shares its parent's unchanged blocks), only that block is
+    /// cloned. Also invalidates the cached structural fingerprint.
+    pub fn block_mut(&mut self, block: usize) -> &mut BlockSched {
+        self.fp = OnceLock::new();
+        Arc::make_mut(&mut self.blocks[block])
     }
 
     /// Materialize the loop nest of `block` for this target.
@@ -279,17 +308,23 @@ impl Schedule {
         Ok(())
     }
 
-    /// A cheap structural fingerprint (used for dedup in search).
+    /// A cheap structural fingerprint (used for dedup in search). Lazily
+    /// computed once per schedule instance and cached — repeated
+    /// evaluation-cache lookups on the same schedule pay O(1); the cache
+    /// is invalidated by [`Schedule::block_mut`] and carried across
+    /// clones (clones are structurally identical by construction).
     pub fn fingerprint(&self) -> u64 {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        for bs in &self.blocks {
-            bs.tiles.hash(&mut h);
-            bs.order.hash(&mut h);
-            (bs.parallel, bs.thread_tiles, bs.vectorize, bs.unroll).hash(&mut h);
-            (bs.cache_write, &bs.cache_reads, bs.compute_at, bs.decomposed).hash(&mut h);
-        }
-        h.finish()
+        *self.fp.get_or_init(|| {
+            use std::hash::{Hash, Hasher};
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            for bs in &self.blocks {
+                bs.tiles.hash(&mut h);
+                bs.order.hash(&mut h);
+                (bs.parallel, bs.thread_tiles, bs.vectorize, bs.unroll).hash(&mut h);
+                (bs.cache_write, &bs.cache_reads, bs.compute_at, bs.decomposed).hash(&mut h);
+            }
+            h.finish()
+        })
     }
 }
 
@@ -312,10 +347,10 @@ mod tests {
     #[test]
     fn retile_keeps_permutation() {
         let mut s = sched();
-        s.blocks[0].retile(0, vec![4, 4, 4]);
+        s.block_mut(0).retile(0, vec![4, 4, 4]);
         s.validate().unwrap();
         assert_eq!(s.blocks[0].n_loops(), 5);
-        s.blocks[0].retile(0, vec![64]);
+        s.block_mut(0).retile(0, vec![64]);
         s.validate().unwrap();
         assert_eq!(s.blocks[0].n_loops(), 3);
     }
@@ -323,12 +358,12 @@ mod tests {
     #[test]
     fn loop_nest_kinds() {
         let mut s = sched();
-        s.blocks[0].retile(0, vec![8, 8]);
-        s.blocks[0].retile(1, vec![8, 8]);
-        s.blocks[0].parallel = 2;
-        s.blocks[0].vectorize = true;
+        s.block_mut(0).retile(0, vec![8, 8]);
+        s.block_mut(0).retile(1, vec![8, 8]);
+        s.block_mut(0).parallel = 2;
+        s.block_mut(0).vectorize = true;
         // order: i0 i1 j0 j1 k -> reorder so spatial j1 is innermost
-        s.blocks[0].order = vec![(0, 0), (1, 0), (0, 1), (2, 0), (1, 1)];
+        s.block_mut(0).order = vec![(0, 0), (1, 0), (0, 1), (2, 0), (1, 1)];
         let nest = s.loop_nest(0, false);
         assert_eq!(nest.parallel_extent(), 64);
         assert_eq!(nest.vector_lanes(), 8);
@@ -338,8 +373,8 @@ mod tests {
     #[test]
     fn reduction_never_parallel_or_vector() {
         let mut s = sched();
-        s.blocks[0].parallel = 3; // would cover k
-        s.blocks[0].vectorize = true; // innermost is k
+        s.block_mut(0).parallel = 3; // would cover k
+        s.block_mut(0).vectorize = true; // innermost is k
         let nest = s.loop_nest(0, false);
         let k_loop = nest.loops.iter().find(|l| l.is_reduction).unwrap();
         assert_eq!(k_loop.kind, LoopKind::Serial);
@@ -348,11 +383,11 @@ mod tests {
     #[test]
     fn gpu_thread_binding() {
         let mut s = sched();
-        s.blocks[0].retile(0, vec![8, 8]);
-        s.blocks[0].retile(1, vec![8, 8]);
-        s.blocks[0].order = vec![(0, 0), (1, 0), (0, 1), (1, 1), (2, 0)];
-        s.blocks[0].parallel = 2;
-        s.blocks[0].thread_tiles = 2;
+        s.block_mut(0).retile(0, vec![8, 8]);
+        s.block_mut(0).retile(1, vec![8, 8]);
+        s.block_mut(0).order = vec![(0, 0), (1, 0), (0, 1), (1, 1), (2, 0)];
+        s.block_mut(0).parallel = 2;
+        s.block_mut(0).thread_tiles = 2;
         let nest = s.loop_nest(0, true);
         assert_eq!(nest.parallel_extent(), 64); // blockIdx product
         assert_eq!(nest.thread_extent(), 64);
@@ -362,14 +397,38 @@ mod tests {
     fn fingerprints_differ() {
         let a = sched();
         let mut b = sched();
-        b.blocks[0].vectorize = true;
+        b.block_mut(0).vectorize = true;
         assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_cached_and_invalidated_on_mutation() {
+        let mut s = sched();
+        let f0 = s.fingerprint();
+        assert_eq!(s.fingerprint(), f0); // cached value is stable
+        assert_eq!(s.clone().fingerprint(), f0); // clones carry the cache
+        s.block_mut(0).vectorize = true;
+        let f1 = s.fingerprint();
+        assert_ne!(f0, f1, "block_mut must invalidate the cache");
+        s.block_mut(0).vectorize = false;
+        assert_eq!(s.fingerprint(), f0, "fingerprint is structural");
+    }
+
+    #[test]
+    fn clone_is_copy_on_write() {
+        let a = sched();
+        let mut b = a.clone();
+        assert!(Arc::ptr_eq(&a.blocks[0], &b.blocks[0]), "clone shares blocks");
+        b.block_mut(0).parallel = 2;
+        assert!(!Arc::ptr_eq(&a.blocks[0], &b.blocks[0]), "mutation unshares");
+        assert_eq!(a.blocks[0].parallel, 0, "original untouched");
+        assert_eq!(b.blocks[0].parallel, 2);
     }
 
     #[test]
     fn validate_catches_bad_factors() {
         let mut s = sched();
-        s.blocks[0].tiles[0] = vec![3, 5]; // 15 != 64
+        s.block_mut(0).tiles[0] = vec![3, 5]; // 15 != 64
         assert!(s.validate().is_err());
     }
 }

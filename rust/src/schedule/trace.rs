@@ -1,18 +1,97 @@
 //! Transformation trace: the replayable history attached to every
 //! schedule, rendered into LLM prompt context exactly like the paper's
 //! `sch.sample_perfect_tile(loop=j, decision=[1, 64, 1, 64])` lines.
+//!
+//! # Representation: a persistent cons list
+//!
+//! A [`Trace`] is a singly linked list of [`TraceStep`]s stored
+//! newest-first behind [`Arc`]s, so the search hot loop pays O(1) for the
+//! two operations it performs constantly:
+//!
+//! * **clone** — copying a trace copies one `Option<Arc<..>>`; every
+//!   child schedule structurally shares its parent's entire prefix
+//!   (exactly the shape of the shared MCTS tree, where thousands of
+//!   nodes extend common transformation prefixes);
+//! * **push** — appending allocates one node and extends the cached
+//!   running FNV-1a hash by the new step's three strings, so
+//!   [`Trace::running_hash`] is always available without iterating.
+//!
+//! The running hash is what makes the evaluation cache's
+//! [`trace_key`](crate::mcts::evalcache::trace_key) O(1) in trace depth:
+//! it folds in the precomputed hash instead of re-hashing three strings
+//! per step per lookup. Transform and block names are interned as
+//! `Arc<str>` (they come from tiny fixed vocabularies), so a step costs
+//! two refcount bumps plus its unique decision string.
 
+use std::cell::RefCell;
+use std::collections::HashSet;
 use std::fmt;
+use std::sync::Arc;
+
+/// FNV-1a offset basis — also the running hash of an empty trace.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold a string into an FNV-1a state, with a field separator so
+/// ("ab","c") and ("a","bc") hash differently.
+pub fn fnv_str(mut h: u64, s: &str) -> u64 {
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h ^= 0x1f;
+    h.wrapping_mul(FNV_PRIME)
+}
+
+/// Fold a u64 into an FNV-1a state byte by byte.
+pub fn fnv_u64(mut h: u64, x: u64) -> u64 {
+    for i in 0..8 {
+        h ^= (x >> (8 * i)) & 0xff;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Intern a name into a shared `Arc<str>`. Transform and block names come
+/// from tiny fixed vocabularies, so each distinct string is allocated once
+/// per thread and every trace step after that is a refcount bump.
+pub fn intern(s: &str) -> Arc<str> {
+    thread_local! {
+        static POOL: RefCell<HashSet<Arc<str>>> = RefCell::new(HashSet::new());
+    }
+    POOL.with(|p| {
+        let mut m = p.borrow_mut();
+        // Arc<str>: Borrow<str>, so the set is queryable by &str — each
+        // distinct name is allocated exactly once per thread
+        if let Some(a) = m.get(s) {
+            return a.clone();
+        }
+        let a: Arc<str> = Arc::from(s);
+        m.insert(a.clone());
+        a
+    })
+}
 
 /// One applied transformation with its sampled decisions.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceStep {
-    /// Canonical transform name (the names exposed to LLMs).
-    pub name: String,
-    /// Target block name.
-    pub block: String,
+    /// Canonical transform name (the names exposed to LLMs), interned.
+    pub name: Arc<str>,
+    /// Target block name, interned.
+    pub block: Arc<str>,
     /// Rendered decision string, e.g. `loop=j, decision=[2, 32, 2, 32]`.
     pub detail: String,
+}
+
+impl TraceStep {
+    pub fn new(name: &str, block: &str, detail: String) -> TraceStep {
+        TraceStep {
+            name: intern(name),
+            block: intern(block),
+            detail,
+        }
+    }
 }
 
 impl fmt::Display for TraceStep {
@@ -21,37 +100,125 @@ impl fmt::Display for TraceStep {
     }
 }
 
-/// The full history of a schedule (ordered).
-#[derive(Clone, Debug, Default, PartialEq)]
+/// One cons cell: the newest step plus the shared prefix, carrying the
+/// cached length and running hash of everything up to and including it.
+#[derive(Debug)]
+struct TraceNode {
+    step: TraceStep,
+    prev: Option<Arc<TraceNode>>,
+    len: usize,
+    hash: u64,
+}
+
+/// The full history of a schedule (ordered oldest → newest), stored as a
+/// persistent newest-first cons list. See the module docs for why.
+#[derive(Clone, Debug, Default)]
 pub struct Trace {
-    pub steps: Vec<TraceStep>,
+    head: Option<Arc<TraceNode>>,
 }
 
 impl Trace {
+    /// Append a step (interning the name and block). O(1).
     pub fn push(&mut self, name: &str, block: &str, detail: String) {
-        self.steps.push(TraceStep {
-            name: name.to_string(),
-            block: block.to_string(),
-            detail,
-        });
+        self.push_step(TraceStep::new(name, block, detail));
     }
 
+    /// Append an already-built step. O(1): one node allocation plus
+    /// folding the step's three strings into the cached running hash.
+    pub fn push_step(&mut self, step: TraceStep) {
+        let (prev_len, prev_hash) = match &self.head {
+            Some(n) => (n.len, n.hash),
+            None => (0, FNV_OFFSET),
+        };
+        let mut h = fnv_str(prev_hash, &step.name);
+        h = fnv_str(h, &step.block);
+        h = fnv_str(h, &step.detail);
+        self.head = Some(Arc::new(TraceNode {
+            step,
+            prev: self.head.take(),
+            len: prev_len + 1,
+            hash: h,
+        }));
+    }
+
+    /// Number of steps. O(1) (cached in the head node).
     pub fn len(&self) -> usize {
-        self.steps.len()
+        self.head.as_ref().map_or(0, |n| n.len)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.steps.is_empty()
+        self.head.is_none()
+    }
+
+    /// The cached running FNV-1a hash over every step's (name, block,
+    /// detail), in order; [`FNV_OFFSET`] for an empty trace. O(1) — this
+    /// is the value [`trace_key`](crate::mcts::evalcache::trace_key)
+    /// builds on. Stable across clones (clones share the same nodes) and
+    /// equal for traces built step-by-step from equal strings.
+    pub fn running_hash(&self) -> u64 {
+        self.head.as_ref().map_or(FNV_OFFSET, |n| n.hash)
+    }
+
+    /// Iterate steps newest → oldest (the list's native order).
+    pub fn iter_rev(&self) -> impl Iterator<Item = &TraceStep> {
+        std::iter::successors(self.head.as_deref(), |n| n.prev.as_deref()).map(|n| &n.step)
+    }
+
+    /// Owned steps in application order (oldest → newest). O(len) — for
+    /// tests and offline inspection, not the hot loop.
+    pub fn steps(&self) -> Vec<TraceStep> {
+        let mut v: Vec<TraceStep> = self.iter_rev().cloned().collect();
+        v.reverse();
+        v
     }
 
     /// Render the last `n` steps (prompt context shows a bounded history).
     pub fn render_tail(&self, n: usize) -> String {
-        let start = self.steps.len().saturating_sub(n);
-        self.steps[start..]
-            .iter()
-            .map(|s| s.to_string())
-            .collect::<Vec<_>>()
-            .join("\n")
+        let mut lines: Vec<String> = self.iter_rev().take(n).map(|s| s.to_string()).collect();
+        lines.reverse();
+        lines.join("\n")
+    }
+}
+
+impl PartialEq for Trace {
+    fn eq(&self, other: &Self) -> bool {
+        if self.len() != other.len() {
+            return false;
+        }
+        let mut a = self.head.as_deref();
+        let mut b = other.head.as_deref();
+        while let (Some(x), Some(y)) = (a, b) {
+            if std::ptr::eq(x, y) {
+                // shared suffix of the walk = shared prefix of the trace
+                return true;
+            }
+            if x.step != y.step {
+                return false;
+            }
+            a = x.prev.as_deref();
+            b = y.prev.as_deref();
+        }
+        true
+    }
+}
+
+impl Drop for Trace {
+    /// Iterative teardown of uniquely-owned chain segments so dropping a
+    /// deep trace never recurses (the derived drop would unwind one stack
+    /// frame per step).
+    fn drop(&mut self) {
+        let mut cur = self.head.take();
+        while let Some(node) = cur {
+            // into_inner (not try_unwrap) so that when two threads race to
+            // drop a shared suffix, exactly one of them receives the node
+            // and keeps tearing down iteratively — the other sees None and
+            // stops with nothing left to drop recursively.
+            match Arc::into_inner(node) {
+                Some(mut n) => cur = n.prev.take(),
+                // the rest of the chain is shared — its owner tears it down
+                None => break,
+            }
+        }
     }
 }
 
@@ -85,5 +252,90 @@ mod tests {
         assert_eq!(tail.lines().count(), 3);
         assert!(tail.contains("depth=9"));
         assert!(!tail.contains("depth=6"));
+    }
+
+    #[test]
+    fn display_matches_full_tail_and_order() {
+        let mut t = Trace::default();
+        t.push("parallel", "b", "num_loops=2".into());
+        t.push("unroll", "b", "depth=1".into());
+        assert_eq!(t.to_string(), t.render_tail(usize::MAX));
+        // oldest step renders first
+        let first = t.to_string().lines().next().unwrap().to_string();
+        assert!(first.contains("parallel"), "{first}");
+        assert_eq!(t.steps()[0].detail, "num_loops=2");
+        assert_eq!(t.steps()[1].detail, "depth=1");
+    }
+
+    #[test]
+    fn hash_stable_across_clones_and_rebuilds() {
+        let mut a = Trace::default();
+        a.push("unroll", "b", "depth=1".into());
+        a.push("vectorize", "b", "lanes=8".into());
+        let cloned = a.clone();
+        assert_eq!(a.running_hash(), cloned.running_hash());
+        // a trace rebuilt from the same strings hashes identically even
+        // though it shares no nodes
+        let mut rebuilt = Trace::default();
+        rebuilt.push("unroll", "b", "depth=1".into());
+        rebuilt.push("vectorize", "b", "lanes=8".into());
+        assert_eq!(a.running_hash(), rebuilt.running_hash());
+        assert_eq!(a, rebuilt);
+    }
+
+    #[test]
+    fn divergent_prefixes_hash_differently() {
+        let mut base = Trace::default();
+        base.push("unroll", "b", "depth=1".into());
+        let mut x = base.clone();
+        let mut y = base.clone();
+        x.push("vectorize", "b", "lanes=8".into());
+        y.push("vectorize", "b", "lanes=16".into());
+        assert_ne!(x.running_hash(), y.running_hash());
+        assert_ne!(x, y);
+        // field boundaries matter: ("ab","c") != ("a","bc")
+        let mut p = Trace::default();
+        p.push("ab", "c", "d".into());
+        let mut q = Trace::default();
+        q.push("a", "bc", "d".into());
+        assert_ne!(p.running_hash(), q.running_hash());
+        // empty trace hashes to the offset basis
+        assert_eq!(Trace::default().running_hash(), FNV_OFFSET);
+    }
+
+    #[test]
+    fn clone_is_persistent() {
+        let mut a = Trace::default();
+        a.push("unroll", "b", "depth=1".into());
+        let snapshot = a.clone();
+        a.push("parallel", "b", "num_loops=2".into());
+        // the clone still sees only its own prefix
+        assert_eq!(snapshot.len(), 1);
+        assert_eq!(a.len(), 2);
+        assert_ne!(snapshot.running_hash(), a.running_hash());
+        // equality walks shared structure (prefix nodes are the same Arcs)
+        assert_eq!(snapshot, {
+            let mut t = Trace::default();
+            t.push("unroll", "b", "depth=1".into());
+            t
+        });
+    }
+
+    #[test]
+    fn interning_dedups_names() {
+        let a = TraceStep::new("unroll", "matmul", "d=1".into());
+        let b = TraceStep::new("unroll", "matmul", "d=2".into());
+        assert!(Arc::ptr_eq(&a.name, &b.name));
+        assert!(Arc::ptr_eq(&a.block, &b.block));
+    }
+
+    #[test]
+    fn deep_trace_drops_without_overflow() {
+        let mut t = Trace::default();
+        for i in 0..50_000 {
+            t.push("unroll", "b", format!("depth={i}"));
+        }
+        assert_eq!(t.len(), 50_000);
+        drop(t); // must not recurse 50k frames
     }
 }

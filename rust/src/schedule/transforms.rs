@@ -117,9 +117,12 @@ fn pick_block(s: &Schedule, rng: &mut Rng) -> usize {
 /// schedule (with the step appended to its trace) or an explanation of why
 /// the transform is inapplicable (not an LLM error — a structural no-fit).
 pub fn apply(s: &Schedule, kind: TransformKind, rng: &mut Rng, gpu: bool) -> Result<Schedule, String> {
+    // Cloning is cheap: blocks are copy-on-write (only the block the
+    // transform touches is deep-cloned, via Schedule::block_mut) and the
+    // trace is a persistent list extended in O(1).
     let mut out = s.clone();
     let step = apply_in_place(&mut out, kind, rng, gpu)?;
-    out.trace.steps.push(step);
+    out.trace.push_step(step);
     Ok(out)
 }
 
@@ -141,20 +144,22 @@ fn apply_in_place(
             }
             let parts = 2 + rng.below(3); // 2..=4 tile levels
             let factors = sample_perfect_tile(rng, extent, parts);
-            s.blocks[b].retile(ax, factors.clone());
-            Ok(TraceStep {
-                name: "sample_perfect_tile".into(),
-                block: blk.name.clone(),
-                detail: format!("loop={}, decision={:?}", blk.axes[ax].name, factors),
-            })
+            s.block_mut(b).retile(ax, factors.clone());
+            Ok(TraceStep::new(
+                "sample_perfect_tile",
+                &blk.name,
+                format!("loop={}, decision={:?}", blk.axes[ax].name, factors),
+            ))
         }
         TransformKind::Reorder => {
             let b = pick_block(s, rng);
             let blk = &wl.blocks[b];
-            let bs = &mut s.blocks[b];
-            if bs.order.len() < 3 {
+            // applicability through the read path — block_mut would pay a
+            // CoW block clone even on an immediate Err
+            if s.blocks[b].order.len() < 3 {
                 return Err("too few loops to reorder".into());
             }
+            let bs = s.block_mut(b);
             // Good-practice shuffle: keep level-0 loops outermost-ish,
             // permute the rest. Sample: sort by level with random
             // tie-breaking among same-level loops.
@@ -166,24 +171,22 @@ fn apply_in_place(
             keyed.sort_by_key(|&(l, r, _)| (l, r));
             bs.order = keyed.into_iter().map(|(_, _, al)| al).collect();
             bs.clamp_annotations();
-            Ok(TraceStep {
-                name: "reorder".into(),
-                block: blk.name.clone(),
-                detail: format!(
-                    "order={:?}",
-                    bs.order
-                        .iter()
-                        .map(|&(a, l)| format!("{}_{}", blk.axes[a].name, l))
-                        .collect::<Vec<_>>()
-                ),
-            })
+            let detail = format!(
+                "order={:?}",
+                bs.order
+                    .iter()
+                    .map(|&(a, l)| format!("{}_{}", blk.axes[a].name, l))
+                    .collect::<Vec<_>>()
+            );
+            Ok(TraceStep::new("reorder", &blk.name, detail))
         }
         TransformKind::Parallel => {
             let b = pick_block(s, rng);
             let blk = &wl.blocks[b];
-            let bs = &mut s.blocks[b];
-            // bring up to `np` spatial loops to the front and parallelize
-            let spatial_positions: Vec<usize> = bs
+            // bring up to `np` spatial loops to the front and parallelize;
+            // find them through the read path so an inapplicable attempt
+            // doesn't pay the CoW block clone
+            let spatial_positions: Vec<usize> = s.blocks[b]
                 .order
                 .iter()
                 .enumerate()
@@ -193,6 +196,7 @@ fn apply_in_place(
             if spatial_positions.is_empty() {
                 return Err("no spatial loops".into());
             }
+            let bs = s.block_mut(b);
             let np = 1 + rng.below(spatial_positions.len().min(3));
             // stable partition: selected spatial loops first
             let chosen: Vec<(usize, usize)> = spatial_positions
@@ -206,11 +210,7 @@ fn apply_in_place(
             bs.order = new_order;
             bs.parallel = np;
             bs.clamp_annotations();
-            Ok(TraceStep {
-                name: "parallel".into(),
-                block: blk.name.clone(),
-                detail: format!("num_loops={np}"),
-            })
+            Ok(TraceStep::new("parallel", &blk.name, format!("num_loops={np}")))
         }
         TransformKind::Vectorize => {
             let b = pick_block(s, rng);
@@ -221,7 +221,7 @@ fn apply_in_place(
                 .filter(|&a| blk.axes[a].kind == AxisKind::Spatial && write.axis_is_contiguous(a))
                 .collect();
             let ax = *cand.first().ok_or("no contiguous spatial axis")?;
-            let bs = &mut s.blocks[b];
+            let bs = s.block_mut(b);
             // make sure the axis has an inner factor in {4..64} and move it last
             let lanes_opts = [4i64, 8, 16, 32, 64];
             let extent = blk.axes[ax].extent;
@@ -242,38 +242,31 @@ fn apply_in_place(
             bs.order.push((ax, 1));
             bs.vectorize = true;
             bs.clamp_annotations();
-            Ok(TraceStep {
-                name: "vectorize".into(),
-                block: blk.name.clone(),
-                detail: format!("loop={}_1, lanes={lanes}", blk.axes[ax].name),
-            })
+            Ok(TraceStep::new(
+                "vectorize",
+                &blk.name,
+                format!("loop={}_1, lanes={lanes}", blk.axes[ax].name),
+            ))
         }
         TransformKind::Unroll => {
             let b = pick_block(s, rng);
-            let bs = &mut s.blocks[b];
+            let bs = s.block_mut(b);
             let depth = 1 + rng.below(3);
             bs.unroll = depth;
             bs.clamp_annotations();
-            Ok(TraceStep {
-                name: "unroll".into(),
-                block: wl.blocks[b].name.clone(),
-                detail: format!("depth={depth}"),
-            })
+            Ok(TraceStep::new("unroll", &wl.blocks[b].name, format!("depth={depth}")))
         }
         TransformKind::CacheWrite => {
             let cands: Vec<usize> = (0..wl.blocks.len())
                 .filter(|&b| wl.blocks[b].has_reduction() && !s.blocks[b].cache_write)
                 .collect();
             let &b = cands.first().ok_or("no reduction block without cache_write")?;
-            s.blocks[b].cache_write = true;
-            Ok(TraceStep {
-                name: "cache_write".into(),
-                block: wl.blocks[b].name.clone(),
-                detail: format!(
-                    "storage_scope=\"{}\"",
-                    if gpu { "local" } else { "global" }
-                ),
-            })
+            s.block_mut(b).cache_write = true;
+            Ok(TraceStep::new(
+                "cache_write",
+                &wl.blocks[b].name,
+                format!("storage_scope=\"{}\"", if gpu { "local" } else { "global" }),
+            ))
         }
         TransformKind::CacheRead => {
             let b = pick_block(s, rng);
@@ -282,18 +275,18 @@ fn apply_in_place(
                 return Err("no reads".into());
             }
             let r = rng.below(blk.reads.len());
-            let bs = &mut s.blocks[b];
+            let bs = s.block_mut(b);
             let depth = 1 + rng.below(bs.n_loops().max(2) - 1);
             bs.cache_reads[r] = Some(depth);
-            Ok(TraceStep {
-                name: "cache_read".into(),
-                block: blk.name.clone(),
-                detail: format!(
+            Ok(TraceStep::new(
+                "cache_read",
+                &blk.name,
+                format!(
                     "read_buffer={}, storage_scope=\"{}\", at_depth={depth}",
                     wl.buffers[blk.reads[r].buffer].name,
                     if gpu { "shared" } else { "local" }
                 ),
-            })
+            ))
         }
         TransformKind::ComputeLocation => {
             // pick a block that has a consumer; move where it's computed
@@ -308,7 +301,7 @@ fn apply_in_place(
             let consumer = cons[b][0];
             let max_depth = s.blocks[consumer].n_loops();
             let choice = rng.below(max_depth + 1);
-            let bs = &mut s.blocks[b];
+            let bs = s.block_mut(b);
             let detail;
             if choice == 0 {
                 bs.compute_at = None;
@@ -321,30 +314,22 @@ fn apply_in_place(
                     choice - 1
                 );
             }
-            Ok(TraceStep {
-                name: "compute_at".into(),
-                block: wl.blocks[b].name.clone(),
-                detail,
-            })
+            Ok(TraceStep::new("compute_at", &wl.blocks[b].name, detail))
         }
         TransformKind::DecomposeReduction => {
             let cands: Vec<usize> = (0..wl.blocks.len())
                 .filter(|&b| wl.blocks[b].has_reduction() && !s.blocks[b].decomposed)
                 .collect();
             let &b = cands.first().ok_or("no undecomposed reduction")?;
-            s.blocks[b].decomposed = true;
-            Ok(TraceStep {
-                name: "decompose_reduction".into(),
-                block: wl.blocks[b].name.clone(),
-                detail: "".into(),
-            })
+            s.block_mut(b).decomposed = true;
+            Ok(TraceStep::new("decompose_reduction", &wl.blocks[b].name, String::new()))
         }
         TransformKind::ThreadBind => {
             if !gpu {
                 return Err("ThreadBind is GPU-only".into());
             }
             let b = pick_block(s, rng);
-            let bs = &mut s.blocks[b];
+            let bs = s.block_mut(b);
             if bs.parallel == 0 {
                 // need blockIdx loops first; promote one spatial loop
                 bs.parallel = 1;
@@ -352,11 +337,11 @@ fn apply_in_place(
             let nt = 1 + rng.below(2);
             bs.thread_tiles = nt.min(bs.n_loops().saturating_sub(bs.parallel));
             bs.clamp_annotations();
-            Ok(TraceStep {
-                name: "bind".into(),
-                block: wl.blocks[b].name.clone(),
-                detail: format!("thread_loops={}", bs.thread_tiles),
-            })
+            Ok(TraceStep::new(
+                "bind",
+                &wl.blocks[b].name,
+                format!("thread_loops={}", bs.thread_tiles),
+            ))
         }
     }
 }
@@ -459,7 +444,29 @@ mod tests {
         let mut rng = Rng::new(4);
         let s = apply(&sched(), TransformKind::TileSize, &mut rng, false).unwrap();
         assert_eq!(s.trace.len(), 1);
-        assert!(s.trace.steps[0].detail.contains("decision="));
+        assert!(s.trace.steps()[0].detail.contains("decision="));
+    }
+
+    #[test]
+    fn apply_shares_unmutated_blocks_with_parent() {
+        // CoW: applying one transform to a multi-block workload deep-clones
+        // at most the mutated block; every other block stays shared.
+        let mut rng = Rng::new(8);
+        let base = Schedule::initial(Arc::new(attention::small_attention(128, 4, 32, true)));
+        let next = apply(&base, TransformKind::Unroll, &mut rng, false).unwrap();
+        let shared = base
+            .blocks
+            .iter()
+            .zip(&next.blocks)
+            .filter(|&(a, b)| Arc::ptr_eq(a, b))
+            .count();
+        assert!(
+            shared >= base.blocks.len() - 1,
+            "only {shared}/{} blocks shared after one transform",
+            base.blocks.len()
+        );
+        assert_eq!(next.trace.len(), 1);
+        assert_eq!(base.trace.len(), 0, "parent trace untouched");
     }
 
     #[test]

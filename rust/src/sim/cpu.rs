@@ -216,10 +216,10 @@ mod tests {
         let (naive, _) = block_latency(&spec, &s0, 0);
 
         let mut s = base();
-        s.blocks[0].retile(0, vec![16, 4, 16]);
-        s.blocks[0].retile(1, vec![8, 16, 8]);
-        s.blocks[0].retile(2, vec![256, 4]);
-        s.blocks[0].order = vec![
+        s.block_mut(0).retile(0, vec![16, 4, 16]);
+        s.block_mut(0).retile(1, vec![8, 16, 8]);
+        s.block_mut(0).retile(2, vec![256, 4]);
+        s.block_mut(0).order = vec![
             (0, 0),
             (1, 0),
             (2, 0),
@@ -229,11 +229,11 @@ mod tests {
             (0, 2),
             (1, 2),
         ];
-        s.blocks[0].parallel = 2;
-        s.blocks[0].vectorize = true;
-        s.blocks[0].unroll = 2;
-        s.blocks[0].cache_write = true;
-        s.blocks[0].decomposed = true;
+        s.block_mut(0).parallel = 2;
+        s.block_mut(0).vectorize = true;
+        s.block_mut(0).unroll = 2;
+        s.block_mut(0).cache_write = true;
+        s.block_mut(0).decomposed = true;
         s.validate().unwrap();
         let (tuned, _) = block_latency(&spec, &s, 0);
 

@@ -178,10 +178,10 @@ mod tests {
         let t_n = analyze(&naive, 0, &nest_n, L1, L2);
 
         let mut tiled = base(1024);
-        tiled.blocks[0].retile(0, vec![32, 32]);
-        tiled.blocks[0].retile(1, vec![32, 32]);
-        tiled.blocks[0].retile(2, vec![4, 256]);
-        tiled.blocks[0].order = vec![(0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (2, 1)];
+        tiled.block_mut(0).retile(0, vec![32, 32]);
+        tiled.block_mut(0).retile(1, vec![32, 32]);
+        tiled.block_mut(0).retile(2, vec![4, 256]);
+        tiled.block_mut(0).order = vec![(0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (2, 1)];
         tiled.validate().unwrap();
         let nest_t = tiled.loop_nest(0, false);
         let t_t = analyze(&tiled, 0, &nest_t, L1, L2);

@@ -196,10 +196,10 @@ mod tests {
         let (naive, _) = block_latency(&spec, &s0, 0);
 
         let mut s = base();
-        s.blocks[0].retile(0, vec![32, 4, 16]);
-        s.blocks[0].retile(1, vec![32, 8, 8]);
-        s.blocks[0].retile(2, vec![512, 4]);
-        s.blocks[0].order = vec![
+        s.block_mut(0).retile(0, vec![32, 4, 16]);
+        s.block_mut(0).retile(1, vec![32, 8, 8]);
+        s.block_mut(0).retile(2, vec![512, 4]);
+        s.block_mut(0).order = vec![
             (0, 0),
             (1, 0),
             (0, 1),
@@ -209,11 +209,11 @@ mod tests {
             (2, 1),
             (1, 2),
         ];
-        s.blocks[0].parallel = 2;
-        s.blocks[0].thread_tiles = 2;
-        s.blocks[0].vectorize = true;
-        s.blocks[0].cache_write = true;
-        s.blocks[0].cache_reads = vec![Some(4), Some(4)];
+        s.block_mut(0).parallel = 2;
+        s.block_mut(0).thread_tiles = 2;
+        s.block_mut(0).vectorize = true;
+        s.block_mut(0).cache_write = true;
+        s.block_mut(0).cache_reads = vec![Some(4), Some(4)];
         s.validate().unwrap();
         let (tuned, _) = block_latency(&spec, &s, 0);
         let speedup = naive / tuned;

@@ -158,7 +158,7 @@ mod tests {
         let mut fused = base.clone();
         // fuse silu_mul into down_proj's tiles
         let silu = w.blocks.iter().position(|b| b.name == "silu_mul").unwrap();
-        fused.blocks[silu].compute_at = Some(1);
+        fused.block_mut(silu).compute_at = Some(1);
         assert!(sim.latency(&fused) < sim.latency(&base));
     }
 
