@@ -5,40 +5,43 @@
 //! All four searches (2 targets × {single-large, 8-LLM}) fan out through
 //! the parallel multi-workload driver ([`litecoop::runtime::driver`]), so
 //! the demo scales with cores while staying byte-identical to running
-//! them serially.
+//! them serially. `--search-threads S` additionally runs each search
+//! tree-parallel across S workers (deterministic per (seed, S)).
 //!
-//!     cargo run --release --offline --example collab_search [budget]
+//!     cargo run --release --offline --example collab_search [budget] \
+//!         [--search-threads S]
 
 use litecoop::coordinator::{RunSpec, Searcher};
 use litecoop::runtime::driver;
 use litecoop::sim::Target;
+use litecoop::util::cli::Args;
 
 fn main() {
-    let budget: usize = std::env::args()
-        .nth(1)
+    let args = Args::parse();
+    let budget: usize = args
+        .subcommand
+        .as_deref()
         .and_then(|a| a.parse().ok())
-        .unwrap_or(300);
+        .unwrap_or_else(|| args.usize_or("budget", 300));
+    let search_threads = args.usize_or("search-threads", 1).max(1);
 
     // one spec per (target, searcher); the driver merges results in order
     let mut specs = Vec::new();
     for target in [Target::Gpu, Target::Cpu] {
-        specs.push(RunSpec::new(
-            "llama3_attention",
-            target,
+        for searcher in [
             Searcher::Single("gpt-5.2".into()),
-            budget,
-            7,
-        ));
-        specs.push(RunSpec::new(
-            "llama3_attention",
-            target,
             Searcher::Coop {
                 n: 8,
                 largest: "gpt-5.2".into(),
             },
-            budget,
-            7,
-        ));
+        ] {
+            let mut sp = RunSpec::new("llama3_attention", target, searcher, budget, 7);
+            sp.search_threads = search_threads;
+            specs.push(sp);
+        }
+    }
+    if search_threads > 1 {
+        println!("tree-parallel search: {search_threads} threads per search\n");
     }
     let results = driver::run_specs(&specs, driver::default_threads());
 

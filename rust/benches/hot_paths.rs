@@ -188,6 +188,54 @@ fn main() {
     println!("{}", deep_summary.line());
     all.push(deep_summary);
 
+    // ---- tree-parallel search: one search across N workers -----------------
+    // `parallel_search_serial_baseline` is the serial engine (run_parallel(1)
+    // delegates to run()); the `parallel_search_speedup_{2,4,8}` entries time
+    // the identical configuration at 2/4/8 workers — each value is wall-clock
+    // for one full search, so speedup = serial_mean / parallel_mean (also
+    // printed). Deterministic per (seed, threads); thread counts explore
+    // different but equally valid trees, so this measures throughput, not
+    // result equivalence (the determinism tests pin that).
+    let mk_par = || {
+        let cfg = SearchConfig {
+            budget: 64,
+            seed: 11,
+            checkpoints: vec![],
+            ..SearchConfig::default()
+        };
+        let models = ModelSet::new(paper_config(4, "gpt-5.2"));
+        Mcts::new(cfg, models, Simulator::new(Target::Cpu), base.clone())
+    };
+    const PAR_ROUNDS: usize = 3;
+    let mut serial_mean_ns = 0.0f64;
+    for t in [1usize, 2, 4, 8] {
+        let mut par_samples_ns = Vec::with_capacity(PAR_ROUNDS);
+        for _ in 0..PAR_ROUNDS {
+            let engine = mk_par();
+            let t0 = std::time::Instant::now();
+            let r = engine.run_parallel("llama3_attention", t);
+            std::hint::black_box(r.best_speedup);
+            par_samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let name = if t == 1 {
+            "parallel_search_serial_baseline".to_string()
+        } else {
+            format!("parallel_search_speedup_{t}")
+        };
+        let s = Summary::from_samples(&name, &par_samples_ns, PAR_ROUNDS);
+        println!("{}", s.line());
+        if t == 1 {
+            serial_mean_ns = s.mean_ns;
+        } else {
+            println!(
+                "bench {:<44} speedup vs serial {:.2}x",
+                name,
+                serial_mean_ns / s.mean_ns
+            );
+        }
+        all.push(s);
+    }
+
     write_json_report("BENCH_hotpaths.json", "hot_paths", &all)
         .expect("write BENCH_hotpaths.json");
     println!("wrote BENCH_hotpaths.json ({} benchmarks)", all.len());

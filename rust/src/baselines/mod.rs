@@ -19,7 +19,8 @@ use crate::sim::{Simulator, Target};
 use crate::util::Rng;
 
 /// Single-LLM MCTS baseline (course alteration is meaningless with one
-/// model and is disabled).
+/// model and is disabled). Honors `cfg.search_threads`: 1 runs the serial
+/// engine, >1 the tree-parallel engine ([`Mcts::run_parallel`]).
 pub fn single_llm(
     model_name: &str,
     target: Target,
@@ -29,11 +30,13 @@ pub fn single_llm(
 ) -> SearchResult {
     let spec = by_name(model_name).unwrap_or_else(|| panic!("unknown model {model_name}"));
     cfg.ca_threshold = None;
+    let threads = cfg.search_threads;
     let models = ModelSet::new(vec![spec]);
-    Mcts::new(cfg, models, Simulator::new(target), root).run(workload)
+    Mcts::new(cfg, models, Simulator::new(target), root).run_parallel(workload, threads)
 }
 
-/// LiteCoOp with the paper's n-model configuration.
+/// LiteCoOp with the paper's n-model configuration. Honors
+/// `cfg.search_threads` like [`single_llm`].
 pub fn litecoop(
     n_llms: usize,
     largest: &str,
@@ -42,8 +45,9 @@ pub fn litecoop(
     cfg: SearchConfig,
     workload: &str,
 ) -> SearchResult {
+    let threads = cfg.search_threads;
     let models = ModelSet::new(paper_config(n_llms, largest));
-    Mcts::new(cfg, models, Simulator::new(target), root).run(workload)
+    Mcts::new(cfg, models, Simulator::new(target), root).run_parallel(workload, threads)
 }
 
 /// Appendix-G ablation: same pool, random next-model routing.
@@ -74,7 +78,8 @@ pub fn round_robin_routing(
 
 /// Evolutionary-search baseline (MetaSchedule-default stand-in): mutate a
 /// population of schedules, cost-model-rank, measure the elite. Budget,
-/// seed, and curve checkpoints come from `cfg` like every other searcher.
+/// seed, and curve checkpoints come from `cfg` like every other searcher;
+/// `cfg.search_threads` is ignored (no tree to parallelize).
 pub fn evolutionary(
     target: Target,
     root: Schedule,

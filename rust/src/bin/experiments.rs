@@ -2,7 +2,8 @@
 //! evaluation (see DESIGN.md §Experiment-index).
 //!
 //! Usage:
-//!   experiments <id> [--budget N] [--reps K] [--threads T] [--quick]
+//!   experiments <id> [--budget N] [--reps K] [--threads T]
+//!               [--search-threads S] [--quick]
 //! ids: fig2 table1 table2 table3 fig3 lambda significance
 //!      course_alteration llm_selection call_counts sample_efficiency all
 //!
@@ -31,6 +32,9 @@ struct Opts {
     budget: usize,
     reps: u64,
     threads: usize,
+    /// In-search tree parallelism per run (`--search-threads`, default 1
+    /// = the serial engine).
+    search_threads: usize,
     largest: String,
 }
 
@@ -47,7 +51,9 @@ fn matrix(benches: &[&str], searchers: &[Searcher], targets: &[Target], o: &Opts
         for s in searchers {
             for &t in targets {
                 for rep in 0..o.reps {
-                    specs.push(RunSpec::new(b, t, s.clone(), o.budget, rep * 1000 + 7));
+                    let mut sp = RunSpec::new(b, t, s.clone(), o.budget, rep * 1000 + 7);
+                    sp.search_threads = o.search_threads;
+                    specs.push(sp);
                 }
             }
         }
@@ -327,6 +333,7 @@ fn lambda_ablation(o: &Opts) {
                 let mut sp =
                     RunSpec::new(b, Target::Cpu, coop(8, &o.largest), o.budget, rep * 1000 + 7);
                 sp.lambda = l;
+                sp.search_threads = o.search_threads;
                 specs.push(sp);
             }
         }
@@ -424,6 +431,7 @@ fn course_alteration(o: &Opts) {
                 let mut sp =
                     RunSpec::new(b, Target::Cpu, coop(8, &o.largest), o.budget, rep * 1000 + 7);
                 sp.ca_threshold = *ca;
+                sp.search_threads = o.search_threads;
                 specs.push(sp);
             }
         }
@@ -541,6 +549,7 @@ fn main() {
         budget: args.usize_or("budget", if quick { 120 } else { 300 }),
         reps: args.u64_or("reps", if quick { 2 } else { 3 }),
         threads: args.usize_or("threads", coordinator::default_threads()),
+        search_threads: args.usize_or("search-threads", 1).max(1),
         largest: args.str_or("largest", "gpt-5.2"),
     };
     let cmd = args.subcommand.clone().unwrap_or_else(|| "all".into());

@@ -53,6 +53,11 @@ pub struct RunSpec {
     pub lambda: f64,
     /// Course-alteration threshold (None = disabled).
     pub ca_threshold: Option<usize>,
+    /// In-search tree parallelism (`--search-threads`): worker threads
+    /// *within* this one search, independent of the across-spec thread
+    /// pool. 1 = serial engine (bit-identical to the pre-parallel
+    /// engine); results are deterministic per (seed, search_threads).
+    pub search_threads: usize,
 }
 
 impl RunSpec {
@@ -65,6 +70,7 @@ impl RunSpec {
             seed,
             lambda: 0.5,
             ca_threshold: Some(2),
+            search_threads: 1,
         }
     }
 
@@ -78,6 +84,7 @@ impl RunSpec {
                 .into_iter()
                 .filter(|&c| c <= self.budget)
                 .collect(),
+            search_threads: self.search_threads,
             ..SearchConfig::default()
         }
     }

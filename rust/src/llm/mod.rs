@@ -202,57 +202,75 @@ impl ModelSet {
         }
     }
 
-    /// Simulate one model invocation: returns the proposal and the call
-    /// record. `score_candidates` maps a proposed transform sequence to
-    /// the engine's estimate of the resulting child's score — the
-    /// capability-scaled internal deliberation ("which of the moves I can
-    /// think of looks best").
-    pub fn propose(
+    /// The vocabulary a call actually samples from: `banned` removed,
+    /// falling back to the full vocabulary when the ban covers everything.
+    fn effective_vocab(
+        vocabulary: &[TransformKind],
+        banned: &[TransformKind],
+    ) -> Vec<TransformKind> {
+        let vocab: Vec<TransformKind> = vocabulary
+            .iter()
+            .copied()
+            .filter(|t| !banned.contains(t))
+            .collect();
+        if vocab.is_empty() {
+            vocabulary.to_vec()
+        } else {
+            vocab
+        }
+    }
+
+    /// Capability-scaled internal lookahead width: how many candidate
+    /// sequences the model considers per call (CA calls think harder).
+    fn lookahead_width(&self, model: usize, kind: CallKind) -> usize {
+        let cap = self.specs[model].capability;
+        let extra = if kind == CallKind::CourseAlteration { 3 } else { 0 };
+        1 + (cap * cap * 7.0).round() as usize + extra
+    }
+
+    /// Capability-scaled judgment noise on candidate scores.
+    fn noise_sigma(&self, model: usize) -> f64 {
+        0.02 + 0.30 * (1.0 - self.specs[model].capability)
+    }
+
+    /// Per-call affinity weights over an effective vocabulary, computed
+    /// once per proposal (they are invariant across a call's candidate
+    /// draws) and shared by every [`ModelSet::draw_seq`] of that call.
+    fn seq_weights(&self, model: usize, vocab: &[TransformKind]) -> Vec<f64> {
+        let aff = &self.affinity[model];
+        vocab
+            .iter()
+            .map(|t| aff[TransformKind::ALL.iter().position(|a| a == t).unwrap()])
+            .collect()
+    }
+
+    /// Draw one affinity-weighted candidate sequence (1–4 transforms).
+    /// RNG draw order: length first, then one weighted pick per element.
+    fn draw_seq(weights: &[f64], vocab: &[TransformKind], rng: &mut Rng) -> Vec<TransformKind> {
+        let len = 1 + rng.below(4);
+        (0..len).map(|_| vocab[rng.weighted(weights)]).collect()
+    }
+
+    /// Everything after a call's candidate deliberation, shared by
+    /// [`ModelSet::propose`] and [`ModelSet::propose_scored`]: invalid-name
+    /// error emission + repair, size-aware next-model routing, prompt
+    /// rendering, and cost/latency accounting — in exactly that RNG draw
+    /// order.
+    #[allow(clippy::too_many_arguments)]
+    fn finalize_proposal(
         &mut self,
         model: usize,
         ctx: &PromptCtx,
         kind: CallKind,
         banned: &[TransformKind],
-        score_candidates: &mut dyn FnMut(&[TransformKind]) -> f64,
+        vocab: &[TransformKind],
+        mut best_seq: Vec<TransformKind>,
         rng: &mut Rng,
     ) -> (Proposal, CallRecord) {
         let spec = self.specs[model].clone();
         let cap = spec.capability;
-        let vocab: Vec<TransformKind> = ctx
-            .vocabulary
-            .iter()
-            .copied()
-            .filter(|t| !banned.contains(t))
-            .collect();
-        let vocab = if vocab.is_empty() {
-            ctx.vocabulary.clone()
-        } else {
-            vocab
-        };
-
         let mut n_errors = 0usize;
 
-        // --- transformation sequence: capability-scaled lookahead -------
-        let extra = if kind == CallKind::CourseAlteration { 3 } else { 0 };
-        let n_cands = 1 + (cap * cap * 7.0).round() as usize + extra;
-        let noise_sigma = 0.02 + 0.30 * (1.0 - cap);
-        let aff = &self.affinity[model];
-        let mut best_seq: Vec<TransformKind> = Vec::new();
-        let mut best_score = f64::NEG_INFINITY;
-        for _ in 0..n_cands {
-            let len = 1 + rng.below(4);
-            let weights: Vec<f64> = vocab
-                .iter()
-                .map(|t| aff[TransformKind::ALL.iter().position(|a| a == t).unwrap()])
-                .collect();
-            let seq: Vec<TransformKind> =
-                (0..len).map(|_| vocab[rng.weighted(&weights)]).collect();
-            let s = score_candidates(&seq) + rng.normal_ms(0.0, noise_sigma);
-            if s > best_score {
-                best_score = s;
-                best_seq = seq;
-            }
-        }
         // invalid transformation name emission
         if rng.chance(spec.error_rate) {
             n_errors += 1;
@@ -260,7 +278,7 @@ impl ModelSet {
             // engine repairs by resampling one valid transform
             if !best_seq.is_empty() {
                 let i = rng.below(best_seq.len());
-                best_seq[i] = *rng.choice(&vocab);
+                best_seq[i] = *rng.choice(vocab);
             }
         }
 
@@ -320,6 +338,96 @@ impl ModelSet {
             },
             rec,
         )
+    }
+
+    /// Simulate one model invocation: returns the proposal and the call
+    /// record. `score_candidates` maps a proposed transform sequence to
+    /// the engine's estimate of the resulting child's score — the
+    /// capability-scaled internal deliberation ("which of the moves I can
+    /// think of looks best").
+    pub fn propose(
+        &mut self,
+        model: usize,
+        ctx: &PromptCtx,
+        kind: CallKind,
+        banned: &[TransformKind],
+        score_candidates: &mut dyn FnMut(&[TransformKind]) -> f64,
+        rng: &mut Rng,
+    ) -> (Proposal, CallRecord) {
+        let vocab = Self::effective_vocab(&ctx.vocabulary, banned);
+
+        // --- transformation sequence: capability-scaled lookahead -------
+        // (candidate draws interleave with scoring + judgment noise, one
+        // candidate at a time — the fused serial draw order)
+        let n_cands = self.lookahead_width(model, kind);
+        let noise_sigma = self.noise_sigma(model);
+        let weights = self.seq_weights(model, &vocab);
+        let mut best_seq: Vec<TransformKind> = Vec::new();
+        let mut best_score = f64::NEG_INFINITY;
+        for _ in 0..n_cands {
+            let seq = Self::draw_seq(&weights, &vocab, rng);
+            let s = score_candidates(&seq) + rng.normal_ms(0.0, noise_sigma);
+            if s > best_score {
+                best_score = s;
+                best_seq = seq;
+            }
+        }
+        self.finalize_proposal(model, ctx, kind, banned, &vocab, best_seq, rng)
+    }
+
+    /// Phase A of a **split** proposal (tree-parallel search): draw the
+    /// candidate sequences this model would consider, without scoring
+    /// them. The engine evaluates the candidates (batched, across
+    /// workers) and then finishes the call with
+    /// [`ModelSet::propose_scored`]. `&self`: drawing mutates no
+    /// accounting state, so many lanes can prepare candidates before any
+    /// call is committed.
+    ///
+    /// Note the split path draws all candidates first and all judgment
+    /// noise later (in `propose_scored`), whereas [`ModelSet::propose`]
+    /// interleaves them per candidate — both are deterministic in their
+    /// RNG, but the streams differ by construction.
+    pub fn draw_candidates(
+        &self,
+        model: usize,
+        vocabulary: &[TransformKind],
+        kind: CallKind,
+        banned: &[TransformKind],
+        rng: &mut Rng,
+    ) -> Vec<Vec<TransformKind>> {
+        let vocab = Self::effective_vocab(vocabulary, banned);
+        let weights = self.seq_weights(model, &vocab);
+        (0..self.lookahead_width(model, kind))
+            .map(|_| Self::draw_seq(&weights, &vocab, rng))
+            .collect()
+    }
+
+    /// Phase B of a split proposal: `scored` pairs each candidate from
+    /// [`ModelSet::draw_candidates`] (same order) with the engine's score
+    /// for it. Adds the model's judgment noise, picks the best candidate,
+    /// and runs the shared call tail (error repair, routing, accounting)
+    /// exactly like [`ModelSet::propose`].
+    pub fn propose_scored(
+        &mut self,
+        model: usize,
+        ctx: &PromptCtx,
+        kind: CallKind,
+        banned: &[TransformKind],
+        scored: Vec<(Vec<TransformKind>, f64)>,
+        rng: &mut Rng,
+    ) -> (Proposal, CallRecord) {
+        let vocab = Self::effective_vocab(&ctx.vocabulary, banned);
+        let noise_sigma = self.noise_sigma(model);
+        let mut best_seq: Vec<TransformKind> = Vec::new();
+        let mut best_score = f64::NEG_INFINITY;
+        for (seq, base_score) in scored {
+            let s = base_score + rng.normal_ms(0.0, noise_sigma);
+            if s > best_score {
+                best_score = s;
+                best_seq = seq;
+            }
+        }
+        self.finalize_proposal(model, ctx, kind, banned, &vocab, best_seq, rng)
     }
 
     /// Aggregate spend across the whole set.
@@ -451,6 +559,77 @@ mod tests {
             "errors {}",
             set.stats[small].errors
         );
+    }
+
+    #[test]
+    fn draw_candidates_respects_ban_and_width() {
+        let set = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let c = ctx(&set);
+        let mut rng = Rng::new(6);
+        let banned = [TransformKind::TileSize, TransformKind::Unroll];
+        let largest = set.largest;
+        let cands =
+            set.draw_candidates(largest, &c.vocabulary, CallKind::Regular, &banned, &mut rng);
+        // capability-scaled width: the largest model considers several
+        // candidates, CA calls consider even more
+        assert!(cands.len() > 1);
+        assert!(cands.iter().all(|s| !s.is_empty()));
+        assert!(
+            cands.iter().flatten().all(|t| !banned.contains(t)),
+            "banned transform drawn"
+        );
+        let ca = set.draw_candidates(
+            largest,
+            &c.vocabulary,
+            CallKind::CourseAlteration,
+            &banned,
+            &mut rng,
+        );
+        assert_eq!(ca.len(), cands.len() + 3);
+        // drawing is deterministic in the rng and mutates no accounting
+        let mut r2 = Rng::new(6);
+        let again =
+            set.draw_candidates(largest, &c.vocabulary, CallKind::Regular, &banned, &mut r2);
+        assert_eq!(cands, again);
+        assert_eq!(set.total_calls(), 0);
+    }
+
+    #[test]
+    fn propose_scored_picks_high_scores_and_accounts_like_propose() {
+        let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let c = ctx(&set);
+        let largest = set.largest;
+        let mut rng = Rng::new(7);
+        let cands = set.draw_candidates(largest, &c.vocabulary, CallKind::Regular, &[], &mut rng);
+        // give one candidate an overwhelming score: the (noisy) argmax
+        // must pick it
+        let winner = cands.len() / 2;
+        let scored: Vec<(Vec<TransformKind>, f64)> = cands
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.clone(), if i == winner { 100.0 } else { 0.0 }))
+            .collect();
+        let (prop, rec) =
+            set.propose_scored(largest, &c, CallKind::Regular, &[], scored, &mut rng);
+        // the 100-vs-0 gap dwarfs judgment noise, so the winner is chosen;
+        // error repair may still have resampled at most one element
+        assert_eq!(prop.transforms.len(), cands[winner].len());
+        let diffs = prop
+            .transforms
+            .iter()
+            .zip(&cands[winner])
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            diffs <= 1,
+            "picked {:?}, expected (≤1-repair of) {:?}",
+            prop.transforms,
+            cands[winner]
+        );
+        // the call is fully accounted, exactly like the fused propose path
+        assert!(rec.cost_usd > 0.0 && rec.latency_s > 0.0);
+        assert_eq!(set.stats[largest].regular_calls, 1);
+        assert!(set.total_cost_usd() > 0.0);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! `litecoop` CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   search   --workload <name> --target cpu|gpu --llms N --budget N [--largest M] [--lambda X]
+//!   search   --workload <name> --target cpu|gpu --llms N --budget N
+//!            [--largest M] [--lambda X] [--search-threads S]
 //!   models   (print the LLM catalog)
 //!   workloads (print the benchmark registry)
 //!   runtime  --artifact <name>  (load + execute an AOT artifact via PJRT)
@@ -64,11 +65,12 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
         budget: args.usize_or("budget", 300),
         seed: args.u64_or("seed", 7),
         lambda: args.f64_or("lambda", 0.5),
+        search_threads: args.usize_or("search-threads", 1).max(1),
         ..SearchConfig::default()
     };
     println!(
-        "LiteCoOp search: {workload_name} on {:?}, {n_llms} LLMs (largest {largest}), budget {}",
-        target, cfg.budget
+        "LiteCoOp search: {workload_name} on {:?}, {n_llms} LLMs (largest {largest}), budget {}, search threads {}",
+        target, cfg.budget, cfg.search_threads
     );
     let r = if n_llms == 1 {
         baselines::single_llm(&largest, target, root, cfg, &workload_name)

@@ -56,8 +56,11 @@ use crate::schedule::trace::{fnv_str, fnv_u64};
 use crate::schedule::Schedule;
 use crate::sim::{Simulator, Target};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 /// Hit/miss counters for one cache (or an aggregate over many).
+#[must_use]
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -65,7 +68,10 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
-    /// Fraction of lookups served from the cache (0 when never consulted).
+    /// Fraction of lookups served from the cache. A counter that was never
+    /// consulted (zero hits *and* zero misses — e.g. the merge of an empty
+    /// driver batch) reports 0.0, never NaN.
+    #[must_use]
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -76,6 +82,8 @@ impl CacheStats {
     }
 
     /// Fold another counter into this one (driver-level aggregation).
+    /// `hit_rate` on the merged counter divides by the combined lookup
+    /// count, and stays 0.0 when both sides were empty.
     pub fn merge(&mut self, other: &CacheStats) {
         self.hits += other.hits;
         self.misses += other.misses;
@@ -165,6 +173,7 @@ impl EvalCache {
         self.lat.is_empty() && self.pred.is_empty()
     }
 
+    #[must_use]
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
@@ -262,6 +271,7 @@ pub trait Evaluator {
     fn target(&self) -> Target;
 
     /// Cache hit/miss counters accumulated so far.
+    #[must_use]
     fn cache_stats(&self) -> CacheStats;
 }
 
@@ -322,6 +332,292 @@ impl Evaluator for CachedEvaluator {
             }
             // before the first fit, predictions track the latest
             // observation and aren't pure — don't cache them
+            None => self.cost.predict_latency(s),
+        };
+        self.cost.score_of_prediction(pred)
+    }
+
+    fn best_latency(&self) -> f64 {
+        self.cost.best_latency
+    }
+
+    fn target(&self) -> Target {
+        self.sim.target
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+// ------------------------------------------------------------------------
+// Concurrent sharded view (tree-parallel search)
+// ------------------------------------------------------------------------
+
+/// One shard of a [`SharedEvalCache`]: a plain [`EvalCache`] behind an
+/// `RwLock`, with the hit/miss counters lifted out into atomics so the
+/// read path never needs the write lock.
+#[derive(Debug)]
+struct Shard {
+    cache: RwLock<EvalCache>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Concurrent N-way sharded view over the evaluation cache, shared by the
+/// tree-parallel search workers ([`crate::mcts::Mcts::run_parallel`]).
+///
+/// A key lives in shard `key % N` (`PredKey`s shard by their trace-key
+/// component), so concurrent lookups of different programs almost never
+/// contend, and each shard is an ordinary [`EvalCache`] behind an
+/// `RwLock`. The lookup protocol is double-checked:
+///
+/// 1. read lock → present? count a hit, return;
+/// 2. write lock → re-check (a racer may have filled it) → still absent?
+///    compute **under the shard write lock**, insert, count a miss.
+///
+/// Computing under the write lock serializes same-shard misses, but buys
+/// the invariant the harness-time accounting depends on: **every key is
+/// computed and charged as a miss exactly once**, no matter how many
+/// threads race on it (while the shard has insert capacity). Values are
+/// pure functions of their keys, so the cache contents — and, because of
+/// the exactly-once protocol, the aggregate [`CacheStats`] — are
+/// deterministic regardless of thread scheduling.
+///
+/// Per-shard counters are atomics and merge into one [`CacheStats`] via
+/// [`SharedEvalCache::stats`]; stats carried in by
+/// [`SharedEvalCache::from_cache`] are preserved in a base counter so a
+/// search that converts its warm [`EvalCache`] keeps honest totals.
+#[derive(Debug)]
+pub struct SharedEvalCache {
+    shards: Vec<Shard>,
+    base_hits: AtomicU64,
+    base_misses: AtomicU64,
+    /// The source cache's configured entry bound, preserved verbatim so a
+    /// serial↔parallel round-trip ([`SharedEvalCache::from_cache`] →
+    /// [`SharedEvalCache::into_cache`]) hands back the bound the caller
+    /// set, not the rounding of the per-shard split.
+    total_capacity: usize,
+}
+
+impl Default for SharedEvalCache {
+    fn default() -> Self {
+        SharedEvalCache::new(Self::DEFAULT_SHARDS)
+    }
+}
+
+impl SharedEvalCache {
+    /// Default shard count: enough that 8–16 workers rarely collide on a
+    /// shard lock, small enough that merging/draining stays trivial.
+    pub const DEFAULT_SHARDS: usize = 16;
+
+    /// Empty sharded cache with the default per-map capacity split evenly
+    /// across `n_shards` (clamped to at least 1).
+    pub fn new(n_shards: usize) -> SharedEvalCache {
+        SharedEvalCache::from_cache(EvalCache::default(), n_shards)
+    }
+
+    /// Shard an existing cache: entries are distributed by `key % N`, the
+    /// entry bound is split evenly across shards (ceiling division, so a
+    /// configured bound is never truncated — though per-shard enforcement
+    /// means the *effective* bound is approximate: a tiny bound can admit
+    /// up to `n_shards` entries, one per shard), and the source's
+    /// hit/miss counters are preserved (reported by
+    /// [`SharedEvalCache::stats`] alongside the per-shard counters).
+    /// Seeding ignores the per-shard bound — only post-construction
+    /// inserts are bounded. [`SharedEvalCache::into_cache`] restores the
+    /// source's configured bound verbatim.
+    pub fn from_cache(cache: EvalCache, n_shards: usize) -> SharedEvalCache {
+        let n = n_shards.max(1);
+        let EvalCache {
+            lat,
+            pred,
+            stats,
+            max_entries,
+        } = cache;
+        // ceiling split, except a zero bound stays zero (capacity 0 means
+        // "never insert", and that contract must survive sharding)
+        let per_shard = max_entries.div_ceil(n);
+        let mut shards: Vec<EvalCache> = (0..n)
+            .map(|_| EvalCache::with_capacity(per_shard))
+            .collect();
+        for (k, v) in lat {
+            shards[(k % n as u64) as usize].lat.insert(k, v);
+        }
+        for (k, v) in pred {
+            shards[(k.0 % n as u64) as usize].pred.insert(k, v);
+        }
+        SharedEvalCache {
+            shards: shards
+                .into_iter()
+                .map(|cache| Shard {
+                    cache: RwLock::new(cache),
+                    hits: AtomicU64::new(0),
+                    misses: AtomicU64::new(0),
+                })
+                .collect(),
+            base_hits: AtomicU64::new(stats.hits),
+            base_misses: AtomicU64::new(stats.misses),
+            total_capacity: max_entries,
+        }
+    }
+
+    /// Drain the shards back into one owned [`EvalCache`] (entries
+    /// unioned, counters merged, and the source cache's configured entry
+    /// bound restored verbatim).
+    pub fn into_cache(self) -> EvalCache {
+        let stats = self.stats();
+        let max_entries = self.total_capacity;
+        let mut lat = HashMap::new();
+        let mut pred = HashMap::new();
+        for sh in self.shards {
+            let c = sh.cache.into_inner().unwrap();
+            lat.extend(c.lat);
+            pred.extend(c.pred);
+        }
+        EvalCache {
+            lat,
+            pred,
+            stats,
+            max_entries,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, key: u64) -> &Shard {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// Concurrent [`EvalCache::latency_or_served`]: `&self`, safe to call
+    /// from many workers at once. See the type docs for the exactly-once
+    /// miss protocol.
+    pub fn latency_or_served(&self, key: u64, f: impl FnOnce() -> f64) -> (f64, bool) {
+        let sh = self.shard(key);
+        if let Some(&v) = sh.cache.read().unwrap().lat.get(&key) {
+            sh.hits.fetch_add(1, Ordering::Relaxed);
+            return (v, true);
+        }
+        let mut w = sh.cache.write().unwrap();
+        if let Some(&v) = w.lat.get(&key) {
+            sh.hits.fetch_add(1, Ordering::Relaxed);
+            return (v, true);
+        }
+        // compute under the shard write lock: a racing worker waits and
+        // then hits, so the simulator runs (and the miss is charged)
+        // exactly once per key
+        let v = f();
+        if w.lat.len() < w.max_entries {
+            w.lat.insert(key, v);
+        }
+        sh.misses.fetch_add(1, Ordering::Relaxed);
+        (v, false)
+    }
+
+    /// Concurrent ground-truth lookup without the served flag.
+    pub fn latency_or(&self, key: u64, f: impl FnOnce() -> f64) -> f64 {
+        self.latency_or_served(key, f).0
+    }
+
+    /// Concurrent [`EvalCache::prediction_or`] (same protocol, prediction
+    /// map, sharded by the key's trace-key component).
+    pub fn prediction_or(&self, key: PredKey, f: impl FnOnce() -> f64) -> f64 {
+        let sh = self.shard(key.0);
+        if let Some(&v) = sh.cache.read().unwrap().pred.get(&key) {
+            sh.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        let mut w = sh.cache.write().unwrap();
+        if let Some(&v) = w.pred.get(&key) {
+            sh.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        let v = f();
+        if w.pred.len() < w.max_entries {
+            w.pred.insert(key, v);
+        }
+        sh.misses.fetch_add(1, Ordering::Relaxed);
+        v
+    }
+
+    /// Merged hit/miss counters: the base counters carried in by
+    /// [`SharedEvalCache::from_cache`] plus every shard's counters.
+    #[must_use]
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats {
+            hits: self.base_hits.load(Ordering::Relaxed),
+            misses: self.base_misses.load(Ordering::Relaxed),
+        };
+        for sh in &self.shards {
+            s.merge(&CacheStats {
+                hits: sh.hits.load(Ordering::Relaxed),
+                misses: sh.misses.load(Ordering::Relaxed),
+            });
+        }
+        s
+    }
+
+    /// Zero every counter (entries are kept).
+    pub fn reset_stats(&self) {
+        self.base_hits.store(0, Ordering::Relaxed);
+        self.base_misses.store(0, Ordering::Relaxed);
+        for sh in &self.shards {
+            sh.hits.store(0, Ordering::Relaxed);
+            sh.misses.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Total entries currently held across all shards (both maps).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|sh| sh.cache.read().unwrap().len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// [`Evaluator`] over a **borrowed** [`SharedEvalCache`]: the cost model
+/// and simulator are owned (per search), the transposition cache is the
+/// shared concurrent view. This is what the tree-parallel engine
+/// ([`crate::mcts::Mcts::run_parallel`]) drives on the coordinator thread
+/// while its workers hit the same `&SharedEvalCache` directly.
+pub struct SharedCachedEvaluator<'a> {
+    pub cost: CostModel,
+    pub sim: Simulator,
+    pub cache: &'a SharedEvalCache,
+}
+
+impl Evaluator for SharedCachedEvaluator<'_> {
+    fn measure(&mut self, s: &Schedule) -> Measured {
+        let key = trace_key(s, self.sim.target);
+        let sim = &self.sim;
+        let (lat, cache_hit) = self.cache.latency_or_served(key, || sim.latency(s));
+        self.cost.observe(s, lat);
+        Measured {
+            latency_s: lat,
+            cache_hit,
+        }
+    }
+
+    fn true_latency(&mut self, s: &Schedule) -> f64 {
+        let key = trace_key(s, self.sim.target);
+        let sim = &self.sim;
+        self.cache.latency_or(key, || sim.latency(s))
+    }
+
+    fn score(&mut self, s: &Schedule) -> f64 {
+        let pred = match self.cost.generation() {
+            Some(gen) => {
+                let key = (trace_key(s, self.sim.target), self.cost.salt, gen);
+                let cost = &self.cost;
+                self.cache.prediction_or(key, || cost.predict_latency(s))
+            }
             None => self.cost.predict_latency(s),
         };
         self.cost.score_of_prediction(pred)
@@ -475,5 +771,145 @@ mod tests {
         c.reset_stats();
         assert_eq!(c.stats(), CacheStats::default());
         assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn merged_empty_stats_hit_rate_is_zero_not_nan() {
+        // the zero-lookup edge of driver-level aggregation: merging any
+        // number of empty counters must report 0.0, never NaN
+        let mut merged = CacheStats::default();
+        for _ in 0..4 {
+            merged.merge(&CacheStats::default());
+        }
+        assert_eq!(merged, CacheStats::default());
+        assert_eq!(merged.hit_rate(), 0.0);
+        assert!(!merged.hit_rate().is_nan());
+    }
+
+    #[test]
+    fn shared_cache_roundtrips_and_merges_stats() {
+        let mut base = EvalCache::new();
+        base.latency_or(1, || 1.5);
+        base.latency_or(1, || unreachable!("cached"));
+        base.prediction_or((2, 9, 0), || 0.25);
+        let base_stats = base.stats();
+        assert_eq!(base_stats, CacheStats { hits: 1, misses: 2 });
+
+        let shared = SharedEvalCache::from_cache(base, 4);
+        assert_eq!(shared.n_shards(), 4);
+        assert_eq!(shared.len(), 2);
+        // carried-in stats are preserved and new lookups merge on top
+        assert_eq!(shared.stats(), base_stats);
+        let (v, served) = shared.latency_or_served(1, || unreachable!("cached"));
+        assert_eq!(v, 1.5);
+        assert!(served);
+        assert_eq!(shared.latency_or(17, || 3.25), 3.25);
+        assert_eq!(shared.prediction_or((2, 9, 0), || unreachable!("cached")), 0.25);
+        assert_eq!(shared.stats(), CacheStats { hits: 3, misses: 3 });
+
+        let back = shared.into_cache();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.stats(), CacheStats { hits: 3, misses: 3 });
+        let mut back = back;
+        assert_eq!(back.latency_or(17, || unreachable!("cached")), 3.25);
+    }
+
+    #[test]
+    fn shared_cache_round_trip_preserves_configured_capacity() {
+        // the per-shard split must not leak into the bound the caller
+        // configured: with_capacity(100) → 16 shards → back to 100, not
+        // 16 * (100 / 16) = 96
+        let shared = SharedEvalCache::from_cache(EvalCache::with_capacity(100), 16);
+        assert_eq!(shared.into_cache().max_entries, 100);
+        // tiny bounds don't inflate either (4 → 16 shards → back to 4)
+        let shared = SharedEvalCache::from_cache(EvalCache::with_capacity(4), 16);
+        assert_eq!(shared.into_cache().max_entries, 4);
+    }
+
+    #[test]
+    fn shared_cache_reset_stats_keeps_entries() {
+        let shared = SharedEvalCache::new(2);
+        shared.latency_or(5, || 2.0);
+        shared.reset_stats();
+        assert_eq!(shared.stats(), CacheStats::default());
+        assert_eq!(shared.len(), 1);
+        assert!(!shared.is_empty());
+    }
+
+    #[test]
+    fn shared_cache_hammered_by_8_threads_loses_nothing_and_charges_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        // 8 threads insert/read the same 64 keys over and over; the cache
+        // must (a) never lose a ground-truth entry, (b) report every
+        // value correctly, and (c) charge each key's computation exactly
+        // once — the `served=false` outcomes callers use to charge
+        // measure_overhead_s must total one per key, never two.
+        const THREADS: usize = 8;
+        const REPS: usize = 50;
+        let keys: Vec<u64> = (0..64u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+        let shared = SharedEvalCache::new(8);
+        let computed = AtomicU64::new(0);
+        let charged = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                scope.spawn(|| {
+                    for _ in 0..REPS {
+                        for &k in &keys {
+                            let (v, served) = shared.latency_or_served(k, || {
+                                computed.fetch_add(1, Ordering::Relaxed);
+                                k as f64 * 0.5
+                            });
+                            assert_eq!(v, k as f64 * 0.5);
+                            if !served {
+                                charged.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        // exactly one compute + one overhead charge per key
+        assert_eq!(computed.load(Ordering::Relaxed), keys.len() as u64);
+        assert_eq!(charged.load(Ordering::Relaxed), keys.len() as u64);
+        let stats = shared.stats();
+        assert_eq!(stats.misses, keys.len() as u64);
+        assert_eq!(
+            stats.hits + stats.misses,
+            (THREADS * REPS * keys.len()) as u64
+        );
+        // no entry was lost: every key drains back out with its value
+        let mut cache = shared.into_cache();
+        for &k in &keys {
+            assert_eq!(cache.latency_or(k, || unreachable!("lost entry")), k as f64 * 0.5);
+        }
+    }
+
+    #[test]
+    fn shared_evaluator_matches_serial_evaluator() {
+        // the sharded evaluator is observationally identical to the
+        // serial one: same values, same counters, for the same call
+        // sequence (the transparency contract run_parallel relies on)
+        let mut rng = Rng::new(31);
+        let s0 = base();
+        let s1 = apply(&s0, TransformKind::TileSize, &mut rng, false).unwrap();
+        let mut serial = CachedEvaluator::new(
+            CostModel::new(Target::Cpu, 77),
+            Simulator::new(Target::Cpu),
+        );
+        let shared = SharedEvalCache::new(4);
+        let mut conc = SharedCachedEvaluator {
+            cost: CostModel::new(Target::Cpu, 77),
+            sim: Simulator::new(Target::Cpu),
+            cache: &shared,
+        };
+        for s in [&s0, &s1, &s0, &s1] {
+            let a = serial.measure(s);
+            let b = conc.measure(s);
+            assert_eq!(a, b);
+            assert_eq!(serial.true_latency(s), conc.true_latency(s));
+            assert_eq!(serial.score(s), conc.score(s));
+        }
+        assert_eq!(serial.best_latency(), conc.best_latency());
+        assert_eq!(serial.cache_stats(), conc.cache_stats());
     }
 }

@@ -17,12 +17,15 @@ pub mod la_uct;
 use crate::costmodel::CostModel;
 use crate::llm::prompts::{PromptCtx, VariantCtx};
 use crate::llm::{CallKind, ModelSet};
+use crate::runtime::driver::WorkerPool;
 use crate::schedule::printer::print_dominant;
 use crate::schedule::transforms::{apply_sequence, TransformKind};
 use crate::schedule::Schedule;
 use crate::sim::Simulator;
 use crate::util::Rng;
-use evalcache::{CacheStats, CachedEvaluator, EvalCache, Evaluator};
+use evalcache::{
+    CacheStats, CachedEvaluator, EvalCache, Evaluator, SharedCachedEvaluator, SharedEvalCache,
+};
 use std::sync::Arc;
 
 /// Next-model routing policy (Appendix G ablation).
@@ -61,6 +64,12 @@ pub struct SearchConfig {
     pub seed: u64,
     /// Curve checkpoints (samples) at which best speedup is recorded.
     pub checkpoints: Vec<usize>,
+    /// In-search tree parallelism: worker threads one search runs its
+    /// leaf evaluations on ([`Mcts::run_parallel`]). `1` (the default) is
+    /// the serial engine, bit-identical to [`Mcts::run`]; `t > 1` is
+    /// deterministic for a fixed `(seed, t)` pair. Ignored by searchers
+    /// with no tree (e.g. the evolutionary baseline).
+    pub search_threads: usize,
 }
 
 impl Default for SearchConfig {
@@ -78,6 +87,7 @@ impl Default for SearchConfig {
             routing: Routing::Endogenous,
             seed: 0,
             checkpoints: vec![50, 100, 250, 500, 750, 1000],
+            search_threads: 1,
         }
     }
 }
@@ -114,6 +124,15 @@ struct Node {
     regression_chain: usize,
     pruned: bool,
     measured: bool,
+    /// Tree-parallel virtual loss: in-flight lanes of the current round
+    /// that descended through this node. Counted as extra zero-reward
+    /// visits by LA-UCT so concurrent selectors spread over disjoint
+    /// paths; always 0 outside a parallel round (and in serial search).
+    virtual_loss: f64,
+    /// In-flight expansions of the current round that picked this node as
+    /// their leaf; counted against the branching factor so a round's
+    /// lanes don't all expand the same parent.
+    pending_children: usize,
 }
 
 /// Everything a finished search reports.
@@ -180,10 +199,16 @@ impl SearchResult {
 /// evaluation — expansion scoring, rollout scoring, course-alteration
 /// re-expansion, and periodic measurement — shares one transposition
 /// cache.
-pub struct Mcts {
+///
+/// The evaluator is a type parameter: the serial engine (`Mcts`, the
+/// default) owns a [`CachedEvaluator`]; the tree-parallel engine behind
+/// [`Mcts::run_parallel`] drives the same machinery over a
+/// [`SharedCachedEvaluator`] whose transposition cache
+/// ([`evalcache::SharedEvalCache`]) is shared with its worker threads.
+pub struct Mcts<E = CachedEvaluator> {
     pub cfg: SearchConfig,
     pub models: ModelSet,
-    pub eval: CachedEvaluator,
+    pub eval: E,
     nodes: Vec<Node>,
     rng: Rng,
     rr_ptr: usize,
@@ -206,10 +231,60 @@ pub struct Mcts {
     /// used to allocate two fresh `Vec`s).
     sel_children: Vec<usize>,
     sel_stats: Vec<la_uct::ChildStats>,
+    /// Root→leaf path of the most recent `select()` descent (reused
+    /// scratch; the parallel rounds record it to place virtual losses).
+    sel_path: Vec<usize>,
 }
 
 /// How many trailing trace steps a node contributes to prompt context.
 const PROMPT_TRACE_TAIL: usize = 8;
+
+/// One committed expansion, ready to insert into the tree: the output of
+/// the expand phase, consumed by the insert/backprop phases.
+struct Expansion {
+    sched: Schedule,
+    score: f64,
+    llm: usize,
+    expanded_by: Option<(usize, CallKind)>,
+    chain: usize,
+}
+
+/// Expansion-scoring blend — one definition for the serial score
+/// closures, the parallel batch scoring, and course-alteration
+/// re-scoring. The model's internal deliberation mixes the learned cost
+/// model with a ground-truth-reasoned term (an LLM reads the code
+/// directly, not only through the tuner's learned predictor).
+fn blend_scores(model_score: f64, best_lat: f64, true_lat: f64) -> f64 {
+    let reasoned = (best_lat / true_lat).clamp(0.0, 1.5);
+    0.4 * model_score + 0.6 * reasoned
+}
+
+/// Random-rollout reward of a freshly expanded node: descend
+/// `rollout_depth` random transforms from `base`, score the terminal
+/// program with the learned cost model, and blend with the node's own
+/// predicted score. Free function so both the serial engine (drawing from
+/// its main RNG) and the parallel lanes (drawing from their lane RNGs)
+/// share one definition.
+fn rollout_reward<E: Evaluator>(
+    eval: &mut E,
+    base: &Schedule,
+    final_score: f64,
+    rollout_depth: usize,
+    gpu: bool,
+    rng: &mut Rng,
+) -> f64 {
+    // CoW clone: O(blocks) pointer copies, not a deep program copy
+    let mut roll = base.clone();
+    let vocab = TransformKind::vocabulary(gpu);
+    for _ in 0..rollout_depth {
+        let k = *rng.choice(&vocab);
+        if let Ok(next) = crate::schedule::transforms::apply(&roll, k, rng, gpu) {
+            roll = next;
+        }
+    }
+    let rollout_score = eval.score(&roll);
+    final_score.max(rollout_score).clamp(0.0, 1.0)
+}
 
 impl Mcts {
     pub fn new(cfg: SearchConfig, models: ModelSet, sim: Simulator, root: Schedule) -> Mcts {
@@ -250,6 +325,8 @@ impl Mcts {
             regression_chain: 0,
             pruned: false,
             measured: true,
+            virtual_loss: 0.0,
+            pending_children: 0,
         };
         // seed cost model with a few random variants so early predictions
         // aren't degenerate
@@ -285,9 +362,12 @@ impl Mcts {
             checkpoint_cursor: 0,
             sel_children: Vec::new(),
             sel_stats: Vec::new(),
+            sel_path: Vec::new(),
         }
     }
+}
 
+impl<E: Evaluator> Mcts<E> {
     fn phi(&self, model: usize) -> f64 {
         if self.models.len() == 1 {
             0.0
@@ -298,12 +378,23 @@ impl Mcts {
 
     /// LA-UCT descent: walk from the root until a node with spare
     /// branching capacity (or the depth cap). Reuses the engine's scratch
-    /// buffers — a descent allocates nothing.
+    /// buffers — a descent allocates nothing — and records the root→leaf
+    /// path in `self.sel_path` (consumed by the parallel rounds to place
+    /// virtual losses).
+    ///
+    /// Virtual loss: each node's in-flight lanes count as extra
+    /// zero-reward visits, and a leaf's pending expansions count against
+    /// its branching capacity, so concurrent selectors of one round
+    /// spread over disjoint subtrees. Both terms are identically zero in
+    /// serial search, where this is exactly classic LA-UCT descent.
     fn select(&mut self) -> usize {
         let mut kids = std::mem::take(&mut self.sel_children);
         let mut stats = std::mem::take(&mut self.sel_stats);
+        let mut path = std::mem::take(&mut self.sel_path);
+        path.clear();
         let mut cur = 0usize;
         loop {
+            path.push(cur);
             kids.clear();
             kids.extend(
                 self.nodes[cur]
@@ -312,18 +403,21 @@ impl Mcts {
                     .copied()
                     .filter(|&c| !self.nodes[c].pruned),
             );
-            if kids.len() < self.cfg.branching || self.nodes[cur].depth >= self.max_depth {
+            if kids.len() + self.nodes[cur].pending_children < self.cfg.branching
+                || self.nodes[cur].depth >= self.max_depth
+                || kids.is_empty()
+            {
                 break;
             }
             stats.clear();
             stats.extend(kids.iter().map(|&c| la_uct::ChildStats {
-                visits: self.nodes[c].visits,
+                visits: self.nodes[c].visits + self.nodes[c].virtual_loss,
                 reward_sum: self.nodes[c].reward_sum,
                 phi_small: self.phi(self.nodes[c].llm),
             }));
             let pick = la_uct::select(
                 &stats,
-                self.nodes[cur].visits,
+                self.nodes[cur].visits + self.nodes[cur].virtual_loss,
                 self.cfg.lambda,
                 self.cfg.exploration_c,
             );
@@ -331,6 +425,7 @@ impl Mcts {
         }
         self.sel_children = kids;
         self.sel_stats = stats;
+        self.sel_path = path;
         cur
     }
 
@@ -365,7 +460,8 @@ impl Mcts {
         }
     }
 
-    /// Route the next model according to the configured policy.
+    /// Route the next model according to the configured policy (serial
+    /// path: randomness from the engine RNG).
     fn route(&mut self, proposed: usize) -> usize {
         match self.cfg.routing {
             Routing::Endogenous => proposed,
@@ -377,12 +473,87 @@ impl Mcts {
         }
     }
 
-    /// One full MCTS iteration. Returns false once the budget is spent.
+    /// [`Mcts::route`] for parallel lanes: randomness comes from the lane
+    /// RNG so lanes stay deterministic under any thread interleaving (the
+    /// round-robin pointer is still engine state, advanced in lane order).
+    fn route_with(&mut self, proposed: usize, rng: &mut Rng) -> usize {
+        match self.cfg.routing {
+            Routing::Endogenous => proposed,
+            Routing::Random => rng.below(self.models.len()),
+            Routing::RoundRobin => {
+                self.rr_ptr = (self.rr_ptr + 1) % self.models.len();
+                self.rr_ptr
+            }
+        }
+    }
+
+    /// Post-proposal regression bookkeeping, shared verbatim by the
+    /// serial and parallel engines: the hysteresis-tested regression
+    /// flag, the updated small-model regression chain (large-model nodes
+    /// pass their parent's count through, improvements reset it — paper
+    /// §2.5), and whether course alteration triggers.
+    fn regression_outcome(
+        &self,
+        active: usize,
+        child_score: f64,
+        parent_score: f64,
+        parent_chain: usize,
+    ) -> (bool, usize, bool) {
+        let active_is_small = active != self.models.largest;
+        // regression = the child is predicted meaningfully worse than its
+        // parent (hysteresis absorbs cost-model jitter)
+        let regressed = child_score < parent_score - 0.02;
+        let chain = if regressed && active_is_small {
+            parent_chain + 1
+        } else if regressed {
+            parent_chain
+        } else {
+            0
+        };
+        let trigger_ca = self
+            .cfg
+            .ca_threshold
+            .map(|t| active_is_small && regressed && chain >= t)
+            .unwrap_or(false)
+            && self.models.len() > 1;
+        (regressed, chain, trigger_ca)
+    }
+
+    /// One full MCTS iteration — the four phases (select → expand →
+    /// evaluate/rollout → backprop) fused in the serial draw order.
+    /// Returns false once the budget is spent.
     pub fn step(&mut self) -> bool {
         if self.samples >= self.cfg.budget {
             return false;
         }
         let leaf = self.select();
+        let Some(exp) = self.expand(leaf) else {
+            return true; // nothing applicable; spend no sample
+        };
+        let child_idx = self.insert_child(leaf, exp);
+
+        // ---- rollout + backpropagation ---------------------------------
+        let gpu = self.eval.target().is_gpu();
+        let roll_base = Arc::clone(&self.nodes[child_idx].schedule);
+        let final_score = self.nodes[child_idx].predicted_score;
+        let reward = rollout_reward(
+            &mut self.eval,
+            roll_base.as_ref(),
+            final_score,
+            self.cfg.rollout_depth,
+            gpu,
+            &mut self.rng,
+        );
+        self.backprop(child_idx, reward);
+        self.after_sample();
+        true
+    }
+
+    /// Expansion phase (serial draw order): query the active LLM for a
+    /// joint ⟨transform-sequence, next-llm⟩ action, apply it, and resolve
+    /// course alteration. `None` = the proposal (or its CA replacement)
+    /// was structurally inapplicable; no sample is spent.
+    fn expand(&mut self, leaf: usize) -> Option<Expansion> {
         let gpu = self.eval.target().is_gpu();
 
         // ---- expansion: query the active LLM ---------------------------
@@ -404,8 +575,8 @@ impl Mcts {
         let mut score_fn = |seq: &[TransformKind]| -> f64 {
             match apply_sequence(parent_sched.as_ref(), seq, &mut eval_rng, gpu) {
                 Ok(s) => {
-                    let reasoned = (best_lat / eval.true_latency(&s)).clamp(0.0, 1.5);
-                    0.4 * eval.score(&s) + 0.6 * reasoned
+                    let true_lat = eval.true_latency(&s);
+                    blend_scores(eval.score(&s), best_lat, true_lat)
                 }
                 Err(_) => 0.0,
             }
@@ -422,136 +593,160 @@ impl Mcts {
             gpu,
         ) {
             Ok(s) => s,
-            Err(_) => return true, // nothing applicable; spend no sample
+            Err(_) => return None, // nothing applicable; spend no sample
         };
         let child_score = self.eval.score(&child_sched);
         let next_llm = self.route(proposal.next_model);
         let parent_score = self.nodes[leaf].predicted_score;
         let parent_chain = self.nodes[leaf].regression_chain;
-        let active_is_small = active != self.models.largest;
-        // regression = the child is predicted meaningfully worse than its
-        // parent (hysteresis absorbs cost-model jitter)
-        let regressed = child_score < parent_score - 0.02;
+        let (regressed, chain, trigger_ca) =
+            self.regression_outcome(active, child_score, parent_score, parent_chain);
         if !regressed {
             self.models.credit_hit(active, CallKind::Regular);
         }
 
-        // regression chain: small-model regressions accumulate; large-model
-        // nodes pass the count through (paper: "ignoring intervening large
-        // model nodes"); an improvement resets it.
-        let chain = if regressed && active_is_small {
-            parent_chain + 1
-        } else if regressed {
-            parent_chain
-        } else {
-            0
-        };
-
         // ---- course alteration ------------------------------------------
-        let trigger_ca = self
-            .cfg
-            .ca_threshold
-            .map(|t| active_is_small && regressed && chain >= t)
-            .unwrap_or(false)
-            && self.models.len() > 1;
-
-        let (final_sched, final_score, final_llm, expanded_by, final_chain) = if trigger_ca {
-            // prune the regressive proposal (no node inserted, its value
-            // never backpropagates), re-expand with the largest model
-            self.n_ca_events += 1;
-            let largest = self.models.largest;
+        if trigger_ca {
+            // move the engine RNG out so the shared CA helper can draw
+            // from it next to `&mut self`; the stream continues unchanged
+            // and is restored right after (draw order identical to the
+            // historical inline CA block)
             let banned = proposal.transforms.clone();
-            let best_lat = self.best_latency;
-            let mut eval_rng = self.rng.fork(self.samples as u64 ^ 0xCA);
-            let eval = &mut self.eval;
-            let mut ca_score_fn = |seq: &[TransformKind]| -> f64 {
-                match apply_sequence(parent_sched.as_ref(), seq, &mut eval_rng, gpu) {
-                    Ok(s) => {
-                        let reasoned = (best_lat / eval.true_latency(&s)).clamp(0.0, 1.5);
-                        0.4 * eval.score(&s) + 0.6 * reasoned
-                    }
-                    Err(_) => 0.0,
-                }
-            };
-            let (ca_prop, _) = self.models.propose(
-                largest,
+            let mut rng = std::mem::replace(&mut self.rng, Rng::new(0));
+            let eval_rng = rng.fork(self.samples as u64 ^ 0xCA);
+            let exp = self.course_alter(
                 &ctx,
-                CallKind::CourseAlteration,
-                &banned,
-                &mut ca_score_fn,
-                &mut self.rng,
+                parent_sched.as_ref(),
+                parent_score,
+                banned,
+                best_lat,
+                gpu,
+                eval_rng,
+                &mut rng,
             );
-            self.n_errors += ca_prop.n_errors;
-            match apply_sequence(parent_sched.as_ref(), &ca_prop.transforms, &mut self.rng, gpu) {
-                Ok(s) => {
-                    let sc = self.eval.score(&s);
-                    if sc >= parent_score {
-                        self.models.credit_hit(largest, CallKind::CourseAlteration);
-                    }
-                    let next = self.route(ca_prop.next_model);
-                    (s, sc, next, Some((largest, CallKind::CourseAlteration)), 0)
-                }
-                Err(_) => return true,
-            }
+            self.rng = rng;
+            exp
         } else {
-            (
-                child_sched,
-                child_score,
-                next_llm,
-                Some((active, CallKind::Regular)),
+            Some(Expansion {
+                sched: child_sched,
+                score: child_score,
+                llm: next_llm,
+                expanded_by: Some((active, CallKind::Regular)),
                 chain,
-            )
-        };
+            })
+        }
+    }
 
-        // ---- insert child -------------------------------------------------
+    /// Course-alteration re-expansion (paper §2.5), shared verbatim by
+    /// the serial engine and the parallel lanes: the regressive proposal
+    /// is pruned (no node inserted, its value never backpropagates) and
+    /// the **largest** model re-expands from the same parent under a
+    /// shorter targeted prompt with the failed sequence banned. All
+    /// randomness comes from the caller's streams (`eval_rng` for
+    /// candidate application, `rng` for the call itself), so both engines
+    /// run one definition of the CA protocol. `None` = the replacement
+    /// was structurally inapplicable; no sample is spent.
+    #[allow(clippy::too_many_arguments)]
+    fn course_alter(
+        &mut self,
+        ctx: &PromptCtx,
+        parent_sched: &Schedule,
+        parent_score: f64,
+        banned: Vec<TransformKind>,
+        best_lat: f64,
+        gpu: bool,
+        mut eval_rng: Rng,
+        rng: &mut Rng,
+    ) -> Option<Expansion> {
+        self.n_ca_events += 1;
+        let largest = self.models.largest;
+        let eval = &mut self.eval;
+        let mut ca_score_fn = |seq: &[TransformKind]| -> f64 {
+            match apply_sequence(parent_sched, seq, &mut eval_rng, gpu) {
+                Ok(s) => {
+                    let true_lat = eval.true_latency(&s);
+                    blend_scores(eval.score(&s), best_lat, true_lat)
+                }
+                Err(_) => 0.0,
+            }
+        };
+        let (ca_prop, _) = self.models.propose(
+            largest,
+            ctx,
+            CallKind::CourseAlteration,
+            &banned,
+            &mut ca_score_fn,
+            rng,
+        );
+        self.n_errors += ca_prop.n_errors;
+        match apply_sequence(parent_sched, &ca_prop.transforms, rng, gpu) {
+            Ok(s) => {
+                let sc = self.eval.score(&s);
+                if sc >= parent_score {
+                    self.models.credit_hit(largest, CallKind::CourseAlteration);
+                }
+                let next = self.route_with(ca_prop.next_model, rng);
+                Some(Expansion {
+                    sched: s,
+                    score: sc,
+                    llm: next,
+                    expanded_by: Some((largest, CallKind::CourseAlteration)),
+                    chain: 0,
+                })
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Insert phase: commit an expansion as a new tree node (rendering its
+    /// prompt context once, at insertion) and spend one sample.
+    fn insert_child(&mut self, leaf: usize, exp: Expansion) -> usize {
+        let gpu = self.eval.target().is_gpu();
         let depth = self.nodes[leaf].depth + 1;
         let child_idx = self.nodes.len();
         // render prompt context once, at insertion (re-used every time
         // this node later appears as current/parent/grandparent)
-        let code: Arc<str> = print_dominant(&final_sched, gpu).into();
-        let trace_tail: Arc<str> = final_sched.trace.render_tail(PROMPT_TRACE_TAIL).into();
+        let code: Arc<str> = print_dominant(&exp.sched, gpu).into();
+        let trace_tail: Arc<str> = exp.sched.trace.render_tail(PROMPT_TRACE_TAIL).into();
         self.nodes.push(Node {
             parent: Some(leaf),
             children: Vec::new(),
-            schedule: Arc::new(final_sched),
+            schedule: Arc::new(exp.sched),
             code,
             trace_tail,
-            llm: final_llm,
+            llm: exp.llm,
             visits: 0.0,
             reward_sum: 0.0,
-            predicted_score: final_score,
-            expanded_by,
+            predicted_score: exp.score,
+            expanded_by: exp.expanded_by,
             depth,
-            regression_chain: final_chain,
+            regression_chain: exp.chain,
             pruned: false,
             measured: false,
+            virtual_loss: 0.0,
+            pending_children: 0,
         });
         self.nodes[leaf].children.push(child_idx);
         self.unmeasured.push(child_idx);
         self.samples += 1;
+        child_idx
+    }
 
-        // ---- rollout --------------------------------------------------------
-        // CoW clone: O(blocks) pointer copies, not a deep program copy
-        let mut roll = (*self.nodes[child_idx].schedule).clone();
-        let vocab = TransformKind::vocabulary(gpu);
-        for _ in 0..self.cfg.rollout_depth {
-            let k = *self.rng.choice(&vocab);
-            if let Ok(next) = crate::schedule::transforms::apply(&roll, k, &mut self.rng, gpu) {
-                roll = next;
-            }
-        }
-        let rollout_score = self.eval.score(&roll);
-        let reward = final_score.max(rollout_score).clamp(0.0, 1.0);
-
-        // ---- backpropagation -------------------------------------------------
-        let mut cur = Some(child_idx);
+    /// Backpropagation phase: credit the rollout-blended reward along the
+    /// selected path, so signal discovered by one model informs all
+    /// others.
+    fn backprop(&mut self, from: usize, reward: f64) {
+        let mut cur = Some(from);
         while let Some(i) = cur {
             self.nodes[i].visits += 1.0;
             self.nodes[i].reward_sum += reward;
             cur = self.nodes[i].parent;
         }
+    }
 
-        // ---- periodic measurement + cost-model retraining ---------------------
+    /// Post-sample bookkeeping: periodic measurement + cost-model
+    /// retraining, then curve checkpoints.
+    fn after_sample(&mut self) {
         if self.samples % self.cfg.measure_interval == 0 || self.samples >= self.cfg.budget {
             self.measure_batch();
         }
@@ -568,7 +763,6 @@ impl Mcts {
             }
             self.checkpoint_cursor += 1;
         }
-        true
     }
 
     /// Measure the top-K unmeasured candidates (by predicted score) on the
@@ -602,15 +796,9 @@ impl Mcts {
         self.unmeasured.clear(); // stale predictions aren't re-ranked
     }
 
-    /// Run to budget exhaustion and report.
-    pub fn run(self, workload_name: &str) -> SearchResult {
-        self.run_with_cache(workload_name).0
-    }
-
-    /// Like [`Mcts::run`], but also hands back the warmed evaluation
-    /// cache so a follow-up search ([`Mcts::with_cache`]) can reuse every
-    /// ground-truth evaluation this one performed.
-    pub fn run_with_cache(mut self, workload_name: &str) -> (SearchResult, EvalCache) {
+    /// Serial search loop: step to budget exhaustion (with a stall guard
+    /// for configurations where nothing is ever applicable).
+    fn run_serial_loop(&mut self) {
         let mut stall = 0;
         while self.samples < self.cfg.budget && stall < 10_000 {
             let before = self.samples;
@@ -621,6 +809,12 @@ impl Mcts {
                 stall = 0;
             }
         }
+    }
+
+    /// Final measurement flush + report assembly, shared by the serial
+    /// and tree-parallel paths. Hands the evaluator back so callers can
+    /// recover the warm cache.
+    fn finish(mut self, workload_name: &str) -> (SearchResult, E) {
         self.measure_batch();
         let final_speedup = self.baseline_latency / self.best_latency;
         let mut curve = std::mem::take(&mut self.curve);
@@ -652,7 +846,408 @@ impl Mcts {
             eval_cache: self.eval.cache_stats(),
             best_schedule: (*self.best_schedule).clone(),
         };
-        (result, self.eval.into_cache())
+        (result, self.eval)
+    }
+}
+
+impl Mcts {
+    /// Run to budget exhaustion and report.
+    pub fn run(self, workload_name: &str) -> SearchResult {
+        self.run_with_cache(workload_name).0
+    }
+
+    /// Like [`Mcts::run`], but also hands back the warmed evaluation
+    /// cache so a follow-up search ([`Mcts::with_cache`]) can reuse every
+    /// ground-truth evaluation this one performed.
+    pub fn run_with_cache(mut self, workload_name: &str) -> (SearchResult, EvalCache) {
+        self.run_serial_loop();
+        let (result, eval) = self.finish(workload_name);
+        (result, eval.into_cache())
+    }
+
+    /// Tree-parallel search: run this one search across `threads` worker
+    /// threads (see [`Mcts::run_parallel_with_cache`] for the contract).
+    pub fn run_parallel(self, workload_name: &str, threads: usize) -> SearchResult {
+        self.run_parallel_with_cache(workload_name, threads).0
+    }
+
+    /// Tree-parallel search with virtual loss and batched leaf
+    /// evaluation.
+    ///
+    /// Each round, up to `threads` lanes descend the shared tree (virtual
+    /// losses keep them on disjoint paths), draw their LLM candidate
+    /// sequences serially, then fan every candidate's ground-truth
+    /// evaluation out across a persistent pool of `threads` workers
+    /// ([`crate::runtime::driver::WorkerPool`], spawned once per search)
+    /// over a sharded concurrent cache ([`SharedEvalCache`]); lane
+    /// proposals, insertions, rollouts, and backpropagation are then
+    /// merged **in lane order**, so the result is a pure function of the
+    /// configuration.
+    ///
+    /// Determinism contract:
+    /// * `threads <= 1` delegates to the serial engine — bit-identical to
+    ///   [`Mcts::run`] (same RNG streams, same result, same counters);
+    /// * `threads > 1` is deterministic for a fixed `(seed, threads)`
+    ///   pair: every lane draws from its own
+    ///   [`lane_seed`](crate::runtime::driver::lane_seed)-derived stream
+    ///   and nothing observable depends on thread scheduling. Different
+    ///   `threads` values explore different (equally valid) trees.
+    ///   Caveat: this additionally assumes the shared cache keeps insert
+    ///   capacity — a full shard degrades to compute-per-lookup and its
+    ///   final contents become timing-dependent (see [`SharedEvalCache`]);
+    ///   the default [`EvalCache::DEFAULT_CAPACITY`] leaves ample
+    ///   headroom.
+    pub fn run_parallel_with_cache(
+        self,
+        workload_name: &str,
+        threads: usize,
+    ) -> (SearchResult, EvalCache) {
+        if threads <= 1 {
+            return self.run_with_cache(workload_name);
+        }
+        let Mcts {
+            cfg,
+            models,
+            eval,
+            nodes,
+            rng,
+            rr_ptr,
+            samples,
+            measure_time_s,
+            n_ca_events,
+            n_errors,
+            best_latency,
+            best_schedule,
+            baseline_latency,
+            unmeasured,
+            curve,
+            max_depth,
+            checkpoints_sorted,
+            checkpoint_cursor,
+            sel_children,
+            sel_stats,
+            sel_path,
+        } = self;
+        let CachedEvaluator { cost, sim, cache } = eval;
+        let shared = SharedEvalCache::from_cache(cache, SharedEvalCache::DEFAULT_SHARDS);
+        let engine: Mcts<SharedCachedEvaluator<'_>> = Mcts {
+            cfg,
+            models,
+            eval: SharedCachedEvaluator {
+                cost,
+                sim,
+                cache: &shared,
+            },
+            nodes,
+            rng,
+            rr_ptr,
+            samples,
+            measure_time_s,
+            n_ca_events,
+            n_errors,
+            best_latency,
+            best_schedule,
+            baseline_latency,
+            unmeasured,
+            curve,
+            max_depth,
+            checkpoints_sorted,
+            checkpoint_cursor,
+            sel_children,
+            sel_stats,
+            sel_path,
+        };
+        let result = engine.run_parallel_rounds(workload_name, threads);
+        (result, shared.into_cache())
+    }
+}
+
+/// Deterministic per-round seed: every round of a parallel search derives
+/// its lane streams from this, so `(seed, threads)` fully pins the search.
+fn round_seed(seed: u64, round: u64) -> u64 {
+    let mut st = seed ^ round.wrapping_mul(0xA076_1D64_78BD_642F);
+    crate::util::rng::splitmix64(&mut st)
+}
+
+/// One in-flight lane of a parallel round, between the select/draw phase
+/// and the batched evaluation.
+struct Lane {
+    leaf: usize,
+    path: Vec<usize>,
+    rng: Rng,
+    cands: Vec<Vec<TransformKind>>,
+    applied: Vec<Option<Schedule>>,
+}
+
+/// A lane whose candidates have been evaluated, ready for the serial
+/// lane-ordered merge.
+struct ReadyLane {
+    leaf: usize,
+    path: Vec<usize>,
+    rng: Rng,
+    scored: Vec<(Vec<TransformKind>, f64)>,
+}
+
+impl<'s> Mcts<SharedCachedEvaluator<'s>> {
+    /// Parallel round loop (same budget/stall contract as the serial
+    /// loop), then the shared report assembly.
+    ///
+    /// The leaf-evaluation worker pool lives for the **whole search**:
+    /// thread spawn/join is paid once here, and each round costs a couple
+    /// of channel operations per candidate — the per-candidate work (one
+    /// simulator evaluation through the shared cache) is small enough
+    /// that per-round thread spawning would dominate it.
+    fn run_parallel_rounds(mut self, workload_name: &str, threads: usize) -> SearchResult {
+        let shared = self.eval.cache;
+        let target = self.eval.target();
+        let sim = self.eval.sim.clone();
+        std::thread::scope(|scope| {
+            let pool: WorkerPool<Schedule, f64> =
+                WorkerPool::spawn(scope, threads, move |s: Schedule| {
+                    shared
+                        .latency_or_served(evalcache::trace_key(&s, target), || sim.latency(&s))
+                        .0
+                });
+            let mut stall = 0;
+            let mut round: u64 = 0;
+            while self.samples < self.cfg.budget && stall < 10_000 {
+                let before = self.samples;
+                self.parallel_round(round, threads, &pool);
+                round = round.wrapping_add(1);
+                if self.samples == before {
+                    stall += 1;
+                } else {
+                    stall = 0;
+                }
+            }
+            debug_assert!(
+                self.nodes
+                    .iter()
+                    .all(|n| n.virtual_loss == 0.0 && n.pending_children == 0),
+                "virtual loss / pending-expansion marks leaked past a round"
+            );
+            debug_assert!(
+                self.nodes
+                    .iter()
+                    .all(|n| n.depth >= self.max_depth
+                        || n.children.len() <= self.cfg.branching.max(1)),
+                "branching factor violated by parallel expansion"
+            );
+            // the pool drops when this closure returns, shutting the
+            // workers down before the scope joins them
+            self.finish(workload_name).0
+        })
+    }
+
+    /// One tree-parallel round:
+    ///
+    /// 1. **select + draw** (serial): up to `threads` lanes descend with
+    ///    virtual loss and draw their LLM candidate sequences from
+    ///    per-lane seeded RNGs;
+    /// 2. **evaluate** (parallel): every applicable candidate's
+    ///    ground-truth latency is computed across the persistent worker
+    ///    pool through the shared sharded cache — the expensive part of
+    ///    an iteration, batched;
+    /// 3. **merge** (serial, lane order): each lane finishes its proposal
+    ///    (noise, routing, accounting), resolves course alteration,
+    ///    inserts its child, rolls out, and backpropagates — identical
+    ///    bookkeeping to the serial engine, applied deterministically.
+    fn parallel_round(&mut self, round: u64, threads: usize, pool: &WorkerPool<Schedule, f64>) {
+        let lanes_n = threads.min(self.cfg.budget - self.samples).max(1);
+        let gpu = self.eval.target().is_gpu();
+        let vocab = TransformKind::vocabulary(gpu);
+        let best_lat = self.best_latency;
+        let rseed = round_seed(self.cfg.seed, round);
+
+        // ---- phase 1: select with virtual loss + draw candidates -------
+        let mut lanes: Vec<Lane> = Vec::with_capacity(lanes_n);
+        for lane in 0..lanes_n {
+            let leaf = self.select();
+            // a childless frontier node is reached through select()'s
+            // empty-children escape, which bypasses the branching cap:
+            // once this round's earlier lanes have saturated the node's
+            // capacity with pending expansions, the round stops adding
+            // lanes instead of over-expanding it (depth-capped nodes keep
+            // the serial engine's unbounded-children behavior). `break`,
+            // not `continue`: a skip changes none of select()'s inputs,
+            // so every later lane of this round would deterministically
+            // re-walk the same descent and skip too.
+            let kids_n = self.nodes[leaf]
+                .children
+                .iter()
+                .filter(|&&c| !self.nodes[c].pruned)
+                .count();
+            if self.nodes[leaf].depth < self.max_depth
+                && kids_n + self.nodes[leaf].pending_children >= self.cfg.branching
+            {
+                break;
+            }
+            let path = self.sel_path.clone();
+            for &i in &path {
+                self.nodes[i].virtual_loss += 1.0;
+            }
+            self.nodes[leaf].pending_children += 1;
+            let mut rng = Rng::new(crate::runtime::driver::lane_seed(rseed, lane as u64));
+            let mut eval_rng = rng.fork(0xE7A1);
+            let active = self.nodes[leaf].llm;
+            let cands =
+                self.models
+                    .draw_candidates(active, &vocab, CallKind::Regular, &[], &mut rng);
+            let parent = Arc::clone(&self.nodes[leaf].schedule);
+            let applied: Vec<Option<Schedule>> = cands
+                .iter()
+                .map(|seq| apply_sequence(parent.as_ref(), seq, &mut eval_rng, gpu).ok())
+                .collect();
+            lanes.push(Lane {
+                leaf,
+                path,
+                rng,
+                cands,
+                applied,
+            });
+        }
+
+        // ---- phase 2: batched leaf evaluation on the worker pool -------
+        // candidate schedules are CoW, so a submission ships pointer
+        // copies; results come back index-addressed, i.e. in submission
+        // order regardless of worker interleaving
+        let mut n_jobs = 0usize;
+        for l in &lanes {
+            for s in l.applied.iter().flatten() {
+                pool.submit(n_jobs, s.clone());
+                n_jobs += 1;
+            }
+        }
+        let lats = pool.collect(n_jobs);
+
+        // ---- phase 3: deterministic lane-ordered merge -----------------
+        let mut li = 0usize;
+        for lane in lanes {
+            let Lane {
+                leaf,
+                path,
+                rng,
+                cands,
+                applied,
+            } = lane;
+            let mut scored: Vec<(Vec<TransformKind>, f64)> = Vec::with_capacity(cands.len());
+            for (seq, app) in cands.into_iter().zip(applied) {
+                let sc = match app {
+                    Some(s) => {
+                        let lat = lats[li];
+                        li += 1;
+                        blend_scores(self.eval.score(&s), best_lat, lat)
+                    }
+                    None => 0.0,
+                };
+                scored.push((seq, sc));
+            }
+            self.finish_lane(
+                ReadyLane {
+                    leaf,
+                    path,
+                    rng,
+                    scored,
+                },
+                best_lat,
+                gpu,
+            );
+        }
+    }
+
+    /// Serial tail of one lane: finish the proposal from its evaluated
+    /// candidates, resolve course alteration, then insert / roll out /
+    /// backpropagate — the same bookkeeping as the serial engine, with
+    /// all randomness drawn from the lane RNG.
+    fn finish_lane(&mut self, lane: ReadyLane, best_lat: f64, gpu: bool) {
+        let ReadyLane {
+            leaf,
+            path,
+            mut rng,
+            scored,
+        } = lane;
+        let ctx = self.prompt_ctx(leaf);
+        let active = self.nodes[leaf].llm;
+        let parent_sched = Arc::clone(&self.nodes[leaf].schedule);
+        let (proposal, _rec) =
+            self.models
+                .propose_scored(active, &ctx, CallKind::Regular, &[], scored, &mut rng);
+        self.n_errors += proposal.n_errors;
+        let child_sched =
+            match apply_sequence(parent_sched.as_ref(), &proposal.transforms, &mut rng, gpu) {
+                Ok(s) => s,
+                Err(_) => {
+                    // nothing applicable; spend no sample
+                    self.clear_lane(&path, leaf);
+                    return;
+                }
+            };
+        let child_score = self.eval.score(&child_sched);
+        let next_llm = self.route_with(proposal.next_model, &mut rng);
+        let parent_score = self.nodes[leaf].predicted_score;
+        let parent_chain = self.nodes[leaf].regression_chain;
+        let (regressed, chain, trigger_ca) =
+            self.regression_outcome(active, child_score, parent_score, parent_chain);
+        if !regressed {
+            self.models.credit_hit(active, CallKind::Regular);
+        }
+
+        let exp = if trigger_ca {
+            // CA is rare: its candidates are scored inline on the
+            // coordinator (still through the shared cache), so the lane
+            // can reuse the exact serial CA protocol, fed by its lane RNG
+            let banned = proposal.transforms.clone();
+            let ca_eval_rng = rng.fork(0xCA);
+            match self.course_alter(
+                &ctx,
+                parent_sched.as_ref(),
+                parent_score,
+                banned,
+                best_lat,
+                gpu,
+                ca_eval_rng,
+                &mut rng,
+            ) {
+                Some(exp) => exp,
+                None => {
+                    self.clear_lane(&path, leaf);
+                    return;
+                }
+            }
+        } else {
+            Expansion {
+                sched: child_sched,
+                score: child_score,
+                llm: next_llm,
+                expanded_by: Some((active, CallKind::Regular)),
+                chain,
+            }
+        };
+
+        // lift the lane's virtual loss before crediting the real visit
+        self.clear_lane(&path, leaf);
+        let child_idx = self.insert_child(leaf, exp);
+        let roll_base = Arc::clone(&self.nodes[child_idx].schedule);
+        let final_score = self.nodes[child_idx].predicted_score;
+        let reward = rollout_reward(
+            &mut self.eval,
+            roll_base.as_ref(),
+            final_score,
+            self.cfg.rollout_depth,
+            gpu,
+            &mut rng,
+        );
+        self.backprop(child_idx, reward);
+        self.after_sample();
+    }
+
+    /// Remove one lane's virtual loss along its selection path and its
+    /// pending-expansion mark on the leaf.
+    fn clear_lane(&mut self, path: &[usize], leaf: usize) {
+        for &i in path {
+            self.nodes[i].virtual_loss -= 1.0;
+        }
+        self.nodes[leaf].pending_children -= 1;
     }
 }
 
@@ -871,6 +1466,124 @@ mod tests {
         assert_eq!(a.api_cost_usd, b.api_cost_usd);
         assert_eq!(a.n_samples, b.n_samples);
         assert_eq!(a.best_schedule.trace.running_hash(), b.best_schedule.trace.running_hash());
+    }
+
+    /// Field-by-field bit-equality of two search reports (SearchResult
+    /// intentionally has no PartialEq; the schedule is compared through
+    /// its trace hash + structural fingerprint).
+    fn assert_results_identical(a: &SearchResult, b: &SearchResult) {
+        assert_eq!(a.workload, b.workload);
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.best_latency_s, b.best_latency_s);
+        assert_eq!(a.baseline_latency_s, b.baseline_latency_s);
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.compile_time_s, b.compile_time_s);
+        assert_eq!(a.api_cost_usd, b.api_cost_usd);
+        assert_eq!(a.n_samples, b.n_samples);
+        assert_eq!(a.n_ca_events, b.n_ca_events);
+        assert_eq!(a.n_errors, b.n_errors);
+        assert_eq!(a.call_counts, b.call_counts);
+        assert_eq!(a.eval_cache, b.eval_cache);
+        assert_eq!(
+            a.best_schedule.trace.running_hash(),
+            b.best_schedule.trace.running_hash()
+        );
+        assert_eq!(a.best_schedule.fingerprint(), b.best_schedule.fingerprint());
+    }
+
+    const ALL_WORKLOADS: [&str; 6] = [
+        "llama3_attention",
+        "deepseek_moe",
+        "flux_attention",
+        "flux_conv",
+        "llama4_mlp",
+        "gemm",
+    ];
+
+    fn engine_for(workload: &str, n_llms: usize, budget: usize, seed: u64) -> Mcts {
+        let w = crate::workloads::by_name(workload).unwrap();
+        let sched = Schedule::initial(Arc::new(w));
+        let models = ModelSet::new(paper_config(n_llms, "gpt-5.2"));
+        Mcts::new(quick_cfg(budget, seed), models, Simulator::new(Target::Cpu), sched)
+    }
+
+    #[test]
+    fn run_parallel_one_thread_bit_identical_to_run_on_every_workload() {
+        // threads=1 must delegate to the serial engine: same RNG streams,
+        // same result, same counters — on every built-in workload
+        for name in ALL_WORKLOADS {
+            let serial = engine_for(name, 4, 30, 11).run(name);
+            let par1 = engine_for(name, 4, 30, 11).run_parallel(name, 1);
+            assert_results_identical(&serial, &par1);
+        }
+    }
+
+    #[test]
+    fn run_parallel_deterministic_for_fixed_seed_and_threads() {
+        // same (seed, threads) twice -> identical SearchResult, down to
+        // the cache counters (the exactly-once miss protocol at work)
+        let a = engine_for("gemm", 8, 64, 9).run_parallel("gemm", 4);
+        let b = engine_for("gemm", 8, 64, 9).run_parallel("gemm", 4);
+        assert_results_identical(&a, &b);
+        assert_eq!(a.n_samples, 64, "parallel rounds must spend the budget");
+        assert!(a.best_speedup > 1.0, "speedup {}", a.best_speedup);
+        assert!(
+            a.eval_cache.hits + a.eval_cache.misses > 0,
+            "parallel search must route evaluation through the shared cache"
+        );
+        // curve stays sorted and monotone under lane-ordered merges
+        for w in a.curve.windows(2) {
+            assert!(w[1].0 > w[0].0, "unsorted curve {:?}", a.curve);
+            assert!(w[1].1 >= w[0].1 - 1e-9, "curve {:?}", a.curve);
+        }
+    }
+
+    #[test]
+    fn run_parallel_hands_back_warm_shared_cache() {
+        // the drained shard union must serve a repeat parallel search
+        let (cold, cache) = {
+            let e = engine_for("gemm", 2, 40, 13);
+            e.run_parallel_with_cache("gemm", 4)
+        };
+        assert!(!cache.is_empty());
+        let w = crate::workloads::by_name("gemm").unwrap();
+        let sched = Schedule::initial(Arc::new(w));
+        let models = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let warm_engine = Mcts::with_cache(
+            quick_cfg(40, 13),
+            models,
+            Simulator::new(Target::Cpu),
+            sched,
+            cache,
+        );
+        let (warm, _) = warm_engine.run_parallel_with_cache("gemm", 4);
+        assert!(
+            warm.eval_cache.hits > cold.eval_cache.hits,
+            "warm {:?} should out-hit cold {:?}",
+            warm.eval_cache,
+            cold.eval_cache
+        );
+        // caching stays observationally transparent in parallel too
+        assert_eq!(warm.best_speedup, cold.best_speedup);
+        assert_eq!(warm.curve, cold.curve);
+    }
+
+    #[test]
+    fn virtual_loss_bookkeeping_returns_to_zero() {
+        // after a parallel run every virtual loss and pending-expansion
+        // mark must have been lifted (leaks would skew later selections)
+        let w = crate::workloads::by_name("gemm").unwrap();
+        let sched = Schedule::initial(Arc::new(w));
+        let models = ModelSet::new(paper_config(4, "gpt-5.2"));
+        let mut engine = Mcts::new(quick_cfg(32, 3), models, Simulator::new(Target::Cpu), sched);
+        // serial stepping never touches the virtual-loss fields at all
+        for _ in 0..5 {
+            engine.step();
+        }
+        assert!(engine
+            .nodes
+            .iter()
+            .all(|n| n.virtual_loss == 0.0 && n.pending_children == 0));
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::mcts::evalcache::CacheStats;
 use crate::mcts::SearchResult;
 use crate::sim::Target;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Default parallelism: one worker per available core.
 pub fn default_threads() -> usize {
@@ -78,6 +78,99 @@ where
         .collect()
 }
 
+/// A persistent pool of scoped worker threads processing index-tagged
+/// jobs through one fixed worker function — the repeated-batch
+/// complement of [`run_jobs`], which spawns (and joins) fresh threads per
+/// call. When the same caller fans out many small batches (the
+/// tree-parallel search engine evaluates a batch of candidate programs
+/// *every round*), per-call thread spawn/join would dwarf the distributed
+/// work; a `WorkerPool` pays the spawn cost once and a couple of channel
+/// operations per job afterwards.
+///
+/// Jobs are submitted with a caller-chosen index and results come back
+/// index-addressed ([`WorkerPool::collect`]), so batch outputs are in
+/// submission order regardless of which worker finished first — the same
+/// determinism contract as [`run_jobs`]. A panicking job is caught on
+/// the worker and re-raised from [`WorkerPool::collect`] on the
+/// coordinator (a swallowed panic would leave `collect` waiting forever
+/// for the missing index). Dropping the pool shuts the workers down
+/// (they drain in-flight jobs and exit before the owning
+/// [`std::thread::scope`] joins).
+pub struct WorkerPool<J, R> {
+    job_tx: mpsc::Sender<(usize, J)>,
+    res_rx: mpsc::Receiver<(usize, std::thread::Result<R>)>,
+}
+
+impl<J, R> WorkerPool<J, R> {
+    /// Spawn `threads` workers (at least 1) on `scope`, each applying
+    /// `work` to the jobs it dequeues.
+    pub fn spawn<'scope, 'env, F>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        threads: usize,
+        work: F,
+    ) -> WorkerPool<J, R>
+    where
+        J: Send + 'env,
+        R: Send + 'env,
+        F: Fn(J) -> R + Send + Sync + 'env,
+    {
+        let (job_tx, job_rx) = mpsc::channel::<(usize, J)>();
+        let (res_tx, res_rx) = mpsc::channel::<(usize, std::thread::Result<R>)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let work = Arc::new(work);
+        for _ in 0..threads.max(1) {
+            let job_rx = Arc::clone(&job_rx);
+            let res_tx = res_tx.clone();
+            let work = Arc::clone(&work);
+            scope.spawn(move || loop {
+                // hold the queue lock only to dequeue, never while working
+                let msg = job_rx.lock().unwrap().recv();
+                match msg {
+                    Ok((i, job)) => {
+                        // catch job panics and ship them to the collector
+                        // (which re-raises); a worker that swallowed one
+                        // would leave collect() short a result forever
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || work(job),
+                        ));
+                        let failed = out.is_err();
+                        if res_tx.send((i, out)).is_err() || failed {
+                            break;
+                        }
+                    }
+                    Err(_) => break, // pool dropped: shut down
+                }
+            });
+        }
+        WorkerPool { job_tx, res_rx }
+    }
+
+    /// Submit one job under a caller-chosen result index.
+    pub fn submit(&self, index: usize, job: J) {
+        self.job_tx.send((index, job)).expect("worker pool alive");
+    }
+
+    /// Collect exactly `n` results, returned in index order (indices must
+    /// be `0..n`, each submitted exactly once since the last collect).
+    /// Re-raises the first job panic it receives.
+    pub fn collect(&self, n: usize) -> Vec<R> {
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = self.res_rx.recv().expect("worker pool alive");
+            match r {
+                Ok(v) => {
+                    assert!(out[i].is_none(), "worker pool index {i} submitted twice");
+                    out[i] = Some(v);
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        out.into_iter()
+            .map(|r| r.expect("worker result missing"))
+            .collect()
+    }
+}
+
 /// Execute a matrix of runs across up to `threads` OS threads. Results are
 /// returned in spec order and are byte-identical to running the specs
 /// serially.
@@ -96,17 +189,38 @@ pub fn search_workloads(
     base_seed: u64,
     threads: usize,
 ) -> Vec<SearchResult> {
+    search_workloads_threaded(workloads, target, searcher, budget, base_seed, threads, 1)
+}
+
+/// [`search_workloads`] with an explicit `--search-threads` knob: every
+/// workload's search additionally runs tree-parallel across
+/// `search_threads` workers ([`crate::mcts::Mcts::run_parallel`]).
+/// `search_threads = 1` is the serial engine; each search stays
+/// deterministic per (lane seed, search_threads), so the batch result is
+/// still a pure function of the arguments.
+#[allow(clippy::too_many_arguments)]
+pub fn search_workloads_threaded(
+    workloads: &[&str],
+    target: Target,
+    searcher: &Searcher,
+    budget: usize,
+    base_seed: u64,
+    threads: usize,
+    search_threads: usize,
+) -> Vec<SearchResult> {
     let specs: Vec<RunSpec> = workloads
         .iter()
         .enumerate()
         .map(|(i, w)| {
-            RunSpec::new(
+            let mut sp = RunSpec::new(
                 w,
                 target,
                 searcher.clone(),
                 budget,
                 lane_seed(base_seed, i as u64),
-            )
+            );
+            sp.search_threads = search_threads.max(1);
+            sp
         })
         .collect();
     run_specs(&specs, threads)
@@ -192,5 +306,47 @@ mod tests {
     fn empty_batch_is_fine() {
         assert!(run_specs(&[], 4).is_empty());
         assert_eq!(aggregate_cache(&[]), CacheStats::default());
+    }
+
+    #[test]
+    fn worker_pool_returns_batches_in_index_order_across_rounds() {
+        // one pool, many small batches: results always come back in
+        // submission-index order, whatever the worker interleaving
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::spawn(scope, 4, |x: u64| x * 2);
+            for round in 0..5u64 {
+                let n = 1 + (round as usize) * 7; // varying batch sizes
+                for i in 0..n {
+                    pool.submit(i, round * 1000 + i as u64);
+                }
+                let out = pool.collect(n);
+                assert_eq!(out.len(), n);
+                for (i, v) in out.iter().enumerate() {
+                    assert_eq!(*v, (round * 1000 + i as u64) * 2);
+                }
+            }
+            // empty batch is a no-op
+            let out: Vec<u64> = pool.collect(0);
+            assert!(out.is_empty());
+        });
+    }
+
+    #[test]
+    fn worker_pool_propagates_job_panics_instead_of_hanging() {
+        // a panicking job must re-raise on the coordinator, not leave
+        // collect() waiting forever for the missing index
+        let result = std::panic::catch_unwind(|| {
+            std::thread::scope(|scope| {
+                let pool = WorkerPool::spawn(scope, 4, |x: u64| {
+                    assert!(x != 3, "job blew up");
+                    x
+                });
+                for i in 0..8usize {
+                    pool.submit(i, i as u64);
+                }
+                let _ = pool.collect(8);
+            });
+        });
+        assert!(result.is_err(), "job panic must propagate to the collector");
     }
 }

@@ -262,6 +262,91 @@ fn e2e_graph_speedup_composes() {
 }
 
 #[test]
+fn course_alteration_e2e_with_shared_cache() {
+    // closes the long-standing gap: course alteration exercised
+    // end-to-end *through a shared evaluation cache*, with per-search
+    // counter isolation checked across cache re-adoption.
+    use litecoop::llm::registry::paper_config;
+    use litecoop::llm::ModelSet;
+    use litecoop::mcts::evalcache::EvalCache;
+    use litecoop::mcts::Mcts;
+
+    let mk = |cache: EvalCache| {
+        let sched = Schedule::initial(Arc::new(workloads::gemm::gemm(512, 512, 512)));
+        let models = ModelSet::new(paper_config(8, "gpt-5.2"));
+        let sim = Simulator::new(Target::Cpu);
+        // ca_threshold = 1: a single persistent small-model regression
+        // escalates — the most CA-heavy paper configuration (Appendix F)
+        let cfg = SearchConfig {
+            budget: 150,
+            seed: 4,
+            ca_threshold: Some(1),
+            checkpoints: vec![75, 150],
+            ..SearchConfig::default()
+        };
+        Mcts::with_cache(cfg, models, sim, sched, cache)
+    };
+
+    let (cold, cache) = mk(EvalCache::new()).run_with_cache("gemm");
+    // persistent regressions actually escalated…
+    assert!(cold.n_ca_events > 0, "CA never fired at threshold 1");
+    // …and every CA call went to the largest model, nothing else
+    let ca_total: usize = cold.call_counts.iter().map(|(_, _, c)| *c).sum();
+    assert_eq!(ca_total, cold.n_ca_events);
+    for (name, _, ca) in &cold.call_counts {
+        if *ca > 0 {
+            assert_eq!(name, "gpt-5.2", "CA call issued by non-largest model {name}");
+        }
+    }
+    assert!(!cache.is_empty());
+
+    // warm re-adoption: the second search replays identically, so its
+    // lookup volume matches the cold run exactly — the counters are
+    // per-search (reset on adoption), not accumulated across searches
+    let (warm, _) = mk(cache).run_with_cache("gemm");
+    assert_eq!(
+        warm.eval_cache.hits + warm.eval_cache.misses,
+        cold.eval_cache.hits + cold.eval_cache.misses,
+        "per-search lookup volume drifted: warm {:?} vs cold {:?}",
+        warm.eval_cache,
+        cold.eval_cache
+    );
+    assert!(
+        warm.eval_cache.hits > cold.eval_cache.hits,
+        "warm run should serve ground truth from the shared cache"
+    );
+    assert!(warm.eval_cache.misses < cold.eval_cache.misses);
+    // caching is transparent to the CA trajectory and the outcome
+    assert_eq!(warm.n_ca_events, cold.n_ca_events);
+    assert_eq!(warm.best_speedup, cold.best_speedup);
+    assert_eq!(warm.curve, cold.curve);
+}
+
+#[test]
+fn driver_search_threads_knob_is_transparent_and_deterministic() {
+    use litecoop::runtime::driver;
+    let searcher = Searcher::Coop {
+        n: 2,
+        largest: "gpt-5.2".into(),
+    };
+    let names = ["gemm"];
+    // search_threads = 1 is the serial engine: identical to the plain API
+    let plain = driver::search_workloads(&names, Target::Cpu, &searcher, 40, 3, 2);
+    let st1 = driver::search_workloads_threaded(&names, Target::Cpu, &searcher, 40, 3, 2, 1);
+    assert_eq!(plain[0].best_speedup, st1[0].best_speedup);
+    assert_eq!(plain[0].curve, st1[0].curve);
+    assert_eq!(plain[0].eval_cache, st1[0].eval_cache);
+    // search_threads = 4 is deterministic regardless of the across-spec
+    // thread pool size
+    let a = driver::search_workloads_threaded(&names, Target::Cpu, &searcher, 40, 3, 2, 4);
+    let b = driver::search_workloads_threaded(&names, Target::Cpu, &searcher, 40, 3, 1, 4);
+    assert_eq!(a[0].best_speedup, b[0].best_speedup);
+    assert_eq!(a[0].curve, b[0].curve);
+    assert_eq!(a[0].eval_cache, b[0].eval_cache);
+    assert_eq!(a[0].compile_time_s, b[0].compile_time_s);
+}
+
+#[test]
 fn lambda_extremes_change_routing() {
     // λ=1 must route more to small models than λ=0
     let root = Schedule::initial(Arc::new(workloads::gemm::gemm(512, 512, 512)));

@@ -1,0 +1,342 @@
+//! Deterministic property/fuzz harness over the whole search stack —
+//! dependency-free (proptest is unavailable offline).
+//!
+//! Every property runs ≥ 200 random cases. Case seeds derive from a
+//! per-property base via [`litecoop::util::rng::splitmix64`], so the
+//! stream is stable across runs and platforms; on failure the harness
+//! panics with the exact case seed and replay instructions.
+
+use litecoop::mcts::evalcache::{trace_key, CacheStats, EvalCache, SharedEvalCache};
+use litecoop::mcts::fill_missing_checkpoints;
+use litecoop::schedule::printer::print_dominant;
+use litecoop::schedule::transforms::{apply, TransformKind};
+use litecoop::schedule::Schedule;
+use litecoop::sim::Target;
+use litecoop::util::rng::splitmix64;
+use litecoop::util::Rng;
+use litecoop::workloads;
+use std::sync::Arc;
+
+/// Run `cases` random cases of `prop`; case seeds come from a splitmix64
+/// stream over `base`. On failure, panics with the seed and how to replay
+/// exactly that case.
+fn check<F>(name: &str, cases: usize, base: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut state = base;
+    for case in 0..cases {
+        let seed = splitmix64(&mut state);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases}, seed {seed:#018x}: {msg}\n\
+                 replay: seed the property body with litecoop::util::Rng::new({seed:#018x}) \
+                 (case seeds are splitmix64({base:#x}) stream position {case})"
+            );
+        }
+    }
+}
+
+/// A random built-in workload: the five paper benchmarks plus the GEMM
+/// micro-workload, with randomized GEMM dimensions for structural variety.
+fn random_workload(rng: &mut Rng) -> litecoop::tir::Workload {
+    match rng.below(7) {
+        0 => workloads::attention::llama3_attention(),
+        1 => workloads::moe::deepseek_moe(),
+        2 => workloads::attention::flux_attention(),
+        3 => workloads::conv::flux_conv(),
+        4 => workloads::mlp::llama4_mlp(),
+        5 => workloads::gemm::gemm(256, 256, 256),
+        _ => {
+            let dims = [64i64, 128, 256, 512];
+            workloads::gemm::gemm(
+                *rng.choice(&dims),
+                *rng.choice(&dims),
+                *rng.choice(&dims),
+            )
+        }
+    }
+}
+
+/// Apply up to `max_steps` random transforms (skipping inapplicable
+/// ones), returning the final schedule.
+fn random_schedule(base: &Schedule, max_steps: usize, gpu: bool, rng: &mut Rng) -> Schedule {
+    let vocab = TransformKind::vocabulary(gpu);
+    let mut s = base.clone();
+    for _ in 0..max_steps {
+        let k = *rng.choice(&vocab);
+        if let Ok(next) = apply(&s, k, rng, gpu) {
+            s = next;
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------- property 1
+
+#[test]
+fn prop_random_transform_sequences_keep_schedules_well_formed() {
+    // any legal random transform sequence, on any built-in workload, on
+    // either target: the schedule stays structurally valid after every
+    // step, prints without panicking, and its fingerprint / trace hash
+    // are stable across clones
+    check("schedule-well-formed", 200, 0x5EED_0001, |rng| {
+        let gpu = rng.chance(0.5);
+        let w = random_workload(rng);
+        let name = w.name.clone();
+        let mut s = Schedule::initial(Arc::new(w));
+        let vocab = TransformKind::vocabulary(gpu);
+        let steps = 1 + rng.below(12);
+        let mut applied = 0usize;
+        for _ in 0..steps {
+            let k = *rng.choice(&vocab);
+            let next = match apply(&s, k, rng, gpu) {
+                Ok(n) => n,
+                Err(_) => continue, // structural no-fit, not a failure
+            };
+            applied += 1;
+            next.validate()
+                .map_err(|e| format!("{name}: invalid after {k:?}: {e}"))?;
+            if next.trace.len() != s.trace.len() + 1 {
+                return Err(format!(
+                    "{name}: trace len {} != {} + 1 after {k:?}",
+                    next.trace.len(),
+                    s.trace.len()
+                ));
+            }
+            s = next;
+        }
+        // rendering never panics and never goes empty
+        let rendered = print_dominant(&s, gpu);
+        if rendered.is_empty() {
+            return Err(format!("{name}: empty rendering"));
+        }
+        let _ = s.trace.render_tail(8);
+        // fingerprint + trace hash stable across clone (CoW sharing)
+        let c = s.clone();
+        if s.fingerprint() != c.fingerprint() {
+            return Err(format!("{name}: fingerprint unstable across clone"));
+        }
+        if s.trace.running_hash() != c.trace.running_hash() {
+            return Err(format!("{name}: trace hash unstable across clone"));
+        }
+        if applied != s.trace.len() {
+            return Err(format!(
+                "{name}: applied {applied} != trace len {}",
+                s.trace.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- property 2
+
+#[test]
+fn prop_trace_key_equality_iff_structural_equality() {
+    // collision smoke test over > 10k random schedule pairs: equal keys
+    // must mean equal (trace, workload, target, structure); and rebuilt /
+    // cloned schedules (structural equality) must produce equal keys.
+    let mut pairs_checked = 0usize;
+    let mut key_hits = 0usize;
+    check("trace-key-bijective", 200, 0x5EED_0002, |rng| {
+        // a small pool per case: same-workload prefixes make key
+        // collisions as likely as they ever get
+        let gpu = rng.chance(0.5);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        let base = Schedule::initial(Arc::new(random_workload(rng)));
+        let mut pool: Vec<Schedule> = (0..9)
+            .map(|_| random_schedule(&base, rng.below(4), gpu, rng))
+            .collect();
+        // include the base itself and one literal clone: guaranteed
+        // structurally-equal pairs exercising the ⇐ direction
+        pool.push(base.clone());
+        pool.push(pool[0].clone());
+        let keys: Vec<u64> = pool.iter().map(|s| trace_key(s, target)).collect();
+        for i in 0..pool.len() {
+            for j in (i + 1)..pool.len() {
+                pairs_checked += 1;
+                let keys_equal = keys[i] == keys[j];
+                let structurally_equal = pool[i].trace == pool[j].trace
+                    && pool[i].workload.name == pool[j].workload.name
+                    && pool[i].fingerprint() == pool[j].fingerprint();
+                if keys_equal {
+                    key_hits += 1;
+                }
+                if keys_equal != structurally_equal {
+                    return Err(format!(
+                        "pair ({i},{j}): key equality {keys_equal} but structural \
+                         equality {structurally_equal} (keys {:#x} vs {:#x})",
+                        keys[i], keys[j]
+                    ));
+                }
+            }
+        }
+        // cross-target: the same program must never share a key across
+        // targets
+        let s = &pool[0];
+        if trace_key(s, Target::Cpu) == trace_key(s, Target::Gpu) {
+            return Err("key ignores target".into());
+        }
+        // rebuilt from the same decision stream -> same key (⇐ direction
+        // across distinct allocations, not just clones)
+        let mut ra = Rng::new(rng.next_u64());
+        let mut rb = ra.clone();
+        let a = random_schedule(&base, 3, gpu, &mut ra);
+        let b = random_schedule(&base, 3, gpu, &mut rb);
+        if trace_key(&a, target) != trace_key(&b, target) {
+            return Err("identical decision streams produced different keys".into());
+        }
+        Ok(())
+    });
+    assert!(
+        pairs_checked >= 10_000,
+        "only {pairs_checked} pairs checked"
+    );
+    assert!(
+        key_hits >= 200,
+        "only {key_hits} equal-key pairs seen — the ⇒ direction was barely exercised"
+    );
+}
+
+// ---------------------------------------------------------------- property 3
+
+#[test]
+fn prop_fill_missing_checkpoints_is_monotone_and_complete() {
+    // for random partial curves and random checkpoint grids: the filled
+    // curve is sorted by sample count (monotone in checkpoint index),
+    // contains every configured checkpoint exactly once, preserves the
+    // points the search actually recorded, and carries `final_speedup`
+    // into every checkpoint it had to invent.
+    check("checkpoints-complete", 200, 0x5EED_0003, |rng| {
+        // random strictly-increasing checkpoint grid
+        let n = 1 + rng.below(8);
+        let mut checkpoints = Vec::with_capacity(n);
+        let mut cp = 0usize;
+        for _ in 0..n {
+            cp += 1 + rng.below(300);
+            checkpoints.push(cp);
+        }
+        // a random subset of the grid is already on the curve, with
+        // random recorded speedups
+        let mut curve: Vec<(usize, f64)> = checkpoints
+            .iter()
+            .filter(|_| rng.chance(0.5))
+            .map(|&c| (c, 1.0 + rng.f64() * 9.0))
+            .collect();
+        // plus possibly an off-grid final point, as run() pushes
+        if rng.chance(0.5) {
+            curve.push((cp + 1 + rng.below(50), 1.0 + rng.f64() * 9.0));
+        }
+        let recorded = curve.clone();
+        let final_speedup = 1.0 + rng.f64() * 9.0;
+        fill_missing_checkpoints(&mut curve, &checkpoints, final_speedup);
+
+        for w in curve.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err(format!("not strictly sorted: {curve:?}"));
+            }
+        }
+        for &c in &checkpoints {
+            let hits = curve.iter().filter(|&&(s, _)| s == c).count();
+            if hits != 1 {
+                return Err(format!("checkpoint {c} appears {hits} times: {curve:?}"));
+            }
+        }
+        for &(s, v) in &recorded {
+            if !curve.contains(&(s, v)) {
+                return Err(format!("recorded point ({s}, {v}) was altered: {curve:?}"));
+            }
+        }
+        for &(s, v) in &curve {
+            if !recorded.iter().any(|&(rs, _)| rs == s) && v != final_speedup {
+                return Err(format!(
+                    "invented point ({s}, {v}) != final speedup {final_speedup}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- property 4
+
+#[test]
+fn prop_shared_cache_is_observationally_equal_to_serial_cache() {
+    // drive a random op sequence through an EvalCache and a
+    // SharedEvalCache (random shard count) in lockstep: every returned
+    // value, every served flag, and the final counters must agree —
+    // the transparency contract the tree-parallel engine relies on.
+    check("shared-cache-transparent", 200, 0x5EED_0004, |rng| {
+        let mut serial = EvalCache::new();
+        let shared = SharedEvalCache::new(1 + rng.below(8));
+        let key_space: u64 = 1 + rng.below(12) as u64;
+        for step in 0..40 {
+            if rng.chance(0.7) {
+                let key = rng.next_u64() % key_space;
+                let val = (key as f64 + 1.0) * 0.25; // pure function of key
+                let (sv, s_served) = serial.latency_or_served(key, || val);
+                let (cv, c_served) = shared.latency_or_served(key, || val);
+                if sv != cv || s_served != c_served {
+                    return Err(format!(
+                        "step {step} key {key}: serial ({sv}, {s_served}) vs \
+                         shared ({cv}, {c_served})"
+                    ));
+                }
+            } else {
+                let key = (rng.next_u64() % key_space, 7u64, rng.below(2));
+                let val = (key.0 as f64 + 1.0) * 0.5 + key.2 as f64;
+                let sv = serial.prediction_or(key, || val);
+                let cv = shared.prediction_or(key, || val);
+                if sv != cv {
+                    return Err(format!("step {step} pred {key:?}: {sv} vs {cv}"));
+                }
+            }
+        }
+        if serial.stats() != shared.stats() {
+            return Err(format!(
+                "counters diverged: serial {:?} vs shared {:?}",
+                serial.stats(),
+                shared.stats()
+            ));
+        }
+        let drained = shared.into_cache();
+        if drained.len() != serial.len() {
+            return Err(format!(
+                "entry counts diverged: serial {} vs drained {}",
+                serial.len(),
+                drained.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------ harness
+
+#[test]
+fn harness_reports_failing_seed_for_replay() {
+    // the replay contract itself: a failing property must surface its
+    // case seed in the panic message
+    let err = std::panic::catch_unwind(|| {
+        check("always-fails", 5, 0xBAD, |_| Err("boom".into()));
+    })
+    .expect_err("property must fail");
+    let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+    assert!(msg.contains("always-fails"), "{msg}");
+    assert!(msg.contains("seed 0x"), "{msg}");
+    assert!(msg.contains("replay:"), "{msg}");
+    // and the quoted seed is the real splitmix64 stream head
+    let mut st = 0xBADu64;
+    let first = splitmix64(&mut st);
+    assert!(msg.contains(&format!("{first:#018x}")), "{msg}");
+}
+
+#[test]
+fn harness_stats_sanity() {
+    // merged empty stats stay 0.0 (satellite audit of CacheStats::merge)
+    let mut s = CacheStats::default();
+    s.merge(&CacheStats::default());
+    assert_eq!(s.hit_rate(), 0.0);
+}
