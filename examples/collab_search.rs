@@ -8,13 +8,79 @@
 //! them serially. `--search-threads S` additionally runs each search
 //! tree-parallel across S workers (deterministic per (seed, S)).
 //!
+//! `--sweep "family:key=v1,v2;key2=..."` switches to a scenario-matrix
+//! sweep over the parameterized workload families (see
+//! `workloads::scenarios`), and `--cache-file PATH` persists the
+//! evaluation cache across processes — run the same sweep twice with
+//! one file and the second run warm-starts from every ground-truth
+//! evaluation the first performed.
+//!
 //!     cargo run --release --offline --example collab_search [budget] \
-//!         [--search-threads S]
+//!         [--search-threads S] [--cache-file PATH] \
+//!         [--sweep "gemm:m=256,512;k=256"]
 
-use litecoop::coordinator::{RunSpec, Searcher};
+use litecoop::coordinator::{self, RunSpec, Searcher};
+use litecoop::mcts::evalcache::EvalCache;
 use litecoop::runtime::driver;
 use litecoop::sim::Target;
 use litecoop::util::cli::Args;
+use litecoop::workloads::scenarios::ScenarioGrid;
+
+/// Scenario-matrix mode: expand the grid, fan the sweep out through the
+/// warm-start driver, report per-scenario speedups and cache reuse.
+fn run_sweep(sweep: &str, budget: usize, search_threads: usize, cache_file: Option<&str>) {
+    let scenarios = ScenarioGrid::parse_arg(sweep)
+        .and_then(|g| g.expand())
+        .unwrap_or_else(|e| {
+            eprintln!("--sweep: {e}");
+            std::process::exit(2);
+        });
+    let searcher = Searcher::Coop {
+        n: 8,
+        largest: "gpt-5.2".into(),
+    };
+    let specs = coordinator::sweep_specs(
+        &scenarios,
+        &[Target::Cpu],
+        &searcher,
+        budget,
+        7,
+        search_threads,
+    );
+    let initial = match cache_file {
+        Some(p) => EvalCache::load_file_or_cold(p),
+        None => EvalCache::new(),
+    };
+    let loaded = initial.len();
+    println!(
+        "== scenario sweep: {} scenarios, {budget} samples each, {loaded} warm entries ==",
+        specs.len()
+    );
+    let (results, warmed) = driver::run_specs_warm(&specs, driver::default_threads(), initial);
+    for (sp, r) in specs.iter().zip(&results) {
+        println!(
+            "{:<48} speedup {:>6.2}x  cache {:>5.1}% ({} hits / {} misses)",
+            sp.workload,
+            r.best_speedup,
+            r.eval_cache.hit_rate() * 100.0,
+            r.eval_cache.hits,
+            r.eval_cache.misses
+        );
+    }
+    let agg = driver::aggregate_cache(&results);
+    println!(
+        "\nwarm start: {loaded} entries loaded; sweep total {} hits / {} misses ({:.1}% hit rate)",
+        agg.hits,
+        agg.misses,
+        agg.hit_rate() * 100.0
+    );
+    if let Some(p) = cache_file {
+        match warmed.save_file(p) {
+            Ok(()) => println!("eval cache saved: {} entries -> {p}", warmed.len()),
+            Err(e) => eprintln!("warning: failed to save eval cache: {e}"),
+        }
+    }
+}
 
 fn main() {
     let args = Args::parse();
@@ -24,6 +90,11 @@ fn main() {
         .and_then(|a| a.parse().ok())
         .unwrap_or_else(|| args.usize_or("budget", 300));
     let search_threads = args.usize_or("search-threads", 1).max(1);
+    let cache_file = args.flag("cache-file").map(str::to_string);
+    if let Some(sweep) = args.flag("sweep") {
+        run_sweep(sweep, budget, search_threads, cache_file.as_deref());
+        return;
+    }
 
     // one spec per (target, searcher); the driver merges results in order
     let mut specs = Vec::new();
@@ -43,7 +114,8 @@ fn main() {
     if search_threads > 1 {
         println!("tree-parallel search: {search_threads} threads per search\n");
     }
-    let results = driver::run_specs(&specs, driver::default_threads());
+    // --cache-file: warm-start from (and persist back to) a cache file
+    let results = driver::run_specs_cached(&specs, driver::default_threads(), cache_file.as_deref());
 
     for (pair, target) in results.chunks(2).zip([Target::Gpu, Target::Cpu]) {
         let (single, coop) = (&pair[0], &pair[1]);

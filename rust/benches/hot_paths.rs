@@ -236,6 +236,55 @@ fn main() {
         all.push(s);
     }
 
+    // ---- persistent eval cache: serialization + warm-start payoff ----------
+    // `cache_{save,load}_10k` time the file round-trip of a 10k-entry
+    // ground-truth map (the sweep driver pays this once per process).
+    // `search_warm_vs_cold` times one full fixed-seed search cold and
+    // again warm-started from its own cache — the wall-clock payoff a
+    // second process gets from `--cache-file` on overlapping scenarios.
+    {
+        use litecoop::mcts::evalcache::EvalCache;
+        let mut big = EvalCache::new();
+        for i in 0..10_000u64 {
+            big.latency_or(i.wrapping_mul(0x9E37_79B9_7F4A_7C15), || {
+                (i as f64).mul_add(1e-9, 1e-4)
+            });
+        }
+        let path = std::env::temp_dir().join(format!(
+            "litecoop_bench_cache_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        all.push(bench_fn("cache_save_10k", budget, || {
+            big.save_file(&path).expect("save cache");
+        }));
+        all.push(bench_fn("cache_load_10k", budget, || {
+            let c = EvalCache::load_file(&path).expect("load cache");
+            std::hint::black_box(c.len());
+        }));
+        let _ = std::fs::remove_file(&path);
+
+        let mk_search = |cache: EvalCache| {
+            let cfg = SearchConfig {
+                budget: 80,
+                seed: 17,
+                checkpoints: vec![],
+                ..SearchConfig::default()
+            };
+            let models = ModelSet::new(paper_config(4, "gpt-5.2"));
+            Mcts::with_cache(cfg, models, Simulator::new(Target::Cpu), base.clone(), cache)
+        };
+        let (_, warm) = mk_search(EvalCache::new()).run_with_cache("llama3_attention");
+        all.push(bench_fn("search_cold_80samples", budget, || {
+            let (r, _) = mk_search(EvalCache::new()).run_with_cache("llama3_attention");
+            std::hint::black_box(r.best_speedup);
+        }));
+        all.push(bench_fn("search_warm_80samples", budget, || {
+            let (r, _) = mk_search(warm.clone()).run_with_cache("llama3_attention");
+            std::hint::black_box(r.best_speedup);
+        }));
+    }
+
     write_json_report("BENCH_hotpaths.json", "hot_paths", &all)
         .expect("write BENCH_hotpaths.json");
     println!("wrote BENCH_hotpaths.json ({} benchmarks)", all.len());

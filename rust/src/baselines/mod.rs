@@ -12,6 +12,7 @@
 use crate::costmodel::CostModel;
 use crate::llm::registry::{by_name, paper_config};
 use crate::llm::ModelSet;
+use crate::mcts::evalcache::EvalCache;
 use crate::mcts::{Mcts, Routing, SearchConfig, SearchResult};
 use crate::schedule::transforms::{apply_sequence, TransformKind};
 use crate::schedule::Schedule;
@@ -25,14 +26,27 @@ pub fn single_llm(
     model_name: &str,
     target: Target,
     root: Schedule,
-    mut cfg: SearchConfig,
+    cfg: SearchConfig,
     workload: &str,
 ) -> SearchResult {
+    single_llm_with_cache(model_name, target, root, cfg, workload).0
+}
+
+/// [`single_llm`], also handing back the warmed evaluation cache
+/// (`cfg.warm_cache` entries ∪ everything this search measured) for
+/// persistence across searches or processes.
+pub fn single_llm_with_cache(
+    model_name: &str,
+    target: Target,
+    root: Schedule,
+    mut cfg: SearchConfig,
+    workload: &str,
+) -> (SearchResult, EvalCache) {
     let spec = by_name(model_name).unwrap_or_else(|| panic!("unknown model {model_name}"));
     cfg.ca_threshold = None;
     let threads = cfg.search_threads;
     let models = ModelSet::new(vec![spec]);
-    Mcts::new(cfg, models, Simulator::new(target), root).run_parallel(workload, threads)
+    Mcts::new(cfg, models, Simulator::new(target), root).run_parallel_with_cache(workload, threads)
 }
 
 /// LiteCoOp with the paper's n-model configuration. Honors
@@ -45,9 +59,22 @@ pub fn litecoop(
     cfg: SearchConfig,
     workload: &str,
 ) -> SearchResult {
+    litecoop_with_cache(n_llms, largest, target, root, cfg, workload).0
+}
+
+/// [`litecoop`], also handing back the warmed evaluation cache (see
+/// [`single_llm_with_cache`]).
+pub fn litecoop_with_cache(
+    n_llms: usize,
+    largest: &str,
+    target: Target,
+    root: Schedule,
+    cfg: SearchConfig,
+    workload: &str,
+) -> (SearchResult, EvalCache) {
     let threads = cfg.search_threads;
     let models = ModelSet::new(paper_config(n_llms, largest));
-    Mcts::new(cfg, models, Simulator::new(target), root).run_parallel(workload, threads)
+    Mcts::new(cfg, models, Simulator::new(target), root).run_parallel_with_cache(workload, threads)
 }
 
 /// Appendix-G ablation: same pool, random next-model routing.
@@ -164,6 +191,20 @@ pub fn evolutionary(
         eval_cache: crate::mcts::evalcache::CacheStats::default(),
         best_schedule,
     }
+}
+
+/// [`evolutionary`] behind the cache-returning searcher surface: the
+/// evolutionary baseline never consults the evaluation cache (its cost
+/// model measures directly), so the returned cache is empty — it
+/// contributes no reusable entries to a sweep's cache file, and any
+/// `cfg.warm_cache` is ignored.
+pub fn evolutionary_with_cache(
+    target: Target,
+    root: Schedule,
+    cfg: SearchConfig,
+    workload: &str,
+) -> (SearchResult, EvalCache) {
+    (evolutionary(target, root, cfg, workload), EvalCache::new())
 }
 
 #[cfg(test)]

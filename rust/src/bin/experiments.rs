@@ -7,6 +7,19 @@
 //! ids: fig2 table1 table2 table3 fig3 lambda significance
 //!      course_alteration llm_selection call_counts sample_efficiency all
 //!
+//! Scenario sweeps (parameterized workload matrices, see
+//! `workloads::scenarios`):
+//!   experiments sweep --family gemm --grid "m=256,512;k=64,128"
+//!               [--targets cpu,gpu] [--llms N] [--seed S]
+//!               [--cache-file PATH] [--expect-warm]
+//! `--cache-file` persists the evaluation cache across processes: run a
+//! sweep twice with the same file and the second run warm-starts from
+//! every ground-truth evaluation the first one performed.
+//! `--expect-warm` (for a sweep that *replays* the previous one) exits
+//! nonzero unless the run truly warm-started: entries loaded, hits
+//! reported, and no new ground-truth entries computed — the CI smoke
+//! contract.
+//!
 //! Absolute numbers come from the simulated substrate (DESIGN.md
 //! §Substitutions); the *shape* (who wins, routing fractions, reduction
 //! factors) is the reproduction target. Reports land in reports/<id>.md.
@@ -542,6 +555,112 @@ fn call_counts(o: &Opts) {
     report::emit("call_counts", &out).unwrap();
 }
 
+// ------------------------------------------------------------------- sweep
+
+fn sweep(o: &Opts, args: &Args) {
+    use litecoop::mcts::evalcache::EvalCache;
+    use litecoop::runtime::driver;
+    use litecoop::workloads::scenarios::ScenarioGrid;
+
+    let family = args.str_or("family", "gemm");
+    let scenarios = ScenarioGrid::parse(&family, &args.str_or("grid", ""))
+        .and_then(|g| g.expand())
+        .unwrap_or_else(|e| {
+            eprintln!("sweep: {e}");
+            std::process::exit(2);
+        });
+    let targets: Vec<Target> = args
+        .str_or("targets", "cpu")
+        .split(',')
+        .map(|t| match t.trim() {
+            "gpu" => Target::Gpu,
+            "cpu" => Target::Cpu,
+            other => {
+                eprintln!("sweep: unknown target {other:?} (expected cpu or gpu)");
+                std::process::exit(2);
+            }
+        })
+        .collect();
+    let n_llms = args.usize_or("llms", 8);
+    let searcher = if n_llms <= 1 {
+        Searcher::Single(o.largest.clone())
+    } else {
+        coop(n_llms, &o.largest)
+    };
+    let specs = coordinator::sweep_specs(
+        &scenarios,
+        &targets,
+        &searcher,
+        o.budget,
+        args.u64_or("seed", 7),
+        o.search_threads,
+    );
+    let cache_file = args.flag("cache-file");
+    println!(
+        "sweep: {} scenario(s) x {} target(s) = {} runs ({}, budget {})",
+        scenarios.len(),
+        targets.len(),
+        specs.len(),
+        searcher.label(),
+        o.budget
+    );
+
+    let initial = match cache_file {
+        Some(p) => EvalCache::load_file_or_cold(p),
+        None => EvalCache::new(),
+    };
+    let loaded = initial.len();
+    if let Some(p) = cache_file {
+        println!("eval-cache warm start: {loaded} entries loaded from {p}");
+    }
+    let (results, warmed) = driver::run_specs_warm(&specs, o.threads, initial);
+    if let Some(p) = cache_file {
+        match warmed.save_file(p) {
+            Ok(()) => println!("eval cache saved: {} entries -> {p}", warmed.len()),
+            Err(e) => eprintln!("warning: failed to save eval cache: {e}"),
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("Sweep: {family} scenario matrix ({})", searcher.label()),
+        &["Scenario", "Target", "Speedup ×", "Samples", "Cache hit %"],
+    );
+    for (sp, r) in specs.iter().zip(&results) {
+        t.row(vec![
+            sp.workload.clone(),
+            sp.target.name().to_string(),
+            format!("{:.2}", r.best_speedup),
+            format!("{}", r.n_samples),
+            format!("{:.1}", r.eval_cache.hit_rate() * 100.0),
+        ]);
+    }
+    let all: Vec<&SearchResult> = results.iter().collect();
+    let agg = report::total_cache(&all);
+    let mut out = t.to_markdown();
+    out.push_str(&format!(
+        "\nwarm start: {loaded} entries loaded; sweep total {} hits / {} misses ({:.1}% hit rate)\n",
+        agg.hits,
+        agg.misses,
+        agg.hit_rate() * 100.0
+    ));
+    print!("{out}");
+    report::emit("sweep", &out).unwrap();
+    // --expect-warm asserts a *replayed* sweep truly warm-started from
+    // the file: entries were loaded, hits were reported, and — the
+    // cross-process-specific signal in-search transposition hits can't
+    // fake — the replay computed nothing new (every ground-truth key was
+    // already in the file, so the saved cache didn't grow).
+    if args.has("expect-warm") && (loaded == 0 || agg.hits == 0 || warmed.len() != loaded) {
+        eprintln!(
+            "sweep --expect-warm: expected a warm replay ({loaded} entries loaded, {} hits, \
+             {} entries after the sweep)",
+            agg.hits,
+            warmed.len()
+        );
+        std::process::exit(3);
+    }
+}
+
 fn main() {
     let args = Args::parse();
     let quick = args.has("quick");
@@ -572,6 +691,7 @@ fn main() {
         "llm_selection" => llm_selection(&o),
         "call_counts" => call_counts(&o),
         "sample_efficiency" => table3(&o), // Table 16 is emitted with Table 3
+        "sweep" => sweep(&o, &args),
         "all" => {
             fig_speedup_curves(&o, "fig2");
             table1(&o);

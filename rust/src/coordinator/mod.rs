@@ -9,9 +9,11 @@
 pub mod report;
 
 use crate::baselines;
+use crate::mcts::evalcache::EvalCache;
 use crate::mcts::{Routing, SearchConfig, SearchResult};
 use crate::schedule::Schedule;
 use crate::sim::Target;
+use crate::workloads::scenarios::ScenarioSpec;
 use crate::workloads::{self, llama_e2e::E2eGraph};
 use std::sync::Arc;
 
@@ -58,6 +60,12 @@ pub struct RunSpec {
     /// pool. 1 = serial engine (bit-identical to the pre-parallel
     /// engine); results are deterministic per (seed, search_threads).
     pub search_threads: usize,
+    /// Warm-start evaluation cache shared into the search (see
+    /// [`SearchConfig::warm_cache`]); set by the cached driver paths
+    /// ([`crate::runtime::driver::run_specs_cached`]). `None` = cold.
+    /// Warm entries never change the search result, only its hit rate
+    /// and measurement time.
+    pub warm_cache: Option<Arc<EvalCache>>,
 }
 
 impl RunSpec {
@@ -71,6 +79,7 @@ impl RunSpec {
             lambda: 0.5,
             ca_threshold: Some(2),
             search_threads: 1,
+            warm_cache: None,
         }
     }
 
@@ -85,15 +94,46 @@ impl RunSpec {
                 .filter(|&c| c <= self.budget)
                 .collect(),
             search_threads: self.search_threads,
+            warm_cache: self.warm_cache.clone(),
             ..SearchConfig::default()
         }
     }
 }
 
 /// Dispatch one search according to `searcher` — the single home of the
-/// searcher → baseline mapping, shared by [`run_one`] and the e2e task
-/// fan-out. Every searcher, including the evolutionary baseline, draws
-/// its budget/seed/checkpoints from `cfg`.
+/// searcher → baseline mapping, shared by [`run_one`], the e2e task
+/// fan-out, and the warm-start driver. Every searcher, including the
+/// evolutionary baseline, draws its budget/seed/checkpoints from `cfg`.
+/// Also hands back the search's warmed evaluation cache
+/// (`cfg.warm_cache` entries ∪ everything it measured; empty for the
+/// cache-less evolutionary baseline).
+fn dispatch_with_cache(
+    searcher: &Searcher,
+    target: Target,
+    root: Schedule,
+    cfg: SearchConfig,
+    workload: &str,
+) -> (SearchResult, EvalCache) {
+    match searcher {
+        Searcher::Single(m) => baselines::single_llm_with_cache(m, target, root, cfg, workload),
+        Searcher::Coop { n, largest } => {
+            baselines::litecoop_with_cache(*n, largest, target, root, cfg, workload)
+        }
+        Searcher::RandomRouting { n, largest } => {
+            let mut cfg = cfg;
+            cfg.routing = Routing::Random;
+            baselines::litecoop_with_cache(*n, largest, target, root, cfg, workload)
+        }
+        Searcher::RoundRobinRouting { n, largest } => {
+            let mut cfg = cfg;
+            cfg.routing = Routing::RoundRobin;
+            baselines::litecoop_with_cache(*n, largest, target, root, cfg, workload)
+        }
+        Searcher::Evolutionary => baselines::evolutionary_with_cache(target, root, cfg, workload),
+    }
+}
+
+/// [`dispatch_with_cache`] without the warmed cache.
 fn dispatch(
     searcher: &Searcher,
     target: Target,
@@ -101,31 +141,23 @@ fn dispatch(
     cfg: SearchConfig,
     workload: &str,
 ) -> SearchResult {
-    match searcher {
-        Searcher::Single(m) => baselines::single_llm(m, target, root, cfg, workload),
-        Searcher::Coop { n, largest } => {
-            baselines::litecoop(*n, largest, target, root, cfg, workload)
-        }
-        Searcher::RandomRouting { n, largest } => {
-            let mut cfg = cfg;
-            cfg.routing = Routing::Random;
-            baselines::litecoop(*n, largest, target, root, cfg, workload)
-        }
-        Searcher::RoundRobinRouting { n, largest } => {
-            let mut cfg = cfg;
-            cfg.routing = Routing::RoundRobin;
-            baselines::litecoop(*n, largest, target, root, cfg, workload)
-        }
-        Searcher::Evolutionary => baselines::evolutionary(target, root, cfg, workload),
-    }
+    dispatch_with_cache(searcher, target, root, cfg, workload).0
 }
 
 /// Execute one run.
 pub fn run_one(spec: &RunSpec) -> SearchResult {
-    let workload = workloads::by_name(&spec.workload)
-        .unwrap_or_else(|| panic!("unknown workload {}", spec.workload));
+    run_one_with_cache(spec).0
+}
+
+/// Execute one run and hand back its warmed evaluation cache (the
+/// spec's warm entries ∪ everything this search measured) — the unit
+/// the warm-start driver ([`crate::runtime::driver::run_specs_warm`])
+/// merges and persists.
+pub fn run_one_with_cache(spec: &RunSpec) -> (SearchResult, EvalCache) {
+    let workload = workloads::resolve(&spec.workload)
+        .unwrap_or_else(|e| panic!("unknown workload {}: {e}", spec.workload));
     let root = Schedule::initial(Arc::new(workload));
-    dispatch(&spec.searcher, spec.target, root, spec.config(), &spec.workload)
+    dispatch_with_cache(&spec.searcher, spec.target, root, spec.config(), &spec.workload)
 }
 
 /// Execute a matrix of runs across `threads` OS threads. Results are
@@ -134,6 +166,49 @@ pub fn run_one(spec: &RunSpec) -> SearchResult {
 /// are byte-identical to running the specs serially.
 pub fn run_many(specs: &[RunSpec], threads: usize) -> Vec<SearchResult> {
     crate::runtime::driver::run_specs(specs, threads)
+}
+
+/// [`run_many`] with a persistent eval-cache warm start: load
+/// `cache_file` (if given), seed every search from it, save the merged
+/// warmed cache back. See [`crate::runtime::driver::run_specs_cached`].
+pub fn run_many_cached(
+    specs: &[RunSpec],
+    threads: usize,
+    cache_file: Option<&str>,
+) -> Vec<SearchResult> {
+    crate::runtime::driver::run_specs_cached(specs, threads, cache_file)
+}
+
+/// Build the run matrix of a scenario sweep: `scenarios × targets`, one
+/// spec per pair, each under an independent deterministic lane seed
+/// ([`crate::runtime::driver::lane_seed`] over `base_seed`, lane =
+/// position in the scenario-major cross product). The spec's workload
+/// name is the scenario's canonical name, so everything downstream
+/// (driver, reports, eval-cache keys) is scenario-aware for free.
+pub fn sweep_specs(
+    scenarios: &[ScenarioSpec],
+    targets: &[Target],
+    searcher: &Searcher,
+    budget: usize,
+    base_seed: u64,
+    search_threads: usize,
+) -> Vec<RunSpec> {
+    let mut specs = Vec::with_capacity(scenarios.len() * targets.len());
+    for sc in scenarios {
+        for &target in targets {
+            let lane = specs.len() as u64;
+            let mut sp = RunSpec::new(
+                &sc.name(),
+                target,
+                searcher.clone(),
+                budget,
+                crate::runtime::driver::lane_seed(base_seed, lane),
+            );
+            sp.search_threads = search_threads.max(1);
+            specs.push(sp);
+        }
+    }
+    specs
 }
 
 /// Aggregated e2e result (paper Table 3 / 16).
@@ -242,6 +317,34 @@ mod tests {
         for (p, s) in par.iter().zip(&ser) {
             assert_eq!(p.best_speedup, s.best_speedup);
         }
+    }
+
+    #[test]
+    fn sweep_specs_cross_products_scenarios_and_targets() {
+        let grid = crate::workloads::scenarios::ScenarioGrid::parse("gemm", "m=32,64").unwrap();
+        let scenarios = grid.expand().unwrap();
+        let searcher = Searcher::Coop {
+            n: 2,
+            largest: "gpt-5.2".into(),
+        };
+        let specs = sweep_specs(&scenarios, &[Target::Cpu, Target::Gpu], &searcher, 40, 7, 2);
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].workload, "gemm@m=32");
+        assert_eq!(specs[0].target, Target::Cpu);
+        assert_eq!(specs[1].target, Target::Gpu);
+        assert_eq!(specs[2].workload, "gemm@m=64");
+        assert!(specs.iter().all(|sp| sp.search_threads == 2));
+        // independent deterministic lane seeds
+        let seeds: Vec<u64> = specs.iter().map(|sp| sp.seed).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+        let again = sweep_specs(&scenarios, &[Target::Cpu, Target::Gpu], &searcher, 40, 7, 2);
+        assert_eq!(seeds, again.iter().map(|sp| sp.seed).collect::<Vec<_>>());
+        // the whole matrix actually runs (scenario names resolve)
+        let results = run_many(&specs, 4);
+        assert!(results.iter().all(|r| r.best_speedup >= 1.0));
     }
 
     #[test]

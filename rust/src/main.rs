@@ -3,12 +3,20 @@
 //! Subcommands:
 //!   search   --workload <name> --target cpu|gpu --llms N --budget N
 //!            [--largest M] [--lambda X] [--search-threads S]
+//!            [--cache-file PATH]
+//!            <name> is a registry name (`workloads` subcommand) or a
+//!            scenario name like `attention@seq=1024,heads=16` (see
+//!            workloads::scenarios). --cache-file loads a persistent
+//!            eval cache before the search and saves the warmed cache
+//!            after it, so repeated searches across processes reuse
+//!            ground-truth evaluations.
 //!   models   (print the LLM catalog)
 //!   workloads (print the benchmark registry)
 //!   runtime  --artifact <name>  (load + execute an AOT artifact via PJRT)
 
 use litecoop::baselines;
 use litecoop::llm::registry;
+use litecoop::mcts::evalcache::EvalCache;
 use litecoop::mcts::SearchConfig;
 use litecoop::runtime::Runtime;
 use litecoop::schedule::Schedule;
@@ -58,25 +66,37 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
     };
     let n_llms = args.usize_or("llms", 8);
     let largest = args.str_or("largest", "gpt-5.2");
-    let workload = workloads::by_name(&workload_name)
-        .ok_or_else(|| litecoop::err!("unknown workload {workload_name}"))?;
+    let workload = workloads::resolve(&workload_name)
+        .map_err(|e| litecoop::err!("unknown workload {workload_name}: {e}"))?;
     let root = Schedule::initial(Arc::new(workload));
-    let cfg = SearchConfig {
+    let cache_file = args.flag("cache-file").map(str::to_string);
+    let mut cfg = SearchConfig {
         budget: args.usize_or("budget", 300),
         seed: args.u64_or("seed", 7),
         lambda: args.f64_or("lambda", 0.5),
         search_threads: args.usize_or("search-threads", 1).max(1),
         ..SearchConfig::default()
     };
+    if let Some(path) = &cache_file {
+        let warm = EvalCache::load_file_or_cold(path);
+        println!("eval-cache warm start: {} entries from {path}", warm.len());
+        cfg.warm_cache = Some(Arc::new(warm));
+    }
     println!(
         "LiteCoOp search: {workload_name} on {:?}, {n_llms} LLMs (largest {largest}), budget {}, search threads {}",
         target, cfg.budget, cfg.search_threads
     );
-    let r = if n_llms == 1 {
-        baselines::single_llm(&largest, target, root, cfg, &workload_name)
+    let (r, warmed) = if n_llms == 1 {
+        baselines::single_llm_with_cache(&largest, target, root, cfg, &workload_name)
     } else {
-        baselines::litecoop(n_llms, &largest, target, root, cfg, &workload_name)
+        baselines::litecoop_with_cache(n_llms, &largest, target, root, cfg, &workload_name)
     };
+    if let Some(path) = &cache_file {
+        match warmed.save_file(path) {
+            Ok(()) => println!("eval cache saved: {} entries -> {path}", warmed.len()),
+            Err(e) => eprintln!("warning: failed to save eval cache: {e}"),
+        }
+    }
     println!("final speedup      : {:.2}x", r.best_speedup);
     println!("compile time (sim) : {:.0}s", r.compile_time_s);
     println!("API cost (sim)     : ${:.3}", r.api_cost_usd);

@@ -55,6 +55,7 @@ use crate::costmodel::CostModel;
 use crate::schedule::trace::{fnv_str, fnv_u64};
 use crate::schedule::Schedule;
 use crate::sim::{Simulator, Target};
+use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
@@ -125,6 +126,27 @@ pub type PredKey = (u64, u64, usize);
 
 /// Bounded transposition cache over ground-truth latencies and cost-model
 /// predictions. See the module docs for the soundness argument and knobs.
+///
+/// # Nonce invariant (predictions vs. ground truth)
+///
+/// Ground-truth latency entries are pure functions of their trace key
+/// and may be shared across searches, threads, and **processes** (they
+/// are what [`EvalCache::to_json`] persists for `--cache-file` warm
+/// starts). Prediction entries are NOT: their key embeds the owning
+/// cost model's identity nonce ([`CostModel::salt`]), which is drawn
+/// from a **per-process** atomic counter — a salt from one process can
+/// collide with an unrelated model's salt in another process, so a
+/// prediction entry is only meaningful inside the process that created
+/// it. Two mechanisms enforce this:
+///
+/// * within a process, [`EvalCache::retain_predictions_of`] prunes
+///   other models' (unreachable) entries when a shared cache is adopted
+///   by a new search;
+/// * across processes, the load path drops predictions explicitly:
+///   [`EvalCache::to_json`] never serializes them and
+///   [`EvalCache::from_json`] starts with an empty prediction map
+///   regardless of input — relying on post-load pruning would be
+///   pointless, since a colliding foreign salt would survive it.
 #[derive(Clone, Debug)]
 pub struct EvalCache {
     lat: HashMap<u64, f64>,
@@ -190,8 +212,33 @@ impl EvalCache {
     /// when a shared cache is adopted by a new search, prior searches'
     /// entries are unreachable — pruning them keeps the map from filling
     /// up with dead entries (which would eventually block inserts).
+    ///
+    /// This is the *within-process* half of the nonce invariant (see the
+    /// type docs); deserialized caches never contain predictions in the
+    /// first place, by construction of [`EvalCache::from_json`].
     pub fn retain_predictions_of(&mut self, salt: u64) {
         self.pred.retain(|k, _| k.1 == salt);
+    }
+
+    /// Configured per-map entry bound (see [`EvalCache::with_capacity`]).
+    pub fn capacity(&self) -> usize {
+        self.max_entries
+    }
+
+    /// Union `other`'s ground-truth entries into this cache (the
+    /// driver-side merge after a warm sweep). Values are pure functions
+    /// of their keys, so colliding inserts agree; this cache's entry
+    /// bound is respected (*which* surplus entries are dropped when the
+    /// bound bites is unspecified — cache contents never affect search
+    /// results, only hit rates). Prediction entries and counters are not
+    /// merged (per-model / per-search by design).
+    pub fn absorb(&mut self, other: EvalCache) {
+        for (k, v) in other.lat {
+            if self.lat.len() >= self.max_entries && !self.lat.contains_key(&k) {
+                continue;
+            }
+            self.lat.insert(k, v);
+        }
     }
 
     /// Ground-truth latency for `key`, computing (and caching) via `f` on
@@ -232,6 +279,109 @@ impl EvalCache {
             self.pred.insert(key, v);
         }
         v
+    }
+}
+
+// ------------------------------------------------------------------------
+// Persistence (warm start across processes)
+// ------------------------------------------------------------------------
+
+impl EvalCache {
+    /// Serialize for cross-process warm start: the ground-truth latency
+    /// map (keys as decimal strings — u64 keys don't survive JSON's f64
+    /// numbers) plus the configured entry bound, under a format version.
+    /// Prediction entries are deliberately omitted (the nonce invariant,
+    /// see the type docs) and counters are not persisted (stats are
+    /// per-search, zeroed on load). Latency values round-trip exactly:
+    /// the writer emits Rust's shortest-round-trip `f64` rendering.
+    /// Non-finite values — which valid simulator output never produces —
+    /// are skipped, since JSON cannot represent them.
+    pub fn to_json(&self) -> Json {
+        let mut lat = Json::obj();
+        for (k, v) in &self.lat {
+            if v.is_finite() {
+                lat.set(&k.to_string(), (*v).into());
+            }
+        }
+        let mut root = Json::obj();
+        root.set("version", 1.0.into())
+            .set("max_entries", self.max_entries.to_string().into())
+            .set("lat", lat);
+        root
+    }
+
+    /// Inverse of [`EvalCache::to_json`]. The loaded cache starts with
+    /// zeroed counters and an **empty prediction map** — any `pred` key
+    /// in the input is ignored by design (the load path drops
+    /// predictions explicitly rather than trusting
+    /// [`EvalCache::retain_predictions_of`] to prune foreign-process
+    /// salts, which could collide with a live one).
+    pub fn from_json(j: &Json) -> Result<EvalCache, String> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or("cache file: missing version")?;
+        if version != 1.0 {
+            return Err(format!("cache file: unsupported version {version}"));
+        }
+        let max_entries: usize = j
+            .get("max_entries")
+            .and_then(Json::as_str)
+            .ok_or("cache file: missing max_entries")?
+            .parse()
+            .map_err(|_| "cache file: bad max_entries".to_string())?;
+        let lat_obj = j
+            .get("lat")
+            .and_then(Json::as_obj)
+            .ok_or("cache file: missing lat map")?;
+        let mut lat = HashMap::with_capacity(lat_obj.len());
+        for (k, v) in lat_obj {
+            let key: u64 = k
+                .parse()
+                .map_err(|_| format!("cache file: bad entry key {k:?}"))?;
+            let val = v
+                .as_f64()
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| format!("cache file: bad latency for key {k}"))?;
+            lat.insert(key, val);
+        }
+        Ok(EvalCache {
+            lat,
+            pred: HashMap::new(),
+            stats: CacheStats::default(),
+            max_entries,
+        })
+    }
+
+    /// Atomically write the serialized cache to `path` (temp file in the
+    /// same directory + rename, so a concurrent loader never observes a
+    /// torn file).
+    pub fn save_file(&self, path: &str) -> Result<(), String> {
+        let tmp = format!("{path}.tmp.{}", std::process::id());
+        std::fs::write(&tmp, format!("{}\n", self.to_json())).map_err(|e| format!("{tmp}: {e}"))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Load a cache saved by [`EvalCache::save_file`].
+    pub fn load_file(path: &str) -> Result<EvalCache, String> {
+        EvalCache::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Warm-start load that never fails: a missing file is a normal cold
+    /// start (the first run of a sweep), returned silently; a corrupt,
+    /// truncated, or unreadable file degrades to a cold cache with a
+    /// warning on stderr. Never panics, never aborts the run.
+    pub fn load_file_or_cold(path: &str) -> EvalCache {
+        if !std::path::Path::new(path).exists() {
+            return EvalCache::default();
+        }
+        match EvalCache::load_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("warning: eval-cache file {e}; starting cold");
+                EvalCache::default()
+            }
+        }
     }
 }
 
@@ -882,6 +1032,91 @@ mod tests {
         for &k in &keys {
             assert_eq!(cache.latency_or(k, || unreachable!("lost entry")), k as f64 * 0.5);
         }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless_and_drops_predictions() {
+        let mut c = EvalCache::with_capacity(12345);
+        // awkward values: shortest-round-trip rendering must reproduce
+        // every bit pattern
+        c.latency_or(0, || 0.1 + 0.2);
+        c.latency_or(u64::MAX, || 1.5e-300);
+        c.latency_or(42, || 5e-324); // subnormal
+        c.latency_or(7, || 3.0);
+        c.prediction_or((9, 1, 0), || 0.5); // must not survive the round trip
+        let back = EvalCache::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.capacity(), 12345);
+        assert_eq!(back.stats(), CacheStats::default());
+        assert_eq!(back.len(), 4); // lat only, pred dropped
+        let mut back = back;
+        for (k, v) in [
+            (0u64, 0.1 + 0.2),
+            (u64::MAX, 1.5e-300),
+            (42, 5e-324),
+            (7, 3.0),
+        ] {
+            let got = back.latency_or(k, || unreachable!("entry {k} lost"));
+            assert_eq!(got.to_bits(), v.to_bits(), "key {k}");
+        }
+        // the prediction was dropped: looking it up recomputes
+        assert_eq!(back.prediction_or((9, 1, 0), || 0.25), 0.25);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_documents() {
+        for bad in [
+            "null",
+            "{}",
+            r#"{"version": 2, "max_entries": "4", "lat": {}}"#,
+            r#"{"version": 1, "lat": {}}"#,
+            r#"{"version": 1, "max_entries": "x", "lat": {}}"#,
+            r#"{"version": 1, "max_entries": "4"}"#,
+            r#"{"version": 1, "max_entries": "4", "lat": {"abc": 1.0}}"#,
+            r#"{"version": 1, "max_entries": "4", "lat": {"1": "nope"}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(EvalCache::from_json(&j).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn absorb_unions_entries_and_respects_bound() {
+        let mut a = EvalCache::with_capacity(3);
+        a.latency_or(1, || 1.0);
+        let mut b = EvalCache::new();
+        b.latency_or(1, || 1.0);
+        b.latency_or(2, || 2.0);
+        b.latency_or(3, || 3.0);
+        b.latency_or(4, || 4.0);
+        a.absorb(b);
+        // bound 3: the overlapping key plus at most two new ones
+        assert!(a.len() <= 3, "bound violated: {}", a.len());
+        assert_eq!(a.latency_or(1, || unreachable!("lost")), 1.0);
+        // counters were not merged: a's original miss plus the hit above
+        assert_eq!(a.stats(), CacheStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn save_load_file_roundtrip_and_corrupt_degrades_cold() {
+        let path = std::env::temp_dir().join(format!(
+            "litecoop_evalcache_unit_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let mut c = EvalCache::with_capacity(99);
+        c.latency_or(11, || 0.125);
+        c.save_file(&path).unwrap();
+        let loaded = EvalCache::load_file(&path).unwrap();
+        assert_eq!(loaded.capacity(), 99);
+        assert_eq!(loaded.len(), 1);
+        // corrupt the file: load_file errs, load_file_or_cold degrades
+        std::fs::write(&path, "{\"version\": 1, trunca").unwrap();
+        assert!(EvalCache::load_file(&path).is_err());
+        let cold = EvalCache::load_file_or_cold(&path);
+        assert!(cold.is_empty());
+        let _ = std::fs::remove_file(&path);
+        // missing file is a silent cold start
+        assert!(EvalCache::load_file_or_cold(&path).is_empty());
     }
 
     #[test]

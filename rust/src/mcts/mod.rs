@@ -70,6 +70,17 @@ pub struct SearchConfig {
     /// deterministic for a fixed `(seed, t)` pair. Ignored by searchers
     /// with no tree (e.g. the evolutionary baseline).
     pub search_threads: usize,
+    /// Warm-start seed for the evaluation cache: ground-truth entries
+    /// cloned into the search's cache at construction (e.g. a
+    /// `--cache-file` loaded by the driver). Shared by `Arc` so one
+    /// loaded cache can seed a whole sweep without per-spec deep copies;
+    /// each search clones the entries out, so searches stay independent
+    /// and results stay a pure function of (config, warm entries).
+    /// `None` (the default) starts cold. An explicit cache handed to
+    /// [`Mcts::with_cache`] takes precedence over this field. Warm
+    /// entries never change a search's result — only its hit rate and
+    /// (honestly accounted) measurement time; see [`evalcache`].
+    pub warm_cache: Option<Arc<EvalCache>>,
 }
 
 impl Default for SearchConfig {
@@ -88,6 +99,7 @@ impl Default for SearchConfig {
             seed: 0,
             checkpoints: vec![50, 100, 250, 500, 750, 1000],
             search_threads: 1,
+            warm_cache: None,
         }
     }
 }
@@ -287,20 +299,31 @@ fn rollout_reward<E: Evaluator>(
 }
 
 impl Mcts {
-    pub fn new(cfg: SearchConfig, models: ModelSet, sim: Simulator, root: Schedule) -> Mcts {
-        Mcts::with_cache(cfg, models, sim, root, EvalCache::default())
+    /// Build a search. Starts from [`SearchConfig::warm_cache`]'s
+    /// entries when set (cloned out of the shared handle), cold
+    /// otherwise.
+    pub fn new(mut cfg: SearchConfig, models: ModelSet, sim: Simulator, root: Schedule) -> Mcts {
+        let cache = match cfg.warm_cache.take() {
+            Some(warm) => EvalCache::clone(&warm),
+            None => EvalCache::default(),
+        };
+        Mcts::with_cache(cfg, models, sim, root, cache)
     }
 
     /// Build a search that shares an externally owned evaluation cache
     /// (e.g. across repeated searches of the same workload); finish with
-    /// [`Mcts::run_with_cache`] to get the warmed cache back.
+    /// [`Mcts::run_with_cache`] to get the warmed cache back. The
+    /// explicit `cache` argument wins over [`SearchConfig::warm_cache`],
+    /// whose reference is dropped here so the engine never holds a
+    /// second copy of warm entries for its whole run.
     pub fn with_cache(
-        cfg: SearchConfig,
+        mut cfg: SearchConfig,
         models: ModelSet,
         sim: Simulator,
         root: Schedule,
         cache: EvalCache,
     ) -> Mcts {
+        cfg.warm_cache = None;
         let cost = CostModel::new(sim.target, cfg.seed);
         let gpu = sim.target.is_gpu();
         let mut eval = CachedEvaluator::with_cache(cost, sim, cache);

@@ -17,8 +17,8 @@
 //! out through this driver, which is how `table3_e2e`-style sweeps scale
 //! with cores.
 
-use crate::coordinator::{run_one, RunSpec, Searcher};
-use crate::mcts::evalcache::CacheStats;
+use crate::coordinator::{run_one, run_one_with_cache, RunSpec, Searcher};
+use crate::mcts::evalcache::{CacheStats, EvalCache};
 use crate::mcts::SearchResult;
 use crate::sim::Target;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -178,6 +178,72 @@ pub fn run_specs(specs: &[RunSpec], threads: usize) -> Vec<SearchResult> {
     run_jobs(specs.iter().map(|sp| move || run_one(sp)).collect(), threads)
 }
 
+/// Run a spec matrix with every search warm-started from `initial`'s
+/// ground-truth entries (one `Arc`-shared snapshot; each search clones
+/// the entries out, so lanes stay independent and every result is a
+/// pure function of its spec plus the snapshot — byte-identical across
+/// thread counts, and identical to a cold run except for the honestly
+/// lower measurement time). Specs that already carry their own
+/// [`RunSpec::warm_cache`] keep it.
+///
+/// Returns the results (spec order) plus the merged warmed cache:
+/// `initial` ∪ every search's evaluations, in spec order, with stats
+/// zeroed (counters are per-search, surfaced in each
+/// [`SearchResult::eval_cache`]) — ready to persist with
+/// [`EvalCache::save_file`].
+pub fn run_specs_warm(
+    specs: &[RunSpec],
+    threads: usize,
+    initial: EvalCache,
+) -> (Vec<SearchResult>, EvalCache) {
+    let warm = Arc::new(initial);
+    let jobs: Vec<_> = specs
+        .iter()
+        .map(|sp| {
+            let warm = Arc::clone(&warm);
+            move || {
+                let mut sp = sp.clone();
+                if sp.warm_cache.is_none() {
+                    sp.warm_cache = Some(warm);
+                }
+                run_one_with_cache(&sp)
+            }
+        })
+        .collect();
+    let outs = run_jobs(jobs, threads);
+    let mut merged = Arc::try_unwrap(warm).unwrap_or_else(|shared| (*shared).clone());
+    merged.reset_stats();
+    let mut results = Vec::with_capacity(outs.len());
+    for (r, cache) in outs {
+        merged.absorb(cache);
+        results.push(r);
+    }
+    (results, merged)
+}
+
+/// File-backed warm start around [`run_specs_warm`]: load `cache_file`
+/// (a missing file is a silent cold start; a corrupt one degrades to
+/// cold with a stderr warning), run the matrix seeded from it, and
+/// atomically save the merged warmed cache back — so the next process
+/// sweeping overlapping scenarios starts with every ground-truth
+/// evaluation this one (and its predecessors) performed. `None` is
+/// exactly [`run_specs`].
+pub fn run_specs_cached(
+    specs: &[RunSpec],
+    threads: usize,
+    cache_file: Option<&str>,
+) -> Vec<SearchResult> {
+    let Some(path) = cache_file else {
+        return run_specs(specs, threads);
+    };
+    let initial = EvalCache::load_file_or_cold(path);
+    let (results, warmed) = run_specs_warm(specs, threads, initial);
+    if let Err(e) = warmed.save_file(path) {
+        eprintln!("warning: failed to save eval cache: {e}");
+    }
+    results
+}
+
 /// Search many workloads concurrently with one searcher configuration:
 /// workload lane `i` runs under the deterministic seed
 /// `lane_seed(base_seed, i)`, and results come back in workload order.
@@ -306,6 +372,70 @@ mod tests {
     fn empty_batch_is_fine() {
         assert!(run_specs(&[], 4).is_empty());
         assert_eq!(aggregate_cache(&[]), CacheStats::default());
+        let (rs, cache) = run_specs_warm(&[], 4, EvalCache::new());
+        assert!(rs.is_empty());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn warm_start_is_transparent_and_reports_extra_hits() {
+        let sp = specs(2);
+        let cold = run_specs(&sp, 2);
+        // seed a second batch from the first batch's merged cache
+        let (_, warmed) = run_specs_warm(&sp, 2, EvalCache::new());
+        assert!(!warmed.is_empty());
+        let (warm, warmed2) = run_specs_warm(&sp, 2, warmed.clone());
+        for (c, w) in cold.iter().zip(&warm) {
+            // identical trajectory and outcome...
+            assert_eq!(c.best_speedup, w.best_speedup);
+            assert_eq!(c.best_latency_s, w.best_latency_s);
+            assert_eq!(c.curve, w.curve);
+            assert_eq!(c.api_cost_usd, w.api_cost_usd);
+            assert_eq!(c.n_samples, w.n_samples);
+            // ...but the warm run served ground truth from the snapshot
+            assert!(w.eval_cache.hits > c.eval_cache.hits, "{:?} vs {:?}", w.eval_cache, c.eval_cache);
+            assert!(w.eval_cache.misses < c.eval_cache.misses);
+            // per-search lookup volume is unchanged (counters reset on adoption)
+            assert_eq!(
+                w.eval_cache.hits + w.eval_cache.misses,
+                c.eval_cache.hits + c.eval_cache.misses
+            );
+            // warm runs charge measurement overhead only on real misses
+            assert!(w.compile_time_s <= c.compile_time_s);
+        }
+        // a replayed sweep adds no new ground-truth entries
+        assert_eq!(warmed2.len(), warmed.len());
+        assert_eq!(warmed2.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn run_specs_cached_persists_across_driver_invocations() {
+        let path = std::env::temp_dir().join(format!(
+            "litecoop_driver_cache_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let sp = specs(2);
+        // invocation 1: cold (no file yet), saves the warmed cache
+        let first = run_specs_cached(&sp, 2, Some(path.as_str()));
+        let saved = EvalCache::load_file(&path).expect("cache file written");
+        assert!(!saved.is_empty());
+        // invocation 2: loads the file, must report strictly more hits
+        // with byte-identical results
+        let second = run_specs_cached(&sp, 2, Some(path.as_str()));
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.best_speedup, b.best_speedup);
+            assert_eq!(a.curve, b.curve);
+            assert!(b.eval_cache.hits > a.eval_cache.hits);
+        }
+        // None is exactly the plain path
+        let plain = run_specs_cached(&sp, 2, None);
+        for (a, p) in first.iter().zip(&plain) {
+            assert_eq!(a.best_speedup, p.best_speedup);
+            assert_eq!(a.eval_cache, p.eval_cache);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

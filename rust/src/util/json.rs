@@ -69,6 +69,13 @@ impl Json {
         }
     }
 
+    /// Read and parse a JSON file, prefixing errors with the path (the
+    /// common shape for "cache file X: bad entry key" diagnostics).
+    pub fn parse_file(path: &str) -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
     /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser {
@@ -439,5 +446,23 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""éx""#).unwrap();
         assert_eq!(j.as_str(), Some("éx"));
+    }
+
+    #[test]
+    fn parse_file_reports_path_in_errors() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("litecoop_json_parse_file_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, "{\"a\": 1}\n").unwrap();
+        assert_eq!(
+            Json::parse_file(&path).unwrap().get("a").unwrap().as_f64(),
+            Some(1.0)
+        );
+        std::fs::write(&path, "{oops").unwrap();
+        let err = Json::parse_file(&path).unwrap_err();
+        assert!(err.contains(&path), "{err}");
+        std::fs::remove_file(&path).unwrap();
+        let err = Json::parse_file(&path).unwrap_err();
+        assert!(err.contains(&path), "{err}");
     }
 }

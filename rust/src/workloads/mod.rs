@@ -19,6 +19,7 @@ pub mod conv;
 pub mod mlp;
 pub mod gemm;
 pub mod llama_e2e;
+pub mod scenarios;
 
 use crate::tir::Workload;
 
@@ -33,8 +34,8 @@ pub fn paper_benchmarks() -> Vec<Workload> {
     ]
 }
 
-/// Look a workload up by its registry name.
-pub fn by_name(name: &str) -> Option<Workload> {
+/// The fixed registry of hand-built benchmark workloads.
+fn registry(name: &str) -> Option<Workload> {
     match name {
         "llama3_attention" => Some(attention::llama3_attention()),
         "deepseek_moe" => Some(moe::deepseek_moe()),
@@ -44,6 +45,25 @@ pub fn by_name(name: &str) -> Option<Workload> {
         "gemm" => Some(gemm::gemm(1024, 1024, 1024)),
         _ => None,
     }
+}
+
+/// Resolve a workload name with a diagnostic error: the fixed registry
+/// first, then the scenario grammar (`family` or `family@key=val,...`,
+/// see [`scenarios`]). This is the CLI-facing twin of [`by_name`] —
+/// same resolution, but a failed scenario parse explains *why*.
+pub fn resolve(name: &str) -> Result<Workload, String> {
+    if let Some(w) = registry(name) {
+        return Ok(w);
+    }
+    scenarios::ScenarioSpec::parse(name)?.lower()
+}
+
+/// Look a workload up by name: the fixed registry, plus every name the
+/// scenario grammar accepts (so CLIs, [`crate::coordinator::RunSpec`]s,
+/// and the drivers take `attention@seq=1024,heads=16` wherever they
+/// take `llama3_attention`).
+pub fn by_name(name: &str) -> Option<Workload> {
+    resolve(name).ok()
 }
 
 /// Paper display names, aligned with `paper_benchmarks()` order.
@@ -86,5 +106,19 @@ mod tests {
     fn labels_align() {
         let benches = paper_benchmarks();
         assert_eq!(benches.len(), PAPER_BENCH_LABELS.len());
+    }
+
+    #[test]
+    fn by_name_accepts_scenario_grammar() {
+        let w = by_name("attention@head_dim=32,heads=4,seq=256").unwrap();
+        assert_eq!(w.name, "attention@head_dim=32,heads=4,seq=256");
+        assert_eq!(w.blocks.len(), 6);
+        // same point through the explicit scenario API
+        let spec = scenarios::ScenarioSpec::parse(&w.name).unwrap();
+        assert_eq!(spec.lower().unwrap().flops(), w.flops());
+        // malformed scenario names stay unknown, with a diagnostic via resolve
+        assert!(by_name("attention@heads=zero").is_none());
+        assert!(resolve("attention@heads=zero").is_err());
+        assert!(resolve("llama3_attention").is_ok());
     }
 }

@@ -1,0 +1,795 @@
+//! Scenario subsystem: parameterized workload families + matrix expansion.
+//!
+//! COLT evaluates on six hand-built workloads; the sweep literature the
+//! paper positions against (LiteCoOp's shape sweeps, REASONING COMPILER's
+//! per-hardware grids) evaluates across *parameterized* scenario
+//! matrices. This module makes those native:
+//!
+//! * [`ScenarioSpec`] — one point in a family's parameter space,
+//!   deterministically lowered to a well-formed
+//!   [`Workload`](crate::tir::Workload) through the same builders the
+//!   hand-built benchmarks use. Every spec has a canonical *name*
+//!   ([`ScenarioSpec::name`]) in the grammar `family@key=val,key2=val2`
+//!   (keys sorted, values canonicalized), and
+//!   [`crate::workloads::by_name`] parses that grammar — so every CLI,
+//!   [`RunSpec`](crate::coordinator::RunSpec), and driver path accepts
+//!   scenario names wherever it accepts a registry name.
+//! * [`ScenarioGrid`] — a cross-product over per-key value lists
+//!   (`m=256,512;k=64,128`), expanded to a deterministic
+//!   `Vec<ScenarioSpec>` for the sweep drivers (`experiments sweep`,
+//!   `collab_search --sweep`).
+//!
+//! The lowered workload's `name` **is** the canonical scenario name,
+//! which also keys the evaluation cache
+//! ([`crate::mcts::evalcache::trace_key`] folds the workload name):
+//! distinct scenario points never share cache entries, identical points
+//! always do — including across processes via the persistent cache file
+//! (see [`crate::mcts::evalcache::EvalCache`]).
+//!
+//! # Families and keys
+//!
+//! | family      | keys (defaults)                                                        |
+//! |-------------|------------------------------------------------------------------------|
+//! | `gemm`      | `m`,`n`,`k` (1024), `batch` (absent = unbatched), `dtype` (f32)         |
+//! | `attention` | `seq` (2048), `heads` (32), `head_dim` (128), `causal` (true), `dtype`  |
+//! | `conv`      | `h`,`w` (64), `c_in`,`c_out` (320), `kh`,`kw` (3), `dtype`              |
+//! | `mlp`       | `tokens` (1024), `d_model` (5120), `d_ff` (8192), `dtype`               |
+//! | `moe`       | `tokens` (1024), `d_model` (2048), `d_ff` (4096), `experts` (8), `top_k` (2), `dtype` |
+//! | `llama_e2e` | `seq` (2048), `heads` (32), `head_dim` (128), `d_ff` (14336), `causal`, `dtype` — one fused decoder layer (attention + SwiGLU FFN) |
+//!
+//! `dtype` values: `f32`, `bf16`, `f16`, `i32` (long aliases `float32`
+//! etc. accepted, canonicalized to the short form). Unset keys take the
+//! family defaults at lowering time; the canonical name lists only the
+//! explicitly set keys.
+
+use super::builder::WorkloadBuilder;
+use super::{attention, conv, gemm, mlp, moe};
+use crate::tir::{DType, Workload};
+use std::collections::BTreeMap;
+
+/// A parameterized workload family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Gemm,
+    Attention,
+    Conv,
+    Mlp,
+    Moe,
+    /// One fused Llama-style decoder layer: the 6-block attention
+    /// pipeline chained into a SwiGLU FFN reading its residual output.
+    LlamaE2e,
+}
+
+/// Value type of one scenario parameter.
+#[derive(Clone, Copy, Debug)]
+enum Kind {
+    Int,
+    Bool,
+    Dtype,
+}
+
+/// Per-dimension extent bound. Large enough for any realistic shape,
+/// small enough that no family's buffer shape entry overflows `i64`
+/// during construction; full iteration domains are additionally bounded
+/// by [`MAX_DOMAIN_POINTS`] at lowering time.
+pub const MAX_EXTENT: i64 = 1 << 20;
+
+/// Bound on any lowered block's iteration-domain point count, checked in
+/// [`ScenarioSpec::lower`] before the simulator can compute (and
+/// overflow) `i64` products over the axes.
+pub const MAX_DOMAIN_POINTS: f64 = 1e15;
+
+/// Bound on one grid expansion ([`ScenarioGrid::expand`]) — a
+/// fat-fingered cross product should fail loudly, not enqueue a
+/// million searches.
+pub const MAX_SCENARIOS: usize = 4096;
+
+impl Family {
+    pub const ALL: [Family; 6] = [
+        Family::Gemm,
+        Family::Attention,
+        Family::Conv,
+        Family::Mlp,
+        Family::Moe,
+        Family::LlamaE2e,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Gemm => "gemm",
+            Family::Attention => "attention",
+            Family::Conv => "conv",
+            Family::Mlp => "mlp",
+            Family::Moe => "moe",
+            Family::LlamaE2e => "llama_e2e",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Family, String> {
+        Family::ALL
+            .iter()
+            .copied()
+            .find(|f| f.name() == s)
+            .ok_or_else(|| {
+                format!(
+                    "unknown scenario family {s:?} (families: {})",
+                    Family::ALL.map(Family::name).join(", ")
+                )
+            })
+    }
+
+    fn schema(self) -> &'static [(&'static str, Kind)] {
+        match self {
+            Family::Gemm => &[
+                ("m", Kind::Int),
+                ("n", Kind::Int),
+                ("k", Kind::Int),
+                ("batch", Kind::Int),
+                ("dtype", Kind::Dtype),
+            ],
+            Family::Attention => &[
+                ("seq", Kind::Int),
+                ("heads", Kind::Int),
+                ("head_dim", Kind::Int),
+                ("causal", Kind::Bool),
+                ("dtype", Kind::Dtype),
+            ],
+            Family::Conv => &[
+                ("h", Kind::Int),
+                ("w", Kind::Int),
+                ("c_in", Kind::Int),
+                ("c_out", Kind::Int),
+                ("kh", Kind::Int),
+                ("kw", Kind::Int),
+                ("dtype", Kind::Dtype),
+            ],
+            Family::Mlp => &[
+                ("tokens", Kind::Int),
+                ("d_model", Kind::Int),
+                ("d_ff", Kind::Int),
+                ("dtype", Kind::Dtype),
+            ],
+            Family::Moe => &[
+                ("tokens", Kind::Int),
+                ("d_model", Kind::Int),
+                ("d_ff", Kind::Int),
+                ("experts", Kind::Int),
+                ("top_k", Kind::Int),
+                ("dtype", Kind::Dtype),
+            ],
+            Family::LlamaE2e => &[
+                ("seq", Kind::Int),
+                ("heads", Kind::Int),
+                ("head_dim", Kind::Int),
+                ("d_ff", Kind::Int),
+                ("causal", Kind::Bool),
+                ("dtype", Kind::Dtype),
+            ],
+        }
+    }
+
+    /// The family's valid parameter keys, schema order.
+    pub fn keys(self) -> Vec<&'static str> {
+        self.schema().iter().map(|(k, _)| *k).collect()
+    }
+}
+
+fn parse_dtype(s: &str) -> Option<DType> {
+    match s {
+        "f32" | "float32" => Some(DType::F32),
+        "bf16" | "bfloat16" => Some(DType::BF16),
+        "f16" | "float16" => Some(DType::F16),
+        "i32" | "int32" => Some(DType::I32),
+        _ => None,
+    }
+}
+
+fn dtype_name(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "f32",
+        DType::BF16 => "bf16",
+        DType::F16 => "f16",
+        DType::I32 => "i32",
+    }
+}
+
+fn canonicalize(kind: Kind, key: &str, val: &str) -> Result<String, String> {
+    match kind {
+        Kind::Int => {
+            let v: i64 = val
+                .parse()
+                .map_err(|_| format!("{key}={val:?}: expected an integer"))?;
+            if !(1..=MAX_EXTENT).contains(&v) {
+                return Err(format!("{key}={v}: out of range 1..={MAX_EXTENT}"));
+            }
+            Ok(v.to_string())
+        }
+        Kind::Bool => match val {
+            "true" | "1" => Ok("true".into()),
+            "false" | "0" => Ok("false".into()),
+            _ => Err(format!("{key}={val:?}: expected true/false")),
+        },
+        Kind::Dtype => {
+            let d = parse_dtype(val)
+                .ok_or_else(|| format!("{key}={val:?}: expected one of f32, bf16, f16, i32"))?;
+            Ok(dtype_name(d).to_string())
+        }
+    }
+}
+
+/// One point in a family's parameter space. See the module docs for the
+/// grammar and the per-family keys/defaults.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScenarioSpec {
+    family: Family,
+    /// Explicitly set parameters, key → canonical value rendering.
+    /// `BTreeMap` ⇒ the canonical name lists keys in sorted order.
+    params: BTreeMap<String, String>,
+}
+
+impl ScenarioSpec {
+    /// All-defaults spec for a family.
+    pub fn new(family: Family) -> ScenarioSpec {
+        ScenarioSpec {
+            family,
+            params: BTreeMap::new(),
+        }
+    }
+
+    pub fn family(&self) -> Family {
+        self.family
+    }
+
+    /// Explicitly set parameters (canonical key → value renderings).
+    pub fn params(&self) -> &BTreeMap<String, String> {
+        &self.params
+    }
+
+    /// Set one parameter from its string form. Values are canonicalized
+    /// (int normalization, bool/dtype aliases); unknown keys and
+    /// malformed or out-of-range values are rejected. Setting a key
+    /// twice keeps the last value.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), String> {
+        let kind = self
+            .family
+            .schema()
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|&(_, kind)| kind)
+            .ok_or_else(|| {
+                format!(
+                    "scenario family {}: unknown key {key:?} (valid: {})",
+                    self.family.name(),
+                    self.family.keys().join(", ")
+                )
+            })?;
+        let canon = canonicalize(kind, key, val)
+            .map_err(|e| format!("scenario family {}: {e}", self.family.name()))?;
+        self.params.insert(key.to_string(), canon);
+        Ok(())
+    }
+
+    /// Canonical name: `family` when no key is set, else
+    /// `family@key=val,...` with keys sorted and values canonical.
+    /// `parse(spec.name())` reproduces the spec exactly (the grammar's
+    /// fixed point), and the lowered workload carries this name.
+    pub fn name(&self) -> String {
+        if self.params.is_empty() {
+            return self.family.name().to_string();
+        }
+        let kv: Vec<String> = self
+            .params
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        format!("{}@{}", self.family.name(), kv.join(","))
+    }
+
+    /// Parse `family` or `family@key=val,key2=val2,...` (whitespace
+    /// around keys/values tolerated, values canonicalized).
+    pub fn parse(text: &str) -> Result<ScenarioSpec, String> {
+        let (fam, rest) = match text.split_once('@') {
+            Some((f, r)) => (f, Some(r)),
+            None => (text, None),
+        };
+        let mut spec = ScenarioSpec::new(Family::parse(fam.trim())?);
+        if let Some(rest) = rest {
+            if rest.trim().is_empty() {
+                return Err(format!("scenario {text:?}: empty parameter list after '@'"));
+            }
+            for kv in rest.split(',') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("scenario {text:?}: expected key=value, got {kv:?}"))?;
+                spec.set(k.trim(), v.trim())?;
+            }
+        }
+        Ok(spec)
+    }
+
+    // --- typed accessors over the canonical params (canonicalization in
+    // `set` guarantees these parses cannot fail) ---
+
+    fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.params
+            .get(key)
+            .map(|v| v.parse().expect("canonical int"))
+            .unwrap_or(default)
+    }
+
+    fn opt_int(&self, key: &str) -> Option<i64> {
+        self.params.get(key).map(|v| v.parse().expect("canonical int"))
+    }
+
+    fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.params.get(key).map(|v| v == "true").unwrap_or(default)
+    }
+
+    fn dtype(&self) -> DType {
+        self.params
+            .get("dtype")
+            .and_then(|v| parse_dtype(v))
+            .unwrap_or(DType::F32)
+    }
+
+    /// Deterministically lower to a well-formed workload. The result's
+    /// `name` is the canonical scenario name; unset keys take family
+    /// defaults; structural constraints (causal seq, conv kernel fit,
+    /// MoE top-k, the [`MAX_DOMAIN_POINTS`] bound) are checked and the
+    /// lowered workload is validated before it is returned.
+    pub fn lower(&self) -> Result<Workload, String> {
+        let mut w = match self.family {
+            Family::Gemm => self.lower_gemm(),
+            Family::Attention => self.lower_attention(),
+            Family::Conv => self.lower_conv(),
+            Family::Mlp => Ok(mlp::mlp(
+                "mlp",
+                mlp::MlpParams {
+                    tokens: self.int_or("tokens", 1024),
+                    d_model: self.int_or("d_model", 5120),
+                    d_ff: self.int_or("d_ff", 8192),
+                },
+            )),
+            Family::Moe => self.lower_moe(),
+            Family::LlamaE2e => self.lower_llama(),
+        }?;
+        w.name = self.name();
+        let dt = self.dtype();
+        if dt != DType::F32 {
+            for buf in &mut w.buffers {
+                buf.dtype = dt;
+            }
+        }
+        for blk in &w.blocks {
+            let pts: f64 = blk.axes.iter().map(|a| a.extent as f64).product();
+            if pts > MAX_DOMAIN_POINTS {
+                return Err(format!(
+                    "scenario {}: block {} iteration domain ({pts:.3e} points) exceeds {MAX_DOMAIN_POINTS:.0e}",
+                    w.name, blk.name
+                ));
+            }
+        }
+        w.validate().map_err(|e| format!("scenario {}: {e}", w.name))?;
+        Ok(w)
+    }
+
+    fn lower_gemm(&self) -> Result<Workload, String> {
+        let (m, n, k) = (
+            self.int_or("m", 1024),
+            self.int_or("n", 1024),
+            self.int_or("k", 1024),
+        );
+        match self.opt_int("batch") {
+            None => Ok(gemm::gemm(m, n, k)),
+            Some(batch) => {
+                // batched GEMM with shared (unbatched) weights
+                let mut b = WorkloadBuilder::new("gemm");
+                let a = b.f32("A", &[batch, m, k]);
+                let w = b.f32("B", &[k, n]);
+                let c = b.f32("C", &[batch, m, n]);
+                b.matmul("matmul", Some(batch), m, n, k, a, w, c, false, vec![]);
+                Ok(b.build())
+            }
+        }
+    }
+
+    fn lower_attention(&self) -> Result<Workload, String> {
+        let seq = self.int_or("seq", 2048);
+        let causal = self.bool_or("causal", true);
+        if causal && seq < 2 {
+            return Err(format!(
+                "scenario {}: causal attention needs seq >= 2 (kv extent = seq/2)",
+                self.name()
+            ));
+        }
+        Ok(attention::attention(
+            "attention",
+            attention::AttnParams {
+                seq,
+                heads: self.int_or("heads", 32),
+                head_dim: self.int_or("head_dim", 128),
+                causal,
+            },
+        ))
+    }
+
+    fn lower_conv(&self) -> Result<Workload, String> {
+        let (h, w) = (self.int_or("h", 64), self.int_or("w", 64));
+        let (kh, kw) = (self.int_or("kh", 3), self.int_or("kw", 3));
+        if kh > h || kw > w {
+            return Err(format!(
+                "scenario {}: kernel {kh}x{kw} larger than input {h}x{w}",
+                self.name()
+            ));
+        }
+        Ok(conv::conv2d(
+            "conv",
+            conv::ConvParams {
+                h,
+                w,
+                c_in: self.int_or("c_in", 320),
+                c_out: self.int_or("c_out", 320),
+                kh,
+                kw,
+            },
+        ))
+    }
+
+    fn lower_moe(&self) -> Result<Workload, String> {
+        let n_experts = self.int_or("experts", 8);
+        let top_k = self.int_or("top_k", 2);
+        if top_k > n_experts {
+            return Err(format!(
+                "scenario {}: top_k {top_k} > experts {n_experts}",
+                self.name()
+            ));
+        }
+        Ok(moe::moe(
+            "moe",
+            moe::MoeParams {
+                tokens: self.int_or("tokens", 1024),
+                d_model: self.int_or("d_model", 2048),
+                d_ff: self.int_or("d_ff", 4096),
+                n_experts,
+                top_k,
+            },
+        ))
+    }
+
+    fn lower_llama(&self) -> Result<Workload, String> {
+        let seq = self.int_or("seq", 2048);
+        let heads = self.int_or("heads", 32);
+        let head_dim = self.int_or("head_dim", 128);
+        let causal = self.bool_or("causal", true);
+        if causal && seq < 2 {
+            return Err(format!(
+                "scenario {}: causal attention needs seq >= 2 (kv extent = seq/2)",
+                self.name()
+            ));
+        }
+        let attn = attention::attention(
+            "llama_layer",
+            attention::AttnParams {
+                seq,
+                heads,
+                head_dim,
+                causal,
+            },
+        );
+        let ffn = mlp::mlp(
+            "llama_ffn",
+            mlp::MlpParams {
+                tokens: seq,
+                d_model: heads * head_dim,
+                d_ff: self.int_or("d_ff", 14336),
+            },
+        );
+        let y = attn.buffer_idx("Y");
+        fuse(attn, ffn, y, "llama_e2e")
+    }
+}
+
+/// Chain `tail` onto `head` as one workload: `tail`'s buffer 0 (its
+/// input activation, by builder convention) is identified with `head`'s
+/// buffer `head_out`, producer-less `tail` blocks are rooted at `head`'s
+/// final block, block/producer indices are offset, and colliding buffer
+/// names get a `_t` suffix. Topological order is preserved (appended
+/// blocks come after everything they consume), so the fused workload
+/// validates whenever both inputs do.
+fn fuse(mut head: Workload, tail: Workload, head_out: usize, name: &str) -> Result<Workload, String> {
+    if head.buffers[head_out].shape != tail.buffers[0].shape {
+        return Err(format!(
+            "fuse {name}: output buffer shape {:?} != consumer input shape {:?}",
+            head.buffers[head_out].shape, tail.buffers[0].shape
+        ));
+    }
+    let buf_offset = head.buffers.len();
+    let blk_offset = head.blocks.len();
+    let head_last = blk_offset - 1;
+    let map_buf = |i: usize| if i == 0 { head_out } else { buf_offset + i - 1 };
+    let existing: std::collections::BTreeSet<String> =
+        head.buffers.iter().map(|b| b.name.clone()).collect();
+    for (bi, mut buf) in tail.buffers.into_iter().enumerate() {
+        if bi == 0 {
+            continue;
+        }
+        if existing.contains(&buf.name) {
+            buf.name.push_str("_t");
+        }
+        head.buffers.push(buf);
+    }
+    for mut blk in tail.blocks.into_iter() {
+        for acc in blk.reads.iter_mut().chain(blk.writes.iter_mut()) {
+            acc.buffer = map_buf(acc.buffer);
+        }
+        blk.producers = if blk.producers.is_empty() {
+            vec![head_last]
+        } else {
+            blk.producers.iter().map(|p| p + blk_offset).collect()
+        };
+        head.blocks.push(blk);
+    }
+    head.name = name.to_string();
+    Ok(head)
+}
+
+/// A cross-product over per-key value lists for one family — the sweep
+/// drivers' input. Dimension order is preserved from the grid text; the
+/// expansion varies the **last** dimension fastest, so
+/// `m=1,2;k=3,4` → `[{m=1,k=3},{m=1,k=4},{m=2,k=3},{m=2,k=4}]`.
+#[derive(Clone, Debug)]
+pub struct ScenarioGrid {
+    pub family: Family,
+    dims: Vec<(String, Vec<String>)>,
+}
+
+impl ScenarioGrid {
+    /// Parse a grid over `family` from `key=v1,v2;key2=v3,...`. Empty
+    /// grid text (or only separators) means "one all-defaults scenario".
+    /// Keys, values, and duplicates are validated up front.
+    pub fn parse(family: &str, grid: &str) -> Result<ScenarioGrid, String> {
+        let family = Family::parse(family.trim())?;
+        let mut dims: Vec<(String, Vec<String>)> = Vec::new();
+        for dim in grid.split(';').filter(|d| !d.trim().is_empty()) {
+            let (k, vs) = dim
+                .split_once('=')
+                .ok_or_else(|| format!("sweep grid: expected key=v1,v2,..., got {dim:?}"))?;
+            let k = k.trim();
+            if dims.iter().any(|(seen, _)| seen == k) {
+                return Err(format!("sweep grid: key {k:?} listed twice"));
+            }
+            let mut vals = Vec::new();
+            for v in vs.split(',').filter(|v| !v.trim().is_empty()) {
+                // canonicalize (and validate) through a scratch spec
+                let mut scratch = ScenarioSpec::new(family);
+                scratch.set(k, v.trim())?;
+                vals.push(scratch.params[k].clone());
+            }
+            if vals.is_empty() {
+                return Err(format!("sweep grid: no values for key {k:?}"));
+            }
+            dims.push((k.to_string(), vals));
+        }
+        Ok(ScenarioGrid { family, dims })
+    }
+
+    /// Parse the one-argument form `family:key=v1,v2;key2=...` (or a
+    /// bare `family` for the single all-defaults scenario).
+    pub fn parse_arg(text: &str) -> Result<ScenarioGrid, String> {
+        match text.split_once(':') {
+            Some((f, g)) => ScenarioGrid::parse(f, g),
+            None => ScenarioGrid::parse(text, ""),
+        }
+    }
+
+    /// Number of scenarios the expansion will produce.
+    pub fn len(&self) -> usize {
+        self.dims.iter().map(|(_, vs)| vs.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cross product into specs (deterministic order, last
+    /// dimension fastest). Every spec is lowered once here so invalid
+    /// combinations (e.g. `kh > h`) fail before any search starts; the
+    /// expansion is also bounded by [`MAX_SCENARIOS`].
+    pub fn expand(&self) -> Result<Vec<ScenarioSpec>, String> {
+        let mut total = 1usize;
+        for (_, vs) in &self.dims {
+            total = total
+                .checked_mul(vs.len())
+                .filter(|&t| t <= MAX_SCENARIOS)
+                .ok_or_else(|| {
+                    format!("sweep grid: expansion exceeds {MAX_SCENARIOS} scenarios")
+                })?;
+        }
+        let mut out = Vec::with_capacity(total);
+        for i in 0..total {
+            let mut spec = ScenarioSpec::new(self.family);
+            let mut rem = i;
+            for (k, vs) in self.dims.iter().rev() {
+                spec.set(k, &vs[rem % vs.len()])?;
+                rem /= vs.len();
+            }
+            spec.lower()?;
+            out.push(spec);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_fixed_point() {
+        let spec = ScenarioSpec::parse("gemm@n=512, m=256,dtype=float32").unwrap();
+        // keys sorted, values canonical (float32 -> f32)
+        assert_eq!(spec.name(), "gemm@dtype=f32,m=256,n=512");
+        let reparsed = ScenarioSpec::parse(&spec.name()).unwrap();
+        assert_eq!(reparsed, spec);
+        assert_eq!(reparsed.name(), spec.name());
+    }
+
+    #[test]
+    fn bare_family_parses_to_defaults() {
+        let spec = ScenarioSpec::parse("attention").unwrap();
+        assert_eq!(spec.name(), "attention");
+        let w = spec.lower().unwrap();
+        // defaults match the hand-built llama3 attention shape
+        assert_eq!(w.flops(), attention::llama3_attention().flops());
+        assert_eq!(w.blocks.len(), 6);
+    }
+
+    #[test]
+    fn gemm_defaults_match_registry_gemm() {
+        let w = ScenarioSpec::parse("gemm").unwrap().lower().unwrap();
+        assert_eq!(w.flops(), gemm::gemm(1024, 1024, 1024).flops());
+    }
+
+    #[test]
+    fn lowered_name_is_canonical_scenario_name() {
+        let spec = ScenarioSpec::parse("mlp@tokens=64,d_ff=128,d_model=32").unwrap();
+        let w = spec.lower().unwrap();
+        assert_eq!(w.name, "mlp@d_ff=128,d_model=32,tokens=64");
+        assert_eq!(w.name, spec.name());
+    }
+
+    #[test]
+    fn unknown_family_key_and_value_rejected() {
+        assert!(ScenarioSpec::parse("resnet@h=3").is_err());
+        assert!(ScenarioSpec::parse("gemm@q=3").is_err());
+        assert!(ScenarioSpec::parse("gemm@m=abc").is_err());
+        assert!(ScenarioSpec::parse("gemm@m=0").is_err());
+        assert!(ScenarioSpec::parse("gemm@m=-5").is_err());
+        assert!(ScenarioSpec::parse("gemm@").is_err());
+        assert!(ScenarioSpec::parse("gemm@m").is_err());
+        assert!(ScenarioSpec::parse("attention@dtype=f64").is_err());
+        // out-of-range extent
+        assert!(ScenarioSpec::parse(&format!("gemm@m={}", MAX_EXTENT + 1)).is_err());
+    }
+
+    #[test]
+    fn structural_constraints_checked_at_lowering() {
+        // causal attention with seq=1 would need a zero-extent kv axis
+        assert!(ScenarioSpec::parse("attention@seq=1").unwrap().lower().is_err());
+        assert!(ScenarioSpec::parse("attention@seq=1,causal=false")
+            .unwrap()
+            .lower()
+            .is_ok());
+        // conv kernel larger than the input
+        assert!(ScenarioSpec::parse("conv@h=2,kh=3").unwrap().lower().is_err());
+        // moe top_k > experts
+        assert!(ScenarioSpec::parse("moe@experts=2,top_k=3")
+            .unwrap()
+            .lower()
+            .is_err());
+        // iteration-domain blowup (each extent individually legal)
+        assert!(ScenarioSpec::parse("gemm@m=1048576,n=1048576,k=1048576")
+            .unwrap()
+            .lower()
+            .is_err());
+    }
+
+    #[test]
+    fn dtype_param_rewrites_every_buffer() {
+        let w = ScenarioSpec::parse("mlp@tokens=8,d_model=16,d_ff=32,dtype=bf16")
+            .unwrap()
+            .lower()
+            .unwrap();
+        assert!(w.buffers.iter().all(|b| b.dtype == DType::BF16));
+        let f32w = ScenarioSpec::parse("mlp@tokens=8,d_model=16,d_ff=32")
+            .unwrap()
+            .lower()
+            .unwrap();
+        let bytes = |w: &Workload| w.buffers.iter().map(|b| b.bytes()).sum::<i64>();
+        assert_eq!(bytes(&w) * 2, bytes(&f32w));
+    }
+
+    #[test]
+    fn batched_gemm_has_batch_axis_and_shared_weights() {
+        let w = ScenarioSpec::parse("gemm@batch=4,m=32,n=16,k=8")
+            .unwrap()
+            .lower()
+            .unwrap();
+        assert_eq!(w.blocks.len(), 1);
+        assert_eq!(w.blocks[0].axes.len(), 4); // b, i, j, k
+        assert_eq!(w.blocks[0].reads[1].dim_axes.len(), 2); // weights unbatched
+        assert_eq!(w.flops(), 2.0 * 4.0 * 32.0 * 16.0 * 8.0);
+    }
+
+    #[test]
+    fn llama_e2e_fuses_attention_into_ffn() {
+        let w = ScenarioSpec::parse("llama_e2e@seq=64,heads=2,head_dim=16,d_ff=128")
+            .unwrap()
+            .lower()
+            .unwrap();
+        w.validate().unwrap();
+        let names: Vec<&str> = w.blocks.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "qkv_proj", "scores", "softmax", "av", "out_proj", "residual", "gate_proj",
+                "up_proj", "silu_mul", "down_proj"
+            ]
+        );
+        // the FFN's first matmuls read the attention residual output and
+        // are rooted at the residual block
+        let y = w.buffer_idx("Y");
+        let gate = w.blocks.iter().find(|b| b.name == "gate_proj").unwrap();
+        assert_eq!(gate.reads[0].buffer, y);
+        assert_eq!(gate.producers, vec![5]);
+        // the FFN's own Y output was renamed away from the collision
+        assert!(w.buffers.iter().any(|b| b.name == "Y_t"));
+    }
+
+    #[test]
+    fn grid_expands_cross_product_in_order() {
+        let grid = ScenarioGrid::parse("gemm", "m=16,32;k=8,64").unwrap();
+        assert_eq!(grid.len(), 4);
+        let specs = grid.expand().unwrap();
+        let names: Vec<String> = specs.iter().map(ScenarioSpec::name).collect();
+        assert_eq!(
+            names,
+            [
+                "gemm@k=8,m=16",
+                "gemm@k=64,m=16",
+                "gemm@k=8,m=32",
+                "gemm@k=64,m=32"
+            ]
+        );
+    }
+
+    #[test]
+    fn grid_rejects_bad_input() {
+        assert!(ScenarioGrid::parse("gemm", "m=16;m=32").is_err()); // dup key
+        assert!(ScenarioGrid::parse("gemm", "m").is_err());
+        assert!(ScenarioGrid::parse("gemm", "m=").is_err());
+        assert!(ScenarioGrid::parse("gemm", "q=1").is_err());
+        assert!(ScenarioGrid::parse("nope", "").is_err());
+        // invalid combination caught at expand (lowering check)
+        assert!(ScenarioGrid::parse("conv", "h=2;kh=3").unwrap().expand().is_err());
+    }
+
+    #[test]
+    fn grid_empty_text_is_one_default_scenario() {
+        let specs = ScenarioGrid::parse("moe", "  ").unwrap().expand().unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].name(), "moe");
+        let arg = ScenarioGrid::parse_arg("moe").unwrap().expand().unwrap();
+        assert_eq!(arg, specs);
+    }
+
+    #[test]
+    fn parse_arg_splits_family_and_grid() {
+        let grid = ScenarioGrid::parse_arg("attention:seq=64,128;heads=2").unwrap();
+        assert_eq!(grid.family, Family::Attention);
+        assert_eq!(grid.len(), 4);
+        for spec in grid.expand().unwrap() {
+            assert!(spec.lower().is_ok());
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Golden-snapshot determinism tests.
+//!
+//! A fixed-seed `run_one` on each built-in workload (plus two scenario
+//! points, exercising the `family@key=val` path) must reproduce the
+//! exact final speedup (bit pattern) and the incumbent schedule's trace
+//! hash + structural fingerprint recorded in the checked-in golden file.
+//! The existing "serial == parallel" transparency tests can only catch
+//! *relative* divergence; these snapshots catch silent RNG-stream drift
+//! — a reordered draw, an extra consumed sample, a changed tie-break —
+//! that shifts every configuration in lockstep.
+//!
+//! Lifecycle (insta-style self-bootstrap): if the golden file is
+//! missing, or its `golden_version` differs from [`GOLDEN_VERSION`]
+//! (i.e. the snapshot *spec* itself changed), the test writes the
+//! current values and passes with a note — **commit the generated
+//! file**. Otherwise any mismatch fails with a drift report; if the
+//! drift is an intentional behavior change, delete the file (or bump
+//! [`GOLDEN_VERSION`]), rerun to regenerate, and commit the update
+//! alongside the change that caused it.
+
+use litecoop::coordinator::{run_many, RunSpec, Searcher};
+use litecoop::mcts::SearchResult;
+use litecoop::sim::Target;
+use litecoop::util::json::Json;
+
+const GOLDEN_PATH: &str = "rust/tests/goldens/search_goldens.json";
+const GOLDEN_DIR: &str = "rust/tests/goldens";
+
+/// Bump when the snapshot spec below (workload list, budget, seed,
+/// searcher) changes — stale goldens then regenerate instead of
+/// reporting phantom drift.
+const GOLDEN_VERSION: f64 = 1.0;
+const BUDGET: usize = 60;
+const SEED: u64 = 7;
+
+/// Every registry workload plus two scenario-grammar points.
+const WORKLOADS: [&str; 8] = [
+    "llama3_attention",
+    "deepseek_moe",
+    "flux_attention",
+    "flux_conv",
+    "llama4_mlp",
+    "gemm",
+    "gemm@batch=2,k=256,m=256,n=256",
+    "attention@head_dim=32,heads=4,seq=256",
+];
+
+fn snapshot_specs() -> Vec<RunSpec> {
+    WORKLOADS
+        .iter()
+        .map(|w| {
+            RunSpec::new(
+                w,
+                Target::Cpu,
+                Searcher::Coop {
+                    n: 2,
+                    largest: "gpt-5.2".into(),
+                },
+                BUDGET,
+                SEED,
+            )
+        })
+        .collect()
+}
+
+fn snapshot_entry(r: &SearchResult) -> Json {
+    let mut e = Json::obj();
+    e.set("speedup", r.best_speedup.into()) // human-readable
+        .set("speedup_bits", r.best_speedup.to_bits().to_string().into())
+        .set(
+            "trace_hash",
+            r.best_schedule.trace.running_hash().to_string().into(),
+        )
+        .set(
+            "fingerprint",
+            r.best_schedule.fingerprint().to_string().into(),
+        )
+        .set("n_samples", r.n_samples.into());
+    e
+}
+
+fn write_goldens(entries: &Json) {
+    std::fs::create_dir_all(GOLDEN_DIR).expect("create goldens dir");
+    let mut root = Json::obj();
+    root.set("golden_version", GOLDEN_VERSION.into())
+        .set("budget", BUDGET.into())
+        .set("seed", (SEED as usize).into())
+        .set("entries", entries.clone());
+    std::fs::write(GOLDEN_PATH, format!("{root}\n")).expect("write goldens");
+}
+
+#[test]
+fn golden_search_snapshots() {
+    let specs = snapshot_specs();
+    let results = run_many(&specs, 4);
+    let mut entries = Json::obj();
+    for (sp, r) in specs.iter().zip(&results) {
+        assert_eq!(&r.workload, &sp.workload);
+        entries.set(&sp.workload, snapshot_entry(r));
+    }
+
+    if !std::path::Path::new(GOLDEN_PATH).exists() {
+        write_goldens(&entries);
+        eprintln!(
+            "golden_search: no golden file found — generated {GOLDEN_PATH}; \
+             commit it to lock the current RNG streams in"
+        );
+        return;
+    }
+    // a present-but-unparseable file is damage, not a bootstrap case:
+    // regenerating from the current (possibly already-drifted) streams
+    // would silently disable the drift gate
+    let recorded = Json::parse_file(GOLDEN_PATH).unwrap_or_else(|e| {
+        panic!(
+            "{GOLDEN_PATH} exists but is unreadable ({e}); restore it from git, \
+             or delete it and rerun to regenerate from scratch"
+        )
+    });
+    if recorded.get("golden_version").and_then(Json::as_f64) != Some(GOLDEN_VERSION) {
+        write_goldens(&entries);
+        eprintln!(
+            "golden_search: golden file was for an older snapshot spec — \
+             regenerated {GOLDEN_PATH}; commit the update"
+        );
+        return;
+    }
+
+    let golden_entries = recorded
+        .get("entries")
+        .and_then(Json::as_obj)
+        .unwrap_or_else(|| panic!("{GOLDEN_PATH}: malformed (no entries); delete and rerun"));
+    let mut drift = Vec::new();
+    for (sp, r) in specs.iter().zip(&results) {
+        let Some(g) = golden_entries.get(&sp.workload) else {
+            drift.push(format!("{}: missing from goldens", sp.workload));
+            continue;
+        };
+        let field = |key: &str| {
+            g.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_default()
+        };
+        let num = |key: &str| g.get(key).and_then(Json::as_f64).unwrap_or(-1.0);
+        let got_bits = r.best_speedup.to_bits().to_string();
+        if field("speedup_bits") != got_bits {
+            drift.push(format!(
+                "{}: final speedup drifted (golden {} = {}, got {} = {})",
+                sp.workload,
+                field("speedup_bits"),
+                num("speedup"),
+                got_bits,
+                r.best_speedup
+            ));
+        }
+        let got_trace = r.best_schedule.trace.running_hash().to_string();
+        if field("trace_hash") != got_trace {
+            drift.push(format!(
+                "{}: incumbent trace hash drifted (golden {}, got {got_trace})",
+                sp.workload,
+                field("trace_hash")
+            ));
+        }
+        let got_fp = r.best_schedule.fingerprint().to_string();
+        if field("fingerprint") != got_fp {
+            drift.push(format!(
+                "{}: incumbent fingerprint drifted (golden {}, got {got_fp})",
+                sp.workload,
+                field("fingerprint")
+            ));
+        }
+        if num("n_samples") != r.n_samples as f64 {
+            drift.push(format!(
+                "{}: sample count drifted (golden {}, got {})",
+                sp.workload,
+                num("n_samples"),
+                r.n_samples
+            ));
+        }
+    }
+    assert!(
+        drift.is_empty(),
+        "RNG-stream / determinism drift against {GOLDEN_PATH}:\n  {}\n\
+         If this change is intentional, delete the golden file (or bump \
+         GOLDEN_VERSION), rerun `cargo test --test golden_search`, and \
+         commit the regenerated goldens with the change that caused it.",
+        drift.join("\n  ")
+    );
+}

@@ -347,6 +347,36 @@ fn driver_search_threads_knob_is_transparent_and_deterministic() {
 }
 
 #[test]
+fn scenario_names_are_first_class_run_specs() {
+    // a scenario-grammar workload flows through RunSpec → coordinator →
+    // driver exactly like a registry name, deterministically
+    let searcher = Searcher::Coop {
+        n: 2,
+        largest: "gpt-5.2".into(),
+    };
+    let spec = RunSpec::new(
+        "moe@d_ff=64,d_model=32,experts=4,tokens=64,top_k=2",
+        Target::Cpu,
+        searcher,
+        40,
+        5,
+    );
+    let a = coordinator::run_one(&spec);
+    let b = coordinator::run_one(&spec);
+    assert_eq!(a.workload, spec.workload);
+    assert_eq!(a.best_speedup, b.best_speedup);
+    assert_eq!(a.curve, b.curve);
+    assert!(a.best_speedup >= 1.0);
+    assert!(a.best_schedule.validate().is_ok());
+    // and the scenario point actually differs from the family default
+    let default = workloads::by_name("moe").unwrap();
+    assert_ne!(
+        default.flops(),
+        workloads::by_name(&spec.workload).unwrap().flops()
+    );
+}
+
+#[test]
 fn lambda_extremes_change_routing() {
     // λ=1 must route more to small models than λ=0
     let root = Schedule::initial(Arc::new(workloads::gemm::gemm(512, 512, 512)));

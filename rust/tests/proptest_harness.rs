@@ -15,6 +15,7 @@ use litecoop::sim::Target;
 use litecoop::util::rng::splitmix64;
 use litecoop::util::Rng;
 use litecoop::workloads;
+use litecoop::workloads::scenarios::{Family, ScenarioSpec};
 use std::sync::Arc;
 
 /// Run `cases` random cases of `prop`; case seeds come from a splitmix64
@@ -308,6 +309,157 @@ fn prop_shared_cache_is_observationally_equal_to_serial_cache() {
                 serial.len(),
                 drained.len()
             ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- scenarios
+
+/// A random scenario point: random family, each key set with some
+/// probability from constraint-respecting value pools (so every
+/// generated spec is *expected* to lower — lowering failures are
+/// property violations, not generator noise).
+fn random_scenario(rng: &mut Rng) -> ScenarioSpec {
+    let family = *rng.choice(&Family::ALL);
+    let mut spec = ScenarioSpec::new(family);
+    let dims = [1i64, 2, 3, 4, 8, 16, 24, 32, 48, 64, 96, 128, 256, 512];
+    let dtypes = ["f32", "bf16", "f16", "i32"];
+    let mut put = |spec: &mut ScenarioSpec, key: &str, val: String| {
+        spec.set(key, &val).unwrap_or_else(|e| panic!("generator produced invalid {key}: {e}"))
+    };
+    let mut maybe_int = |spec: &mut ScenarioSpec, rng: &mut Rng, key: &str| {
+        if rng.chance(0.7) {
+            let v = *rng.choice(&dims);
+            spec.set(key, &v.to_string()).unwrap();
+        }
+    };
+    match family {
+        Family::Gemm => {
+            for key in ["m", "n", "k", "batch"] {
+                maybe_int(&mut spec, rng, key);
+            }
+        }
+        Family::Attention | Family::LlamaE2e => {
+            let causal = rng.chance(0.5);
+            put(&mut spec, "causal", causal.to_string());
+            if rng.chance(0.7) {
+                // causal needs seq >= 2
+                let seqs = [2i64, 3, 4, 16, 64, 128, 256, 512];
+                put(&mut spec, "seq", rng.choice(&seqs).to_string());
+            }
+            maybe_int(&mut spec, rng, "heads");
+            maybe_int(&mut spec, rng, "head_dim");
+            if family == Family::LlamaE2e {
+                maybe_int(&mut spec, rng, "d_ff");
+            }
+        }
+        Family::Conv => {
+            // kernel must fit the input: h,w >= 8, kh,kw <= 7
+            let hw = [8i64, 16, 32, 64, 96];
+            let ks = [1i64, 2, 3, 5, 7];
+            put(&mut spec, "h", rng.choice(&hw).to_string());
+            put(&mut spec, "w", rng.choice(&hw).to_string());
+            put(&mut spec, "kh", rng.choice(&ks).to_string());
+            put(&mut spec, "kw", rng.choice(&ks).to_string());
+            maybe_int(&mut spec, rng, "c_in");
+            maybe_int(&mut spec, rng, "c_out");
+        }
+        Family::Mlp => {
+            for key in ["tokens", "d_model", "d_ff"] {
+                maybe_int(&mut spec, rng, key);
+            }
+        }
+        Family::Moe => {
+            for key in ["tokens", "d_model", "d_ff"] {
+                maybe_int(&mut spec, rng, key);
+            }
+            // top_k <= experts
+            let experts = 1 + rng.below(8) as i64;
+            put(&mut spec, "experts", experts.to_string());
+            put(&mut spec, "top_k", (1 + rng.below(experts as usize) as i64).to_string());
+        }
+    }
+    if rng.chance(0.5) {
+        put(&mut spec, "dtype", rng.choice(&dtypes).to_string());
+    }
+    spec
+}
+
+#[test]
+fn prop_scenarios_lower_well_formed_and_names_roundtrip() {
+    // every generated ScenarioSpec (a) lowers to a well-formed workload
+    // (validated, non-empty blocks, in-bounds buffer refs, stable
+    // fingerprint) and (b) round-trips through its canonical name:
+    // parse(name) reproduces the spec, and by_name(name) reproduces the
+    // lowered workload.
+    check("scenario-lower-roundtrip", 200, 0x5CE_A210, |rng| {
+        let spec = random_scenario(rng);
+        let name = spec.name();
+        let w = spec
+            .lower()
+            .map_err(|e| format!("{name}: failed to lower: {e}"))?;
+        if w.blocks.is_empty() {
+            return Err(format!("{name}: no blocks"));
+        }
+        w.validate().map_err(|e| format!("{name}: invalid: {e}"))?;
+        for blk in &w.blocks {
+            for acc in blk.reads.iter().chain(blk.writes.iter()) {
+                if acc.buffer >= w.buffers.len() {
+                    return Err(format!("{name}: buffer ref {} oob", acc.buffer));
+                }
+            }
+        }
+        if w.name != name {
+            return Err(format!("{name}: lowered name {:?} differs", w.name));
+        }
+        // canonical-name fixed point and spec round-trip
+        let reparsed =
+            ScenarioSpec::parse(&name).map_err(|e| format!("{name}: reparse failed: {e}"))?;
+        if reparsed != spec || reparsed.name() != name {
+            return Err(format!("{name}: parse∘name is not a fixed point"));
+        }
+        // lowering is deterministic: same flops, same structure, same
+        // initial-schedule fingerprint, twice in a row and via by_name
+        let again = spec.lower().map_err(|e| format!("{name}: relower: {e}"))?;
+        let by_name = workloads::by_name(&name)
+            .ok_or_else(|| format!("{name}: by_name failed to resolve"))?;
+        for (tag, other) in [("relower", &again), ("by_name", &by_name)] {
+            if other.flops() != w.flops() || other.blocks.len() != w.blocks.len() {
+                return Err(format!("{name}: {tag} structure drifted"));
+            }
+            let fp_a = Schedule::initial(Arc::new(w.clone())).fingerprint();
+            let fp_b = Schedule::initial(Arc::new(other.clone())).fingerprint();
+            if fp_a != fp_b {
+                return Err(format!("{name}: {tag} fingerprint unstable"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scenario_workloads_survive_transform_storms() {
+    // scenario-lowered workloads are first-class search substrates: any
+    // transform sequence keeps them valid with positive finite latency
+    // (the same contract the hand-built benchmarks satisfy).
+    check("scenario-transform-storm", 200, 0x5CE_A211, |rng| {
+        let spec = random_scenario(rng);
+        let w = spec.lower().map_err(|e| format!("lower: {e}"))?;
+        let gpu = rng.chance(0.5);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        let base = Schedule::initial(Arc::new(w));
+        let s = random_schedule(&base, 12, gpu, rng);
+        s.validate().map_err(|e| format!("{}: invalid after storm: {e}", spec.name()))?;
+        let lat = litecoop::sim::Simulator::new(target).latency(&s);
+        if !(lat.is_finite() && lat > 0.0) {
+            return Err(format!("{}: bad latency {lat}", spec.name()));
+        }
+        // trace keys stay usable (cache substrate for sweeps)
+        let k1 = trace_key(&s, target);
+        let k2 = trace_key(&s.clone(), target);
+        if k1 != k2 {
+            return Err(format!("{}: unstable trace key", spec.name()));
         }
         Ok(())
     });
