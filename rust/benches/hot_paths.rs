@@ -1,8 +1,11 @@
 //! Hot-path microbenchmarks (§Perf): MCTS iteration components, GBT
-//! inference, simulator eval, featurization, schedule apply, prompt
+//! inference (scalar vs SoA-batched), simulator eval (full recompute vs
+//! incremental block-memo), featurization, schedule apply, prompt
 //! render, and the allocation-light search-loop primitives (O(1) trace
 //! keys, copy-on-write schedule apply/clone, iteration throughput at
-//! depth). Run with `cargo bench --bench hot_paths`.
+//! depth — `mcts_iteration_at_depth14` and `search_cold_80samples` are
+//! re-reported every run so the incremental-evaluation win shows up in
+//! the end-to-end numbers too). Run with `cargo bench --bench hot_paths`.
 //!
 //! Besides the human-readable `bench ...` lines, this target writes every
 //! summary to `BENCH_hotpaths.json` (machine-readable, stable layout) so
@@ -84,12 +87,62 @@ fn main() {
         let _ = apply(&deep48, TransformKind::Unroll, &mut rng, false);
     }));
 
+    // the simulator itself (full recompute — `latency_full` bypasses the
+    // block memo so these keep measuring per-block model cost, not cache
+    // lookups)
     all.push(bench_fn("sim_latency_cpu_attention", budget, || {
-        std::hint::black_box(sim_cpu.latency(&sched));
+        std::hint::black_box(sim_cpu.latency_full(&sched));
     }));
     all.push(bench_fn("sim_latency_gpu_attention", budget, || {
-        std::hint::black_box(sim_gpu.latency(&sched));
+        std::hint::black_box(sim_gpu.latency_full(&sched));
     }));
+
+    // ---- incremental block-level evaluation --------------------------------
+    // llama_e2e (the fused decoder layer — the block-count-heavy scenario)
+    // at trace depth ≥ 32: `sim_latency_full_*` recomputes every block per
+    // call; `sim_latency_incremental_*` serves unchanged blocks from the
+    // warmed thread-local memo (the steady state of the search hot loop,
+    // where each candidate shares all-but-one block with an evaluated
+    // ancestor). The printed speedup is the headline incremental-eval win.
+    {
+        let wl = Arc::new(
+            workloads::by_name("llama_e2e").expect("llama_e2e scenario family resolves"),
+        );
+        let deep_e2e = {
+            let mut rng = Rng::new(7);
+            let vocab = TransformKind::vocabulary(false);
+            let mut s = Schedule::initial(wl.clone());
+            let mut applied = 0;
+            while applied < 32 {
+                if let Ok(next) = apply(&s, *rng.choice(&vocab), &mut rng, false) {
+                    s = next;
+                    applied += 1;
+                }
+            }
+            s
+        };
+        assert!(deep_e2e.trace.len() >= 32, "bench needs trace depth >= 32");
+        let full = bench_fn("sim_latency_full_llama_e2e_depth32", budget, || {
+            std::hint::black_box(sim_cpu.latency_full(&deep_e2e));
+        });
+        litecoop::sim::blockcache::clear_thread();
+        sim_cpu.latency(&deep_e2e); // warm the memo
+        let incr = bench_fn("sim_latency_incremental_llama_e2e_depth32", budget, || {
+            std::hint::black_box(sim_cpu.latency(&deep_e2e));
+        });
+        assert_eq!(
+            sim_cpu.latency(&deep_e2e).to_bits(),
+            sim_cpu.latency_full(&deep_e2e).to_bits(),
+            "incremental evaluation must stay bit-identical"
+        );
+        println!(
+            "bench {:<44} speedup vs full recompute {:.2}x",
+            "sim_latency_full_vs_incremental",
+            full.mean_ns / incr.mean_ns
+        );
+        all.push(full);
+        all.push(incr);
+    }
 
     all.push(bench_fn("featurize_attention", budget, || {
         std::hint::black_box(features::featurize(&sched, Target::Cpu));
@@ -110,6 +163,40 @@ fn main() {
     all.push(bench_fn("costmodel_predict", budget, || {
         std::hint::black_box(cm.predict_latency(&sched));
     }));
+
+    // SoA-flattened GBT: scalar predict per row vs one batched pass over
+    // a candidate-lane-sized batch (trees outer, node arrays cache-hot)
+    {
+        use litecoop::costmodel::gbt::{Gbt, GbtParams};
+        let mut gr = Rng::new(13);
+        let rows: Vec<Vec<f64>> = (0..256usize)
+            .map(|i| {
+                features::featurize(&transformed(&base, 2 + (i % 6), 100 + i as u64), Target::Cpu)
+            })
+            .collect();
+        let ys: Vec<f64> = rows
+            .iter()
+            .map(|r| r.iter().sum::<f64>().sin())
+            .collect();
+        let gbt = Gbt::fit(GbtParams::default(), &rows, &ys, &mut gr);
+        let scalar = bench_fn("gbt_predict_scalar_256rows", budget, || {
+            let mut acc = 0.0;
+            for r in &rows {
+                acc += gbt.predict(r);
+            }
+            std::hint::black_box(acc);
+        });
+        let batch = bench_fn("gbt_predict_batch_256rows", budget, || {
+            std::hint::black_box(gbt.predict_batch(&rows));
+        });
+        println!(
+            "bench {:<44} speedup vs scalar {:.2}x",
+            "gbt_predict_batch_vs_scalar",
+            scalar.mean_ns / batch.mean_ns
+        );
+        all.push(scalar);
+        all.push(batch);
+    }
 
     // prompt rendering
     let set = ModelSet::new(paper_config(8, "gpt-5.2"));

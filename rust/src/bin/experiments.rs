@@ -20,6 +20,13 @@
 //! reported, and no new ground-truth entries computed — the CI smoke
 //! contract.
 //!
+//! Incremental-evaluation gate:
+//!   experiments blockmemo_smoke [--workload W] [--seed S] [--llms N]
+//!               [--budget N]
+//! runs one fixed-seed search cold and again against the warmed
+//! per-block simulation memo; exits 4 unless the reported speedups are
+//! bit-identical and the warm run was actually memo-served.
+//!
 //! Absolute numbers come from the simulated substrate (DESIGN.md
 //! §Substitutions); the *shape* (who wins, routing fractions, reduction
 //! factors) is the reproduction target. Reports land in reports/<id>.md.
@@ -661,6 +668,87 @@ fn sweep(o: &Opts, args: &Args) {
     }
 }
 
+/// CI gate for the incremental-evaluation contract: run ONE fixed-seed
+/// search twice in-process. The first run starts with a cold per-block
+/// simulation memo ([`litecoop::sim::blockcache`], thread-local — both
+/// searches run on this thread) and fills it; the second run replays the
+/// identical configuration against the warm memo. The reported speedups
+/// must agree **bit for bit** (memoization is observationally
+/// transparent) and the second run must have actually been served by the
+/// memo (strictly fewer block-simulation misses) — otherwise exit 4.
+fn blockmemo_smoke(o: &Opts, args: &Args) {
+    use litecoop::sim::blockcache;
+
+    let workload = args.str_or("workload", "llama_e2e");
+    let seed = args.u64_or("seed", 7);
+    let n_llms = args.usize_or("llms", 2);
+    let spec = RunSpec::new(
+        &workload,
+        Target::Cpu,
+        coop(n_llms, &o.largest),
+        o.budget,
+        seed,
+    );
+
+    blockcache::clear_thread();
+    let cold = coordinator::run_one(&spec);
+    let cold_stats = blockcache::thread_stats();
+    blockcache::reset_thread_stats(); // zero counters, keep entries warm
+    let warm = coordinator::run_one(&spec);
+    let warm_stats = blockcache::thread_stats();
+
+    println!(
+        "blockmemo-smoke: {workload} seed {seed} budget {} ({} LLMs)",
+        o.budget, n_llms
+    );
+    println!(
+        "  cold run: speedup {:.4} (bits {:#018x}), block memo {} hits / {} misses",
+        cold.best_speedup,
+        cold.best_speedup.to_bits(),
+        cold_stats.hits,
+        cold_stats.misses
+    );
+    println!(
+        "  warm run: speedup {:.4} (bits {:#018x}), block memo {} hits / {} misses",
+        warm.best_speedup,
+        warm.best_speedup.to_bits(),
+        warm_stats.hits,
+        warm_stats.misses
+    );
+
+    let mut failures = Vec::new();
+    if cold.best_speedup.to_bits() != warm.best_speedup.to_bits() {
+        failures.push(format!(
+            "speedup bits diverged: cold {:#018x} vs warm {:#018x} — the block memo \
+             is NOT observationally transparent",
+            cold.best_speedup.to_bits(),
+            warm.best_speedup.to_bits()
+        ));
+    }
+    if cold.curve != warm.curve {
+        failures.push("speedup curves diverged between cold and warm runs".into());
+    }
+    if warm_stats.misses >= cold_stats.misses {
+        failures.push(format!(
+            "warm run was not served by the memo ({} misses vs cold {}) — the smoke \
+             gate lost its signal",
+            warm_stats.misses, cold_stats.misses
+        ));
+    }
+    if failures.is_empty() {
+        println!(
+            "  OK: bit-identical speedup; warm run skipped {} of {} block simulations",
+            cold_stats.misses - warm_stats.misses,
+            cold_stats.misses
+        );
+    } else {
+        for f in &failures {
+            eprintln!("blockmemo-smoke: {f}");
+        }
+        std::process::exit(4);
+    }
+}
+
 fn main() {
     let args = Args::parse();
     let quick = args.has("quick");
@@ -692,6 +780,7 @@ fn main() {
         "call_counts" => call_counts(&o),
         "sample_efficiency" => table3(&o), // Table 16 is emitted with Table 3
         "sweep" => sweep(&o, &args),
+        "blockmemo_smoke" => blockmemo_smoke(&o, &args),
         "all" => {
             fig_speedup_curves(&o, "fig2");
             table1(&o);

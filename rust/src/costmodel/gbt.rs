@@ -4,10 +4,25 @@
 //! Squared-error boosting with exact greedy splits on quantile-candidate
 //! thresholds, depth-limited trees, shrinkage, and row subsampling. Sized
 //! for cost-model workloads: hundreds-to-thousands of rows, ~26 features.
+//!
+//! # Inference storage: SoA-flattened forest
+//!
+//! Training builds ordinary per-tree node vectors, but the fitted
+//! [`Gbt`] stores the whole forest as four contiguous parallel arrays
+//! (`feature` / `threshold` / `left` / `right`, one slot per node across
+//! all trees, plus per-tree root offsets). A node visit during
+//! prediction touches two `u32`s and one `f64` in arrays that stay
+//! resident in cache across rows, instead of chasing 24-byte enum nodes
+//! tree by tree — and [`Gbt::predict_batch`] walks trees in the outer
+//! loop so one tree's nodes are reused across the whole candidate batch.
+//! Flattening is a pure storage transform: the traversal visits the same
+//! nodes and sums tree outputs in the same order, so predictions are
+//! bit-identical to the per-tree representation (asserted in tests).
 
 use crate::util::Rng;
 
-/// One node of a regression tree (flattened storage).
+/// One node of a regression tree during **training** (per-tree vector
+/// storage; flattened into the SoA arrays once the forest is fitted).
 #[derive(Clone, Debug)]
 enum Node {
     Leaf {
@@ -21,14 +36,14 @@ enum Node {
     },
 }
 
-/// A depth-limited regression tree.
+/// A depth-limited regression tree (training-time representation).
 #[derive(Clone, Debug)]
-pub struct Tree {
+struct Tree {
     nodes: Vec<Node>,
 }
 
 impl Tree {
-    pub fn predict(&self, x: &[f64]) -> f64 {
+    fn predict(&self, x: &[f64]) -> f64 {
         let mut i = 0;
         loop {
             match &self.nodes[i] {
@@ -45,6 +60,10 @@ impl Tree {
         }
     }
 }
+
+/// Sentinel in [`Gbt::feature`] marking a leaf node (its value lives in
+/// the `threshold` slot).
+const LEAF: u32 = u32::MAX;
 
 /// Training hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -74,12 +93,22 @@ impl Default for GbtParams {
     }
 }
 
-/// The boosted ensemble.
+/// The boosted ensemble, stored SoA-flattened for inference (see the
+/// module docs).
 #[derive(Clone, Debug)]
 pub struct Gbt {
     pub params: GbtParams,
     base: f64,
-    trees: Vec<Tree>,
+    /// Index of each tree's root node in the flat arrays.
+    roots: Vec<u32>,
+    /// Split feature per node; [`LEAF`] marks a leaf.
+    feature: Vec<u32>,
+    /// Split threshold per node — or the leaf's value when
+    /// `feature[i] == LEAF`.
+    threshold: Vec<f64>,
+    /// Left / right child indices (valid only for split nodes).
+    left: Vec<u32>,
+    right: Vec<u32>,
 }
 
 impl Gbt {
@@ -108,30 +137,108 @@ impl Gbt {
             }
             trees.push(tree);
         }
-        Gbt { params, base, trees }
+        Gbt::flatten(params, base, &trees)
+    }
+
+    /// Flatten per-tree node vectors into the contiguous SoA arrays.
+    /// Node order and child links are preserved verbatim (per-tree index
+    /// + tree offset), so traversal visits exactly the nodes the tree
+    /// representation would.
+    fn flatten(params: GbtParams, base: f64, trees: &[Tree]) -> Gbt {
+        let total: usize = trees.iter().map(|t| t.nodes.len()).sum();
+        let mut g = Gbt {
+            params,
+            base,
+            roots: Vec::with_capacity(trees.len()),
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+        };
+        for t in trees {
+            let off = g.feature.len() as u32;
+            g.roots.push(off);
+            for node in &t.nodes {
+                match node {
+                    Node::Leaf { value } => {
+                        g.feature.push(LEAF);
+                        g.threshold.push(*value);
+                        g.left.push(0);
+                        g.right.push(0);
+                    }
+                    Node::Split {
+                        feature,
+                        threshold,
+                        left,
+                        right,
+                    } => {
+                        g.feature.push(*feature as u32);
+                        g.threshold.push(*threshold);
+                        g.left.push(off + *left as u32);
+                        g.right.push(off + *right as u32);
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Walk one tree (by root index) for one row.
+    #[inline]
+    fn walk(&self, root: u32, x: &[f64]) -> f64 {
+        let mut i = root as usize;
+        loop {
+            let f = self.feature[i];
+            let thr = self.threshold[i];
+            if f == LEAF {
+                return thr;
+            }
+            // NaN features take the right branch (NaN <= thr is false),
+            // matching the tree representation's comparison exactly
+            i = if x[f as usize] <= thr {
+                self.left[i] as usize
+            } else {
+                self.right[i] as usize
+            };
+        }
     }
 
     pub fn predict(&self, x: &[f64]) -> f64 {
         self.base
             + self
-                .trees
+                .roots
                 .iter()
-                .map(|t| t.predict(x))
+                .map(|&r| self.walk(r, x))
                 .sum::<f64>()
                 * self.params.learning_rate
     }
 
+    /// Batched prediction over many rows — bit-identical to mapping
+    /// [`Gbt::predict`] (each row accumulates tree outputs in the same
+    /// tree order), but iterates **trees in the outer loop** so one
+    /// tree's SoA node block stays cache-resident across the whole batch.
+    /// This is the entry point the candidate-scoring path uses
+    /// (`Evaluator::score_batch`).
     pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        xs.iter().map(|x| self.predict(x)).collect()
+        let mut acc = vec![0.0f64; xs.len()];
+        for &r in &self.roots {
+            for (a, x) in acc.iter_mut().zip(xs) {
+                *a += self.walk(r, x);
+            }
+        }
+        acc.into_iter()
+            .map(|a| self.base + a * self.params.learning_rate)
+            .collect()
     }
 
-    /// Training-set RMSE (diagnostic).
+    /// Training-set RMSE (diagnostic), via the batched path.
     pub fn rmse(&self, x: &[Vec<f64>], y: &[f64]) -> f64 {
-        let se: f64 = x
+        let se: f64 = self
+            .predict_batch(x)
             .iter()
             .zip(y)
-            .map(|(xi, yi)| {
-                let d = self.predict(xi) - yi;
+            .map(|(p, yi)| {
+                let d = p - yi;
                 d * d
             })
             .sum();
@@ -285,6 +392,47 @@ mod tests {
         let m1 = Gbt::fit(GbtParams::default(), &x, &y, &mut Rng::new(5));
         let m2 = Gbt::fit(GbtParams::default(), &x, &y, &mut Rng::new(5));
         assert_eq!(m1.predict(&x[0]), m2.predict(&x[0]));
+    }
+
+    #[test]
+    fn predict_batch_bit_identical_to_scalar_predict() {
+        // the SoA batched walk must be a pure storage/loop-order change:
+        // per-row accumulation happens in the same tree order, so every
+        // prediction matches the scalar path bit for bit
+        let mut rng = Rng::new(9);
+        let (x, y) = synth(400, &mut rng);
+        let model = Gbt::fit(GbtParams::default(), &x, &y, &mut rng);
+        let (xt, _) = synth(64, &mut rng);
+        let batch = model.predict_batch(&xt);
+        assert_eq!(batch.len(), xt.len());
+        for (row, b) in xt.iter().zip(&batch) {
+            assert_eq!(
+                model.predict(row).to_bits(),
+                b.to_bits(),
+                "batch diverged from scalar on {row:?}"
+            );
+        }
+        // empty batch is fine
+        assert!(model.predict_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn flattened_forest_has_consistent_layout() {
+        let mut rng = Rng::new(10);
+        let (x, y) = synth(200, &mut rng);
+        let model = Gbt::fit(GbtParams::default(), &x, &y, &mut rng);
+        assert_eq!(model.roots.len(), model.params.n_trees);
+        let n = model.feature.len();
+        assert_eq!(model.threshold.len(), n);
+        assert_eq!(model.left.len(), n);
+        assert_eq!(model.right.len(), n);
+        for i in 0..n {
+            if model.feature[i] != LEAF {
+                assert!((model.feature[i] as usize) < x[0].len());
+                assert!((model.left[i] as usize) < n);
+                assert!((model.right[i] as usize) < n);
+            }
+        }
     }
 
     #[test]

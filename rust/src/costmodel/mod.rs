@@ -114,6 +114,26 @@ impl CostModel {
         }
     }
 
+    /// Batched [`CostModel::predict_latency`]: featurizes every schedule,
+    /// runs one SoA [`Gbt::predict_batch`] pass over the rows, and
+    /// exponentiates per row — bit-identical to mapping the scalar path
+    /// (same featurization, same per-row tree-order accumulation, same
+    /// `exp`). Used by `Evaluator::score_batch` on the candidate-scoring
+    /// path, where a parallel round scores a whole lane of proposals at
+    /// once.
+    pub fn predict_latency_batch(&self, ss: &[&Schedule]) -> Vec<f64> {
+        match &self.model {
+            Some(m) => {
+                let rows: Vec<Vec<f64>> = ss
+                    .iter()
+                    .map(|s| features::featurize(s, self.target))
+                    .collect();
+                m.predict_batch(&rows).into_iter().map(f64::exp).collect()
+            }
+            None => ss.iter().map(|s| self.predict_latency(s)).collect(),
+        }
+    }
+
     /// Retraining generation, used to key cached predictions: `Some(n)`
     /// once a model is fitted (predictions are pure until the next
     /// retrain), `None` before the first fit (predictions track the latest
@@ -222,6 +242,27 @@ mod tests {
             let sc = cm.score(&s);
             assert!((0.0..=1.0).contains(&sc), "{sc}");
         }
+    }
+
+    #[test]
+    fn predict_latency_batch_matches_scalar_bitwise() {
+        let sim = Simulator::new(Target::Cpu);
+        let mut cm = CostModel::new(Target::Cpu, 11);
+        // pre-fit: both paths fall back to the latest-observation prior
+        let variants = random_variants(24, 6);
+        let refs: Vec<&Schedule> = variants.iter().collect();
+        for (s, b) in refs.iter().zip(cm.predict_latency_batch(&refs)) {
+            assert_eq!(cm.predict_latency(s).to_bits(), b.to_bits());
+        }
+        // post-fit: the batched SoA walk must agree bit for bit
+        for s in &variants {
+            cm.measure(&sim, s);
+        }
+        assert!(cm.generation().is_some());
+        for (s, b) in refs.iter().zip(cm.predict_latency_batch(&refs)) {
+            assert_eq!(cm.predict_latency(s).to_bits(), b.to_bits());
+        }
+        assert!(cm.predict_latency_batch(&[]).is_empty());
     }
 
     #[test]

@@ -282,14 +282,56 @@ impl EvalCache {
     }
 }
 
+/// The prediction-map face the batched scoring path
+/// (`Evaluator::score_batch`) talks to, implemented by both the serial
+/// [`EvalCache`] and the concurrent [`SharedEvalCache`]. The three
+/// operations decompose [`EvalCache::prediction_or`] so a batch can peek
+/// all keys first (uncounted), run one SoA `predict_batch` over the
+/// misses, and then charge hits/misses **in item order** — keeping the
+/// counters byte-identical to looping `prediction_or` per item.
+pub trait PredStore {
+    /// Uncounted lookup (the batch's planning pass).
+    fn pred_peek(&self, key: PredKey) -> Option<f64>;
+    /// Charge one hit for `key` (the batch's charging pass, for items the
+    /// planning pass — or an earlier item of this batch — found present).
+    fn pred_charge_hit(&mut self, key: PredKey);
+    /// Charge one miss for `key` and insert `v` (skipped when the map is
+    /// at capacity, exactly like [`EvalCache::prediction_or`]'s miss arm).
+    fn pred_charge_miss_insert(&mut self, key: PredKey, v: f64);
+}
+
+impl PredStore for EvalCache {
+    fn pred_peek(&self, key: PredKey) -> Option<f64> {
+        self.pred.get(&key).copied()
+    }
+    fn pred_charge_hit(&mut self, _key: PredKey) {
+        self.stats.hits += 1;
+    }
+    fn pred_charge_miss_insert(&mut self, key: PredKey, v: f64) {
+        self.stats.misses += 1;
+        if self.pred.len() < self.max_entries {
+            self.pred.insert(key, v);
+        }
+    }
+}
+
 // ------------------------------------------------------------------------
 // Persistence (warm start across processes)
 // ------------------------------------------------------------------------
 
+/// Cache-file format version. Bump whenever the [`trace_key`] formula
+/// changes (v1 → v2: the schedule fingerprint became a fold of per-block
+/// fingerprints when block-level memoization landed), so a file of keys
+/// computed under an old formula is rejected (and
+/// [`EvalCache::load_file_or_cold`] degrades to a cold start) instead of
+/// sitting in the map as unreachable-at-best entries.
+pub const CACHE_FORMAT_VERSION: f64 = 2.0;
+
 impl EvalCache {
     /// Serialize for cross-process warm start: the ground-truth latency
     /// map (keys as decimal strings — u64 keys don't survive JSON's f64
-    /// numbers) plus the configured entry bound, under a format version.
+    /// numbers) plus the configured entry bound, under a format version
+    /// ([`CACHE_FORMAT_VERSION`], tied to the [`trace_key`] formula).
     /// Prediction entries are deliberately omitted (the nonce invariant,
     /// see the type docs) and counters are not persisted (stats are
     /// per-search, zeroed on load). Latency values round-trip exactly:
@@ -304,7 +346,7 @@ impl EvalCache {
             }
         }
         let mut root = Json::obj();
-        root.set("version", 1.0.into())
+        root.set("version", CACHE_FORMAT_VERSION.into())
             .set("max_entries", self.max_entries.to_string().into())
             .set("lat", lat);
         root
@@ -321,7 +363,7 @@ impl EvalCache {
             .get("version")
             .and_then(Json::as_f64)
             .ok_or("cache file: missing version")?;
-        if version != 1.0 {
+        if version != CACHE_FORMAT_VERSION {
             return Err(format!("cache file: unsupported version {version}"));
         }
         let max_entries: usize = j
@@ -414,6 +456,16 @@ pub trait Evaluator {
     /// caching.
     fn score(&mut self, s: &Schedule) -> f64;
 
+    /// Batched [`Evaluator::score`]: scores, values served, and cache
+    /// counters must all be exactly what calling `score` per item in
+    /// order would produce. The default does exactly that; the production
+    /// evaluators override it to run cache misses through one SoA
+    /// [`CostModel::predict_latency_batch`] pass (the candidate-scoring
+    /// hot path of a parallel round).
+    fn score_batch(&mut self, ss: &[&Schedule]) -> Vec<f64> {
+        ss.iter().map(|s| self.score(s)).collect()
+    }
+
     /// Best (lowest) measured latency seen so far.
     fn best_latency(&self) -> f64;
 
@@ -427,6 +479,18 @@ pub trait Evaluator {
 
 /// Production [`Evaluator`]: learned cost model + hardware simulator,
 /// fronted by an [`EvalCache`].
+///
+/// Evaluation is cached at **two layers**: this transposition cache
+/// dedups whole programs (same trace key ⇒ same latency, simulator never
+/// consulted), and beneath it every simulator invocation —
+/// [`Simulator::latency`] on a transposition miss — is itself
+/// incremental, serving unchanged blocks from the thread-local per-block
+/// memo ([`crate::sim::blockcache`]). So a transposition miss on a
+/// program that shares all-but-one block with anything previously
+/// evaluated on this thread still costs only one block simulation. The
+/// block memo is per-thread (each driver lane / tree-parallel worker
+/// warms its own) and bit-transparent, so it composes with every
+/// determinism contract this module documents.
 pub struct CachedEvaluator {
     pub cost: CostModel,
     pub sim: Simulator,
@@ -485,6 +549,21 @@ impl Evaluator for CachedEvaluator {
             None => self.cost.predict_latency(s),
         };
         self.cost.score_of_prediction(pred)
+    }
+
+    fn score_batch(&mut self, ss: &[&Schedule]) -> Vec<f64> {
+        let preds = match self.cost.generation() {
+            Some(gen) => {
+                batched_predictions(&self.cost, gen, self.sim.target, &mut self.cache, ss)
+            }
+            // pre-fit predictions aren't pure and aren't cached — same
+            // fallback as the scalar path, item by item
+            None => self.cost.predict_latency_batch(ss),
+        };
+        preds
+            .into_iter()
+            .map(|p| self.cost.score_of_prediction(p))
+            .collect()
     }
 
     fn best_latency(&self) -> f64 {
@@ -732,6 +811,81 @@ impl SharedEvalCache {
     }
 }
 
+/// [`PredStore`] over a borrowed shared cache (the batched scoring path
+/// runs on the tree-parallel coordinator thread). Charging a miss is
+/// defensive against a concurrent insert: under the shard write lock a
+/// key that turned up in the meantime is charged as a hit instead —
+/// values are pure functions of their keys, so either outcome returns the
+/// same number and the exactly-once compute accounting holds.
+impl PredStore for &SharedEvalCache {
+    fn pred_peek(&self, key: PredKey) -> Option<f64> {
+        self.shard(key.0).cache.read().unwrap().pred.get(&key).copied()
+    }
+    fn pred_charge_hit(&mut self, key: PredKey) {
+        self.shard(key.0).hits.fetch_add(1, Ordering::Relaxed);
+    }
+    fn pred_charge_miss_insert(&mut self, key: PredKey, v: f64) {
+        let sh = self.shard(key.0);
+        let mut w = sh.cache.write().unwrap();
+        if w.pred.contains_key(&key) {
+            sh.hits.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if w.pred.len() < w.max_entries {
+            w.pred.insert(key, v);
+        }
+        sh.misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Batched prediction scoring shared by both evaluators' `score_batch`:
+/// peek every key (uncounted), run **one** SoA
+/// [`CostModel::predict_latency_batch`] over the first occurrence of each
+/// missing key, then walk the items in order charging hits/misses — so
+/// values *and* counters are exactly what looping `Evaluator::score` per
+/// item would have produced, while the cost-model inference runs as one
+/// contiguous batch.
+fn batched_predictions<P: PredStore>(
+    cost: &CostModel,
+    generation: usize,
+    target: Target,
+    store: &mut P,
+    ss: &[&Schedule],
+) -> Vec<f64> {
+    let keys: Vec<PredKey> = ss
+        .iter()
+        .map(|s| (trace_key(s, target), cost.salt, generation))
+        .collect();
+    // plan: first occurrence of every key absent from the store
+    let mut fresh_keys: Vec<PredKey> = Vec::new();
+    let mut fresh_rows: Vec<&Schedule> = Vec::new();
+    let mut seen: std::collections::HashSet<PredKey> = std::collections::HashSet::new();
+    for (&k, &s) in keys.iter().zip(ss) {
+        if store.pred_peek(k).is_none() && seen.insert(k) {
+            fresh_keys.push(k);
+            fresh_rows.push(s);
+        }
+    }
+    // one batched SoA inference pass over the misses
+    let fresh_vals = cost.predict_latency_batch(&fresh_rows);
+    let fresh: HashMap<PredKey, f64> = fresh_keys.into_iter().zip(fresh_vals).collect();
+    // charge in item order: first occurrence of a fresh key is the miss,
+    // later occurrences (now inserted) and pre-existing keys are hits —
+    // the same ledger as the sequential loop
+    keys.into_iter()
+        .map(|k| {
+            if let Some(v) = store.pred_peek(k) {
+                store.pred_charge_hit(k);
+                v
+            } else {
+                let v = fresh[&k];
+                store.pred_charge_miss_insert(k, v);
+                v
+            }
+        })
+        .collect()
+}
+
 /// [`Evaluator`] over a **borrowed** [`SharedEvalCache`]: the cost model
 /// and simulator are owned (per search), the transposition cache is the
 /// shared concurrent view. This is what the tree-parallel engine
@@ -771,6 +925,20 @@ impl Evaluator for SharedCachedEvaluator<'_> {
             None => self.cost.predict_latency(s),
         };
         self.cost.score_of_prediction(pred)
+    }
+
+    fn score_batch(&mut self, ss: &[&Schedule]) -> Vec<f64> {
+        let preds = match self.cost.generation() {
+            Some(gen) => {
+                let mut store = self.cache;
+                batched_predictions(&self.cost, gen, self.sim.target, &mut store, ss)
+            }
+            None => self.cost.predict_latency_batch(ss),
+        };
+        preds
+            .into_iter()
+            .map(|p| self.cost.score_of_prediction(p))
+            .collect()
     }
 
     fn best_latency(&self) -> f64 {
@@ -1067,16 +1235,25 @@ mod tests {
         for bad in [
             "null",
             "{}",
-            r#"{"version": 2, "max_entries": "4", "lat": {}}"#,
-            r#"{"version": 1, "lat": {}}"#,
-            r#"{"version": 1, "max_entries": "x", "lat": {}}"#,
-            r#"{"version": 1, "max_entries": "4"}"#,
-            r#"{"version": 1, "max_entries": "4", "lat": {"abc": 1.0}}"#,
-            r#"{"version": 1, "max_entries": "4", "lat": {"1": "nope"}}"#,
+            // v1 files carry keys from the pre-block-fingerprint trace_key
+            // formula and must be rejected, not absorbed
+            r#"{"version": 1, "max_entries": "4", "lat": {}}"#,
+            r#"{"version": 3, "max_entries": "4", "lat": {}}"#,
+            r#"{"version": 2, "lat": {}}"#,
+            r#"{"version": 2, "max_entries": "x", "lat": {}}"#,
+            r#"{"version": 2, "max_entries": "4"}"#,
+            r#"{"version": 2, "max_entries": "4", "lat": {"abc": 1.0}}"#,
+            r#"{"version": 2, "max_entries": "4", "lat": {"1": "nope"}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(EvalCache::from_json(&j).is_err(), "accepted {bad}");
         }
+        // the current version with a well-formed body parses
+        let ok = r#"{"version": 2, "max_entries": "4", "lat": {"1": 0.5}}"#;
+        assert_eq!(
+            EvalCache::from_json(&Json::parse(ok).unwrap()).unwrap().len(),
+            1
+        );
     }
 
     #[test]
@@ -1117,6 +1294,92 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         // missing file is a silent cold start
         assert!(EvalCache::load_file_or_cold(&path).is_empty());
+    }
+
+    #[test]
+    fn score_batch_matches_scalar_score_values_and_counters() {
+        // both evaluators, pre-fit and post-fit, duplicates included: the
+        // batched scoring path must reproduce the scalar path's values
+        // AND its hit/miss ledger exactly
+        let mut rng = Rng::new(41);
+        let s0 = base();
+        let s1 = apply(&s0, TransformKind::TileSize, &mut rng, false).unwrap();
+        let s2 = apply(&s1, TransformKind::Vectorize, &mut rng, false).unwrap();
+        let items: Vec<&Schedule> = vec![&s0, &s1, &s1, &s2, &s0];
+
+        let mk_serial = || {
+            CachedEvaluator::new(CostModel::new(Target::Cpu, 91), Simulator::new(Target::Cpu))
+        };
+        let train = |ev: &mut dyn Evaluator| {
+            // enough successful measurements to fit a model (>= 8 rows)
+            let mut r = Rng::new(5);
+            let vocab = TransformKind::vocabulary(false);
+            let mut measured = 0;
+            while measured < 10 {
+                let seq: Vec<_> = (0..2).map(|_| *r.choice(&vocab)).collect();
+                if let Ok(s) = crate::schedule::transforms::apply_sequence(&s0, &seq, &mut r, false)
+                {
+                    ev.measure(&s);
+                    measured += 1;
+                }
+            }
+        };
+
+        // pre-fit parity (uncached fallback path)
+        let mut a = mk_serial();
+        let mut b = mk_serial();
+        let scalar: Vec<f64> = items.iter().map(|s| a.score(s)).collect();
+        let batch = b.score_batch(&items);
+        assert_eq!(scalar, batch);
+        assert_eq!(a.cache_stats(), b.cache_stats());
+
+        // post-fit parity on the serial evaluator (identical twin models:
+        // same seed => same training trajectory modulo salt, so compare
+        // each evaluator against ITS OWN scalar replay instead)
+        let mut ev = mk_serial();
+        train(&mut ev);
+        let before = ev.cache_stats();
+        let batch = ev.score_batch(&items);
+        // replay scalar on a fresh evaluator twin trained identically:
+        // values must match (salt only keys the cache, not the value)
+        let mut twin = mk_serial();
+        train(&mut twin);
+        let twin_before = twin.cache_stats();
+        let scalar: Vec<f64> = items.iter().map(|s| twin.score(s)).collect();
+        assert_eq!(scalar, batch);
+        let delta = |s: CacheStats, b: CacheStats| CacheStats {
+            hits: s.hits - b.hits,
+            misses: s.misses - b.misses,
+        };
+        assert_eq!(
+            delta(ev.cache_stats(), before),
+            delta(twin.cache_stats(), twin_before),
+            "batched ledger must equal the scalar ledger"
+        );
+        // a repeat batch is all hits, same values
+        let mid = ev.cache_stats();
+        assert_eq!(ev.score_batch(&items), batch);
+        let d = delta(ev.cache_stats(), mid);
+        assert_eq!(d.misses, 0);
+        assert_eq!(d.hits, items.len() as u64);
+
+        // shared evaluator: same contract through the sharded store
+        let shared = SharedEvalCache::new(4);
+        let mut conc = SharedCachedEvaluator {
+            cost: CostModel::new(Target::Cpu, 91),
+            sim: Simulator::new(Target::Cpu),
+            cache: &shared,
+        };
+        train(&mut conc);
+        let before = conc.cache_stats();
+        let cb = conc.score_batch(&items);
+        assert_eq!(cb.len(), items.len());
+        let d = delta(conc.cache_stats(), before);
+        // 5 lookups over 3 unique programs: one miss per unique key, the
+        // in-batch duplicate occurrences (s1, s0 again) are hits
+        assert_eq!(d.hits + d.misses, items.len() as u64);
+        assert_eq!(d.misses, 3, "3 unique programs in the batch");
+        assert_eq!(conc.score_batch(&items), cb, "repeat batch identical");
     }
 
     #[test]

@@ -1153,13 +1153,25 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
                 cands,
                 applied,
             } = lane;
+            // batched candidate scoring: one SoA cost-model pass over the
+            // lane's applicable candidates (scores, served values, and
+            // cache counters are exactly what per-candidate `score` calls
+            // in this order would produce — see `Evaluator::score_batch`).
+            // Per lane, not per round: a lane's merge can retrain the cost
+            // model, and later lanes must score against the updated model
+            // exactly as the sequential merge always has.
+            let refs: Vec<&Schedule> = applied.iter().flatten().collect();
+            let model_scores = self.eval.score_batch(&refs);
+            let mut mi = 0usize;
             let mut scored: Vec<(Vec<TransformKind>, f64)> = Vec::with_capacity(cands.len());
-            for (seq, app) in cands.into_iter().zip(applied) {
+            for (seq, app) in cands.into_iter().zip(&applied) {
                 let sc = match app {
-                    Some(s) => {
+                    Some(_) => {
                         let lat = lats[li];
                         li += 1;
-                        blend_scores(self.eval.score(&s), best_lat, lat)
+                        let ms = model_scores[mi];
+                        mi += 1;
+                        blend_scores(ms, best_lat, lat)
                     }
                     None => 0.0,
                 };

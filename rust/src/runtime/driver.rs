@@ -10,7 +10,13 @@
 //!   the OS schedules threads;
 //! * workers pull work by atomic index and write into a per-spec result
 //!   slot, so results come back **in spec order**, byte-identical to the
-//!   serial path.
+//!   serial path;
+//! * the incremental simulator memo ([`crate::sim::blockcache`]) is
+//!   **thread-local** — every driver worker (and every
+//!   [`WorkerPool`] worker inside a tree-parallel search) warms its own,
+//!   and served values are bit-identical to recomputation, so which
+//!   thread a spec lands on can never change its result, only how much
+//!   per-block simulation it skips.
 //!
 //! The experiment harness (`bin/experiments.rs`, via
 //! [`crate::coordinator::run_many`]) and the `collab_search` example fan

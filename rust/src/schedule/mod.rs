@@ -17,6 +17,7 @@ pub mod trace;
 pub mod printer;
 
 use crate::tir::{AxisKind, Workload};
+use crate::util::fnv::{fnv_i64, fnv_u64, FNV_OFFSET};
 use std::sync::{Arc, OnceLock};
 
 /// Annotation on one materialized loop.
@@ -33,7 +34,14 @@ pub enum LoopKind {
 }
 
 /// Per-block schedule state.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Carries a lazily cached structural fingerprint
+/// ([`BlockSched::fingerprint`]) — the per-block half of the schedule
+/// fingerprint and the identity the block-level simulation memo
+/// ([`crate::sim::blockcache`]) keys on. The cache is invalidated by
+/// [`Schedule::block_mut`] (the only sanctioned mutation path for blocks
+/// held by a schedule); equality ignores it.
+#[derive(Clone, Debug)]
 pub struct BlockSched {
     /// Per original axis: tile factors, outermost -> innermost.
     /// Invariant: product == axis extent; len >= 1.
@@ -61,6 +69,28 @@ pub struct BlockSched {
     pub compute_at: Option<usize>,
     /// Reduction init split out of the update loop.
     pub decomposed: bool,
+    /// Lazily cached structural fingerprint over every field above;
+    /// cleared by [`Schedule::block_mut`] before mutation. Cloning copies
+    /// the cache (a clone is structurally identical); equality ignores it.
+    fp: OnceLock<u64>,
+}
+
+/// Structural equality only — the lazily cached fingerprint is derived
+/// state and must never make two structurally equal blocks compare
+/// unequal (one may simply not have been fingerprinted yet).
+impl PartialEq for BlockSched {
+    fn eq(&self, other: &Self) -> bool {
+        self.tiles == other.tiles
+            && self.order == other.order
+            && self.parallel == other.parallel
+            && self.thread_tiles == other.thread_tiles
+            && self.vectorize == other.vectorize
+            && self.unroll == other.unroll
+            && self.cache_write == other.cache_write
+            && self.cache_reads == other.cache_reads
+            && self.compute_at == other.compute_at
+            && self.decomposed == other.decomposed
+    }
 }
 
 impl BlockSched {
@@ -79,7 +109,46 @@ impl BlockSched {
             cache_reads: vec![None; blk.reads.len()],
             compute_at: None,
             decomposed: false,
+            fp: OnceLock::new(),
         }
+    }
+
+    /// Deterministic structural fingerprint of this block's schedule
+    /// state (every field the simulator's per-block model can observe:
+    /// tiles, order, annotation counts, caching flags, fusion depth).
+    /// FNV-1a folded — stable across runs, threads, and processes — and
+    /// computed at most once per instance ([`Schedule::block_mut`] clears
+    /// the cache before handing out mutable access). The schedule-level
+    /// [`Schedule::fingerprint`] is a fold of these, and the block-level
+    /// simulation memo ([`crate::sim::blockcache`]) keys on them.
+    pub fn fingerprint(&self) -> u64 {
+        *self.fp.get_or_init(|| {
+            let mut h = FNV_OFFSET;
+            h = fnv_u64(h, self.tiles.len() as u64);
+            for t in &self.tiles {
+                h = fnv_u64(h, t.len() as u64);
+                for &f in t {
+                    h = fnv_i64(h, f);
+                }
+            }
+            for &(a, l) in &self.order {
+                h = fnv_u64(h, a as u64);
+                h = fnv_u64(h, l as u64);
+            }
+            h = fnv_u64(h, self.parallel as u64);
+            h = fnv_u64(h, self.thread_tiles as u64);
+            h = fnv_u64(h, u64::from(self.vectorize));
+            h = fnv_u64(h, self.unroll as u64);
+            h = fnv_u64(h, u64::from(self.cache_write));
+            h = fnv_u64(h, self.cache_reads.len() as u64);
+            for cr in &self.cache_reads {
+                // Some(d) and None must never collide for any depth d
+                h = fnv_u64(h, cr.map_or(u64::MAX, |d| d as u64));
+            }
+            h = fnv_u64(h, self.compute_at.map_or(u64::MAX, |d| d as u64));
+            h = fnv_u64(h, u64::from(self.decomposed));
+            h
+        })
     }
 
     /// Number of materialized loops.
@@ -262,10 +331,16 @@ impl Schedule {
     /// Mutable access to one block's schedule state. Copy-on-write: if the
     /// block is shared with another schedule (the common case — every
     /// child shares its parent's unchanged blocks), only that block is
-    /// cloned. Also invalidates the cached structural fingerprint.
+    /// cloned. Also invalidates both cached structural fingerprints: the
+    /// schedule-level one and the target block's own (the caller is about
+    /// to mutate it — an `Arc::make_mut` that found the block unshared
+    /// would otherwise keep the stale cache, corrupting the block-memo
+    /// keys derived from it).
     pub fn block_mut(&mut self, block: usize) -> &mut BlockSched {
         self.fp = OnceLock::new();
-        Arc::make_mut(&mut self.blocks[block])
+        let bs = Arc::make_mut(&mut self.blocks[block]);
+        bs.fp = OnceLock::new();
+        bs
     }
 
     /// Materialize the loop nest of `block` for this target.
@@ -308,22 +383,21 @@ impl Schedule {
         Ok(())
     }
 
-    /// A cheap structural fingerprint (used for dedup in search). Lazily
-    /// computed once per schedule instance and cached — repeated
+    /// A cheap structural fingerprint (used for dedup in search). A fold
+    /// of the per-block fingerprints ([`BlockSched::fingerprint`]), so a
+    /// schedule that shares N-1 of its N blocks with an already
+    /// fingerprinted parent hashes only the one block that changed.
+    /// Lazily computed once per schedule instance and cached — repeated
     /// evaluation-cache lookups on the same schedule pay O(1); the cache
     /// is invalidated by [`Schedule::block_mut`] and carried across
     /// clones (clones are structurally identical by construction).
     pub fn fingerprint(&self) -> u64 {
         *self.fp.get_or_init(|| {
-            use std::hash::{Hash, Hasher};
-            let mut h = std::collections::hash_map::DefaultHasher::new();
+            let mut h = FNV_OFFSET;
             for bs in &self.blocks {
-                bs.tiles.hash(&mut h);
-                bs.order.hash(&mut h);
-                (bs.parallel, bs.thread_tiles, bs.vectorize, bs.unroll).hash(&mut h);
-                (bs.cache_write, &bs.cache_reads, bs.compute_at, bs.decomposed).hash(&mut h);
+                h = fnv_u64(h, bs.fingerprint());
             }
-            h.finish()
+            h
         })
     }
 }
@@ -430,5 +504,58 @@ mod tests {
         let mut s = sched();
         s.block_mut(0).tiles[0] = vec![3, 5]; // 15 != 64
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn block_fingerprint_cached_and_invalidated_by_block_mut() {
+        let mut s = sched();
+        let f0 = s.blocks[0].fingerprint();
+        assert_eq!(s.blocks[0].fingerprint(), f0, "cached value stable");
+        // block_mut must clear the cache even when the Arc is unshared
+        // (make_mut performs no clone then) — mutate-through-block_mut is
+        // the invariant the block memo's keys depend on
+        s.block_mut(0).vectorize = true;
+        let f1 = s.blocks[0].fingerprint();
+        assert_ne!(f0, f1);
+        s.block_mut(0).vectorize = false;
+        assert_eq!(s.blocks[0].fingerprint(), f0, "fingerprint is structural");
+    }
+
+    #[test]
+    fn schedule_fingerprint_is_fold_of_block_fingerprints() {
+        let mut s = sched();
+        s.block_mut(0).parallel = 1;
+        let mut expect = crate::util::fnv::FNV_OFFSET;
+        for b in &s.blocks {
+            expect = fnv_u64(expect, b.fingerprint());
+        }
+        assert_eq!(s.fingerprint(), expect);
+    }
+
+    #[test]
+    fn unchanged_blocks_keep_their_fingerprint_across_cow() {
+        // the incremental-evaluation contract: a child schedule shares
+        // untouched blocks with its parent, Arc and fingerprint cache
+        // included — only the mutated block re-fingerprints
+        let w = Arc::new(crate::workloads::mlp::llama4_mlp());
+        let a = Schedule::initial(w);
+        let fps: Vec<u64> = a.blocks.iter().map(|b| b.fingerprint()).collect();
+        let mut b = a.clone();
+        b.block_mut(1).unroll = 2;
+        for (i, fp) in fps.iter().enumerate() {
+            assert_eq!(a.blocks[i].fingerprint(), *fp);
+            if i == 1 {
+                assert_ne!(b.blocks[i].fingerprint(), *fp, "mutated block re-keys");
+                assert!(!Arc::ptr_eq(&a.blocks[i], &b.blocks[i]));
+            } else {
+                assert_eq!(b.blocks[i].fingerprint(), *fp, "untouched block keeps key");
+                assert!(Arc::ptr_eq(&a.blocks[i], &b.blocks[i]));
+            }
+        }
+        // equality ignores the fingerprint cache: a fresh structural twin
+        // (never fingerprinted) compares equal to a fingerprinted block
+        let fresh = BlockSched::default_for(&a.workload, 0);
+        a.blocks[0].fingerprint();
+        assert_eq!(*a.blocks[0], fresh);
     }
 }

@@ -28,30 +28,11 @@ use std::collections::HashSet;
 use std::fmt;
 use std::sync::Arc;
 
-/// FNV-1a offset basis — also the running hash of an empty trace.
-pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-/// FNV-1a prime.
-pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-/// Fold a string into an FNV-1a state, with a field separator so
-/// ("ab","c") and ("a","bc") hash differently.
-pub fn fnv_str(mut h: u64, s: &str) -> u64 {
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h ^= 0x1f;
-    h.wrapping_mul(FNV_PRIME)
-}
-
-/// Fold a u64 into an FNV-1a state byte by byte.
-pub fn fnv_u64(mut h: u64, x: u64) -> u64 {
-    for i in 0..8 {
-        h ^= (x >> (8 * i)) & 0xff;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
-}
+// The FNV-1a primitives historically lived here; they now sit in
+// `util::fnv` so the lower layers (`tir` structural fingerprints, the
+// `sim` block memo) can fold hashes without depending on the schedule
+// layer. Re-exported under the old paths for existing callers.
+pub use crate::util::fnv::{fnv_str, fnv_u64, FNV_OFFSET, FNV_PRIME};
 
 /// Intern a name into a shared `Arc<str>`. Transform and block names come
 /// from tiny fixed vocabularies, so each distinct string is allocated once

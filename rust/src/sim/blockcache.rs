@@ -1,0 +1,267 @@
+//! Per-block simulation memo — the incremental-evaluation substrate
+//! behind [`Simulator::latency`](crate::sim::Simulator::latency).
+//!
+//! # Why
+//!
+//! The search's pervasive pattern is "clone a schedule, mutate **one**
+//! block, evaluate": every MCTS expansion, rollout step, and candidate
+//! scoring call produces a schedule differing from an already-evaluated
+//! one in a single block. The schedule-level evaluation cache
+//! ([`crate::mcts::evalcache`]) only helps when the *whole program* was
+//! seen before; this memo makes the common partial-overlap case cheap by
+//! memoizing each block's simulated contribution, so evaluating a fresh
+//! candidate costs O(mutated blocks) simulator work instead of
+//! O(all blocks) — the measurement-amortization COLT's shared tree
+//! promises, carried down into the simulator.
+//!
+//! # Keying (what invalidates an entry)
+//!
+//! A block's contribution is memoized under an FNV-1a fold of:
+//!
+//! * the **simulator instance key** — target plus every spec field
+//!   ([`CpuSpec`](crate::sim::cpu::CpuSpec) /
+//!   [`GpuSpec`](crate::sim::gpu::GpuSpec) values, not identity), so two
+//!   simulators configured alike share entries and an edited spec can
+//!   never serve stale values;
+//! * the **workload structural fingerprint**
+//!   ([`Workload::fingerprint`](crate::tir::Workload::fingerprint)) —
+//!   everything the per-block models read from the workload;
+//! * the **block index**;
+//! * the **block-schedule fingerprint**
+//!   ([`BlockSched::fingerprint`](crate::schedule::BlockSched::fingerprint))
+//!   — every schedule field of that block, invalidated by
+//!   [`Schedule::block_mut`](crate::schedule::Schedule::block_mut).
+//!
+//! Cross-block audit: the per-block models (`cpu::block_latency`,
+//! `gpu::block_latency`, `footprint::analyze`) and the `compute_at`
+//! fusion credit read **only** the keyed inputs above — fusion charges
+//! the *producer's* own `compute_at` depth against its own write
+//! traffic; a consumer's latency never depends on another block's
+//! schedule state. Any future cross-block input MUST be folded into the
+//! key (see the contract notes on those functions); the debug-build
+//! differential assert in `Simulator::latency` and the
+//! `prop_incremental_latency_is_bit_identical_to_full` property exist to
+//! catch exactly that class of regression.
+//!
+//! # Transparency & determinism
+//!
+//! Memoized values are pure functions of their keys and are summed in
+//! the same block order as a full recompute, so `Simulator::latency` is
+//! **bit-identical** with the memo hot, cold, full, or disabled. The
+//! memo is **thread-local** (one per OS thread): search workers — driver
+//! lanes and the tree-parallel
+//! [`WorkerPool`](crate::runtime::driver::WorkerPool) — each warm their
+//! own, nothing is shared, and since served values are bit-identical to
+//! recomputation, every cross-thread determinism contract in the crate
+//! is unaffected. A full memo degrades to compute-without-insert, never
+//! to a wrong answer.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Hit/miss counters for the block memo (kept separate from
+/// [`crate::mcts::evalcache::CacheStats`]: `sim` sits below `mcts` in
+/// the layering and the two caches count different things — programs
+/// there, block contributions here).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl BlockStats {
+    /// Fraction of lookups served from the memo; 0.0 when never consulted.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Bounded memo over per-block latency contributions plus whole-baseline
+/// latencies. Once a map is full, new values are computed and returned
+/// but not inserted (same degradation contract as
+/// [`crate::mcts::evalcache::EvalCache`]).
+#[derive(Clone, Debug)]
+pub struct BlockCache {
+    block: HashMap<u64, f64>,
+    baseline: HashMap<u64, f64>,
+    stats: BlockStats,
+    max_entries: usize,
+}
+
+impl Default for BlockCache {
+    fn default() -> Self {
+        BlockCache::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+}
+
+impl BlockCache {
+    /// Default per-map entry bound. An entry is a u64 key plus an f64
+    /// value (~16 B payload before table overhead), so a full block map
+    /// costs a few MB — sized for many searches' worth of distinct
+    /// (workload, block, schedule) triples on one thread.
+    pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+    pub fn new() -> BlockCache {
+        BlockCache::default()
+    }
+
+    pub fn with_capacity(max_entries: usize) -> BlockCache {
+        BlockCache {
+            block: HashMap::new(),
+            baseline: HashMap::new(),
+            stats: BlockStats::default(),
+            max_entries,
+        }
+    }
+
+    /// Entries currently held (both maps).
+    pub fn len(&self) -> usize {
+        self.block.len() + self.baseline.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.block.is_empty() && self.baseline.is_empty()
+    }
+
+    pub fn stats(&self) -> BlockStats {
+        self.stats
+    }
+
+    /// Zero the hit/miss counters (entries are kept).
+    pub fn reset_stats(&mut self) {
+        self.stats = BlockStats::default();
+    }
+
+    /// Drop every entry (and the counters) — the memo rebuilds lazily.
+    pub fn clear(&mut self) {
+        self.block.clear();
+        self.baseline.clear();
+        self.stats = BlockStats::default();
+    }
+
+    /// Per-block contribution for `key`, computing (and caching) via `f`
+    /// on a miss; also reports whether the memo served it (`true` = hit,
+    /// `f` never ran) so the caller's debug differential check can target
+    /// exactly the served path.
+    pub fn block_or_served(&mut self, key: u64, f: impl FnOnce() -> f64) -> (f64, bool) {
+        if let Some(&v) = self.block.get(&key) {
+            self.stats.hits += 1;
+            return (v, true);
+        }
+        self.stats.misses += 1;
+        let v = f();
+        if self.block.len() < self.max_entries {
+            self.block.insert(key, v);
+        }
+        (v, false)
+    }
+
+    /// Memoized whole-baseline latency lookup (counts a hit). `None`
+    /// means the caller must compute and [`BlockCache::baseline_insert`]
+    /// it (split into get/insert rather than a closure so the compute
+    /// path can re-enter the thread-local memo without double-borrowing).
+    pub fn baseline_get(&mut self, key: u64) -> Option<f64> {
+        let v = self.baseline.get(&key).copied();
+        match v {
+            Some(_) => self.stats.hits += 1,
+            None => self.stats.misses += 1,
+        }
+        v
+    }
+
+    /// Store a computed baseline latency (miss already counted by
+    /// [`BlockCache::baseline_get`]); respects the entry bound.
+    pub fn baseline_insert(&mut self, key: u64, v: f64) {
+        if self.baseline.len() < self.max_entries {
+            self.baseline.insert(key, v);
+        }
+    }
+}
+
+thread_local! {
+    static THREAD_CACHE: RefCell<BlockCache> = RefCell::new(BlockCache::default());
+}
+
+/// Run `f` with this thread's block memo. The borrow is held for the
+/// duration of `f`; `f` must not re-enter `with_thread` (the simulator's
+/// usage computes block contributions inside the borrow, and those never
+/// touch the memo).
+pub fn with_thread<R>(f: impl FnOnce(&mut BlockCache) -> R) -> R {
+    THREAD_CACHE.with(|c| f(&mut c.borrow_mut()))
+}
+
+/// This thread's memo counters (e.g. for benches and the CI smoke gate).
+pub fn thread_stats() -> BlockStats {
+    with_thread(|c| c.stats())
+}
+
+/// Zero this thread's counters, keeping the entries warm.
+pub fn reset_thread_stats() {
+    with_thread(BlockCache::reset_stats)
+}
+
+/// Drop this thread's memo entirely (tests; never required for
+/// correctness).
+pub fn clear_thread() {
+    with_thread(BlockCache::clear)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_memo_serves_and_charges_once() {
+        let mut c = BlockCache::new();
+        let (v, served) = c.block_or_served(7, || 1.25);
+        assert!((v, served) == (1.25, false));
+        let (v, served) = c.block_or_served(7, || unreachable!("cached"));
+        assert!((v, served) == (1.25, true));
+        assert_eq!(c.stats(), BlockStats { hits: 1, misses: 1 });
+        assert!((c.stats().hit_rate() - 0.5).abs() < 1e-12);
+        c.reset_stats();
+        assert_eq!(c.stats(), BlockStats::default());
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_zero_computes_without_insert() {
+        let mut c = BlockCache::with_capacity(0);
+        assert_eq!(c.block_or_served(1, || 2.0), (2.0, false));
+        assert_eq!(c.block_or_served(1, || 2.0), (2.0, false), "never cached");
+        assert!(c.is_empty());
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn baseline_get_insert_roundtrip() {
+        let mut c = BlockCache::new();
+        assert_eq!(c.baseline_get(9), None);
+        c.baseline_insert(9, 0.5);
+        assert_eq!(c.baseline_get(9), Some(0.5));
+        assert_eq!(c.stats(), BlockStats { hits: 1, misses: 1 });
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.baseline_get(9), None);
+    }
+
+    #[test]
+    fn thread_cache_persists_across_calls() {
+        clear_thread();
+        with_thread(|c| {
+            c.block_or_served(42, || 3.0);
+        });
+        let (v, served) = with_thread(|c| c.block_or_served(42, || unreachable!()));
+        assert!(served);
+        assert_eq!(v, 3.0);
+        assert_eq!(thread_stats(), BlockStats { hits: 1, misses: 1 });
+        reset_thread_stats();
+        assert_eq!(thread_stats(), BlockStats::default());
+        clear_thread();
+    }
+}

@@ -62,6 +62,20 @@ fn body_factor(body: BodyKind) -> f64 {
 }
 
 /// Latency (seconds) of one block under this schedule on the CPU.
+///
+/// # Memo-key contract (audited)
+///
+/// This is a pure function of `(spec, s.workload, block, s.blocks[block])`
+/// — it reads the block's own definition, its own [`BlockSched`]
+/// (via `s.blocks[block]` and the nest materialized from it), and the
+/// workload's buffer dtypes, and **nothing from any other block's
+/// schedule state**. The incremental evaluator
+/// ([`crate::sim::Simulator::latency`]) memoizes its result under exactly
+/// those inputs; if you add a cross-block dependency here (e.g. reading a
+/// producer's tiling), fold it into the memo key or the memo will serve
+/// stale values (the debug differential assert will catch it).
+///
+/// [`BlockSched`]: crate::schedule::BlockSched
 pub fn block_latency(spec: &CpuSpec, s: &Schedule, block: usize) -> (f64, Traffic) {
     let blk = &s.workload.blocks[block];
     let bs = &s.blocks[block];

@@ -92,6 +92,12 @@ pub struct Traffic {
 
 /// Analyze one block's scheduled nest against a two-level cache hierarchy
 /// (`l1_capacity` and `l2_capacity` in bytes).
+///
+/// Memo-key contract (audited): reads the block's own definition, the
+/// nest materialized from its own schedule state, and buffer dtypes —
+/// never another block's schedule. See
+/// [`crate::sim::cpu::block_latency`] for the full contract the
+/// incremental evaluator relies on.
 pub fn analyze(
     s: &Schedule,
     block: usize,

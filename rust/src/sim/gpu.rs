@@ -61,6 +61,15 @@ fn body_factor(body: BodyKind) -> f64 {
 }
 
 /// Latency (seconds) of one block under this schedule on the GPU.
+///
+/// # Memo-key contract (audited)
+///
+/// Pure function of `(spec, s.workload, block, s.blocks[block])` — same
+/// contract as [`crate::sim::cpu::block_latency`]: no other block's
+/// schedule state is read, which is what lets
+/// [`crate::sim::Simulator::latency`] memoize per-block results under
+/// (spec, workload fingerprint, block index, block fingerprint). Fold any
+/// new cross-block input into that key.
 pub fn block_latency(spec: &GpuSpec, s: &Schedule, block: usize) -> (f64, Traffic) {
     let blk = &s.workload.blocks[block];
     let bs = &s.blocks[block];

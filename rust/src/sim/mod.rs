@@ -8,12 +8,24 @@
 //! intermediate traffic). The learned cost model ([`crate::costmodel`]) is
 //! trained against it exactly as TVM's XGBoost model is trained against
 //! hardware runs.
+//!
+//! Evaluation is **incremental**: per-block contributions are memoized in
+//! a thread-local [`blockcache`] keyed by (simulator spec, workload
+//! fingerprint, block index, block-schedule fingerprint), so evaluating a
+//! schedule that shares blocks with anything previously evaluated on this
+//! thread re-simulates only the blocks that changed — bit-identical to
+//! the full recompute ([`Simulator::latency_full`]), asserted per-hit in
+//! debug builds and by the differential property test.
 
+pub mod blockcache;
 pub mod footprint;
 pub mod cpu;
 pub mod gpu;
 
 use crate::schedule::Schedule;
+use crate::tir::Workload;
+use crate::util::fnv::{fnv_f64, fnv_i64, fnv_str, fnv_u64, FNV_OFFSET};
+use std::sync::Arc;
 
 /// Evaluation target.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -51,41 +63,156 @@ impl Simulator {
         }
     }
 
+    /// One block's complete latency contribution (seconds): the target's
+    /// per-block model plus the `compute_at` fusion credit. This is the
+    /// unit the block memo caches, and it is a **pure function** of
+    /// (spec, workload, block index, that block's [`BlockSched`]) — the
+    /// fusion credit charges the producer's own `compute_at` depth
+    /// against its own write traffic, never another block's state. Keep
+    /// it that way: any new cross-block input must be folded into
+    /// [`Simulator::latency`]'s memo key or it will serve stale values
+    /// (the debug differential assert and
+    /// `prop_incremental_latency_is_bit_identical_to_full` guard this).
+    ///
+    /// [`BlockSched`]: crate::schedule::BlockSched
+    fn block_contrib(&self, s: &Schedule, b: usize) -> f64 {
+        let (mut lat, traffic) = match self.target {
+            Target::Cpu => cpu::block_latency(&self.cpu, s, b),
+            Target::Gpu => gpu::block_latency(&self.gpu, s, b),
+        };
+        // fusion: producer computed inside its consumer's tile —
+        // its output never round-trips DRAM. Model as removing the
+        // write's DRAM time (and the consumer re-read, folded in the
+        // same credit), when the tile actually fits (depth > 0).
+        if let Some(depth) = s.blocks[b].compute_at {
+            if depth > 0 {
+                let bw = match self.target {
+                    Target::Cpu => self.cpu.dram_gbs,
+                    Target::Gpu => self.gpu.dram_gbs,
+                } * 1e9;
+                let saved = 2.0 * traffic.write_dram / bw;
+                // fusing too deep re-computes the producer: small tax
+                let tax = 1.0 + 0.03 * depth as f64;
+                lat = ((lat - saved).max(lat * 0.15)) * tax;
+            }
+        }
+        lat
+    }
+
+    /// FNV fold of the target and every field of its active spec — the
+    /// memo-key prefix that makes block-memo entries a function of the
+    /// simulator's *configuration*, not its identity (equal specs share
+    /// entries; an edited spec can never be served another spec's
+    /// values).
+    fn instance_key(&self) -> u64 {
+        let mut h = fnv_str(FNV_OFFSET, self.target.name());
+        match self.target {
+            Target::Cpu => {
+                let c = &self.cpu;
+                h = fnv_i64(h, c.cores);
+                h = fnv_f64(h, c.freq_ghz);
+                h = fnv_i64(h, c.simd_lanes);
+                h = fnv_f64(h, c.fma_ports);
+                h = fnv_f64(h, c.l1_bytes);
+                h = fnv_f64(h, c.l2_bytes);
+                h = fnv_f64(h, c.dram_gbs);
+                h = fnv_f64(h, c.l2_gbs);
+                h = fnv_f64(h, c.spawn_overhead);
+            }
+            Target::Gpu => {
+                let g = &self.gpu;
+                h = fnv_i64(h, g.sms);
+                h = fnv_i64(h, g.cuda_cores_per_sm);
+                h = fnv_f64(h, g.freq_ghz);
+                h = fnv_i64(h, g.max_threads_per_sm);
+                h = fnv_i64(h, g.max_threads_per_block);
+                h = fnv_f64(h, g.smem_per_sm);
+                h = fnv_f64(h, g.dram_gbs);
+                h = fnv_f64(h, g.l2_bytes);
+                h = fnv_f64(h, g.l2_gbs);
+                h = fnv_f64(h, g.launch_overhead);
+            }
+        }
+        h
+    }
+
     /// End-to-end latency (seconds) of a scheduled workload: per-block
-    /// latencies summed, with compute_at fusion removing the intermediate
-    /// buffer's DRAM traffic between producer and consumer.
+    /// contributions summed (see [`Simulator::block_contrib`]).
+    ///
+    /// **Incremental**: each block's contribution is served from the
+    /// thread-local [`blockcache`] when its key — (spec, workload
+    /// fingerprint, block index, block-schedule fingerprint) — was
+    /// evaluated before on this thread, so the common search pattern
+    /// (child schedule = parent with one mutated block) re-simulates only
+    /// the mutated block. Observationally transparent: values are pure
+    /// functions of their keys and are summed in the same order as
+    /// [`Simulator::latency_full`], so the result is **bit-identical**
+    /// whether the memo is cold, warm, full, or absent (debug builds
+    /// re-derive every served block and assert bit equality).
     pub fn latency(&self, s: &Schedule) -> f64 {
+        let h0 = fnv_u64(self.instance_key(), s.workload.fingerprint());
+        blockcache::with_thread(|bc| {
+            let mut total = 0.0;
+            for b in 0..s.workload.blocks.len() {
+                let key = fnv_u64(fnv_u64(h0, b as u64), s.blocks[b].fingerprint());
+                let (lat, served) = bc.block_or_served(key, || self.block_contrib(s, b));
+                if served {
+                    debug_assert_eq!(
+                        lat.to_bits(),
+                        self.block_contrib(s, b).to_bits(),
+                        "block memo served a value that differs from recomputation \
+                         (workload {}, block {b}) — a cross-block dependency is \
+                         missing from the memo key",
+                        s.workload.name
+                    );
+                }
+                total += lat;
+            }
+            total
+        })
+    }
+
+    /// Reference full recompute of [`Simulator::latency`]: simulates
+    /// every block, consults no memo. The differential checks (debug
+    /// asserts, property tests, benches) compare against this; it is
+    /// also the useful entry point when benchmarking the simulator
+    /// itself.
+    pub fn latency_full(&self, s: &Schedule) -> f64 {
         let mut total = 0.0;
         for b in 0..s.workload.blocks.len() {
-            let (mut lat, traffic) = match self.target {
-                Target::Cpu => cpu::block_latency(&self.cpu, s, b),
-                Target::Gpu => gpu::block_latency(&self.gpu, s, b),
-            };
-            // fusion: producer computed inside its consumer's tile —
-            // its output never round-trips DRAM. Model as removing the
-            // write's DRAM time (and the consumer re-read, folded in the
-            // same credit), when the tile actually fits (depth > 0).
-            if let Some(depth) = s.blocks[b].compute_at {
-                if depth > 0 {
-                    let bw = match self.target {
-                        Target::Cpu => self.cpu.dram_gbs,
-                        Target::Gpu => self.gpu.dram_gbs,
-                    } * 1e9;
-                    let saved = 2.0 * traffic.write_dram / bw;
-                    // fusing too deep re-computes the producer: small tax
-                    let tax = 1.0 + 0.03 * depth as f64;
-                    lat = ((lat - saved).max(lat * 0.15)) * tax;
-                }
-            }
-            total += lat;
+            total += self.block_contrib(s, b);
         }
         total
     }
 
-    /// Speedup of `s` over the unoptimized initial schedule.
+    /// Latency of the unoptimized initial schedule of `w`, memoized per
+    /// (spec, workload fingerprint) in the thread-local [`blockcache`] —
+    /// [`Simulator::speedup`] used to rebuild `Schedule::initial` and
+    /// re-simulate it on every call.
+    pub fn baseline_latency(&self, w: &Arc<Workload>) -> f64 {
+        let key = fnv_u64(self.instance_key(), w.fingerprint());
+        // lookup and compute are separate borrows: computing the baseline
+        // re-enters the thread-local memo through `latency`
+        if let Some(v) = blockcache::with_thread(|bc| bc.baseline_get(key)) {
+            debug_assert_eq!(
+                v.to_bits(),
+                self.latency_full(&Schedule::initial(Arc::clone(w))).to_bits(),
+                "baseline memo served a value that differs from recomputation \
+                 (workload {})",
+                w.name
+            );
+            return v;
+        }
+        let v = self.latency(&Schedule::initial(Arc::clone(w)));
+        blockcache::with_thread(|bc| bc.baseline_insert(key, v));
+        v
+    }
+
+    /// Speedup of `s` over the unoptimized initial schedule. The baseline
+    /// is served from the memo ([`Simulator::baseline_latency`]) instead
+    /// of being rebuilt and re-simulated per call.
     pub fn speedup(&self, s: &Schedule) -> f64 {
-        let base = Schedule::initial(s.workload.clone());
-        self.latency(&base) / self.latency(s)
+        self.baseline_latency(&s.workload) / self.latency(s)
     }
 
     /// Achieved GFLOP/s of a schedule.
@@ -174,5 +301,104 @@ mod tests {
         let cpu = Simulator::new(Target::Cpu);
         let gpu = Simulator::new(Target::Gpu);
         assert!(gpu.peak_gflops() > cpu.peak_gflops());
+    }
+
+    #[test]
+    fn incremental_latency_bit_identical_to_full_under_storm() {
+        // the core incremental-evaluation contract on both targets: with
+        // the thread memo warming up across a transform storm, every
+        // memoized evaluation equals the full recompute bit for bit
+        for (target, seed) in [(Target::Cpu, 11u64), (Target::Gpu, 12)] {
+            let sim = Simulator::new(target);
+            let mut rng = Rng::new(seed);
+            let vocab = TransformKind::vocabulary(target.is_gpu());
+            let mut s = Schedule::initial(Arc::new(workloads::mlp::llama4_mlp()));
+            let gpu = target.is_gpu();
+            for step in 0..60 {
+                if let Ok(n) = apply_sequence(&s, &[*rng.choice(&vocab)], &mut rng, gpu) {
+                    s = n;
+                }
+                assert_eq!(
+                    sim.latency(&s).to_bits(),
+                    sim.latency_full(&s).to_bits(),
+                    "{target:?} step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_memo_resimulates_only_mutated_blocks() {
+        use super::blockcache;
+        blockcache::clear_thread();
+        let sim = Simulator::new(Target::Cpu);
+        let w = Arc::new(workloads::mlp::llama4_mlp());
+        let n_blocks = w.blocks.len() as u64;
+        assert!(n_blocks >= 3, "need a multi-block workload");
+        let base = Schedule::initial(w);
+        sim.latency(&base); // cold: one miss per block
+        assert_eq!(
+            blockcache::thread_stats(),
+            blockcache::BlockStats { hits: 0, misses: n_blocks }
+        );
+        let mut child = base.clone();
+        child.block_mut(1).unroll = 2;
+        blockcache::reset_thread_stats();
+        let got = sim.latency(&child);
+        // O(mutated blocks): every unchanged block served, one simulated
+        assert_eq!(
+            blockcache::thread_stats(),
+            blockcache::BlockStats { hits: n_blocks - 1, misses: 1 }
+        );
+        assert_eq!(got.to_bits(), sim.latency_full(&child).to_bits());
+        // re-evaluation is all hits and still bit-identical
+        blockcache::reset_thread_stats();
+        assert_eq!(sim.latency(&child).to_bits(), got.to_bits());
+        assert_eq!(
+            blockcache::thread_stats(),
+            blockcache::BlockStats { hits: n_blocks, misses: 0 }
+        );
+        blockcache::clear_thread();
+    }
+
+    #[test]
+    fn spec_edits_change_the_memo_key_not_serve_stale_values() {
+        use super::blockcache;
+        blockcache::clear_thread();
+        let s = Schedule::initial(Arc::new(workloads::gemm::gemm(256, 256, 256)));
+        let sim = Simulator::new(Target::Cpu);
+        let l_default = sim.latency(&s);
+        let mut slower = Simulator::new(Target::Cpu);
+        slower.cpu.freq_ghz /= 2.0;
+        // the edited spec folds into the key: fresh compute, not a stale hit
+        let l_slow = slower.latency(&s);
+        assert_ne!(l_default.to_bits(), l_slow.to_bits());
+        assert_eq!(l_slow.to_bits(), slower.latency_full(&s).to_bits());
+        // and two identically-configured simulators share entries
+        blockcache::reset_thread_stats();
+        assert_eq!(Simulator::new(Target::Cpu).latency(&s).to_bits(), l_default.to_bits());
+        assert_eq!(blockcache::thread_stats().misses, 0, "equal specs share the memo");
+        blockcache::clear_thread();
+    }
+
+    #[test]
+    fn baseline_memo_makes_speedup_cheap_and_stable() {
+        use super::blockcache;
+        blockcache::clear_thread();
+        let sim = Simulator::new(Target::Cpu);
+        let w = Arc::new(workloads::mlp::llama4_mlp());
+        let mut tuned = Schedule::initial(w.clone());
+        tuned.block_mut(0).parallel = 1;
+        let a = sim.speedup(&tuned);
+        // reference value: baseline recomputed from scratch
+        let expect = sim.latency_full(&Schedule::initial(w.clone())) / sim.latency_full(&tuned);
+        assert_eq!(a.to_bits(), expect.to_bits());
+        // the repeat serves the baseline from the memo (no block misses at
+        // all: baseline hit + per-block hits for `tuned`)
+        blockcache::reset_thread_stats();
+        let b = sim.speedup(&tuned);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(blockcache::thread_stats().misses, 0);
+        blockcache::clear_thread();
     }
 }

@@ -14,7 +14,9 @@
 
 pub mod printer;
 
+use crate::util::fnv::{fnv_f64, fnv_i64, fnv_u64, FNV_OFFSET};
 use std::fmt;
+use std::sync::OnceLock;
 
 /// Element type of a buffer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -202,17 +204,105 @@ impl BlockDef {
 
 /// A complete workload: buffers + block DAG. This is the paper's
 /// "unoptimized IRModule".
-#[derive(Clone, Debug)]
+///
+/// Workloads are immutable once evaluation starts (they are built by the
+/// workload constructors / scenario lowering, wrapped in an `Arc`, and
+/// only read from there); [`Workload::fingerprint`] relies on that —
+/// it is computed at most once per instance and cached. A `Clone` starts
+/// with an empty fingerprint cache, so cloning-then-editing (as the
+/// validation tests do) can never serve a stale fingerprint.
+#[derive(Debug)]
 pub struct Workload {
     pub name: String,
     pub buffers: Vec<Buffer>,
     pub blocks: Vec<BlockDef>,
+    /// Lazily cached structural fingerprint; see [`Workload::fingerprint`].
+    fp: OnceLock<u64>,
+}
+
+impl Clone for Workload {
+    fn clone(&self) -> Workload {
+        Workload {
+            name: self.name.clone(),
+            buffers: self.buffers.clone(),
+            blocks: self.blocks.clone(),
+            // deliberately NOT cloned: a clone may be mutated before use
+            // (the struct's fields are public), so it re-derives its
+            // fingerprint from its own — possibly edited — structure
+            fp: OnceLock::new(),
+        }
+    }
 }
 
 impl Workload {
+    /// Build a workload (fingerprint cache starts empty).
+    pub fn new(name: String, buffers: Vec<Buffer>, blocks: Vec<BlockDef>) -> Workload {
+        Workload {
+            name,
+            buffers,
+            blocks,
+            fp: OnceLock::new(),
+        }
+    }
+
     /// Total FLOPs over all blocks.
     pub fn flops(&self) -> f64 {
         self.blocks.iter().map(|b| b.flops()).sum()
+    }
+
+    /// Deterministic structural fingerprint of everything the simulator
+    /// may read from this workload: buffer shapes and dtypes, and every
+    /// block's axes (extent + kind), affine accesses, body kind,
+    /// flops-per-point, and producer edges. **Names are deliberately
+    /// excluded** — they never influence simulation, so two
+    /// differently-named but structurally identical workloads share one
+    /// fingerprint (and therefore share block-memo entries, see
+    /// [`crate::sim::blockcache`]).
+    ///
+    /// FNV-1a folded (no randomized hasher state), so the value is stable
+    /// across runs, threads, and processes. Computed at most once per
+    /// instance and cached; workloads are immutable once evaluated (see
+    /// the type docs), which is what makes the caching sound.
+    pub fn fingerprint(&self) -> u64 {
+        *self.fp.get_or_init(|| {
+            let mut h = FNV_OFFSET;
+            h = fnv_u64(h, self.buffers.len() as u64);
+            for buf in &self.buffers {
+                h = fnv_u64(h, buf.shape.len() as u64);
+                for &d in &buf.shape {
+                    h = fnv_i64(h, d);
+                }
+                h = fnv_u64(h, buf.dtype as u64);
+            }
+            h = fnv_u64(h, self.blocks.len() as u64);
+            for blk in &self.blocks {
+                h = fnv_u64(h, blk.axes.len() as u64);
+                for ax in &blk.axes {
+                    h = fnv_i64(h, ax.extent);
+                    h = fnv_u64(h, ax.kind as u64);
+                }
+                for accs in [&blk.reads, &blk.writes] {
+                    h = fnv_u64(h, accs.len() as u64);
+                    for acc in accs {
+                        h = fnv_u64(h, acc.buffer as u64);
+                        h = fnv_u64(h, acc.dim_axes.len() as u64);
+                        for dims in &acc.dim_axes {
+                            h = fnv_u64(h, dims.len() as u64);
+                            for &a in dims {
+                                h = fnv_u64(h, a as u64);
+                            }
+                        }
+                    }
+                }
+                h = fnv_u64(h, blk.body as u64);
+                h = fnv_f64(h, blk.flops_per_point);
+                h = fnv_u64(h, blk.producers.len() as u64);
+                for &p in &blk.producers {
+                    h = fnv_u64(h, p as u64);
+                }
+            }
+            h
+        })
     }
 
     /// Structural validation: access arities match buffer ranks, axis
@@ -318,11 +408,7 @@ mod tests {
             flops_per_point: 2.0,
             producers: vec![],
         }];
-        Workload {
-            name: "tiny_matmul".into(),
-            buffers,
-            blocks,
-        }
+        Workload::new("tiny_matmul".into(), buffers, blocks)
     }
 
     #[test]
@@ -368,5 +454,44 @@ mod tests {
         assert_eq!(DType::F32.bytes(), 4);
         assert_eq!(DType::BF16.bytes(), 2);
         assert_eq!(DType::F32.name(), "float32");
+    }
+
+    #[test]
+    fn fingerprint_is_structural_and_name_blind() {
+        let a = tiny_matmul();
+        let b = tiny_matmul();
+        // separately built identical structures share one fingerprint
+        // (cross-instance block-memo sharing depends on this)
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), a.fingerprint(), "cached value stable");
+        // names never influence the fingerprint...
+        let mut renamed = tiny_matmul();
+        renamed.name = "other".into();
+        renamed.blocks[0].name = "other_mm".into();
+        renamed.buffers[0].name = "X".into();
+        assert_eq!(renamed.fingerprint(), a.fingerprint());
+        // ...but anything the simulator reads does
+        let mut wider = tiny_matmul();
+        wider.blocks[0].axes[0].extent = 128;
+        assert_ne!(wider.fingerprint(), a.fingerprint());
+        let mut retyped = tiny_matmul();
+        retyped.buffers[1].dtype = DType::BF16;
+        assert_ne!(retyped.fingerprint(), a.fingerprint());
+        let mut rebody = tiny_matmul();
+        rebody.blocks[0].body = BodyKind::Reduce;
+        assert_ne!(rebody.fingerprint(), a.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_clone_rederives_from_own_structure() {
+        let a = tiny_matmul();
+        let fp = a.fingerprint();
+        // a clone made after fingerprinting starts uncached and may be
+        // edited before use — it must hash its own (edited) structure
+        let mut c = a.clone();
+        c.blocks[0].flops_per_point = 4.0;
+        assert_ne!(c.fingerprint(), fp);
+        let unedited = a.clone();
+        assert_eq!(unedited.fingerprint(), fp);
     }
 }

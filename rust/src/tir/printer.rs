@@ -86,14 +86,14 @@ mod tests {
     use crate::tir::{Access, Axis, BlockDef, BodyKind, Buffer, DType};
 
     fn mm() -> Workload {
-        Workload {
-            name: "mm".into(),
-            buffers: vec![
+        Workload::new(
+            "mm".into(),
+            vec![
                 Buffer::new("A", &[8, 8], DType::F32),
                 Buffer::new("B", &[8, 8], DType::F32),
                 Buffer::new("C", &[8, 8], DType::F32),
             ],
-            blocks: vec![BlockDef {
+            vec![BlockDef {
                 name: "matmul".into(),
                 axes: vec![
                     Axis::spatial("i", 8),
@@ -109,7 +109,7 @@ mod tests {
                 flops_per_point: 2.0,
                 producers: vec![],
             }],
-        }
+        )
     }
 
     #[test]

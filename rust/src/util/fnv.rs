@@ -1,0 +1,69 @@
+//! FNV-1a hashing primitives — the one hash the incremental-key machinery
+//! speaks everywhere: trace running hashes ([`crate::schedule::trace`]),
+//! evaluation-cache keys ([`crate::mcts::evalcache::trace_key`]), the
+//! per-block / per-workload structural fingerprints, and the block-level
+//! simulation memo ([`crate::sim::blockcache`]). Living in `util` keeps
+//! the dependency direction clean: `tir` and `sim` fold fingerprints
+//! without reaching up into the schedule layer.
+//!
+//! All folds are deterministic across runs, platforms, and processes (no
+//! randomized hasher state), which is what lets fingerprint-derived keys
+//! be compared against values produced on other threads or persisted to
+//! disk.
+
+/// FNV-1a offset basis — also the running hash of an empty trace and the
+/// seed state for every structural fingerprint.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold a string into an FNV-1a state, with a field separator so
+/// ("ab","c") and ("a","bc") hash differently.
+pub fn fnv_str(mut h: u64, s: &str) -> u64 {
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h ^= 0x1f;
+    h.wrapping_mul(FNV_PRIME)
+}
+
+/// Fold a u64 into an FNV-1a state byte by byte.
+pub fn fnv_u64(mut h: u64, x: u64) -> u64 {
+    for i in 0..8 {
+        h ^= (x >> (8 * i)) & 0xff;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold an i64 (two's-complement bits) into an FNV-1a state.
+pub fn fnv_i64(h: u64, x: i64) -> u64 {
+    fnv_u64(h, x as u64)
+}
+
+/// Fold an f64's exact bit pattern into an FNV-1a state (fingerprints
+/// must distinguish values that simulate differently, bit for bit).
+pub fn fnv_f64(h: u64, x: f64) -> u64 {
+    fnv_u64(h, x.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_are_deterministic_and_separated() {
+        assert_eq!(fnv_str(FNV_OFFSET, "ab"), fnv_str(FNV_OFFSET, "ab"));
+        // field separation: ("ab","c") != ("a","bc")
+        assert_ne!(
+            fnv_str(fnv_str(FNV_OFFSET, "ab"), "c"),
+            fnv_str(fnv_str(FNV_OFFSET, "a"), "bc")
+        );
+        assert_ne!(fnv_u64(FNV_OFFSET, 1), fnv_u64(FNV_OFFSET, 2));
+        assert_eq!(fnv_i64(FNV_OFFSET, -1), fnv_u64(FNV_OFFSET, u64::MAX));
+        assert_eq!(fnv_f64(FNV_OFFSET, 1.5), fnv_u64(FNV_OFFSET, 1.5f64.to_bits()));
+        // -0.0 and 0.0 have different bit patterns and must hash apart
+        assert_ne!(fnv_f64(FNV_OFFSET, 0.0), fnv_f64(FNV_OFFSET, -0.0));
+    }
+}

@@ -10,6 +10,7 @@
 //! [`crate::runtime`].
 
 pub mod error;
+pub mod fnv;
 pub mod rng;
 pub mod json;
 pub mod tomlmini;

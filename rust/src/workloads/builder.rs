@@ -189,11 +189,7 @@ impl WorkloadBuilder {
     }
 
     pub fn build(self) -> Workload {
-        let w = Workload {
-            name: self.name,
-            buffers: self.buffers,
-            blocks: self.blocks,
-        };
+        let w = Workload::new(self.name, self.buffers, self.blocks);
         w.validate()
             .unwrap_or_else(|e| panic!("workload {} invalid: {e}", w.name));
         w

@@ -439,6 +439,72 @@ fn prop_scenarios_lower_well_formed_and_names_roundtrip() {
 }
 
 #[test]
+fn prop_incremental_latency_is_bit_identical_to_full() {
+    // the incremental-evaluation contract (tentpole of the block-memo
+    // subsystem): with the thread-local per-block memo warming up across
+    // a transform storm — exactly the mutate-one-block-then-evaluate
+    // pattern the search generates — `Simulator::latency` must equal
+    // `Simulator::latency_full` bit for bit at EVERY step, across all six
+    // scenario families and both targets. Cases share one OS thread, so
+    // the memo also carries entries across workloads/specs within the
+    // property — any key collision or missing key component (a cross-
+    // block dependency not folded in) surfaces as a bit mismatch here.
+    use litecoop::sim::Simulator;
+    let mut families_seen = std::collections::BTreeSet::new();
+    let mut targets_seen = std::collections::BTreeSet::new();
+    check("incremental-latency-bit-identical", 200, 0x5EED_0005, |rng| {
+        let spec = random_scenario(rng);
+        let name = spec.name();
+        let w = spec.lower().map_err(|e| format!("{name}: lower: {e}"))?;
+        families_seen.insert(name.split('@').next().unwrap_or("").to_string());
+        let gpu = rng.chance(0.5);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        targets_seen.insert(format!("{target:?}"));
+        let sim = Simulator::new(target);
+        let vocab = TransformKind::vocabulary(gpu);
+        let mut s = Schedule::initial(Arc::new(w));
+        // baseline/speedup path exercised too (memoized vs rebuilt)
+        let sp0 = sim.speedup(&s);
+        if (sp0 - 1.0).abs() > 1e-9 {
+            return Err(format!("{name}: initial speedup {sp0} != 1"));
+        }
+        for step in 0..(4 + rng.below(12)) {
+            if let Ok(next) = apply(&s, *rng.choice(&vocab), rng, gpu) {
+                s = next;
+            }
+            let inc = sim.latency(&s);
+            let full = sim.latency_full(&s);
+            if inc.to_bits() != full.to_bits() {
+                return Err(format!(
+                    "{name} ({target:?}) step {step}: incremental {inc:e} \
+                     (bits {:#018x}) != full {full:e} (bits {:#018x})",
+                    inc.to_bits(),
+                    full.to_bits()
+                ));
+            }
+            // the memoized speedup must equal the hand-computed ratio of
+            // full recomputes, bit for bit
+            let sp = sim.speedup(&s);
+            let sp_full =
+                sim.latency_full(&Schedule::initial(s.workload.clone())) / full;
+            if sp.to_bits() != sp_full.to_bits() {
+                return Err(format!(
+                    "{name} ({target:?}) step {step}: memoized speedup {sp} != \
+                     full-recompute speedup {sp_full}"
+                ));
+            }
+        }
+        Ok(())
+    });
+    assert_eq!(
+        families_seen.len(),
+        6,
+        "all six scenario families must be exercised, saw {families_seen:?}"
+    );
+    assert_eq!(targets_seen.len(), 2, "both targets must be exercised");
+}
+
+#[test]
 fn prop_scenario_workloads_survive_transform_storms() {
     // scenario-lowered workloads are first-class search substrates: any
     // transform sequence keeps them valid with positive finite latency
