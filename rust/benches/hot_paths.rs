@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks (§Perf): MCTS iteration components, GBT
 //! inference (scalar vs SoA-batched), simulator eval (full recompute vs
-//! incremental block-memo), featurization, schedule apply, prompt
+//! incremental block-memo), the legality-analyzer gate (`first_deny`
+//! runs inside every `apply`), featurization, schedule apply, prompt
 //! render, and the allocation-light search-loop primitives (O(1) trace
 //! keys, copy-on-write schedule apply/clone, iteration throughput at
 //! depth — `mcts_iteration_at_depth14` and `search_cold_80samples` are
@@ -56,6 +57,17 @@ fn main() {
 
     all.push(bench_fn("schedule_apply_tilesize", budget, || {
         let _ = apply(&sched, TransformKind::TileSize, &mut rng, false);
+    }));
+
+    // ---- static legality analyzer ------------------------------------------
+    // `first_deny` runs inside every `apply` (the Deny gate), so its cost
+    // lands on the search hot path; `analyze` is the full-registry sweep
+    // the lint CLI / audit pay per schedule.
+    all.push(bench_fn("lint_first_deny_attention", budget, || {
+        std::hint::black_box(litecoop::analysis::first_deny(&sched, false));
+    }));
+    all.push(bench_fn("lint_analyze_attention", budget, || {
+        std::hint::black_box(litecoop::analysis::analyze(&sched, false));
     }));
 
     // ---- allocation-light search-loop primitives ---------------------------

@@ -1,0 +1,232 @@
+//! Dependence and race analysis: footprint-based classification of the
+//! *materialized* loop nest.
+//!
+//! The footprint argument: a loop may run its iterations concurrently
+//! (Parallel / BlockIdx / ThreadIdx) or in lockstep lanes (Vectorized)
+//! only if distinct iterations touch distinct output elements — i.e.
+//! the loop's axis appears in **every** write access of the block. An
+//! axis missing from a write (a reduction axis in its natural encoding,
+//! or a mislabeled spatial axis) makes concurrent iterations store to
+//! the same element: a write-write race. `DecomposeReduction` splits
+//! the init out of the update loop and switches the accumulation to a
+//! legalized pattern, which is the one sanctioned escape hatch.
+//!
+//! These lints read the materialized [`LoopNest`], not the raw
+//! annotation counters: the materializer already refuses to hand
+//! parallel-ish kinds to `AxisKind::Reduction` axes, so an annotation
+//! *window* covering a reduction position is merely degenerate
+//! ([`AnnotationOnReductionPosition`], Warn) — the Deny arm fires only
+//! when a genuinely racy loop would be emitted.
+
+use super::{Diagnostic, Lint, LintCtx, Severity};
+use crate::schedule::LoopKind;
+use crate::tir::AxisKind;
+
+fn concurrent(kind: LoopKind) -> bool {
+    matches!(
+        kind,
+        LoopKind::Parallel | LoopKind::BlockIdx | LoopKind::ThreadIdx | LoopKind::Vectorized
+    )
+}
+
+/// Deny: a concurrent/vector loop whose axis does not cover every write
+/// of its block (write-write race) without a preceding
+/// `DecomposeReduction`.
+pub struct RaceOnReductionAxis;
+
+impl Lint for RaceOnReductionAxis {
+    fn code(&self) -> &'static str {
+        "race-on-reduction-axis"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            let Some(nest) = ctx.nest(b) else { continue };
+            if ctx.block(b).decomposed {
+                continue;
+            }
+            let blk = &w.blocks[b];
+            for l in &nest.loops {
+                if !concurrent(l.kind) {
+                    continue;
+                }
+                let racy = blk.axes[l.axis].kind == AxisKind::Reduction
+                    || blk.writes.iter().any(|wr| !wr.uses_axis(l.axis));
+                if racy {
+                    sink(Diagnostic {
+                        code: self.code(),
+                        severity: Severity::Deny,
+                        block: b,
+                        axis: Some(l.axis),
+                        message: format!(
+                            "{}: {:?} loop on axis {} does not cover every write — \
+                             concurrent iterations store to the same element \
+                             (write-write race); DecomposeReduction must precede it",
+                            blk.name, l.kind, blk.axes[l.axis].name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Deny: `compute_at` set on a block no other block consumes — there is
+/// no loop nest to fuse into, so the dependence edge the fusion claims
+/// does not exist.
+pub struct FusionWithoutConsumer;
+
+impl Lint for FusionWithoutConsumer {
+    fn code(&self) -> &'static str {
+        "fusion-without-consumer"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            if ctx.block(b).compute_at.is_some() && ctx.consumers[b].is_empty() {
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Deny,
+                    block: b,
+                    axis: None,
+                    message: format!(
+                        "{}: compute_at set but no block consumes its output — \
+                         nothing to fuse into",
+                        w.blocks[b].name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Deny: `compute_at` deeper than the consumer's loop nest. Hoisting
+/// the producer to a depth that does not exist means its write would be
+/// re-executed under loops that never iterate it consistently — the
+/// consumer reads values the producer has not written at that point.
+pub struct FusionDepthOutOfRange;
+
+impl Lint for FusionDepthOutOfRange {
+    fn code(&self) -> &'static str {
+        "fusion-depth-out-of-range"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            let Some(d) = ctx.block(b).compute_at else { continue };
+            let Some(&c) = ctx.consumers[b].first() else { continue };
+            let n = ctx.block(c).n_loops();
+            if d >= n {
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Deny,
+                    block: b,
+                    axis: None,
+                    message: format!(
+                        "{}: fused at depth {d} but consumer {} has only {n} loops",
+                        w.blocks[b].name, w.blocks[c].name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Warn: a parallel/thread window or vectorize position lands on a
+/// reduction axis. The materializer silently neutralizes it (the loop
+/// stays serial), so the annotation is dead weight — usually a sign
+/// the proposal wanted a reorder or a `DecomposeReduction` first.
+pub struct AnnotationOnReductionPosition;
+
+impl Lint for AnnotationOnReductionPosition {
+    fn code(&self) -> &'static str {
+        "annotation-on-reduction-position"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Warn
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            if ctx.nest(b).is_none() {
+                continue; // structurally corrupt; structural lints own it
+            }
+            let bs = ctx.block(b);
+            let blk = &w.blocks[b];
+            let n = bs.order.len();
+            for (pos, &(axis, _)) in bs.order.iter().enumerate() {
+                if blk.axes[axis].kind != AxisKind::Reduction {
+                    continue;
+                }
+                let which = if pos < bs.parallel {
+                    "parallel"
+                } else if ctx.gpu && pos < bs.parallel + bs.thread_tiles {
+                    "thread-bind"
+                } else if bs.vectorize && pos + 1 == n {
+                    "vectorize"
+                } else {
+                    continue;
+                };
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Warn,
+                    block: b,
+                    axis: Some(axis),
+                    message: format!(
+                        "{}: {which} annotation at position {pos} lands on reduction \
+                         axis {} and is ignored (loop stays serial)",
+                        blk.name, blk.axes[axis].name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Warn: the vectorized loop's axis is not stride-1 in every write —
+/// lanes scatter instead of storing contiguously, so the vector
+/// annotation buys little and may pessimize.
+pub struct NonContiguousVectorization;
+
+impl Lint for NonContiguousVectorization {
+    fn code(&self) -> &'static str {
+        "non-contiguous-vectorization"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Warn
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            let Some(nest) = ctx.nest(b) else { continue };
+            let blk = &w.blocks[b];
+            for l in &nest.loops {
+                if l.kind != LoopKind::Vectorized {
+                    continue;
+                }
+                if !blk.writes.iter().all(|wr| wr.axis_is_contiguous(l.axis)) {
+                    sink(Diagnostic {
+                        code: self.code(),
+                        severity: Severity::Warn,
+                        block: b,
+                        axis: Some(l.axis),
+                        message: format!(
+                            "{}: vectorized axis {} is not stride-1 in every write — \
+                             lanes scatter (strided stores)",
+                            blk.name, blk.axes[l.axis].name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,489 @@
+//! Structural and degenerate-annotation lints.
+//!
+//! The structural checks are the historical `Workload::validate` /
+//! `BlockSched::validate` logic re-homed into the lint framework (those
+//! methods now delegate here — see [`super::workload_error`] and
+//! [`super::block_structure_error`] — so legality has one source of
+//! truth). Message texts are kept byte-identical to the historical
+//! errors so delegating callers observe no change.
+//!
+//! The degenerate checks flag legal-but-useless annotations: they are
+//! Warn-severity because ordinary transform sequences can reach them
+//! (the search is allowed to *try* a pointless parallelization; the
+//! simulator prices it), but the `lint_audit` table surfaces how often.
+
+use super::{Diagnostic, Lint, LintCtx, Severity};
+use crate::schedule::BlockSched;
+use crate::tir::{BlockDef, Workload};
+
+// ---------------------------------------------------------------------------
+// workload scope (Deny)
+// ---------------------------------------------------------------------------
+
+/// Deny: access arity disagrees with its buffer's rank (or the buffer
+/// index is out of range).
+pub struct AccessRankMismatch;
+
+impl Lint for AccessRankMismatch {
+    fn code(&self) -> &'static str {
+        "access-rank-mismatch"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_workload(&self, w: &Workload, sink: &mut dyn FnMut(Diagnostic)) {
+        for (bi, blk) in w.blocks.iter().enumerate() {
+            for acc in blk.reads.iter().chain(blk.writes.iter()) {
+                match w.buffers.get(acc.buffer) {
+                    None => sink(Diagnostic {
+                        code: self.code(),
+                        severity: Severity::Deny,
+                        block: bi,
+                        axis: None,
+                        message: format!("block {}: buffer idx out of range", blk.name),
+                    }),
+                    Some(buf) if acc.dim_axes.len() != buf.shape.len() => sink(Diagnostic {
+                        code: self.code(),
+                        severity: Severity::Deny,
+                        block: bi,
+                        axis: None,
+                        message: format!(
+                            "block {}: access rank {} != buffer {} rank {}",
+                            blk.name,
+                            acc.dim_axes.len(),
+                            buf.name,
+                            buf.shape.len()
+                        ),
+                    }),
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+/// Deny: an access indexes a block axis that does not exist.
+pub struct AxisIndexOutOfRange;
+
+impl Lint for AxisIndexOutOfRange {
+    fn code(&self) -> &'static str {
+        "axis-index-out-of-range"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_workload(&self, w: &Workload, sink: &mut dyn FnMut(Diagnostic)) {
+        for (bi, blk) in w.blocks.iter().enumerate() {
+            for acc in blk.reads.iter().chain(blk.writes.iter()) {
+                for dims in &acc.dim_axes {
+                    for &ax in dims {
+                        if ax >= blk.axes.len() {
+                            sink(Diagnostic {
+                                code: self.code(),
+                                severity: Severity::Deny,
+                                block: bi,
+                                axis: None,
+                                message: format!("block {}: axis idx {} oob", blk.name, ax),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Deny: a block that writes nothing computes nothing observable.
+pub struct BlockWithoutWrites;
+
+impl Lint for BlockWithoutWrites {
+    fn code(&self) -> &'static str {
+        "block-without-writes"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_workload(&self, w: &Workload, sink: &mut dyn FnMut(Diagnostic)) {
+        for (bi, blk) in w.blocks.iter().enumerate() {
+            if blk.writes.is_empty() {
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Deny,
+                    block: bi,
+                    axis: None,
+                    message: format!("block {}: no writes", blk.name),
+                });
+            }
+        }
+    }
+}
+
+/// Deny: a producer edge that is not earlier in topo order (cycles and
+/// forward references both land here).
+pub struct ProducerOrderViolation;
+
+impl Lint for ProducerOrderViolation {
+    fn code(&self) -> &'static str {
+        "producer-order-violation"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_workload(&self, w: &Workload, sink: &mut dyn FnMut(Diagnostic)) {
+        for (bi, blk) in w.blocks.iter().enumerate() {
+            for &p in &blk.producers {
+                if p >= bi {
+                    sink(Diagnostic {
+                        code: self.code(),
+                        severity: Severity::Deny,
+                        block: bi,
+                        axis: None,
+                        message: format!(
+                            "block {}: producer {} not earlier in topo order",
+                            blk.name, p
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// schedule scope, structural (Deny)
+// ---------------------------------------------------------------------------
+// The four check_* functions below are shared between the Lint impls
+// (full sweeps) and `super::block_structure_error` (the validate()
+// delegation path, which runs them in the historical order).
+
+pub(crate) fn check_tile_arity(
+    bs: &BlockSched,
+    blk: &BlockDef,
+    block: usize,
+    sink: &mut dyn FnMut(Diagnostic),
+) {
+    if bs.tiles.len() != blk.axes.len() {
+        sink(Diagnostic {
+            code: TileArityMismatch.code(),
+            severity: Severity::Deny,
+            block,
+            axis: None,
+            message: format!("{}: tiles len mismatch", blk.name),
+        });
+    }
+}
+
+pub(crate) fn check_tile_products(
+    bs: &BlockSched,
+    blk: &BlockDef,
+    block: usize,
+    sink: &mut dyn FnMut(Diagnostic),
+) {
+    for (ai, (t, ax)) in bs.tiles.iter().zip(&blk.axes).enumerate() {
+        let prod: i64 = t.iter().product();
+        if prod != ax.extent {
+            sink(Diagnostic {
+                code: TileProductMismatch.code(),
+                severity: Severity::Deny,
+                block,
+                axis: Some(ai),
+                message: format!(
+                    "{}: axis {ai} factors {:?} product {} != extent {}",
+                    blk.name, t, prod, ax.extent
+                ),
+            });
+        }
+        if t.iter().any(|&f| f < 1) {
+            sink(Diagnostic {
+                code: TileProductMismatch.code(),
+                severity: Severity::Deny,
+                block,
+                axis: Some(ai),
+                message: format!("{}: axis {ai} non-positive factor", blk.name),
+            });
+        }
+    }
+}
+
+pub(crate) fn check_loop_order(
+    bs: &BlockSched,
+    blk: &BlockDef,
+    block: usize,
+    sink: &mut dyn FnMut(Diagnostic),
+) {
+    let want: usize = bs.tiles.iter().map(Vec::len).sum();
+    if bs.order.len() != want {
+        sink(Diagnostic {
+            code: LoopOrderInvalid.code(),
+            severity: Severity::Deny,
+            block,
+            axis: None,
+            message: format!("{}: order len {} != {}", blk.name, bs.order.len(), want),
+        });
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for &(a, l) in &bs.order {
+        if a >= bs.tiles.len() || l >= bs.tiles[a].len() {
+            sink(Diagnostic {
+                code: LoopOrderInvalid.code(),
+                severity: Severity::Deny,
+                block,
+                axis: None,
+                message: format!("{}: order entry ({a},{l}) oob", blk.name),
+            });
+            continue;
+        }
+        if !seen.insert((a, l)) {
+            sink(Diagnostic {
+                code: LoopOrderInvalid.code(),
+                severity: Severity::Deny,
+                block,
+                axis: None,
+                message: format!("{}: duplicate order entry ({a},{l})", blk.name),
+            });
+        }
+    }
+}
+
+pub(crate) fn check_cache_read_arity(
+    bs: &BlockSched,
+    blk: &BlockDef,
+    block: usize,
+    sink: &mut dyn FnMut(Diagnostic),
+) {
+    if bs.cache_reads.len() != blk.reads.len() {
+        sink(Diagnostic {
+            code: CacheReadArityMismatch.code(),
+            severity: Severity::Deny,
+            block,
+            axis: None,
+            message: format!("{}: cache_reads len mismatch", blk.name),
+        });
+    }
+}
+
+macro_rules! structural_lint {
+    ($name:ident, $code:literal, $check:ident, $doc:literal) => {
+        #[doc = $doc]
+        pub struct $name;
+
+        impl Lint for $name {
+            fn code(&self) -> &'static str {
+                $code
+            }
+            fn severity(&self) -> Severity {
+                Severity::Deny
+            }
+            fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+                let w = &ctx.sched.workload;
+                for b in 0..w.blocks.len() {
+                    $check(ctx.block(b), &w.blocks[b], b, sink);
+                }
+            }
+        }
+    };
+}
+
+structural_lint!(
+    TileArityMismatch,
+    "tile-arity-mismatch",
+    check_tile_arity,
+    "Deny: `tiles` does not cover exactly the block's axes."
+);
+structural_lint!(
+    TileProductMismatch,
+    "tile-product-mismatch",
+    check_tile_products,
+    "Deny: an axis's tile factors don't multiply back to its extent \
+     (or a factor is non-positive) — iterations are dropped or invented."
+);
+structural_lint!(
+    LoopOrderInvalid,
+    "loop-order-invalid",
+    check_loop_order,
+    "Deny: `order` is not a permutation of every (axis, level) tile."
+);
+structural_lint!(
+    CacheReadArityMismatch,
+    "cache-read-arity-mismatch",
+    check_cache_read_arity,
+    "Deny: `cache_reads` does not pair 1:1 with the block's reads."
+);
+
+// ---------------------------------------------------------------------------
+// schedule scope, target + degenerate
+// ---------------------------------------------------------------------------
+
+/// Deny: thread bindings on a CPU target. `ThreadBind` is GPU-only;
+/// this lint is the single rejection point (the transform itself no
+/// longer special-cases the target).
+pub struct GpuOnlyTransformOnCpu;
+
+impl Lint for GpuOnlyTransformOnCpu {
+    fn code(&self) -> &'static str {
+        "gpu-only-transform-on-cpu"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Deny
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        if ctx.gpu {
+            return;
+        }
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            let tt = ctx.block(b).thread_tiles;
+            if tt > 0 {
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Deny,
+                    block: b,
+                    axis: None,
+                    message: format!(
+                        "{}: {tt} thread-bound loop(s) on a CPU target — ThreadBind \
+                         is GPU-only",
+                        w.blocks[b].name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Warn: a parallel annotation that materializes total extent 1 — the
+/// fork overhead is paid for zero concurrency.
+pub struct ParallelExtentOne;
+
+impl Lint for ParallelExtentOne {
+    fn code(&self) -> &'static str {
+        "parallel-extent-one"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Warn
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            let Some(nest) = ctx.nest(b) else { continue };
+            if ctx.block(b).parallel > 0 && nest.parallel_extent() == 1 {
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Warn,
+                    block: b,
+                    axis: None,
+                    message: format!(
+                        "{}: parallel annotation materializes extent 1 (no useful \
+                         parallelism)",
+                        w.blocks[b].name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Unrolled-body size above which we flag code blowup.
+pub const UNROLL_PRODUCT_LIMIT: i64 = 4096;
+
+/// Warn: the unrolled loop body exceeds [`UNROLL_PRODUCT_LIMIT`]
+/// iterations — instruction-cache blowup territory.
+pub struct UnrollProductBlowup;
+
+impl Lint for UnrollProductBlowup {
+    fn code(&self) -> &'static str {
+        "unroll-product-blowup"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Warn
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            let Some(nest) = ctx.nest(b) else { continue };
+            let prod = nest.unrolled_product();
+            if ctx.block(b).unroll > 0 && prod > UNROLL_PRODUCT_LIMIT {
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Warn,
+                    block: b,
+                    axis: None,
+                    message: format!(
+                        "{}: unrolled body covers {prod} iterations \
+                         (> {UNROLL_PRODUCT_LIMIT}) — code-size blowup",
+                        w.blocks[b].name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Warn: `cache_write` on a block with no reduction axis — there is no
+/// accumulation to keep in registers, so the staging copy is dead.
+pub struct DeadCacheWrite;
+
+impl Lint for DeadCacheWrite {
+    fn code(&self) -> &'static str {
+        "dead-cache-write"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Warn
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            if ctx.block(b).cache_write && !w.blocks[b].has_reduction() {
+                sink(Diagnostic {
+                    code: self.code(),
+                    severity: Severity::Warn,
+                    block: b,
+                    axis: None,
+                    message: format!(
+                        "{}: cache_write on a block with no reduction axis — the \
+                         accumulator stage is dead",
+                        w.blocks[b].name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Warn: a `cache_reads` stage on a fully broadcast (scalar) read — the
+/// access touches no loop axis, so staging it buys nothing.
+pub struct DeadCacheRead;
+
+impl Lint for DeadCacheRead {
+    fn code(&self) -> &'static str {
+        "dead-cache-read"
+    }
+    fn severity(&self) -> Severity {
+        Severity::Warn
+    }
+    fn check_schedule(&self, ctx: &LintCtx, sink: &mut dyn FnMut(Diagnostic)) {
+        let w = &ctx.sched.workload;
+        for b in 0..w.blocks.len() {
+            let bs = ctx.block(b);
+            let blk = &w.blocks[b];
+            for (r, cr) in bs.cache_reads.iter().enumerate() {
+                if cr.is_none() {
+                    continue;
+                }
+                let Some(acc) = blk.reads.get(r) else { continue };
+                if acc.dim_axes.iter().all(Vec::is_empty) {
+                    sink(Diagnostic {
+                        code: self.code(),
+                        severity: Severity::Warn,
+                        block: b,
+                        axis: None,
+                        message: format!(
+                            "{}: cache_read stages read {r}, a fully broadcast \
+                             (scalar) access — staging is dead",
+                            blk.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

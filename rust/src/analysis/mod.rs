@@ -1,0 +1,560 @@
+//! Static legality analysis over `tir` + `schedule`.
+//!
+//! COLT's premise is that small LLMs propose transformations cheaply —
+//! but a proposal is only useful if it is *legal*: `Parallel` /
+//! `ThreadBind` / `Vectorize` over an axis that does not cover every
+//! write is a write-write race the analytic simulator would happily
+//! score, and `ComputeLocation` fusion can silently break
+//! producer→consumer dependences. This module is the classical-compiler
+//! soundness gate in front of the search: a [`Lint`] registry computes
+//! per-axis read/write footprints from each block's `Access` patterns
+//! and statically classifies every annotation of a schedule, emitting
+//! structured [`Diagnostic`]s with stable codes.
+//!
+//! Two severities:
+//!
+//! * [`Severity::Deny`] — the schedule is **illegal** (race, broken
+//!   dependence, malformed structure). [`crate::schedule::transforms::apply`]
+//!   rejects Deny-level results as structural no-fits, so the MCTS never
+//!   inserts an illegal node; rejections are counted per search
+//!   ([`lint_rejects`] → `SearchResult::lint_rejects`).
+//! * [`Severity::Warn`] — legal but degenerate (parallel extent 1,
+//!   unroll blowup, dead cache stage, strided vector lanes). Warns are
+//!   reachable by ordinary transform sequences and feed the
+//!   `experiments lint_audit` diagnostic table; they never reject.
+//!
+//! The pre-existing `Workload::validate` / `BlockSched::validate` /
+//! `Schedule::validate` checks are folded in here ([`workload_error`],
+//! [`block_structure_error`]) so there is one source of truth for
+//! legality. The invariant CI enforces (`lint_audit`, the proptest
+//! `prop_reachable_schedules_lint_clean`): **every schedule reachable
+//! from the transform vocabulary lints clean of Deny diagnostics** —
+//! the prerequisite for a long-lived `serve` daemon that must reject
+//! illegal schedules before they reach evaluation or a persisted tree.
+
+pub mod deps;
+pub mod lints;
+
+use crate::schedule::{BlockSched, LoopNest, Schedule};
+use crate::tir::Workload;
+use std::cell::Cell;
+use std::fmt;
+
+/// How bad a diagnostic is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Degenerate but legal; never rejects a schedule.
+    Warn,
+    /// Illegal; `transforms::apply` rejects the schedule.
+    Deny,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warn => write!(f, "warn"),
+            Severity::Deny => write!(f, "deny"),
+        }
+    }
+}
+
+/// One structured finding: a stable machine-readable code, severity,
+/// location (block index, optionally the axis), and a human message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable kebab-case code, e.g. `race-on-reduction-axis`.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Index into `Workload::blocks` the finding anchors to.
+    pub block: usize,
+    /// Axis index within the block, when the lint is axis-scoped.
+    pub axis: Option<usize>,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}] {}", self.severity, self.code, self.message)
+    }
+}
+
+/// Shared context handed to schedule-scope checks: the schedule, the
+/// target flavor, a bounds-checked consumer map, and the materialized
+/// loop nest of every block whose state is sound enough to materialize.
+pub struct LintCtx<'a> {
+    pub sched: &'a Schedule,
+    pub gpu: bool,
+    /// `consumers[b]` = blocks consuming `b`'s output (producer edges
+    /// out of range are skipped rather than trusted).
+    pub consumers: Vec<Vec<usize>>,
+    nests: Vec<Option<LoopNest>>,
+}
+
+impl<'a> LintCtx<'a> {
+    pub fn new(sched: &'a Schedule, gpu: bool) -> LintCtx<'a> {
+        let w = &sched.workload;
+        let nb = w.blocks.len();
+        let mut consumers = vec![Vec::new(); nb];
+        for (bi, blk) in w.blocks.iter().enumerate() {
+            for &p in &blk.producers {
+                if p < nb {
+                    consumers[p].push(bi);
+                }
+            }
+        }
+        let nests = (0..nb)
+            .map(|b| materializable(sched, b).then(|| sched.loop_nest(b, gpu)))
+            .collect();
+        LintCtx {
+            sched,
+            gpu,
+            consumers,
+            nests,
+        }
+    }
+
+    /// The block's schedule state.
+    pub fn block(&self, b: usize) -> &BlockSched {
+        &self.sched.blocks[b]
+    }
+
+    /// The materialized nest of `block`, or `None` when the block's
+    /// schedule state is too corrupt to materialize (the structural
+    /// lints report that corruption; nest-based lints skip the block).
+    pub fn nest(&self, block: usize) -> Option<&LoopNest> {
+        self.nests.get(block).and_then(|n| n.as_ref())
+    }
+}
+
+/// True when `loop_nest(b)` can run without out-of-bounds indexing —
+/// the structural preconditions the materializer assumes.
+fn materializable(s: &Schedule, b: usize) -> bool {
+    let bs = &s.blocks[b];
+    let blk = &s.workload.blocks[b];
+    if bs.tiles.len() != blk.axes.len() {
+        return false;
+    }
+    if bs.order.is_empty() && bs.vectorize {
+        return false;
+    }
+    bs.order.iter().all(|&(a, l)| a < bs.tiles.len() && l < bs.tiles[a].len())
+}
+
+/// One legality check. Implementations are stateless unit structs; each
+/// owns one stable diagnostic code and overrides whichever scope it
+/// inspects (workload structure vs. scheduled program).
+pub trait Lint: Sync {
+    /// Stable machine-readable code (the identity of this lint).
+    fn code(&self) -> &'static str;
+    fn severity(&self) -> Severity;
+    /// Workload-scope checks (IR structure; target-independent).
+    fn check_workload(&self, _w: &Workload, _sink: &mut dyn FnMut(Diagnostic)) {}
+    /// Schedule-scope checks (annotations, tiling, fusion, races).
+    fn check_schedule(&self, _ctx: &LintCtx, _sink: &mut dyn FnMut(Diagnostic)) {}
+}
+
+/// Every registered lint, workload-scope first, Deny before Warn.
+/// `first_deny` scans in this order, so earlier entries win ties.
+pub static REGISTRY: [&dyn Lint; 18] = [
+    // workload scope (Deny)
+    &lints::AccessRankMismatch,
+    &lints::AxisIndexOutOfRange,
+    &lints::BlockWithoutWrites,
+    &lints::ProducerOrderViolation,
+    // schedule scope, structural (Deny)
+    &lints::TileArityMismatch,
+    &lints::TileProductMismatch,
+    &lints::LoopOrderInvalid,
+    &lints::CacheReadArityMismatch,
+    // schedule scope, dependence/race (Deny)
+    &deps::RaceOnReductionAxis,
+    &deps::FusionWithoutConsumer,
+    &deps::FusionDepthOutOfRange,
+    &lints::GpuOnlyTransformOnCpu,
+    // schedule scope, degenerate (Warn)
+    &deps::AnnotationOnReductionPosition,
+    &deps::NonContiguousVectorization,
+    &lints::ParallelExtentOne,
+    &lints::UnrollProductBlowup,
+    &lints::DeadCacheWrite,
+    &lints::DeadCacheRead,
+];
+
+/// Run every lint (workload scope + schedule scope) over a scheduled
+/// program and collect all diagnostics.
+pub fn analyze(sched: &Schedule, gpu: bool) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut sink = |d: Diagnostic| out.push(d);
+    for lint in REGISTRY {
+        lint.check_workload(&sched.workload, &mut sink);
+    }
+    let ctx = LintCtx::new(sched, gpu);
+    for lint in REGISTRY {
+        lint.check_schedule(&ctx, &mut sink);
+    }
+    out
+}
+
+/// Run only the workload-scope lints (no schedule needed).
+pub fn analyze_workload(w: &Workload) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut sink = |d: Diagnostic| out.push(d);
+    for lint in REGISTRY {
+        lint.check_workload(w, &mut sink);
+    }
+    out
+}
+
+/// First Deny diagnostic over the *schedule-scope* lints, or `None` if
+/// the schedule is legal. This is the hot-path gate
+/// [`crate::schedule::transforms::apply`] runs on every applied
+/// transform; workload-scope lints are skipped because the workload is
+/// immutable under transforms (it is validated once at construction).
+pub fn first_deny(sched: &Schedule, gpu: bool) -> Option<Diagnostic> {
+    let ctx = LintCtx::new(sched, gpu);
+    let mut hit: Option<Diagnostic> = None;
+    for lint in REGISTRY {
+        if lint.severity() != Severity::Deny {
+            continue;
+        }
+        let mut sink = |d: Diagnostic| {
+            if hit.is_none() {
+                hit = Some(d);
+            }
+        };
+        lint.check_schedule(&ctx, &mut sink);
+        if hit.is_some() {
+            return hit;
+        }
+    }
+    None
+}
+
+/// First Deny over the workload-scope lints — the analyzer-backed body
+/// of [`crate::tir::Workload::validate`].
+pub fn workload_error(w: &Workload) -> Option<Diagnostic> {
+    let mut hit: Option<Diagnostic> = None;
+    for lint in REGISTRY {
+        if lint.severity() != Severity::Deny {
+            continue;
+        }
+        let mut sink = |d: Diagnostic| {
+            if hit.is_none() {
+                hit = Some(d);
+            }
+        };
+        lint.check_workload(w, &mut sink);
+        if hit.is_some() {
+            return hit;
+        }
+    }
+    None
+}
+
+/// First structural diagnostic for one block's schedule state — the
+/// analyzer-backed body of [`crate::schedule::BlockSched::validate`].
+/// Checks run in the historical validate order (tile arity → tile
+/// products → loop order → cache-read arity) with the historical
+/// message texts, so delegating callers see identical errors.
+pub fn block_structure_error(
+    bs: &BlockSched,
+    blk: &crate::tir::BlockDef,
+    block: usize,
+) -> Option<Diagnostic> {
+    let mut hit: Option<Diagnostic> = None;
+    {
+        let mut sink = |d: Diagnostic| {
+            if hit.is_none() {
+                hit = Some(d);
+            }
+        };
+        lints::check_tile_arity(bs, blk, block, &mut sink);
+        if hit.is_none() {
+            lints::check_tile_products(bs, blk, block, &mut sink);
+        }
+        if hit.is_none() {
+            lints::check_loop_order(bs, blk, block, &mut sink);
+        }
+        if hit.is_none() {
+            lints::check_cache_read_arity(bs, blk, block, &mut sink);
+        }
+    }
+    hit
+}
+
+/// Number of Deny-severity diagnostics in a report.
+pub fn deny_count(diags: &[Diagnostic]) -> usize {
+    diags.iter().filter(|d| d.severity == Severity::Deny).count()
+}
+
+thread_local! {
+    static LINT_REJECTS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Monotonic per-thread count of transform applications rejected with a
+/// Deny diagnostic by [`crate::schedule::transforms::apply`]. Search
+/// engines snapshot it at start and report the delta in
+/// `SearchResult::lint_rejects`; all `apply` calls of one search happen
+/// on its coordinator thread, so the delta is deterministic.
+pub fn lint_rejects() -> u64 {
+    LINT_REJECTS.with(Cell::get)
+}
+
+/// Bump the per-thread Deny-rejection counter (called by `apply`).
+pub(crate) fn note_lint_reject() {
+    LINT_REJECTS.with(|c| c.set(c.get() + 1));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::tir::{Access, Axis, BlockDef, BodyKind, Buffer, DType, Workload};
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    /// C[i,j] += A[i,k] * B[k,j] over 64^3.
+    fn matmul() -> Workload {
+        let buffers = vec![
+            Buffer::new("A", &[64, 64], DType::F32),
+            Buffer::new("B", &[64, 64], DType::F32),
+            Buffer::new("C", &[64, 64], DType::F32),
+        ];
+        let blocks = vec![BlockDef {
+            name: "matmul".into(),
+            axes: vec![
+                Axis::spatial("i", 64),
+                Axis::spatial("j", 64),
+                Axis::reduction("k", 64),
+            ],
+            reads: vec![
+                Access::new(0, vec![vec![0], vec![2]]),
+                Access::new(1, vec![vec![2], vec![1]]),
+            ],
+            writes: vec![Access::new(2, vec![vec![0], vec![1]])],
+            body: BodyKind::Mac,
+            flops_per_point: 2.0,
+            producers: vec![],
+        }];
+        Workload::new("matmul".into(), buffers, blocks)
+    }
+
+    /// copy X→T then elementwise T→Y (a producer→consumer pair).
+    fn two_block() -> Workload {
+        let buffers = vec![
+            Buffer::new("X", &[32, 32], DType::F32),
+            Buffer::new("T", &[32, 32], DType::F32),
+            Buffer::new("Y", &[32, 32], DType::F32),
+        ];
+        let blocks = vec![
+            BlockDef {
+                name: "stage".into(),
+                axes: vec![Axis::spatial("i", 32), Axis::spatial("j", 32)],
+                reads: vec![Access::new(0, vec![vec![0], vec![1]])],
+                writes: vec![Access::new(1, vec![vec![0], vec![1]])],
+                body: BodyKind::Copy,
+                flops_per_point: 0.0,
+                producers: vec![],
+            },
+            BlockDef {
+                name: "consume".into(),
+                axes: vec![Axis::spatial("i", 32), Axis::spatial("j", 32)],
+                reads: vec![Access::new(1, vec![vec![0], vec![1]])],
+                writes: vec![Access::new(2, vec![vec![0], vec![1]])],
+                body: BodyKind::Elementwise,
+                flops_per_point: 1.0,
+                producers: vec![0],
+            },
+        ];
+        Workload::new("two_block".into(), buffers, blocks)
+    }
+
+    fn sched_of(w: Workload) -> Schedule {
+        Schedule::initial(Arc::new(w))
+    }
+
+    fn codes(diags: &[Diagnostic]) -> BTreeSet<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn initial_schedules_lint_clean() {
+        let mut ws = crate::workloads::paper_benchmarks();
+        ws.push(crate::workloads::gemm::gemm(256, 256, 256));
+        for w in ws {
+            let name = w.name.clone();
+            let s = sched_of(w);
+            for gpu in [false, true] {
+                let diags = analyze(&s, gpu);
+                assert!(deny_count(&diags) == 0, "{name} (gpu={gpu}): {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_codes_unique() {
+        let codes: BTreeSet<&str> = REGISTRY.iter().map(|l| l.code()).collect();
+        assert_eq!(codes.len(), REGISTRY.len(), "duplicate lint code");
+    }
+
+    /// Guard against dead lints: deliberately corrupted schedules and
+    /// workloads must trigger **every** registered lint code.
+    #[test]
+    fn every_lint_code_fires() {
+        let mut fired: BTreeSet<&'static str> = BTreeSet::new();
+        let mut run = |s: &Schedule, gpu: bool| {
+            for d in analyze(s, gpu) {
+                fired.insert(d.code);
+            }
+        };
+
+        // race-on-reduction-axis: mislabel k spatial so the parallel
+        // window materializes a Parallel loop over an axis C's write
+        // never covers — the canonical write-write race.
+        let mut w = matmul();
+        w.blocks[0].axes[2].kind = crate::tir::AxisKind::Spatial;
+        let mut s = sched_of(w);
+        s.block_mut(0).parallel = 3;
+        run(&s, false);
+
+        // annotation-on-reduction-position + parallel-extent-one:
+        // reduction axis reordered into the parallel window (the
+        // materializer neutralizes it, leaving extent-1 parallelism).
+        let mut s = sched_of(matmul());
+        s.block_mut(0).order = vec![(2, 0), (0, 0), (1, 0)];
+        s.block_mut(0).parallel = 1;
+        run(&s, false);
+
+        // non-contiguous-vectorization: innermost spatial axis i is not
+        // stride-1 in C's write.
+        let mut s = sched_of(matmul());
+        s.block_mut(0).order = vec![(1, 0), (2, 0), (0, 0)];
+        s.block_mut(0).vectorize = true;
+        run(&s, false);
+
+        // gpu-only-transform-on-cpu
+        let mut s = sched_of(matmul());
+        s.block_mut(0).thread_tiles = 1;
+        run(&s, false);
+
+        // unroll-product-blowup: 64^3 unrolled body
+        let mut s = sched_of(matmul());
+        s.block_mut(0).unroll = 3;
+        run(&s, false);
+
+        // dead-cache-write: accumulator stage on a reduction-free block
+        let mut s = sched_of(two_block());
+        s.block_mut(0).cache_write = true;
+        run(&s, false);
+
+        // dead-cache-read: staging a fully broadcast (scalar) read
+        let mut w = two_block();
+        w.blocks[0].reads[0].dim_axes = vec![vec![], vec![]];
+        let mut s = sched_of(w);
+        s.block_mut(0).cache_reads[0] = Some(0);
+        run(&s, false);
+
+        // fusion-without-consumer: terminal block claims a fusion site
+        let mut s = sched_of(two_block());
+        s.block_mut(1).compute_at = Some(0);
+        run(&s, false);
+
+        // fusion-depth-out-of-range
+        let mut s = sched_of(two_block());
+        s.block_mut(0).compute_at = Some(99);
+        run(&s, false);
+
+        // tile-arity-mismatch
+        let mut s = sched_of(matmul());
+        s.block_mut(0).tiles.push(vec![1]);
+        run(&s, false);
+
+        // tile-product-mismatch
+        let mut s = sched_of(matmul());
+        s.block_mut(0).tiles[0] = vec![3];
+        run(&s, false);
+
+        // loop-order-invalid (duplicate entry)
+        let mut s = sched_of(matmul());
+        s.block_mut(0).order.push((0, 0));
+        run(&s, false);
+
+        // cache-read-arity-mismatch
+        let mut s = sched_of(matmul());
+        s.block_mut(0).cache_reads.push(None);
+        run(&s, false);
+
+        // workload scope: rank mismatch, axis oob, no writes, producer order
+        let mut w = matmul();
+        w.blocks[0].reads[0].dim_axes.push(vec![0]);
+        run(&sched_of(w), false);
+        let mut w = matmul();
+        w.blocks[0].reads[0].dim_axes[0] = vec![9];
+        run(&sched_of(w), false);
+        let mut w = matmul();
+        w.blocks[0].writes.clear();
+        run(&sched_of(w), false);
+        let mut w = two_block();
+        w.blocks[0].producers = vec![0];
+        run(&sched_of(w), false);
+
+        let registered: BTreeSet<&'static str> = REGISTRY.iter().map(|l| l.code()).collect();
+        let missing: Vec<&&str> = registered.difference(&fired).collect();
+        assert!(
+            missing.is_empty(),
+            "dead lints (never fired by the corruption suite): {missing:?}"
+        );
+        let unknown: Vec<&&str> = fired.difference(&registered).collect();
+        assert!(unknown.is_empty(), "diagnostics with unregistered codes: {unknown:?}");
+    }
+
+    #[test]
+    fn first_deny_matches_analyze() {
+        let mut s = sched_of(matmul());
+        s.block_mut(0).thread_tiles = 1;
+        let d = first_deny(&s, false).expect("deny expected");
+        assert_eq!(d.code, "gpu-only-transform-on-cpu");
+        let all = analyze(&s, false);
+        assert!(codes(&all).contains("gpu-only-transform-on-cpu"));
+        // clean schedule → no deny
+        assert!(first_deny(&sched_of(matmul()), false).is_none());
+    }
+
+    #[test]
+    fn decompose_legalizes_race() {
+        let mut w = matmul();
+        w.blocks[0].axes[2].kind = crate::tir::AxisKind::Spatial;
+        let mut s = sched_of(w);
+        s.block_mut(0).parallel = 3;
+        assert_eq!(first_deny(&s, false).unwrap().code, "race-on-reduction-axis");
+        s.block_mut(0).decomposed = true;
+        assert!(first_deny(&s, false).is_none());
+    }
+
+    #[test]
+    fn warns_never_reject() {
+        let mut s = sched_of(matmul());
+        s.block_mut(0).unroll = 3; // blowup warn
+        assert!(first_deny(&s, false).is_none());
+        let diags = analyze(&s, false);
+        assert!(diags.iter().any(|d| d.code == "unroll-product-blowup"));
+        assert_eq!(deny_count(&diags), 0);
+    }
+
+    #[test]
+    fn reject_counter_is_monotonic_per_thread() {
+        let before = lint_rejects();
+        note_lint_reject();
+        note_lint_reject();
+        assert_eq!(lint_rejects(), before + 2);
+    }
+
+    #[test]
+    fn diagnostic_display_is_structured() {
+        let mut s = sched_of(matmul());
+        s.block_mut(0).thread_tiles = 1;
+        let d = first_deny(&s, false).unwrap();
+        let line = d.to_string();
+        assert!(line.starts_with("deny[gpu-only-transform-on-cpu]"), "{line}");
+    }
+}

@@ -116,6 +116,7 @@ pub fn evolutionary(
     let budget = cfg.budget;
     let seed = cfg.seed;
     let checkpoints = cfg.checkpoints;
+    let lint_rejects_at_start = crate::analysis::lint_rejects();
     let sim = Simulator::new(target);
     let mut cost = CostModel::new(target, seed);
     let mut rng = Rng::new(seed ^ 0xEE0);
@@ -189,6 +190,7 @@ pub fn evolutionary(
         n_errors: 0,
         call_counts: vec![],
         eval_cache: crate::mcts::evalcache::CacheStats::default(),
+        lint_rejects: crate::analysis::lint_rejects().saturating_sub(lint_rejects_at_start),
         best_schedule,
     }
 }

@@ -27,6 +27,13 @@
 //! per-block simulation memo; exits 4 unless the reported speedups are
 //! bit-identical and the warm run was actually memo-served.
 //!
+//! Static-analyzer audit (see `litecoop::analysis`):
+//!   experiments lint_audit [--storm-cases N] [--steps K] [--seed S]
+//! runs N random transform storms per scenario family × target (6
+//! families × cpu/gpu), lints every storm endpoint, and emits a
+//! per-lint-code diagnostic table. Exits 5 if any Deny-level lint fires
+//! on a reachable schedule — the apply-time gate's CI contract.
+//!
 //! Absolute numbers come from the simulated substrate (DESIGN.md
 //! §Substitutions); the *shape* (who wins, routing fractions, reduction
 //! factors) is the reproduction target. Reports land in reports/<id>.md.
@@ -132,7 +139,7 @@ fn fig_speedup_curves(o: &Opts, id: &str) {
         }
     }
     let all: Vec<&SearchResult> = results.iter().collect();
-    out.push_str(&format!("\n{}\n", report::cache_line(&all)));
+    out.push_str(&format!("\n{}\n{}\n", report::cache_line(&all), report::lint_line(&all)));
     report::emit(id, &out).unwrap();
 }
 
@@ -205,7 +212,7 @@ fn table1(o: &Opts) {
         out.push_str(&format!("- {label} reduction: {:.2}x\n", stats::geomean(&agg[i])));
     }
     let all: Vec<&SearchResult> = results.iter().collect();
-    out.push_str(&format!("\n{}\n", report::cache_line(&all)));
+    out.push_str(&format!("\n{}\n{}\n", report::cache_line(&all), report::lint_line(&all)));
     report::emit("table1", &out).unwrap();
 }
 
@@ -645,10 +652,11 @@ fn sweep(o: &Opts, args: &Args) {
     let agg = report::total_cache(&all);
     let mut out = t.to_markdown();
     out.push_str(&format!(
-        "\nwarm start: {loaded} entries loaded; sweep total {} hits / {} misses ({:.1}% hit rate)\n",
+        "\nwarm start: {loaded} entries loaded; sweep total {} hits / {} misses ({:.1}% hit rate)\n{}\n",
         agg.hits,
         agg.misses,
-        agg.hit_rate() * 100.0
+        agg.hit_rate() * 100.0,
+        report::lint_line(&all)
     ));
     print!("{out}");
     report::emit("sweep", &out).unwrap();
@@ -665,6 +673,106 @@ fn sweep(o: &Opts, args: &Args) {
             warmed.len()
         );
         std::process::exit(3);
+    }
+}
+
+/// CI gate for the legality-analyzer contract: storm every scenario
+/// family on both targets through the Deny-gated `apply`, lint every
+/// endpoint, and tabulate diagnostics per lint code. Reachable schedules
+/// must carry zero Deny-level diagnostics (exit 5 otherwise); Warn-level
+/// counts are the audit's payload — they show which degenerate-but-legal
+/// states the search can actually visit.
+fn lint_audit(o: &Opts, args: &Args) {
+    use litecoop::analysis::{self, Lint, Severity};
+    use litecoop::schedule::transforms::{apply, TransformKind};
+    use litecoop::schedule::Schedule;
+    use litecoop::util::rng::splitmix64;
+    use litecoop::util::Rng;
+    use litecoop::workloads::scenarios::{Family, ScenarioSpec};
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    let cases = args.usize_or("storm-cases", 200);
+    let steps = args.usize_or("steps", 12);
+    let base_seed = args.u64_or("seed", 7);
+    let _ = o; // budget/reps knobs don't apply: the audit never searches
+
+    // counts[code][family-column]; the last column aggregates everything
+    let mut counts: BTreeMap<&'static str, Vec<u64>> = analysis::REGISTRY
+        .iter()
+        .map(|l| (l.code(), vec![0u64; Family::ALL.len() + 1]))
+        .collect();
+    let mut denies: Vec<String> = Vec::new();
+    let mut endpoints = 0usize;
+    let mut applied_total = 0usize;
+
+    for (fi, &family) in Family::ALL.iter().enumerate() {
+        let workload = ScenarioSpec::new(family).lower().unwrap_or_else(|e| {
+            eprintln!("lint_audit: default {} scenario failed to lower: {e}", family.name());
+            std::process::exit(5);
+        });
+        let base = Schedule::initial(Arc::new(workload));
+        for gpu in [false, true] {
+            let vocab = TransformKind::vocabulary(gpu);
+            let mut stream = base_seed ^ ((fi as u64) << 32) ^ (gpu as u64);
+            for _ in 0..cases {
+                let mut rng = Rng::new(splitmix64(&mut stream));
+                let mut s = base.clone();
+                for _ in 0..steps {
+                    if let Ok(next) = apply(&s, *rng.choice(&vocab), &mut rng, gpu) {
+                        s = next;
+                        applied_total += 1;
+                    }
+                }
+                endpoints += 1;
+                for d in analysis::analyze(&s, gpu) {
+                    let row = counts.get_mut(d.code).expect("diagnostic code not in REGISTRY");
+                    row[fi] += 1;
+                    row[Family::ALL.len()] += 1;
+                    if d.severity == Severity::Deny {
+                        denies.push(format!("{} gpu={gpu}: {d}", family.name()));
+                    }
+                }
+            }
+        }
+    }
+
+    let mut header: Vec<String> = vec!["Lint code".into(), "Severity".into()];
+    header.extend(Family::ALL.iter().map(|f| f.name().to_string()));
+    header.push("total".into());
+    let hdr_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        &format!(
+            "Lint audit: diagnostics over {cases} storm endpoints per family x target \
+             ({steps}-step storms, seed {base_seed})"
+        ),
+        &hdr_refs,
+    );
+    for lint in analysis::REGISTRY.iter() {
+        let row = &counts[lint.code()];
+        let mut cells = vec![lint.code().to_string(), format!("{}", lint.severity())];
+        cells.extend(row.iter().map(|c| c.to_string()));
+        t.row(cells);
+    }
+    let mut out = t.to_markdown();
+    out.push_str(&format!(
+        "\n{endpoints} endpoints linted ({applied_total} transforms applied, \
+         {} analyzer rejections); {} Deny-level diagnostics\n",
+        analysis::lint_rejects(),
+        denies.len()
+    ));
+    print!("{out}");
+    report::emit("lint_audit", &out).unwrap();
+    if !denies.is_empty() {
+        for d in denies.iter().take(20) {
+            eprintln!("lint_audit: DENY on reachable schedule: {d}");
+        }
+        eprintln!(
+            "lint_audit: {} Deny-level diagnostics on reachable schedules — the \
+             apply-time gate is broken",
+            denies.len()
+        );
+        std::process::exit(5);
     }
 }
 
@@ -781,6 +889,7 @@ fn main() {
         "sample_efficiency" => table3(&o), // Table 16 is emitted with Table 3
         "sweep" => sweep(&o, &args),
         "blockmemo_smoke" => blockmemo_smoke(&o, &args),
+        "lint_audit" => lint_audit(&o, &args),
         "all" => {
             fig_speedup_curves(&o, "fig2");
             table1(&o);

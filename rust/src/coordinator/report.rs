@@ -42,6 +42,21 @@ pub fn cache_line(runs: &[&SearchResult]) -> String {
     )
 }
 
+/// Total analyzer (Deny-lint) rejections over runs — transform
+/// applications the legality analyzer refused (see [`crate::analysis`]).
+pub fn total_lint_rejects(runs: &[&SearchResult]) -> u64 {
+    runs.iter().map(|r| r.lint_rejects).sum()
+}
+
+/// One-line analyzer digest for a report footer.
+pub fn lint_line(runs: &[&SearchResult]) -> String {
+    format!(
+        "analyzer: {} Deny-lint rejections across {} runs",
+        total_lint_rejects(runs),
+        runs.len()
+    )
+}
+
 /// Mean speedup at each curve checkpoint (runs must share checkpoints).
 pub fn mean_curve(runs: &[&SearchResult]) -> Vec<(usize, f64)> {
     let mut acc: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
@@ -140,6 +155,7 @@ mod tests {
             n_errors: 0,
             call_counts: vec![("m".into(), 10, 2)],
             eval_cache: CacheStats { hits: 3, misses: 7 },
+            lint_rejects: 2,
             best_schedule: Schedule::initial(Arc::new(gemm::gemm(8, 8, 8))),
         }
     }
@@ -157,6 +173,8 @@ mod tests {
         let cache = total_cache(&runs);
         assert_eq!(cache, CacheStats { hits: 6, misses: 14 });
         assert!(cache_line(&runs).contains("30.0% hit rate"));
+        assert_eq!(total_lint_rejects(&runs), 4);
+        assert!(lint_line(&runs).contains("4 Deny-lint rejections across 2 runs"));
     }
 
     #[test]

@@ -18,11 +18,18 @@
 //!
 //! The experiment harness ([`coordinator`], `bin/experiments.rs`)
 //! regenerates every table and figure of the paper's evaluation.
+//! Schedule legality is owned by the static analyzer ([`analysis`]):
+//! every transform application is gated on its Deny-level lints, so no
+//! illegal schedule ever enters a search tree.
+
+// The crate is dependency-free and pure-safe Rust; keep it provably so.
+#![forbid(unsafe_code)]
 
 pub mod util;
 pub mod tir;
 pub mod workloads;
 pub mod schedule;
+pub mod analysis;
 pub mod sim;
 pub mod costmodel;
 pub mod llm;

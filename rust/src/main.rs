@@ -10,6 +10,12 @@
 //!            eval cache before the search and saves the warmed cache
 //!            after it, so repeated searches across processes reuse
 //!            ground-truth evaluations.
+//!   lint     <scenario> [--storm N --seed S] [--target cpu|gpu]
+//!            run the static legality analyzer on a workload's initial
+//!            schedule, or (with --storm N) on every state of an N-step
+//!            random transform storm. Prints all diagnostics and exits
+//!            nonzero if any Deny-level lint fires (which would mean the
+//!            apply-time gate is broken — see `litecoop::analysis`).
 //!   models   (print the LLM catalog)
 //!   workloads (print the benchmark registry)
 //!   runtime  --artifact <name>  (load + execute an AOT artifact via PJRT)
@@ -49,6 +55,7 @@ fn main() -> litecoop::Result<()> {
             }
             Ok(())
         }
+        Some("lint") => cmd_lint(&args),
         Some("runtime") => cmd_runtime(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other}; see --help in README");
@@ -102,6 +109,7 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
     println!("API cost (sim)     : ${:.3}", r.api_cost_usd);
     println!("course alterations : {}", r.n_ca_events);
     println!("model errors       : {}", r.n_errors);
+    println!("analyzer rejects   : {}", r.lint_rejects);
     println!(
         "eval cache         : {} hits / {} misses ({:.1}% hit rate)",
         r.eval_cache.hits,
@@ -121,6 +129,56 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
         }
     }
     println!("\nbest schedule trace (tail):\n{}", r.best_schedule.trace.render_tail(12));
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> litecoop::Result<()> {
+    use litecoop::analysis::{self, Severity};
+    use litecoop::schedule::transforms::{apply, TransformKind};
+    use litecoop::util::Rng;
+
+    let scenario = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| args.str_or("workload", "llama3_attention"));
+    let gpu = args.str_or("target", "cpu") == "gpu";
+    let storm = args.usize_or("storm", 0);
+    let seed = args.u64_or("seed", 7);
+    let workload = workloads::resolve(&scenario)
+        .map_err(|e| litecoop::err!("unknown workload {scenario}: {e}"))?;
+    let mut sched = Schedule::initial(Arc::new(workload));
+    let vocab = TransformKind::vocabulary(gpu);
+    let mut rng = Rng::new(seed);
+    let mut denies = 0usize;
+    let mut warns = 0usize;
+    let mut applied = 0usize;
+    // state 0 is the initial schedule; states 1..=storm are reached by a
+    // random transform storm through the Deny-gated `apply`
+    for step in 0..=storm {
+        if step > 0 {
+            if apply(&sched, *rng.choice(&vocab), &mut rng, gpu).map(|s| sched = s).is_ok() {
+                applied += 1;
+            }
+        }
+        for d in analysis::analyze(&sched, gpu) {
+            match d.severity {
+                Severity::Deny => denies += 1,
+                Severity::Warn => warns += 1,
+            }
+            println!("state {step:>4}  {d}");
+        }
+    }
+    println!(
+        "lint: {scenario} on {}, {storm} storm steps ({applied} applied, {} analyzer \
+         rejections); diagnostics: {denies} deny, {warns} warn",
+        if gpu { "gpu" } else { "cpu" },
+        analysis::lint_rejects(),
+    );
+    if denies > 0 {
+        eprintln!("error: Deny-level diagnostics on reachable schedules — the apply gate is broken");
+        std::process::exit(1);
+    }
     Ok(())
 }
 

@@ -168,6 +168,12 @@ pub struct SearchResult {
     /// [`evalcache`]): nonzero hits mean candidate programs were
     /// re-proposed and served without re-evaluation.
     pub eval_cache: CacheStats,
+    /// Transform applications this search rejected because the result
+    /// carried a Deny-level diagnostic from the static legality
+    /// analyzer ([`crate::analysis`]) — illegal schedules the tree
+    /// never saw. Deterministic per (config, seed): every `apply` of a
+    /// search runs on its coordinator thread.
+    pub lint_rejects: u64,
     pub best_schedule: Schedule,
 }
 
@@ -246,6 +252,11 @@ pub struct Mcts<E = CachedEvaluator> {
     /// Root→leaf path of the most recent `select()` descent (reused
     /// scratch; the parallel rounds record it to place virtual losses).
     sel_path: Vec<usize>,
+    /// Value of the per-thread [`crate::analysis::lint_rejects`] counter
+    /// when this search was constructed (before cost-model seeding, so
+    /// seeding rejections count toward the search's total); `finish`
+    /// reports the delta.
+    lint_rejects_at_start: u64,
 }
 
 /// How many trailing trace steps a node contributes to prompt context.
@@ -324,6 +335,7 @@ impl Mcts {
         cache: EvalCache,
     ) -> Mcts {
         cfg.warm_cache = None;
+        let lint_rejects_at_start = crate::analysis::lint_rejects();
         let cost = CostModel::new(sim.target, cfg.seed);
         let gpu = sim.target.is_gpu();
         let mut eval = CachedEvaluator::with_cache(cost, sim, cache);
@@ -386,6 +398,7 @@ impl Mcts {
             sel_children: Vec::new(),
             sel_stats: Vec::new(),
             sel_path: Vec::new(),
+            lint_rejects_at_start,
         }
     }
 }
@@ -725,6 +738,13 @@ impl<E: Evaluator> Mcts<E> {
     /// prompt context once, at insertion) and spend one sample.
     fn insert_child(&mut self, leaf: usize, exp: Expansion) -> usize {
         let gpu = self.eval.target().is_gpu();
+        // the apply-time Deny gate makes illegal states unreachable; in
+        // debug builds, re-assert that invariant on every inserted node
+        debug_assert!(
+            crate::analysis::first_deny(&exp.sched, gpu).is_none(),
+            "illegal schedule reached tree insertion: {}",
+            crate::analysis::first_deny(&exp.sched, gpu).unwrap()
+        );
         let depth = self.nodes[leaf].depth + 1;
         let child_idx = self.nodes.len();
         // render prompt context once, at insertion (re-used every time
@@ -867,6 +887,10 @@ impl<E: Evaluator> Mcts<E> {
                 .map(|(m, s)| (m.name.to_string(), s.regular_calls, s.ca_calls))
                 .collect(),
             eval_cache: self.eval.cache_stats(),
+            // every apply of this search ran on this (the coordinator)
+            // thread, so the per-thread delta is this search's count
+            lint_rejects: crate::analysis::lint_rejects()
+                .saturating_sub(self.lint_rejects_at_start),
             best_schedule: (*self.best_schedule).clone(),
         };
         (result, self.eval)
@@ -950,6 +974,7 @@ impl Mcts {
             sel_children,
             sel_stats,
             sel_path,
+            lint_rejects_at_start,
         } = self;
         let CachedEvaluator { cost, sim, cache } = eval;
         let shared = SharedEvalCache::from_cache(cache, SharedEvalCache::DEFAULT_SHARDS);
@@ -979,6 +1004,7 @@ impl Mcts {
             sel_children,
             sel_stats,
             sel_path,
+            lint_rejects_at_start,
         };
         let result = engine.run_parallel_rounds(workload_name, threads);
         (result, shared.into_cache())
@@ -1519,6 +1545,7 @@ mod tests {
         assert_eq!(a.n_errors, b.n_errors);
         assert_eq!(a.call_counts, b.call_counts);
         assert_eq!(a.eval_cache, b.eval_cache);
+        assert_eq!(a.lint_rejects, b.lint_rejects);
         assert_eq!(
             a.best_schedule.trace.running_hash(),
             b.best_schedule.trace.running_hash()

@@ -205,40 +205,15 @@ impl BlockSched {
     }
 
     /// Structural sanity: order is a permutation of all tile levels.
+    /// Delegates to the static analyzer's structural lints
+    /// ([`crate::analysis::block_structure_error`]) so legality has one
+    /// source of truth; checks run in the historical order with the
+    /// historical message texts.
     pub fn validate(&self, workload: &Workload, block: usize) -> Result<(), String> {
-        let blk = &workload.blocks[block];
-        if self.tiles.len() != blk.axes.len() {
-            return Err(format!("{}: tiles len mismatch", blk.name));
+        match crate::analysis::block_structure_error(self, &workload.blocks[block], block) {
+            Some(d) => Err(d.message),
+            None => Ok(()),
         }
-        for (ai, (t, ax)) in self.tiles.iter().zip(&blk.axes).enumerate() {
-            let prod: i64 = t.iter().product();
-            if prod != ax.extent {
-                return Err(format!(
-                    "{}: axis {ai} factors {:?} product {} != extent {}",
-                    blk.name, t, prod, ax.extent
-                ));
-            }
-            if t.iter().any(|&f| f < 1) {
-                return Err(format!("{}: axis {ai} non-positive factor", blk.name));
-            }
-        }
-        let want: usize = self.tiles.iter().map(Vec::len).sum();
-        if self.order.len() != want {
-            return Err(format!("{}: order len {} != {}", blk.name, self.order.len(), want));
-        }
-        let mut seen = std::collections::BTreeSet::new();
-        for &(a, l) in &self.order {
-            if a >= self.tiles.len() || l >= self.tiles[a].len() {
-                return Err(format!("{}: order entry ({a},{l}) oob", blk.name));
-            }
-            if !seen.insert((a, l)) {
-                return Err(format!("{}: duplicate order entry ({a},{l})", blk.name));
-            }
-        }
-        if self.cache_reads.len() != blk.reads.len() {
-            return Err(format!("{}: cache_reads len mismatch", blk.name));
-        }
-        Ok(())
     }
 }
 

@@ -11,7 +11,8 @@ use super::{Schedule, trace::TraceStep};
 use crate::tir::AxisKind;
 use crate::util::Rng;
 
-/// All transformation kinds. `ThreadBind` is GPU-only (rejected on CPU).
+/// All transformation kinds. `ThreadBind` is GPU-only (on CPU the
+/// analyzer's `gpu-only-transform-on-cpu` lint denies the result).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TransformKind {
     TileSize,
@@ -116,6 +117,13 @@ fn pick_block(s: &Schedule, rng: &mut Rng) -> usize {
 /// Apply one named transform with sampled parameters. Returns the new
 /// schedule (with the step appended to its trace) or an explanation of why
 /// the transform is inapplicable (not an LLM error — a structural no-fit).
+///
+/// Every successful application is gated on the static legality
+/// analyzer: a result carrying any Deny-level diagnostic (write-write
+/// race, broken fusion dependence, GPU-only state on CPU, malformed
+/// structure) is rejected as a structural no-fit — the search never
+/// sees an illegal schedule. Rejections bump the per-thread counter
+/// behind [`crate::analysis::lint_rejects`].
 pub fn apply(s: &Schedule, kind: TransformKind, rng: &mut Rng, gpu: bool) -> Result<Schedule, String> {
     // Cloning is cheap: blocks are copy-on-write (only the block the
     // transform touches is deep-cloned, via Schedule::block_mut) and the
@@ -123,7 +131,38 @@ pub fn apply(s: &Schedule, kind: TransformKind, rng: &mut Rng, gpu: bool) -> Res
     let mut out = s.clone();
     let step = apply_in_place(&mut out, kind, rng, gpu)?;
     out.trace.push_step(step);
+    if let Some(d) = crate::analysis::first_deny(&out, gpu) {
+        crate::analysis::note_lint_reject();
+        return Err(format!("{}: {}", d.code, d.message));
+    }
     Ok(out)
+}
+
+/// After a retile changed `consumer`'s loop count, re-clamp the fusion
+/// depth of every producer fused into it: `compute_at` is a depth into
+/// the *consumer's* nest, which per-block `clamp_annotations` cannot
+/// see. Without this, tiling a consumer below a producer's fusion depth
+/// leaves a dangling `fusion-depth-out-of-range` state.
+fn clamp_fused_producers(s: &mut Schedule, consumer: usize) {
+    let wl = s.workload.clone();
+    if wl.blocks[consumer].producers.is_empty() {
+        return;
+    }
+    let n = s.blocks[consumer].n_loops();
+    let mut cons: Option<Vec<Vec<usize>>> = None;
+    for &p in &wl.blocks[consumer].producers {
+        let Some(d) = s.blocks[p].compute_at else { continue };
+        if d < n {
+            continue;
+        }
+        // a producer's fusion target is its *first* consumer; only clamp
+        // producers actually fused into this block
+        let cons = cons.get_or_insert_with(|| wl.consumers());
+        if cons[p].first() != Some(&consumer) {
+            continue;
+        }
+        s.block_mut(p).compute_at = if n == 0 { None } else { Some(n - 1) };
+    }
 }
 
 fn apply_in_place(
@@ -145,6 +184,7 @@ fn apply_in_place(
             let parts = 2 + rng.below(3); // 2..=4 tile levels
             let factors = sample_perfect_tile(rng, extent, parts);
             s.block_mut(b).retile(ax, factors.clone());
+            clamp_fused_producers(s, b);
             Ok(TraceStep::new(
                 "sample_perfect_tile",
                 &blk.name,
@@ -242,6 +282,7 @@ fn apply_in_place(
             bs.order.push((ax, 1));
             bs.vectorize = true;
             bs.clamp_annotations();
+            clamp_fused_producers(s, b);
             Ok(TraceStep::new(
                 "vectorize",
                 &blk.name,
@@ -325,9 +366,11 @@ fn apply_in_place(
             Ok(TraceStep::new("decompose_reduction", &wl.blocks[b].name, String::new()))
         }
         TransformKind::ThreadBind => {
-            if !gpu {
-                return Err("ThreadBind is GPU-only".into());
-            }
+            // No inline target check: on CPU the resulting thread-bound
+            // state is rejected by the analyzer's
+            // `gpu-only-transform-on-cpu` lint in `apply` — the single
+            // rejection point, which also covers thread-bound schedules
+            // arriving from warm caches or persisted traces.
             let b = pick_block(s, rng);
             let bs = s.block_mut(b);
             if bs.parallel == 0 {
@@ -473,6 +516,54 @@ mod tests {
     fn threadbind_rejected_on_cpu() {
         let mut rng = Rng::new(5);
         assert!(apply(&sched(), TransformKind::ThreadBind, &mut rng, false).is_err());
+    }
+
+    /// Regression (single rejection point): ThreadBind-on-CPU is no
+    /// longer special-cased inside the transform — the rejection comes
+    /// from the analyzer's Deny lint, carries its stable code, and
+    /// bumps the per-thread lint-reject counter.
+    #[test]
+    fn threadbind_on_cpu_rejected_by_lint_not_transform() {
+        let mut rng = Rng::new(5);
+        let before = crate::analysis::lint_rejects();
+        let err = apply(&sched(), TransformKind::ThreadBind, &mut rng, false).unwrap_err();
+        assert!(
+            err.contains("gpu-only-transform-on-cpu"),
+            "expected the lint code in the rejection, got: {err}"
+        );
+        assert_eq!(crate::analysis::lint_rejects(), before + 1);
+        // ...while on GPU the same transform is legal
+        let mut rng = Rng::new(5);
+        assert!(apply(&sched(), TransformKind::ThreadBind, &mut rng, true).is_ok());
+    }
+
+    /// Tiling a consumer below a producer's fusion depth must re-clamp
+    /// the producer's `compute_at` (the dangling depth would otherwise
+    /// be a `fusion-depth-out-of-range` Deny on a reachable state).
+    #[test]
+    fn retile_clamps_fused_producer_depths() {
+        let mut rng = Rng::new(11);
+        let base = Schedule::initial(Arc::new(attention::small_attention(128, 4, 32, true)));
+        // drive fusion + tiling storms; every surviving state must lint clean
+        let mut s = base.clone();
+        let vocab = [
+            TransformKind::TileSize,
+            TransformKind::Vectorize,
+            TransformKind::ComputeLocation,
+        ];
+        let mut fused_seen = false;
+        for _ in 0..400 {
+            let k = *rng.choice(&vocab);
+            if let Ok(next) = apply(&s, k, &mut rng, false) {
+                s = next;
+            }
+            fused_seen |= s.blocks.iter().any(|b| b.compute_at.is_some());
+            assert!(
+                crate::analysis::first_deny(&s, false).is_none(),
+                "reachable state carries a Deny diagnostic"
+            );
+        }
+        assert!(fused_seen, "storm never exercised ComputeLocation fusion");
     }
 
     #[test]

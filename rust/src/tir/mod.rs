@@ -306,44 +306,15 @@ impl Workload {
     }
 
     /// Structural validation: access arities match buffer ranks, axis
-    /// indices in range, producer edges acyclic and in range.
+    /// indices in range, producer edges acyclic and in range. Delegates
+    /// to the static analyzer's workload-scope lints
+    /// ([`crate::analysis::workload_error`]) so legality has one source
+    /// of truth; the error text is the first Deny diagnostic's message.
     pub fn validate(&self) -> Result<(), String> {
-        for (bi, blk) in self.blocks.iter().enumerate() {
-            for acc in blk.reads.iter().chain(blk.writes.iter()) {
-                let buf = self
-                    .buffers
-                    .get(acc.buffer)
-                    .ok_or_else(|| format!("block {}: buffer idx out of range", blk.name))?;
-                if acc.dim_axes.len() != buf.shape.len() {
-                    return Err(format!(
-                        "block {}: access rank {} != buffer {} rank {}",
-                        blk.name,
-                        acc.dim_axes.len(),
-                        buf.name,
-                        buf.shape.len()
-                    ));
-                }
-                for dims in &acc.dim_axes {
-                    for &ax in dims {
-                        if ax >= blk.axes.len() {
-                            return Err(format!("block {}: axis idx {} oob", blk.name, ax));
-                        }
-                    }
-                }
-            }
-            if blk.writes.is_empty() {
-                return Err(format!("block {}: no writes", blk.name));
-            }
-            for &p in &blk.producers {
-                if p >= bi {
-                    return Err(format!(
-                        "block {}: producer {} not earlier in topo order",
-                        blk.name, p
-                    ));
-                }
-            }
+        match crate::analysis::workload_error(self) {
+            Some(d) => Err(d.message),
+            None => Ok(()),
         }
-        Ok(())
     }
 
     /// Buffer index by name (panics if missing — used by workload builders

@@ -531,6 +531,59 @@ fn prop_scenario_workloads_survive_transform_storms() {
     });
 }
 
+#[test]
+fn prop_reachable_schedules_lint_clean() {
+    // the analyzer's reachability contract (see `litecoop::analysis`):
+    // every schedule reachable through the Deny-gated `apply` — across
+    // all six scenario families, both targets, and every intermediate
+    // state of a transform storm — carries ZERO Deny-level diagnostics.
+    // Warn-level diagnostics are allowed (degenerate-but-legal states
+    // are deliberately reachable; `experiments lint_audit` counts them).
+    use litecoop::analysis::{self, Severity};
+    let mut families_seen = std::collections::BTreeSet::new();
+    let mut targets_seen = std::collections::BTreeSet::new();
+    check("reachable-lint-clean", 200, 0x11A7_0001, |rng| {
+        let spec = random_scenario(rng);
+        let name = spec.name();
+        let w = spec.lower().map_err(|e| format!("{name}: lower: {e}"))?;
+        families_seen.insert(name.split('@').next().unwrap_or("").to_string());
+        let gpu = rng.chance(0.5);
+        targets_seen.insert(gpu);
+        let vocab = TransformKind::vocabulary(gpu);
+        let mut s = Schedule::initial(Arc::new(w));
+        for step in 0..(1 + rng.below(12)) {
+            if let Ok(next) = apply(&s, *rng.choice(&vocab), rng, gpu) {
+                s = next;
+            }
+            let denies: Vec<String> = analysis::analyze(&s, gpu)
+                .into_iter()
+                .filter(|d| d.severity == Severity::Deny)
+                .map(|d| d.to_string())
+                .collect();
+            if !denies.is_empty() {
+                return Err(format!(
+                    "{name} (gpu={gpu}) step {step}: reachable schedule has \
+                     Deny diagnostics: {denies:?}"
+                ));
+            }
+            // the gate and the full analysis must agree
+            if analysis::first_deny(&s, gpu).is_some() {
+                return Err(format!(
+                    "{name} (gpu={gpu}) step {step}: first_deny fired on a \
+                     reachable schedule"
+                ));
+            }
+        }
+        Ok(())
+    });
+    assert_eq!(
+        families_seen.len(),
+        6,
+        "all six scenario families must be exercised, saw {families_seen:?}"
+    );
+    assert_eq!(targets_seen.len(), 2, "both targets must be exercised");
+}
+
 // ------------------------------------------------------------------ harness
 
 #[test]
