@@ -1,389 +1,61 @@
-//! Hot-path microbenchmarks (§Perf): MCTS iteration components, GBT
-//! inference (scalar vs SoA-batched), simulator eval (full recompute vs
-//! incremental block-memo), the legality-analyzer gate (`first_deny`
-//! runs inside every `apply`), featurization, schedule apply, prompt
-//! render, and the allocation-light search-loop primitives (O(1) trace
-//! keys, copy-on-write schedule apply/clone, iteration throughput at
-//! depth — `mcts_iteration_at_depth14` and `search_cold_80samples` are
-//! re-reported every run so the incremental-evaluation win shows up in
-//! the end-to-end numbers too). Run with `cargo bench --bench hot_paths`.
+//! Hot-path microbenchmarks (§Perf). The suite itself lives in the
+//! library ([`litecoop::benchutil::hotpaths::run_suite`]) so the
+//! `experiments perfgate` CI gate can run the identical benchmarks; this
+//! target adds the one thing a library can't: a process-wide counting
+//! `#[global_allocator]`, so the allocation-sensitive benches
+//! (`mcts_iteration_at_depth14`, `sim_latency_incremental_*`) report
+//! heap allocations per iteration. Run with
+//! `cargo bench --bench hot_paths`.
 //!
 //! Besides the human-readable `bench ...` lines, this target writes every
 //! summary to `BENCH_hotpaths.json` (machine-readable, stable layout) so
-//! the perf trajectory of the hot loop is tracked across PRs.
+//! the perf trajectory of the hot loop is tracked across PRs; refreshing
+//! the committed `BENCH_baseline.json` perf-gate baseline goes through
+//! `experiments perfgate --write-baseline` instead (see the README's
+//! Performance section).
 
-use litecoop::benchutil::{bench_fn, write_json_report, Summary};
-use litecoop::costmodel::{features, CostModel};
-use litecoop::llm::prompts;
-use litecoop::llm::registry::paper_config;
-use litecoop::llm::ModelSet;
-use litecoop::mcts::evalcache::trace_key;
-use litecoop::mcts::{Mcts, SearchConfig};
-use litecoop::schedule::printer::print_dominant;
-use litecoop::schedule::transforms::{apply, TransformKind};
-use litecoop::schedule::Schedule;
-use litecoop::sim::{Simulator, Target};
-use litecoop::util::Rng;
-use litecoop::workloads;
-use std::sync::Arc;
-use std::time::Duration;
+use litecoop::benchutil::write_json_report;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Apply `n` random (applicable) transforms to `base`.
-fn transformed(base: &Schedule, n: usize, seed: u64) -> Schedule {
-    let mut rng = Rng::new(seed);
-    let vocab = TransformKind::vocabulary(false);
-    let mut s = base.clone();
-    let mut applied = 0;
-    while applied < n {
-        if let Ok(next) = apply(&s, *rng.choice(&vocab), &mut rng, false) {
-            s = next;
-            applied += 1;
-        }
+/// Dependency-free counting allocator: defers all real work to
+/// [`System`] and counts every allocation (alloc / realloc /
+/// alloc_zeroed — frees don't allocate). A relaxed counter is exact
+/// here: the probed bench regions run on this thread only.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
     }
-    s
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
 }
 
 fn main() {
-    let budget = Duration::from_millis(400);
-    let mut all: Vec<Summary> = Vec::new();
-    let w = Arc::new(workloads::attention::llama3_attention());
-    let base = Schedule::initial(w.clone());
-    let sim_cpu = Simulator::new(Target::Cpu);
-    let sim_gpu = Simulator::new(Target::Gpu);
-    let mut rng = Rng::new(1);
-
-    // a moderately-transformed schedule (realistic hot-path input)
-    let sched = transformed(&base, 12, 1);
-
-    all.push(bench_fn("schedule_apply_tilesize", budget, || {
-        let _ = apply(&sched, TransformKind::TileSize, &mut rng, false);
-    }));
-
-    // ---- static legality analyzer ------------------------------------------
-    // `first_deny` runs inside every `apply` (the Deny gate), so its cost
-    // lands on the search hot path; `analyze` is the full-registry sweep
-    // the lint CLI / audit pay per schedule.
-    all.push(bench_fn("lint_first_deny_attention", budget, || {
-        std::hint::black_box(litecoop::analysis::first_deny(&sched, false));
-    }));
-    all.push(bench_fn("lint_analyze_attention", budget, || {
-        std::hint::black_box(litecoop::analysis::analyze(&sched, false));
-    }));
-
-    // ---- allocation-light search-loop primitives ---------------------------
-    // trace_key must be O(1) in trace depth: it reads the trace's cached
-    // running hash and the schedule's cached fingerprint. The depth-2 /
-    // depth-16 / depth-48 numbers should be flat (within noise).
-    let shallow = transformed(&base, 2, 2);
-    let deep16 = transformed(&base, 16, 3);
-    let deep48 = transformed(&base, 48, 4);
-    shallow.fingerprint(); // warm the lazy fingerprint caches so the
-    deep16.fingerprint(); // bench isolates steady-state key cost
-    deep48.fingerprint();
-    all.push(bench_fn("trace_key_depth2", budget, || {
-        std::hint::black_box(trace_key(&shallow, Target::Cpu));
-    }));
-    all.push(bench_fn("trace_key_depth16", budget, || {
-        std::hint::black_box(trace_key(&deep16, Target::Cpu));
-    }));
-    all.push(bench_fn("trace_key_depth48", budget, || {
-        std::hint::black_box(trace_key(&deep48, Target::Cpu));
-    }));
-
-    // copy-on-write: cloning a deep schedule copies Arcs, applying a
-    // transform deep-clones only the mutated block
-    all.push(bench_fn("schedule_clone_depth48", budget, || {
-        std::hint::black_box(deep48.clone());
-    }));
-    all.push(bench_fn("schedule_apply_deep48_unroll", budget, || {
-        let _ = apply(&deep48, TransformKind::Unroll, &mut rng, false);
-    }));
-
-    // the simulator itself (full recompute — `latency_full` bypasses the
-    // block memo so these keep measuring per-block model cost, not cache
-    // lookups)
-    all.push(bench_fn("sim_latency_cpu_attention", budget, || {
-        std::hint::black_box(sim_cpu.latency_full(&sched));
-    }));
-    all.push(bench_fn("sim_latency_gpu_attention", budget, || {
-        std::hint::black_box(sim_gpu.latency_full(&sched));
-    }));
-
-    // ---- incremental block-level evaluation --------------------------------
-    // llama_e2e (the fused decoder layer — the block-count-heavy scenario)
-    // at trace depth ≥ 32: `sim_latency_full_*` recomputes every block per
-    // call; `sim_latency_incremental_*` serves unchanged blocks from the
-    // warmed thread-local memo (the steady state of the search hot loop,
-    // where each candidate shares all-but-one block with an evaluated
-    // ancestor). The printed speedup is the headline incremental-eval win.
-    {
-        let wl = Arc::new(
-            workloads::by_name("llama_e2e").expect("llama_e2e scenario family resolves"),
-        );
-        let deep_e2e = {
-            let mut rng = Rng::new(7);
-            let vocab = TransformKind::vocabulary(false);
-            let mut s = Schedule::initial(wl.clone());
-            let mut applied = 0;
-            while applied < 32 {
-                if let Ok(next) = apply(&s, *rng.choice(&vocab), &mut rng, false) {
-                    s = next;
-                    applied += 1;
-                }
-            }
-            s
-        };
-        assert!(deep_e2e.trace.len() >= 32, "bench needs trace depth >= 32");
-        let full = bench_fn("sim_latency_full_llama_e2e_depth32", budget, || {
-            std::hint::black_box(sim_cpu.latency_full(&deep_e2e));
-        });
-        litecoop::sim::blockcache::clear_thread();
-        sim_cpu.latency(&deep_e2e); // warm the memo
-        let incr = bench_fn("sim_latency_incremental_llama_e2e_depth32", budget, || {
-            std::hint::black_box(sim_cpu.latency(&deep_e2e));
-        });
-        assert_eq!(
-            sim_cpu.latency(&deep_e2e).to_bits(),
-            sim_cpu.latency_full(&deep_e2e).to_bits(),
-            "incremental evaluation must stay bit-identical"
-        );
-        println!(
-            "bench {:<44} speedup vs full recompute {:.2}x",
-            "sim_latency_full_vs_incremental",
-            full.mean_ns / incr.mean_ns
-        );
-        all.push(full);
-        all.push(incr);
-    }
-
-    all.push(bench_fn("featurize_attention", budget, || {
-        std::hint::black_box(features::featurize(&sched, Target::Cpu));
-    }));
-
-    // trained cost model inference
-    let mut cm = CostModel::new(Target::Cpu, 7);
-    let mut r2 = Rng::new(2);
-    let vocab = TransformKind::vocabulary(false);
-    for _ in 0..120 {
-        let seq: Vec<_> = (0..3).map(|_| *r2.choice(&vocab)).collect();
-        if let Ok(s) =
-            litecoop::schedule::transforms::apply_sequence(&base, &seq, &mut r2, false)
-        {
-            cm.measure(&sim_cpu, &s);
-        }
-    }
-    all.push(bench_fn("costmodel_predict", budget, || {
-        std::hint::black_box(cm.predict_latency(&sched));
-    }));
-
-    // SoA-flattened GBT: scalar predict per row vs one batched pass over
-    // a candidate-lane-sized batch (trees outer, node arrays cache-hot)
-    {
-        use litecoop::costmodel::gbt::{Gbt, GbtParams};
-        let mut gr = Rng::new(13);
-        let rows: Vec<Vec<f64>> = (0..256usize)
-            .map(|i| {
-                features::featurize(&transformed(&base, 2 + (i % 6), 100 + i as u64), Target::Cpu)
-            })
-            .collect();
-        let ys: Vec<f64> = rows
-            .iter()
-            .map(|r| r.iter().sum::<f64>().sin())
-            .collect();
-        let gbt = Gbt::fit(GbtParams::default(), &rows, &ys, &mut gr);
-        let scalar = bench_fn("gbt_predict_scalar_256rows", budget, || {
-            let mut acc = 0.0;
-            for r in &rows {
-                acc += gbt.predict(r);
-            }
-            std::hint::black_box(acc);
-        });
-        let batch = bench_fn("gbt_predict_batch_256rows", budget, || {
-            std::hint::black_box(gbt.predict_batch(&rows));
-        });
-        println!(
-            "bench {:<44} speedup vs scalar {:.2}x",
-            "gbt_predict_batch_vs_scalar",
-            scalar.mean_ns / batch.mean_ns
-        );
-        all.push(scalar);
-        all.push(batch);
-    }
-
-    // prompt rendering
-    let set = ModelSet::new(paper_config(8, "gpt-5.2"));
-    let ctx = prompts::PromptCtx {
-        current: prompts::VariantCtx {
-            code: print_dominant(&sched, false).into(),
-            trace_tail: sched.trace.render_tail(8).into(),
-            score: 0.42,
-        },
-        parent: None,
-        grandparent: None,
-        vocabulary: vocab.clone(),
-        leaf_depth: 4,
-        trials_done: 100,
-        trials_budget: 300,
-        model_stats: set.stat_lines(),
-        local_models: [None, None, None],
-    };
-    all.push(bench_fn("prompt_render_regular", budget, || {
-        std::hint::black_box(prompts::regular_prompt(&ctx));
-    }));
-
-    // one full MCTS iteration (selection→expansion→rollout→backprop)
-    let models = ModelSet::new(paper_config(8, "gpt-5.2"));
-    let cfg = SearchConfig {
-        budget: usize::MAX / 2,
-        seed: 3,
-        checkpoints: vec![],
-        ..SearchConfig::default()
-    };
-    let mut engine = Mcts::new(cfg, models, Simulator::new(Target::Cpu), base.clone());
-    all.push(bench_fn("mcts_full_iteration", Duration::from_millis(800), || {
-        engine.step();
-    }));
-
-    // iteration throughput at depth: branching=1 forces a single chain, so
-    // every measured iteration selects through (and extends) a path at
-    // least 14 nodes deep — the regime where deep-clone schedules and
-    // O(depth) trace keys used to make each step O(depth). Timed by hand
-    // rather than through bench_fn: each 8-step window stays below the
-    // engine's depth cap (past it, expansions pile children onto one node
-    // and per-step cost grows with iteration count), and the engine
-    // rebuild between windows happens OUTSIDE the timed region so the
-    // reported numbers measure iteration cost only.
-    let mk_deep = || {
-        let cfg = SearchConfig {
-            branching: 1,
-            budget: usize::MAX / 2,
-            seed: 5,
-            checkpoints: vec![],
-            ..SearchConfig::default()
-        };
-        let models = ModelSet::new(paper_config(8, "gpt-5.2"));
-        let mut e = Mcts::new(cfg, models, Simulator::new(Target::Cpu), base.clone());
-        for _ in 0..14 {
-            e.step();
-        }
-        e
-    };
-    const DEEP_WINDOW: usize = 8;
-    const DEEP_ROUNDS: usize = 40;
-    let mut samples_ns = Vec::with_capacity(DEEP_ROUNDS);
-    for _ in 0..DEEP_ROUNDS {
-        let mut deep_engine = mk_deep();
-        let t = std::time::Instant::now();
-        for _ in 0..DEEP_WINDOW {
-            deep_engine.step();
-        }
-        samples_ns.push(t.elapsed().as_nanos() as f64 / DEEP_WINDOW as f64);
-    }
-    let deep_summary = Summary::from_samples(
-        "mcts_iteration_at_depth14",
-        &samples_ns,
-        DEEP_ROUNDS * DEEP_WINDOW,
-    );
-    println!("{}", deep_summary.line());
-    all.push(deep_summary);
-
-    // ---- tree-parallel search: one search across N workers -----------------
-    // `parallel_search_serial_baseline` is the serial engine (run_parallel(1)
-    // delegates to run()); the `parallel_search_speedup_{2,4,8}` entries time
-    // the identical configuration at 2/4/8 workers — each value is wall-clock
-    // for one full search, so speedup = serial_mean / parallel_mean (also
-    // printed). Deterministic per (seed, threads); thread counts explore
-    // different but equally valid trees, so this measures throughput, not
-    // result equivalence (the determinism tests pin that).
-    let mk_par = || {
-        let cfg = SearchConfig {
-            budget: 64,
-            seed: 11,
-            checkpoints: vec![],
-            ..SearchConfig::default()
-        };
-        let models = ModelSet::new(paper_config(4, "gpt-5.2"));
-        Mcts::new(cfg, models, Simulator::new(Target::Cpu), base.clone())
-    };
-    const PAR_ROUNDS: usize = 3;
-    let mut serial_mean_ns = 0.0f64;
-    for t in [1usize, 2, 4, 8] {
-        let mut par_samples_ns = Vec::with_capacity(PAR_ROUNDS);
-        for _ in 0..PAR_ROUNDS {
-            let engine = mk_par();
-            let t0 = std::time::Instant::now();
-            let r = engine.run_parallel("llama3_attention", t);
-            std::hint::black_box(r.best_speedup);
-            par_samples_ns.push(t0.elapsed().as_nanos() as f64);
-        }
-        let name = if t == 1 {
-            "parallel_search_serial_baseline".to_string()
-        } else {
-            format!("parallel_search_speedup_{t}")
-        };
-        let s = Summary::from_samples(&name, &par_samples_ns, PAR_ROUNDS);
-        println!("{}", s.line());
-        if t == 1 {
-            serial_mean_ns = s.mean_ns;
-        } else {
-            println!(
-                "bench {:<44} speedup vs serial {:.2}x",
-                name,
-                serial_mean_ns / s.mean_ns
-            );
-        }
-        all.push(s);
-    }
-
-    // ---- persistent eval cache: serialization + warm-start payoff ----------
-    // `cache_{save,load}_10k` time the file round-trip of a 10k-entry
-    // ground-truth map (the sweep driver pays this once per process).
-    // `search_warm_vs_cold` times one full fixed-seed search cold and
-    // again warm-started from its own cache — the wall-clock payoff a
-    // second process gets from `--cache-file` on overlapping scenarios.
-    {
-        use litecoop::mcts::evalcache::EvalCache;
-        let mut big = EvalCache::new();
-        for i in 0..10_000u64 {
-            big.latency_or(i.wrapping_mul(0x9E37_79B9_7F4A_7C15), || {
-                (i as f64).mul_add(1e-9, 1e-4)
-            });
-        }
-        let path = std::env::temp_dir().join(format!(
-            "litecoop_bench_cache_{}.json",
-            std::process::id()
-        ));
-        let path = path.to_str().unwrap().to_string();
-        all.push(bench_fn("cache_save_10k", budget, || {
-            big.save_file(&path).expect("save cache");
-        }));
-        all.push(bench_fn("cache_load_10k", budget, || {
-            let c = EvalCache::load_file(&path).expect("load cache");
-            std::hint::black_box(c.len());
-        }));
-        let _ = std::fs::remove_file(&path);
-
-        let mk_search = |cache: EvalCache| {
-            let cfg = SearchConfig {
-                budget: 80,
-                seed: 17,
-                checkpoints: vec![],
-                ..SearchConfig::default()
-            };
-            let models = ModelSet::new(paper_config(4, "gpt-5.2"));
-            Mcts::with_cache(cfg, models, Simulator::new(Target::Cpu), base.clone(), cache)
-        };
-        let (_, warm) = mk_search(EvalCache::new()).run_with_cache("llama3_attention");
-        all.push(bench_fn("search_cold_80samples", budget, || {
-            let (r, _) = mk_search(EvalCache::new()).run_with_cache("llama3_attention");
-            std::hint::black_box(r.best_speedup);
-        }));
-        all.push(bench_fn("search_warm_80samples", budget, || {
-            let (r, _) = mk_search(warm.clone()).run_with_cache("llama3_attention");
-            std::hint::black_box(r.best_speedup);
-        }));
-    }
-
+    let all = litecoop::benchutil::hotpaths::run_suite(Some(allocation_count));
     write_json_report("BENCH_hotpaths.json", "hot_paths", &all)
         .expect("write BENCH_hotpaths.json");
     println!("wrote BENCH_hotpaths.json ({} benchmarks)", all.len());

@@ -9,6 +9,11 @@
 //! Bench targets that track a perf trajectory over time additionally
 //! collect their [`Summary`]s and emit a machine-readable JSON report via
 //! [`write_json_report`] (e.g. `hot_paths` writes `BENCH_hotpaths.json`).
+//! Reports round-trip through [`load_report`], and
+//! [`compare_to_baseline`] turns (baseline, current) report pairs into
+//! the per-bench verdicts the `experiments perfgate` CI gate enforces.
+
+pub mod hotpaths;
 
 use std::time::{Duration, Instant};
 
@@ -17,38 +22,61 @@ use std::time::{Duration, Instant};
 pub struct Summary {
     pub name: String,
     pub mean_ns: f64,
+    /// Median per-iteration time — the statistic the perf gate compares
+    /// (robust to scheduler-noise outliers that skew the mean).
+    pub median_ns: f64,
     pub std_ns: f64,
     pub min_ns: f64,
     pub iters: usize,
+    /// Heap allocations per iteration, when the bench target installed a
+    /// counting allocator (see `benches/hot_paths.rs`); `None` when not
+    /// measured. Reported in the JSON only when present.
+    pub allocs_per_iter: Option<f64>,
 }
 
 impl Summary {
     /// Summarize raw per-iteration samples (nanoseconds, non-empty) into a
-    /// [`Summary`] — the single source of the mean/std/min statistics used
-    /// by [`bench_fn`] and by hand-timed benches (e.g. the deep-iteration
-    /// bench in `hot_paths`).
+    /// [`Summary`] — the single source of the mean/median/std/min
+    /// statistics used by [`bench_fn`] and by hand-timed benches (e.g. the
+    /// deep-iteration bench in `hot_paths`).
     pub fn from_samples(name: &str, samples_ns: &[f64], iters: usize) -> Summary {
         let n = samples_ns.len() as f64;
         let mean = samples_ns.iter().sum::<f64>() / n;
         let var = samples_ns.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
         let min = samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut sorted = samples_ns.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mid = sorted.len() / 2;
+        let median = if sorted.len() % 2 == 0 {
+            0.5 * (sorted[mid - 1] + sorted[mid])
+        } else {
+            sorted[mid]
+        };
         Summary {
             name: name.to_string(),
             mean_ns: mean,
+            median_ns: median,
             std_ns: var.sqrt(),
             min_ns: min,
             iters,
+            allocs_per_iter: None,
         }
     }
 
     pub fn line(&self) -> String {
+        let allocs = match self.allocs_per_iter {
+            Some(a) => format!("  allocs/iter {a:.1}"),
+            None => String::new(),
+        };
         format!(
-            "bench {:<44} mean {:>12}  std {:>12}  min {:>12}  iters {}",
+            "bench {:<44} mean {:>12}  med {:>12}  std {:>12}  min {:>12}  iters {}{}",
             self.name,
             fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
             fmt_ns(self.std_ns),
             fmt_ns(self.min_ns),
-            self.iters
+            self.iters,
+            allocs
         )
     }
 }
@@ -98,9 +126,11 @@ pub fn bench_fn<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Summary {
 }
 
 /// Serialize a bench run to machine-readable JSON:
-/// `{"bench": <id>, "results": [{"name", "mean_ns", "std_ns", "min_ns",
-/// "iters"}, ...]}` with results in run order. Deterministic layout (the
-/// writer sorts object keys), so diffs between runs show only the numbers.
+/// `{"bench": <id>, "results": [{"name", "mean_ns", "median_ns",
+/// "std_ns", "min_ns", "iters"}, ...]}` with results in run order
+/// (`allocs_per_iter` appears only on benches that measured it).
+/// Deterministic layout (the writer sorts object keys), so diffs between
+/// runs show only the numbers.
 pub fn json_report(bench: &str, summaries: &[Summary]) -> crate::util::json::Json {
     use crate::util::json::Json;
     let results: Vec<Json> = summaries
@@ -109,9 +139,13 @@ pub fn json_report(bench: &str, summaries: &[Summary]) -> crate::util::json::Jso
             let mut o = Json::obj();
             o.set("name", s.name.as_str().into())
                 .set("mean_ns", s.mean_ns.into())
+                .set("median_ns", s.median_ns.into())
                 .set("std_ns", s.std_ns.into())
                 .set("min_ns", s.min_ns.into())
                 .set("iters", s.iters.into());
+            if let Some(a) = s.allocs_per_iter {
+                o.set("allocs_per_iter", a.into());
+            }
             o
         })
         .collect();
@@ -123,6 +157,94 @@ pub fn json_report(bench: &str, summaries: &[Summary]) -> crate::util::json::Jso
 /// Write [`json_report`] to `path` (with a trailing newline).
 pub fn write_json_report(path: &str, bench: &str, summaries: &[Summary]) -> std::io::Result<()> {
     std::fs::write(path, format!("{}\n", json_report(bench, summaries)))
+}
+
+/// Parse a [`json_report`]-format file back into summaries (run order
+/// preserved). Reports written before `median_ns` existed fall back to
+/// `mean_ns`, so an old committed baseline stays comparable instead of
+/// failing the gate on a format change.
+pub fn load_report(path: &str) -> Result<Vec<Summary>, String> {
+    use crate::util::json::Json;
+    let j = Json::parse_file(path)?;
+    let rs = j
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path}: missing 'results' array"))?;
+    rs.iter()
+        .map(|r| {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{path}: result missing 'name'"))?
+                .to_string();
+            let num = |k: &str| r.get(k).and_then(Json::as_f64);
+            let mean_ns =
+                num("mean_ns").ok_or_else(|| format!("{path}: '{name}' missing 'mean_ns'"))?;
+            Ok(Summary {
+                median_ns: num("median_ns").unwrap_or(mean_ns),
+                mean_ns,
+                std_ns: num("std_ns").unwrap_or(0.0),
+                min_ns: num("min_ns").unwrap_or(mean_ns),
+                iters: num("iters").unwrap_or(0.0) as usize,
+                allocs_per_iter: num("allocs_per_iter"),
+                name,
+            })
+        })
+        .collect()
+}
+
+/// One row of a perf-gate comparison ([`compare_to_baseline`]).
+#[derive(Clone, Debug)]
+pub struct GateRow {
+    pub name: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    /// Relative change in percent; positive = slower than baseline.
+    pub delta_pct: f64,
+    /// `current` exceeds `baseline` by more than the tolerance.
+    pub regressed: bool,
+}
+
+impl GateRow {
+    /// Human-readable gate line (mirrors [`Summary::line`]'s layout).
+    pub fn line(&self) -> String {
+        format!(
+            "gate  {:<44} base {:>12}  now {:>12}  delta {:>+7.1}%  {}",
+            self.name,
+            fmt_ns(self.baseline_ns),
+            fmt_ns(self.current_ns),
+            self.delta_pct,
+            if self.regressed { "REGRESSED" } else { "ok" }
+        )
+    }
+}
+
+/// Compare a current run against a committed baseline: median vs median
+/// (the robust center under scheduler noise; [`load_report`] substitutes
+/// the mean for pre-median baselines) per benchmark name present in
+/// **both** reports, in baseline order. Benchmarks only one side has are
+/// skipped, so adding or retiring a bench never trips the gate; a bench
+/// regresses when it is more than `tolerance_pct` percent slower than
+/// its baseline median.
+pub fn compare_to_baseline(
+    baseline: &[Summary],
+    current: &[Summary],
+    tolerance_pct: f64,
+) -> Vec<GateRow> {
+    baseline
+        .iter()
+        .filter_map(|b| {
+            let c = current.iter().find(|c| c.name == b.name)?;
+            let delta_pct = (c.median_ns / b.median_ns.max(f64::MIN_POSITIVE) - 1.0) * 100.0;
+            Some(GateRow {
+                name: b.name.clone(),
+                baseline_ns: b.median_ns,
+                current_ns: c.median_ns,
+                delta_pct,
+                regressed: delta_pct > tolerance_pct,
+            })
+        })
+        .collect()
 }
 
 /// Time a single long-running operation (end-to-end experiment benches).
@@ -176,14 +298,34 @@ mod tests {
         assert!(fmt_ns(2_000_000_000.0).ends_with('s'));
     }
 
+    /// Summary literal for gate tests: only name and median matter.
+    fn summary(name: &str, median_ns: f64) -> Summary {
+        Summary {
+            name: name.into(),
+            mean_ns: median_ns,
+            median_ns,
+            std_ns: 0.0,
+            min_ns: median_ns,
+            iters: 10,
+            allocs_per_iter: None,
+        }
+    }
+
     #[test]
     fn from_samples_stats() {
         let s = Summary::from_samples("x", &[10.0, 20.0, 30.0], 3);
         assert!((s.mean_ns - 20.0).abs() < 1e-9);
+        assert_eq!(s.median_ns, 20.0);
         assert_eq!(s.min_ns, 10.0);
         assert!((s.std_ns - (200.0f64 / 3.0).sqrt()).abs() < 1e-9);
         assert_eq!(s.iters, 3);
         assert_eq!(s.name, "x");
+        assert_eq!(s.allocs_per_iter, None);
+        // even sample count: median = midpoint of the two central samples,
+        // robust against the outlier that drags the mean
+        let s = Summary::from_samples("y", &[40.0, 10.0, 20.0, 1000.0], 4);
+        assert_eq!(s.median_ns, 30.0);
+        assert!(s.mean_ns > 200.0);
     }
 
     #[test]
@@ -193,16 +335,20 @@ mod tests {
             Summary {
                 name: "trace_key_depth16".into(),
                 mean_ns: 42.5,
+                median_ns: 41.75,
                 std_ns: 1.25,
                 min_ns: 40.0,
                 iters: 1000,
+                allocs_per_iter: None,
             },
             Summary {
                 name: "apply_deep".into(),
                 mean_ns: 900.0,
+                median_ns: 890.0,
                 std_ns: 10.0,
                 min_ns: 880.0,
                 iters: 500,
+                allocs_per_iter: Some(3.5),
             },
         ];
         let j = json_report("hot_paths", &summaries);
@@ -212,6 +358,10 @@ mod tests {
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[0].get("name").unwrap().as_str(), Some("trace_key_depth16"));
         assert_eq!(rs[0].get("mean_ns").unwrap().as_f64(), Some(42.5));
+        assert_eq!(rs[0].get("median_ns").unwrap().as_f64(), Some(41.75));
+        // allocs_per_iter appears only where it was measured
+        assert!(rs[0].get("allocs_per_iter").is_none());
+        assert_eq!(rs[1].get("allocs_per_iter").unwrap().as_f64(), Some(3.5));
         assert_eq!(rs[1].get("iters").unwrap().as_f64(), Some(500.0));
     }
 
@@ -225,15 +375,91 @@ mod tests {
         let summaries = vec![Summary {
             name: "n".into(),
             mean_ns: 1.0,
+            median_ns: 1.0,
             std_ns: 0.0,
             min_ns: 1.0,
             iters: 5,
+            allocs_per_iter: Some(0.0),
         }];
         write_json_report(&path, "t", &summaries).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.ends_with('\n'));
         assert!(Json::parse(text.trim_end()).is_ok());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_report_roundtrips_written_report() {
+        let path = std::env::temp_dir()
+            .join(format!("litecoop_bench_load_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let mut a = summary("alpha", 100.0);
+        a.allocs_per_iter = Some(2.0);
+        let b = summary("beta", 250.0);
+        write_json_report(&path, "hot_paths", &[a, b]).unwrap();
+        let back = load_report(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "alpha");
+        assert_eq!(back[0].median_ns, 100.0);
+        assert_eq!(back[0].allocs_per_iter, Some(2.0));
+        assert_eq!(back[1].name, "beta");
+        assert_eq!(back[1].iters, 10);
+        assert_eq!(back[1].allocs_per_iter, None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_report_falls_back_to_mean_for_old_baselines() {
+        // a pre-median report (the format the first committed baselines
+        // may carry) must load with median := mean, not fail the gate
+        let path = std::env::temp_dir()
+            .join(format!("litecoop_bench_old_format_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(
+            &path,
+            r#"{"bench":"hot_paths","results":[{"name":"old","mean_ns":50.0,"std_ns":1.0,"min_ns":48.0,"iters":7}]}"#,
+        )
+        .unwrap();
+        let back = load_report(&path).unwrap();
+        assert_eq!(back[0].median_ns, 50.0);
+        assert_eq!(back[0].min_ns, 48.0);
+        let _ = std::fs::remove_file(&path);
+        assert!(load_report("/nonexistent/litecoop_bench.json").is_err());
+    }
+
+    #[test]
+    fn gate_flags_synthetic_regression_beyond_tolerance() {
+        // fabricated baseline vs a current run with one >tolerance
+        // regression — the exact scenario `experiments perfgate` must
+        // turn into a nonzero exit
+        let baseline = vec![
+            summary("stable", 100.0),
+            summary("regressed", 100.0),
+            summary("improved", 100.0),
+            summary("retired_bench", 40.0),
+        ];
+        let current = vec![
+            summary("stable", 104.0),    // +4% — inside a 10% tolerance
+            summary("regressed", 125.0), // +25% — beyond tolerance
+            summary("improved", 60.0),   // faster never trips the gate
+            summary("brand_new_bench", 7.0),
+        ];
+        let rows = compare_to_baseline(&baseline, &current, 10.0);
+        // names present in both reports only, baseline order
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].name, "stable");
+        assert!(!rows[0].regressed);
+        assert!(rows[1].regressed, "{:?}", rows[1]);
+        assert!((rows[1].delta_pct - 25.0).abs() < 1e-9);
+        assert!(!rows[2].regressed);
+        assert!(rows[2].delta_pct < 0.0);
+        assert!(rows.iter().any(|r| r.regressed));
+        // a zero-tolerance gate flags even the small drift
+        let strict = compare_to_baseline(&baseline, &current, 0.0);
+        assert!(strict[0].regressed);
+        // line rendering marks the verdicts
+        assert!(rows[1].line().contains("REGRESSED"));
+        assert!(rows[0].line().contains("ok"));
     }
 
     #[test]

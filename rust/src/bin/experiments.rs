@@ -34,6 +34,16 @@
 //! per-lint-code diagnostic table. Exits 5 if any Deny-level lint fires
 //! on a reachable schedule — the apply-time gate's CI contract.
 //!
+//! Performance gate (see `litecoop::benchutil`):
+//!   experiments perfgate [--baseline PATH] [--tolerance PCT]
+//!               [--write-baseline]
+//! runs the hot-path benchmark suite and compares each benchmark's
+//! median against the committed baseline report (default
+//! `BENCH_baseline.json`); exits 6 if any benchmark is more than PCT
+//! percent slower (default 25, sized for shared-runner noise). A missing
+//! baseline is a loud skip, exit 0 — the gate arms itself the first time
+//! a toolchain-bearing run commits `--write-baseline` output.
+//!
 //! Absolute numbers come from the simulated substrate (DESIGN.md
 //! §Substitutions); the *shape* (who wins, routing fractions, reduction
 //! factors) is the reproduction target. Reports land in reports/<id>.md.
@@ -857,6 +867,79 @@ fn blockmemo_smoke(o: &Opts, args: &Args) {
     }
 }
 
+/// CI perf gate: run the hot-path suite in-process and hold every
+/// benchmark's median within `--tolerance` percent of the committed
+/// baseline ([`litecoop::benchutil::compare_to_baseline`]). Exit 6 on
+/// any regression (or an unreadable/disjoint baseline); a *missing*
+/// baseline skips loudly with exit 0, so the gate can ship before the
+/// first toolchain-bearing environment commits one with
+/// `--write-baseline`.
+fn perfgate(args: &Args) {
+    use litecoop::benchutil::{self, hotpaths};
+
+    let baseline_path = args.str_or("baseline", "BENCH_baseline.json");
+    let tolerance = args.f64_or("tolerance", 25.0);
+    let write = args.has("write-baseline");
+
+    if !write && !std::path::Path::new(&baseline_path).exists() {
+        println!(
+            "perfgate: SKIPPED — no baseline at {baseline_path}. To arm the gate, run \
+             `experiments perfgate --write-baseline` from a release build on a quiet \
+             machine and commit the resulting {baseline_path}."
+        );
+        return;
+    }
+
+    let current = hotpaths::run_suite(None);
+
+    if write {
+        if let Err(e) = benchutil::write_json_report(&baseline_path, "hot_paths", &current) {
+            eprintln!("perfgate: failed to write {baseline_path}: {e}");
+            std::process::exit(6);
+        }
+        println!(
+            "perfgate: baseline written to {baseline_path} ({} benchmarks) — commit it \
+             to arm the CI gate",
+            current.len()
+        );
+        return;
+    }
+
+    let baseline = benchutil::load_report(&baseline_path).unwrap_or_else(|e| {
+        eprintln!("perfgate: unreadable baseline: {e}");
+        std::process::exit(6);
+    });
+    let rows = benchutil::compare_to_baseline(&baseline, &current, tolerance);
+    for r in &rows {
+        println!("{}", r.line());
+    }
+    if rows.is_empty() {
+        eprintln!(
+            "perfgate: no benchmark names shared between {baseline_path} and the current \
+             suite — stale baseline; refresh it with --write-baseline"
+        );
+        std::process::exit(6);
+    }
+    let regressed: Vec<&str> = rows
+        .iter()
+        .filter(|r| r.regressed)
+        .map(|r| r.name.as_str())
+        .collect();
+    if !regressed.is_empty() {
+        eprintln!(
+            "perfgate: {} benchmark(s) regressed more than {tolerance}% vs \
+             {baseline_path}: {}",
+            regressed.len(),
+            regressed.join(", ")
+        );
+        std::process::exit(6);
+    }
+    println!(
+        "perfgate: OK — {} benchmarks within {tolerance}% of {baseline_path}",
+        rows.len()
+    );
+}
+
 fn main() {
     let args = Args::parse();
     let quick = args.has("quick");
@@ -890,6 +973,7 @@ fn main() {
         "sweep" => sweep(&o, &args),
         "blockmemo_smoke" => blockmemo_smoke(&o, &args),
         "lint_audit" => lint_audit(&o, &args),
+        "perfgate" => perfgate(&args),
         "all" => {
             fig_speedup_curves(&o, "fig2");
             table1(&o);

@@ -96,10 +96,16 @@ fn block_features(s: &Schedule, b: usize, target: Target) -> [f64; N_FEATURES] {
     ]
 }
 
-/// FLOP-weighted aggregate feature vector over all blocks.
-pub fn featurize(s: &Schedule, target: Target) -> Vec<f64> {
+/// FLOP-weighted aggregate feature vector over all blocks, written into
+/// a caller-provided row of length [`N_FEATURES`] — the allocation-free
+/// entry the batched scoring path uses (rows live in a reusable
+/// [`FeatureMatrix`] scratch instead of one heap `Vec` per candidate).
+/// Bit-identical to [`featurize`]: same per-block extraction, same
+/// weighted accumulation order.
+pub fn featurize_into(s: &Schedule, target: Target, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), N_FEATURES);
+    out.fill(0.0);
     let total_flops: f64 = s.workload.flops().max(1.0);
-    let mut out = vec![0.0; N_FEATURES];
     for b in 0..s.workload.blocks.len() {
         let w = s.workload.blocks[b].flops().max(total_flops * 1e-4) / total_flops;
         let f = block_features(s, b, target);
@@ -107,7 +113,84 @@ pub fn featurize(s: &Schedule, target: Target) -> Vec<f64> {
             *o += w * x;
         }
     }
+}
+
+/// FLOP-weighted aggregate feature vector over all blocks (allocating
+/// convenience wrapper over [`featurize_into`]).
+pub fn featurize(s: &Schedule, target: Target) -> Vec<f64> {
+    let mut out = vec![0.0; N_FEATURES];
+    featurize_into(s, target, &mut out);
     out
+}
+
+/// Row-major flat feature matrix: one contiguous `Vec<f64>` of
+/// `n_rows × width` values plus the row width. This is the batch-scoring
+/// scratch that replaces `&[Vec<f64>]` on the hot path: a lane of
+/// candidates is featurized into one reusable buffer
+/// ([`FeatureMatrix::push_row_with`] + [`featurize_into`]), so in steady
+/// state scoring a round performs **zero per-row heap allocations** —
+/// `reset` keeps the allocation and only clears the length.
+#[derive(Clone, Debug, Default)]
+pub struct FeatureMatrix {
+    data: Vec<f64>,
+    width: usize,
+}
+
+impl FeatureMatrix {
+    pub fn new() -> FeatureMatrix {
+        FeatureMatrix::default()
+    }
+
+    /// Drop all rows and set the row width. The backing allocation is
+    /// kept — this is what makes a long-lived scratch allocation-free
+    /// after warm-up.
+    pub fn reset(&mut self, width: usize) {
+        self.data.clear();
+        self.width = width;
+    }
+
+    /// Row width (features per row).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of complete rows held.
+    pub fn n_rows(&self) -> usize {
+        if self.width == 0 {
+            0
+        } else {
+            self.data.len() / self.width
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Append one row by copying `row` (length must equal the width).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.width, "row length != matrix width");
+        self.data.extend_from_slice(row);
+    }
+
+    /// Append one row written in place by `f` (handed a zeroed slice of
+    /// the configured width) — the zero-copy entry for
+    /// [`featurize_into`]-style writers.
+    pub fn push_row_with(&mut self, f: impl FnOnce(&mut [f64])) {
+        let start = self.data.len();
+        self.data.resize(start + self.width, 0.0);
+        f(&mut self.data[start..]);
+    }
+
+    /// Borrow row `i`.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Iterate over the rows in order.
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        (0..self.n_rows()).map(|i| self.row(i))
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +217,55 @@ mod tests {
         let s1 = apply(&s0, TransformKind::Vectorize, &mut rng, false).unwrap();
         let f1 = featurize(&s1, Target::Cpu);
         assert_ne!(f0, f1);
+    }
+
+    #[test]
+    fn featurize_into_bit_identical_to_featurize() {
+        let mut rng = Rng::new(5);
+        let mut s = Schedule::initial(Arc::new(gemm::gemm(256, 256, 256)));
+        let vocab = TransformKind::vocabulary(false);
+        let mut row = [1.5; N_FEATURES]; // stale garbage must be overwritten
+        for _ in 0..20 {
+            if let Ok(n) = apply(&s, *rng.choice(&vocab), &mut rng, false) {
+                s = n;
+            }
+            for target in [Target::Cpu, Target::Gpu] {
+                let expect = featurize(&s, target);
+                featurize_into(&s, target, &mut row);
+                for (a, b) in expect.iter().zip(row.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feature_matrix_layout_and_reuse() {
+        let mut m = FeatureMatrix::new();
+        assert_eq!(m.n_rows(), 0);
+        assert!(m.is_empty());
+        m.reset(3);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row_with(|r| {
+            assert_eq!(r, &[0.0, 0.0, 0.0]);
+            r[1] = 5.0;
+        });
+        assert_eq!(m.width(), 3);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[0.0, 5.0, 0.0]);
+        let rows: Vec<&[f64]> = m.rows().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], m.row(1));
+        // reset clears rows (and may change width) but keeps the buffer
+        m.reset(2);
+        assert_eq!(m.n_rows(), 0);
+        m.push_row(&[7.0, 8.0]);
+        assert_eq!(m.row(0), &[7.0, 8.0]);
+        // width 0 is inert, not a panic
+        m.reset(0);
+        assert_eq!(m.n_rows(), 0);
+        assert_eq!(m.rows().count(), 0);
     }
 
     #[test]

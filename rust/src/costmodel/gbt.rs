@@ -13,12 +13,15 @@
 //! all trees, plus per-tree root offsets). A node visit during
 //! prediction touches two `u32`s and one `f64` in arrays that stay
 //! resident in cache across rows, instead of chasing 24-byte enum nodes
-//! tree by tree — and [`Gbt::predict_batch`] walks trees in the outer
-//! loop so one tree's nodes are reused across the whole candidate batch.
-//! Flattening is a pure storage transform: the traversal visits the same
-//! nodes and sums tree outputs in the same order, so predictions are
-//! bit-identical to the per-tree representation (asserted in tests).
+//! tree by tree — and [`Gbt::predict_batch_into`] walks the rows of a
+//! flat [`FeatureMatrix`] in [`Gbt::LANES`]-wide chunks with the tree
+//! loop outer, so one tree's nodes are reused across a whole chunk of
+//! candidates. Flattening and chunking are pure storage/loop-order
+//! transforms: the traversal visits the same nodes and sums tree outputs
+//! in the same order, so predictions are bit-identical to the per-tree
+//! representation and to scalar [`Gbt::predict`] (asserted in tests).
 
+use super::features::FeatureMatrix;
 use crate::util::Rng;
 
 /// One node of a regression tree during **training** (per-tree vector
@@ -213,22 +216,55 @@ impl Gbt {
                 * self.params.learning_rate
     }
 
-    /// Batched prediction over many rows — bit-identical to mapping
-    /// [`Gbt::predict`] (each row accumulates tree outputs in the same
-    /// tree order), but iterates **trees in the outer loop** so one
-    /// tree's SoA node block stays cache-resident across the whole batch.
-    /// This is the entry point the candidate-scoring path uses
+    /// Fixed lane width of the chunked batch walk: small enough that a
+    /// chunk's accumulators live in registers / one cache line, wide
+    /// enough that a tree's SoA node block is reused across several rows
+    /// per pass.
+    pub const LANES: usize = 8;
+
+    /// Batched prediction over the rows of a flat [`FeatureMatrix`],
+    /// appended to `out` (cleared first; allocation-free once `out` has
+    /// warmed to the batch size). Bit-identical to mapping
+    /// [`Gbt::predict`]: each row accumulates tree outputs from 0.0 in
+    /// the same tree order, then applies `base + acc * learning_rate`.
+    /// The walk is **chunked**: rows advance in [`Gbt::LANES`]-wide
+    /// chunks with the tree loop outer and a branch-light lane loop
+    /// inner, so one tree's SoA node block stays cache-resident across
+    /// the chunk and the inner loop is auto-vectorization-friendly. This
+    /// is the entry point the candidate-scoring path uses
     /// (`Evaluator::score_batch`).
-    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        let mut acc = vec![0.0f64; xs.len()];
-        for &r in &self.roots {
-            for (a, x) in acc.iter_mut().zip(xs) {
-                *a += self.walk(r, x);
+    pub fn predict_batch_into(&self, m: &FeatureMatrix, out: &mut Vec<f64>) {
+        out.clear();
+        let n = m.n_rows();
+        out.reserve(n);
+        let mut i = 0;
+        while i < n {
+            let lanes = Self::LANES.min(n - i);
+            let mut acc = [0.0f64; Self::LANES];
+            for &r in &self.roots {
+                for (l, a) in acc.iter_mut().enumerate().take(lanes) {
+                    *a += self.walk(r, m.row(i + l));
+                }
             }
+            for &a in acc.iter().take(lanes) {
+                out.push(self.base + a * self.params.learning_rate);
+            }
+            i += lanes;
         }
-        acc.into_iter()
-            .map(|a| self.base + a * self.params.learning_rate)
-            .collect()
+    }
+
+    /// Batched prediction over slice-of-`Vec` rows — compat wrapper over
+    /// [`Gbt::predict_batch_into`] (copies the rows into a transient
+    /// [`FeatureMatrix`]; the hot path holds a reusable one instead).
+    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        let mut m = FeatureMatrix::new();
+        m.reset(xs.first().map_or(0, Vec::len));
+        for x in xs {
+            m.push_row(x);
+        }
+        let mut out = Vec::new();
+        self.predict_batch_into(&m, &mut out);
+        out
     }
 
     /// Training-set RMSE (diagnostic), via the batched path.
@@ -414,6 +450,53 @@ mod tests {
         }
         // empty batch is fine
         assert!(model.predict_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn chunked_batch_bit_identical_on_every_remainder() {
+        // the LANES-chunked walk must be exact for every partial final
+        // chunk: sweep batch sizes across several chunk boundaries
+        // (including 0, 1, LANES-1, LANES, LANES+1, and odd primes)
+        let mut rng = Rng::new(11);
+        let (x, y) = synth(300, &mut rng);
+        let model = Gbt::fit(GbtParams::default(), &x, &y, &mut rng);
+        let (pool, _) = synth(41, &mut rng);
+        for n in (0..=20).chain([Gbt::LANES * 3 + 5, 37, 41]) {
+            let rows = &pool[..n];
+            let batch = model.predict_batch(rows);
+            assert_eq!(batch.len(), n);
+            for (row, b) in rows.iter().zip(&batch) {
+                assert_eq!(
+                    model.predict(row).to_bits(),
+                    b.to_bits(),
+                    "chunked batch diverged from scalar at n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_batch_into_reuses_buffers_and_matches_scalar() {
+        let mut rng = Rng::new(12);
+        let (x, y) = synth(250, &mut rng);
+        let model = Gbt::fit(GbtParams::default(), &x, &y, &mut rng);
+        let (pool, _) = synth(19, &mut rng);
+        let mut m = FeatureMatrix::new();
+        let mut out = vec![f64::NAN; 3]; // stale contents must be cleared
+        // two rounds through the same scratch: the second must not see
+        // the first round's rows or predictions
+        for round in 0..2 {
+            let rows = if round == 0 { &pool[..19] } else { &pool[..7] };
+            m.reset(3);
+            for r in rows {
+                m.push_row(r);
+            }
+            model.predict_batch_into(&m, &mut out);
+            assert_eq!(out.len(), rows.len());
+            for (row, b) in rows.iter().zip(&out) {
+                assert_eq!(model.predict(row).to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,21 @@ pub mod gbt;
 use crate::schedule::Schedule;
 use crate::sim::{Simulator, Target};
 use crate::util::Rng;
+use features::FeatureMatrix;
 use gbt::{Gbt, GbtParams};
+
+/// Reusable scratch for the batched scoring path: the flat feature
+/// matrix the candidates are featurized into and the prediction output
+/// buffer. One instance lives on each evaluator
+/// ([`crate::mcts::evalcache::CachedEvaluator`]) and is threaded through
+/// [`CostModel::predict_latency_batch_into`], so in steady state a
+/// scoring round allocates **no** per-candidate feature rows — both
+/// buffers are cleared, not dropped, between rounds.
+#[derive(Debug, Default)]
+pub struct ScoreScratch {
+    pub feats: FeatureMatrix,
+    pub preds: Vec<f64>,
+}
 
 /// Online cost model: predicts log-latency from schedule features,
 /// retrained every `retrain_interval` measured samples.
@@ -114,24 +128,46 @@ impl CostModel {
         }
     }
 
-    /// Batched [`CostModel::predict_latency`]: featurizes every schedule,
-    /// runs one SoA [`Gbt::predict_batch`] pass over the rows, and
-    /// exponentiates per row — bit-identical to mapping the scalar path
-    /// (same featurization, same per-row tree-order accumulation, same
-    /// `exp`). Used by `Evaluator::score_batch` on the candidate-scoring
-    /// path, where a parallel round scores a whole lane of proposals at
-    /// once.
-    pub fn predict_latency_batch(&self, ss: &[&Schedule]) -> Vec<f64> {
+    /// Batched [`CostModel::predict_latency`] into a reusable
+    /// [`ScoreScratch`]: featurizes every schedule into the scratch's
+    /// flat [`FeatureMatrix`] ([`features::featurize_into`], no per-row
+    /// `Vec`), runs one chunked SoA [`Gbt::predict_batch_into`] pass, and
+    /// exponentiates in place — leaving one prediction per input schedule
+    /// in `scratch.preds`. Bit-identical to mapping the scalar path (same
+    /// featurization, same per-row tree-order accumulation, same `exp`).
+    /// Used by `Evaluator::score_batch` on the candidate-scoring path,
+    /// where a parallel round scores a whole lane of proposals at once;
+    /// with a warmed scratch the whole pass performs zero heap
+    /// allocations for feature rows.
+    pub fn predict_latency_batch_into(&self, ss: &[&Schedule], scratch: &mut ScoreScratch) {
         match &self.model {
             Some(m) => {
-                let rows: Vec<Vec<f64>> = ss
-                    .iter()
-                    .map(|s| features::featurize(s, self.target))
-                    .collect();
-                m.predict_batch(&rows).into_iter().map(f64::exp).collect()
+                scratch.feats.reset(features::N_FEATURES);
+                for s in ss {
+                    scratch
+                        .feats
+                        .push_row_with(|row| features::featurize_into(s, self.target, row));
+                }
+                m.predict_batch_into(&scratch.feats, &mut scratch.preds);
+                for p in &mut scratch.preds {
+                    *p = p.exp();
+                }
             }
-            None => ss.iter().map(|s| self.predict_latency(s)).collect(),
+            None => {
+                scratch.preds.clear();
+                scratch
+                    .preds
+                    .extend(ss.iter().map(|s| self.predict_latency(s)));
+            }
         }
+    }
+
+    /// Batched [`CostModel::predict_latency`] (allocating compat wrapper
+    /// over [`CostModel::predict_latency_batch_into`]).
+    pub fn predict_latency_batch(&self, ss: &[&Schedule]) -> Vec<f64> {
+        let mut scratch = ScoreScratch::default();
+        self.predict_latency_batch_into(ss, &mut scratch);
+        scratch.preds
     }
 
     /// Retraining generation, used to key cached predictions: `Some(n)`
@@ -263,6 +299,29 @@ mod tests {
             assert_eq!(cm.predict_latency(s).to_bits(), b.to_bits());
         }
         assert!(cm.predict_latency_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn predict_latency_batch_into_reuses_scratch_bitwise() {
+        // the allocation-free path: one scratch serves rounds of varying
+        // size (crossing GBT chunk boundaries) and every prediction stays
+        // bit-identical to the scalar path
+        let sim = Simulator::new(Target::Cpu);
+        let mut cm = CostModel::new(Target::Cpu, 13);
+        let variants = random_variants(20, 7);
+        for s in &variants {
+            cm.measure(&sim, s);
+        }
+        assert!(cm.generation().is_some());
+        let mut scratch = ScoreScratch::default();
+        for round in [20usize, 5, 13, 0, 1] {
+            let refs: Vec<&Schedule> = variants.iter().take(round).collect();
+            cm.predict_latency_batch_into(&refs, &mut scratch);
+            assert_eq!(scratch.preds.len(), refs.len());
+            for (s, p) in refs.iter().zip(&scratch.preds) {
+                assert_eq!(cm.predict_latency(s).to_bits(), p.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -51,7 +51,7 @@
 //!   [`crate::mcts::SearchResult::eval_cache`] and aggregated by the
 //!   parallel driver ([`crate::runtime::driver`]).
 
-use crate::costmodel::CostModel;
+use crate::costmodel::{CostModel, ScoreScratch};
 use crate::schedule::trace::{fnv_str, fnv_u64};
 use crate::schedule::Schedule;
 use crate::sim::{Simulator, Target};
@@ -495,6 +495,10 @@ pub struct CachedEvaluator {
     pub cost: CostModel,
     pub sim: Simulator,
     pub cache: EvalCache,
+    /// Reusable batch-scoring buffers (feature matrix + predictions) —
+    /// cleared, never dropped, between `score_batch` rounds, so lane
+    /// scoring performs zero per-candidate feature-row allocations.
+    pub scratch: ScoreScratch,
 }
 
 impl CachedEvaluator {
@@ -510,7 +514,12 @@ impl CachedEvaluator {
     pub fn with_cache(cost: CostModel, sim: Simulator, mut cache: EvalCache) -> CachedEvaluator {
         cache.retain_predictions_of(cost.salt);
         cache.reset_stats();
-        CachedEvaluator { cost, sim, cache }
+        CachedEvaluator {
+            cost,
+            sim,
+            cache,
+            scratch: ScoreScratch::default(),
+        }
     }
 
     /// Hand the cache back (e.g. to reuse it for a follow-up search).
@@ -521,7 +530,7 @@ impl CachedEvaluator {
 
 impl Evaluator for CachedEvaluator {
     fn measure(&mut self, s: &Schedule) -> Measured {
-        let key = trace_key(s, self.sim.target);
+        let key = trace_key(s, self.sim.target());
         let sim = &self.sim;
         let (lat, cache_hit) = self.cache.latency_or_served(key, || sim.latency(s));
         self.cost.observe(s, lat);
@@ -532,7 +541,7 @@ impl Evaluator for CachedEvaluator {
     }
 
     fn true_latency(&mut self, s: &Schedule) -> f64 {
-        let key = trace_key(s, self.sim.target);
+        let key = trace_key(s, self.sim.target());
         let sim = &self.sim;
         self.cache.latency_or(key, || sim.latency(s))
     }
@@ -540,7 +549,7 @@ impl Evaluator for CachedEvaluator {
     fn score(&mut self, s: &Schedule) -> f64 {
         let pred = match self.cost.generation() {
             Some(gen) => {
-                let key = (trace_key(s, self.sim.target), self.cost.salt, gen);
+                let key = (trace_key(s, self.sim.target()), self.cost.salt, gen);
                 let cost = &self.cost;
                 self.cache.prediction_or(key, || cost.predict_latency(s))
             }
@@ -553,9 +562,14 @@ impl Evaluator for CachedEvaluator {
 
     fn score_batch(&mut self, ss: &[&Schedule]) -> Vec<f64> {
         let preds = match self.cost.generation() {
-            Some(gen) => {
-                batched_predictions(&self.cost, gen, self.sim.target, &mut self.cache, ss)
-            }
+            Some(gen) => batched_predictions(
+                &self.cost,
+                gen,
+                self.sim.target(),
+                &mut self.cache,
+                &mut self.scratch,
+                ss,
+            ),
             // pre-fit predictions aren't pure and aren't cached — same
             // fallback as the scalar path, item by item
             None => self.cost.predict_latency_batch(ss),
@@ -571,7 +585,7 @@ impl Evaluator for CachedEvaluator {
     }
 
     fn target(&self) -> Target {
-        self.sim.target
+        self.sim.target()
     }
 
     fn cache_stats(&self) -> CacheStats {
@@ -839,17 +853,19 @@ impl PredStore for &SharedEvalCache {
 }
 
 /// Batched prediction scoring shared by both evaluators' `score_batch`:
-/// peek every key (uncounted), run **one** SoA
-/// [`CostModel::predict_latency_batch`] over the first occurrence of each
-/// missing key, then walk the items in order charging hits/misses — so
-/// values *and* counters are exactly what looping `Evaluator::score` per
-/// item would have produced, while the cost-model inference runs as one
-/// contiguous batch.
+/// peek every key (uncounted), run **one** chunked SoA
+/// [`CostModel::predict_latency_batch_into`] over the first occurrence of
+/// each missing key (feature rows land in the evaluator's reusable
+/// [`ScoreScratch`] — no per-candidate row allocations), then walk the
+/// items in order charging hits/misses — so values *and* counters are
+/// exactly what looping `Evaluator::score` per item would have produced,
+/// while the cost-model inference runs as one contiguous batch.
 fn batched_predictions<P: PredStore>(
     cost: &CostModel,
     generation: usize,
     target: Target,
     store: &mut P,
+    scratch: &mut ScoreScratch,
     ss: &[&Schedule],
 ) -> Vec<f64> {
     let keys: Vec<PredKey> = ss
@@ -866,9 +882,12 @@ fn batched_predictions<P: PredStore>(
             fresh_rows.push(s);
         }
     }
-    // one batched SoA inference pass over the misses
-    let fresh_vals = cost.predict_latency_batch(&fresh_rows);
-    let fresh: HashMap<PredKey, f64> = fresh_keys.into_iter().zip(fresh_vals).collect();
+    // one batched chunked-SoA inference pass over the misses
+    cost.predict_latency_batch_into(&fresh_rows, scratch);
+    let fresh: HashMap<PredKey, f64> = fresh_keys
+        .into_iter()
+        .zip(scratch.preds.iter().copied())
+        .collect();
     // charge in item order: first occurrence of a fresh key is the miss,
     // later occurrences (now inserted) and pre-existing keys are hits —
     // the same ledger as the sequential loop
@@ -895,11 +914,15 @@ pub struct SharedCachedEvaluator<'a> {
     pub cost: CostModel,
     pub sim: Simulator,
     pub cache: &'a SharedEvalCache,
+    /// Reusable batch-scoring buffers, same role as
+    /// [`CachedEvaluator::scratch`] (the coordinator thread owns it; the
+    /// shared part is only the cache).
+    pub scratch: ScoreScratch,
 }
 
 impl Evaluator for SharedCachedEvaluator<'_> {
     fn measure(&mut self, s: &Schedule) -> Measured {
-        let key = trace_key(s, self.sim.target);
+        let key = trace_key(s, self.sim.target());
         let sim = &self.sim;
         let (lat, cache_hit) = self.cache.latency_or_served(key, || sim.latency(s));
         self.cost.observe(s, lat);
@@ -910,7 +933,7 @@ impl Evaluator for SharedCachedEvaluator<'_> {
     }
 
     fn true_latency(&mut self, s: &Schedule) -> f64 {
-        let key = trace_key(s, self.sim.target);
+        let key = trace_key(s, self.sim.target());
         let sim = &self.sim;
         self.cache.latency_or(key, || sim.latency(s))
     }
@@ -918,7 +941,7 @@ impl Evaluator for SharedCachedEvaluator<'_> {
     fn score(&mut self, s: &Schedule) -> f64 {
         let pred = match self.cost.generation() {
             Some(gen) => {
-                let key = (trace_key(s, self.sim.target), self.cost.salt, gen);
+                let key = (trace_key(s, self.sim.target()), self.cost.salt, gen);
                 let cost = &self.cost;
                 self.cache.prediction_or(key, || cost.predict_latency(s))
             }
@@ -931,7 +954,14 @@ impl Evaluator for SharedCachedEvaluator<'_> {
         let preds = match self.cost.generation() {
             Some(gen) => {
                 let mut store = self.cache;
-                batched_predictions(&self.cost, gen, self.sim.target, &mut store, ss)
+                batched_predictions(
+                    &self.cost,
+                    gen,
+                    self.sim.target(),
+                    &mut store,
+                    &mut self.scratch,
+                    ss,
+                )
             }
             None => self.cost.predict_latency_batch(ss),
         };
@@ -946,7 +976,7 @@ impl Evaluator for SharedCachedEvaluator<'_> {
     }
 
     fn target(&self) -> Target {
-        self.sim.target
+        self.sim.target()
     }
 
     fn cache_stats(&self) -> CacheStats {
@@ -1369,6 +1399,7 @@ mod tests {
             cost: CostModel::new(Target::Cpu, 91),
             sim: Simulator::new(Target::Cpu),
             cache: &shared,
+            scratch: ScoreScratch::default(),
         };
         train(&mut conc);
         let before = conc.cache_stats();
@@ -1399,6 +1430,7 @@ mod tests {
             cost: CostModel::new(Target::Cpu, 77),
             sim: Simulator::new(Target::Cpu),
             cache: &shared,
+            scratch: ScoreScratch::default(),
         };
         for s in [&s0, &s1, &s0, &s1] {
             let a = serial.measure(s);

@@ -26,7 +26,7 @@ use crate::util::Rng;
 use evalcache::{
     CacheStats, CachedEvaluator, EvalCache, Evaluator, SharedCachedEvaluator, SharedEvalCache,
 };
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Next-model routing policy (Appendix G ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,22 +107,25 @@ impl Default for SearchConfig {
 /// One tree node: a joint ⟨program, llm⟩ state.
 ///
 /// The schedule sits behind an `Arc`: selection, expansion, rollout, and
-/// measurement all borrow or refcount-share it instead of deep-cloning,
-/// and the prompt renderings the node contributes to LLM context
-/// (`code`, `trace_tail`) are computed once here at insertion rather
-/// than re-rendered every iteration the node appears as leaf, parent, or
-/// grandparent.
+/// measurement all borrow or refcount-share it instead of deep-cloning.
+/// The prompt renderings the node contributes to LLM context (`code`,
+/// `trace_tail`) are **lazy**: a `OnceLock` renders them the first time
+/// the node actually appears in a prompt (as leaf, parent, or
+/// grandparent) and shares the `Arc<str>` by refcount ever after. Nodes
+/// that never reach a prompt — the common case for deep trees, where
+/// most nodes are never re-selected — pay nothing, and the insertion
+/// hot path allocates no prompt strings at all.
 #[derive(Clone, Debug)]
 struct Node {
     parent: Option<usize>,
     children: Vec<usize>,
     schedule: Arc<Schedule>,
-    /// [`print_dominant`] rendering of `schedule`, cached at insertion
-    /// and shared into prompt contexts by refcount.
-    code: Arc<str>,
-    /// `trace.render_tail(PROMPT_TRACE_TAIL)` of `schedule`, cached at
-    /// insertion and shared into prompt contexts by refcount.
-    trace_tail: Arc<str>,
+    /// [`print_dominant`] rendering of `schedule`, rendered on first
+    /// prompt use ([`Mcts::prompt_ctx`]) and shared by refcount after.
+    code: OnceLock<Arc<str>>,
+    /// `trace.render_tail(PROMPT_TRACE_TAIL)` of `schedule`, rendered on
+    /// first prompt use and shared by refcount after.
+    trace_tail: OnceLock<Arc<str>>,
     /// Model assigned to expand this node.
     llm: usize,
     visits: f64,
@@ -336,8 +339,8 @@ impl Mcts {
     ) -> Mcts {
         cfg.warm_cache = None;
         let lint_rejects_at_start = crate::analysis::lint_rejects();
-        let cost = CostModel::new(sim.target, cfg.seed);
-        let gpu = sim.target.is_gpu();
+        let cost = CostModel::new(sim.target(), cfg.seed);
+        let gpu = sim.target().is_gpu();
         let mut eval = CachedEvaluator::with_cache(cost, sim, cache);
         let mut rng = Rng::new(cfg.seed ^ 0x6C17_E600);
         let root = Arc::new(root);
@@ -349,8 +352,8 @@ impl Mcts {
             parent: None,
             children: Vec::new(),
             schedule: Arc::clone(&root),
-            code: print_dominant(root.as_ref(), gpu).into(),
-            trace_tail: root.trace.render_tail(PROMPT_TRACE_TAIL).into(),
+            code: OnceLock::new(),
+            trace_tail: OnceLock::new(),
             llm: root_llm,
             visits: 1.0,
             reward_sum: 0.5,
@@ -468,12 +471,23 @@ impl<E: Evaluator> Mcts<E> {
     fn prompt_ctx(&self, node_idx: usize) -> PromptCtx {
         let gpu = self.eval.target().is_gpu();
         let node = &self.nodes[node_idx];
-        // code / trace_tail were rendered once when the node was inserted;
-        // sharing them here is a refcount bump, not a string copy
-        let variant = |i: usize| VariantCtx {
-            code: Arc::clone(&self.nodes[i].code),
-            trace_tail: Arc::clone(&self.nodes[i].trace_tail),
-            score: self.nodes[i].predicted_score,
+        // code / trace_tail render lazily on a node's first prompt
+        // appearance; every later use is a refcount bump, not a string
+        // copy. Rendering draws no randomness, so laziness cannot perturb
+        // the search's RNG streams.
+        let variant = |i: usize| {
+            let n = &self.nodes[i];
+            VariantCtx {
+                code: Arc::clone(
+                    n.code
+                        .get_or_init(|| print_dominant(n.schedule.as_ref(), gpu).into()),
+                ),
+                trace_tail: Arc::clone(
+                    n.trace_tail
+                        .get_or_init(|| n.schedule.trace.render_tail(PROMPT_TRACE_TAIL).into()),
+                ),
+                score: n.predicted_score,
+            }
         };
         let parent_idx = node.parent;
         let gp_idx = parent_idx.and_then(|p| self.nodes[p].parent);
@@ -734,8 +748,9 @@ impl<E: Evaluator> Mcts<E> {
         }
     }
 
-    /// Insert phase: commit an expansion as a new tree node (rendering its
-    /// prompt context once, at insertion) and spend one sample.
+    /// Insert phase: commit an expansion as a new tree node (prompt
+    /// renderings stay unrendered until the node first appears in a
+    /// prompt) and spend one sample.
     fn insert_child(&mut self, leaf: usize, exp: Expansion) -> usize {
         let gpu = self.eval.target().is_gpu();
         // the apply-time Deny gate makes illegal states unreachable; in
@@ -747,16 +762,12 @@ impl<E: Evaluator> Mcts<E> {
         );
         let depth = self.nodes[leaf].depth + 1;
         let child_idx = self.nodes.len();
-        // render prompt context once, at insertion (re-used every time
-        // this node later appears as current/parent/grandparent)
-        let code: Arc<str> = print_dominant(&exp.sched, gpu).into();
-        let trace_tail: Arc<str> = exp.sched.trace.render_tail(PROMPT_TRACE_TAIL).into();
         self.nodes.push(Node {
             parent: Some(leaf),
             children: Vec::new(),
             schedule: Arc::new(exp.sched),
-            code,
-            trace_tail,
+            code: OnceLock::new(),
+            trace_tail: OnceLock::new(),
             llm: exp.llm,
             visits: 0.0,
             reward_sum: 0.0,
@@ -976,7 +987,12 @@ impl Mcts {
             sel_path,
             lint_rejects_at_start,
         } = self;
-        let CachedEvaluator { cost, sim, cache } = eval;
+        let CachedEvaluator {
+            cost,
+            sim,
+            cache,
+            scratch,
+        } = eval;
         let shared = SharedEvalCache::from_cache(cache, SharedEvalCache::DEFAULT_SHARDS);
         let engine: Mcts<SharedCachedEvaluator<'_>> = Mcts {
             cfg,
@@ -985,6 +1001,7 @@ impl Mcts {
                 cost,
                 sim,
                 cache: &shared,
+                scratch,
             },
             nodes,
             rng,

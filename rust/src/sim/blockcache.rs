@@ -18,11 +18,15 @@
 //!
 //! A block's contribution is memoized under an FNV-1a fold of:
 //!
-//! * the **simulator instance key** — target plus every spec field
+//! * the **precomputed simulator instance key**
+//!   ([`Simulator::instance_key`](crate::sim::Simulator::instance_key))
+//!   — target plus every spec field
 //!   ([`CpuSpec`](crate::sim::cpu::CpuSpec) /
-//!   [`GpuSpec`](crate::sim::gpu::GpuSpec) values, not identity), so two
-//!   simulators configured alike share entries and an edited spec can
-//!   never serve stale values;
+//!   [`GpuSpec`](crate::sim::gpu::GpuSpec) values, not identity), folded
+//!   **once per simulator** at construction (and re-folded by the spec
+//!   mutators), not once per lookup: `latency` extends the stored prefix
+//!   with one `fnv_u64` per call, so two simulators configured alike
+//!   share entries and an edited spec can never serve stale values;
 //! * the **workload structural fingerprint**
 //!   ([`Workload::fingerprint`](crate::tir::Workload::fingerprint)) —
 //!   everything the per-block models read from the workload;

@@ -10,7 +10,8 @@
 //! hardware runs.
 //!
 //! Evaluation is **incremental**: per-block contributions are memoized in
-//! a thread-local [`blockcache`] keyed by (simulator spec, workload
+//! a thread-local [`blockcache`] keyed by ([`Simulator::instance_key`] —
+//! a *precomputed* fold of the target and spec — then workload
 //! fingerprint, block index, block-schedule fingerprint), so evaluating a
 //! schedule that shares blocks with anything previously evaluated on this
 //! thread re-simulates only the blocks that changed — bit-identical to
@@ -47,20 +48,66 @@ impl Target {
 }
 
 /// A configured simulator for one target.
+///
+/// # Memo-key contract
+///
+/// The fields are private so that [`Simulator::instance_key`] — the FNV
+/// fold of the target and every field of its active spec — can be
+/// **precomputed once** at construction and kept coherent: every block
+/// memo and baseline lookup starts from the stored key instead of
+/// re-folding ten spec fields per lookup. Spec edits must go through
+/// [`Simulator::edit_cpu`] / [`Simulator::edit_gpu`], which recompute the
+/// key, so an edited spec can never be served another configuration's
+/// memoized values.
 #[derive(Clone, Debug)]
 pub struct Simulator {
-    pub target: Target,
-    pub cpu: cpu::CpuSpec,
-    pub gpu: gpu::GpuSpec,
+    target: Target,
+    cpu: cpu::CpuSpec,
+    gpu: gpu::GpuSpec,
+    /// Precomputed memo-key prefix: see [`Simulator::instance_key`].
+    instance_key: u64,
 }
 
 impl Simulator {
     pub fn new(target: Target) -> Simulator {
+        let cpu = cpu::CpuSpec::default();
+        let gpu = gpu::GpuSpec::default();
+        let instance_key = compute_instance_key(target, &cpu, &gpu);
         Simulator {
             target,
-            cpu: cpu::CpuSpec::default(),
-            gpu: gpu::GpuSpec::default(),
+            cpu,
+            gpu,
+            instance_key,
         }
+    }
+
+    /// The evaluation target this simulator models.
+    pub fn target(&self) -> Target {
+        self.target
+    }
+
+    /// The CPU spec (read-only; edit through [`Simulator::edit_cpu`]).
+    pub fn cpu(&self) -> &cpu::CpuSpec {
+        &self.cpu
+    }
+
+    /// The GPU spec (read-only; edit through [`Simulator::edit_gpu`]).
+    pub fn gpu(&self) -> &gpu::GpuSpec {
+        &self.gpu
+    }
+
+    /// Edit the CPU spec and recompute the precomputed memo key, keeping
+    /// the key ↔ configuration invariant.
+    pub fn edit_cpu(&mut self, f: impl FnOnce(&mut cpu::CpuSpec)) {
+        f(&mut self.cpu);
+        self.instance_key = compute_instance_key(self.target, &self.cpu, &self.gpu);
+    }
+
+    /// Edit the GPU spec and recompute the precomputed memo key, keeping
+    /// the key ↔ configuration invariant.
+    pub fn edit_gpu(&mut self, f: impl FnOnce(&mut gpu::GpuSpec)) {
+        f(&mut self.gpu);
+        self.instance_key = compute_instance_key(self.target, &self.cpu, &self.gpu);
     }
 
     /// One block's complete latency contribution (seconds): the target's
@@ -99,49 +146,25 @@ impl Simulator {
         lat
     }
 
-    /// FNV fold of the target and every field of its active spec — the
-    /// memo-key prefix that makes block-memo entries a function of the
-    /// simulator's *configuration*, not its identity (equal specs share
-    /// entries; an edited spec can never be served another spec's
-    /// values).
-    fn instance_key(&self) -> u64 {
-        let mut h = fnv_str(FNV_OFFSET, self.target.name());
-        match self.target {
-            Target::Cpu => {
-                let c = &self.cpu;
-                h = fnv_i64(h, c.cores);
-                h = fnv_f64(h, c.freq_ghz);
-                h = fnv_i64(h, c.simd_lanes);
-                h = fnv_f64(h, c.fma_ports);
-                h = fnv_f64(h, c.l1_bytes);
-                h = fnv_f64(h, c.l2_bytes);
-                h = fnv_f64(h, c.dram_gbs);
-                h = fnv_f64(h, c.l2_gbs);
-                h = fnv_f64(h, c.spawn_overhead);
-            }
-            Target::Gpu => {
-                let g = &self.gpu;
-                h = fnv_i64(h, g.sms);
-                h = fnv_i64(h, g.cuda_cores_per_sm);
-                h = fnv_f64(h, g.freq_ghz);
-                h = fnv_i64(h, g.max_threads_per_sm);
-                h = fnv_i64(h, g.max_threads_per_block);
-                h = fnv_f64(h, g.smem_per_sm);
-                h = fnv_f64(h, g.dram_gbs);
-                h = fnv_f64(h, g.l2_bytes);
-                h = fnv_f64(h, g.l2_gbs);
-                h = fnv_f64(h, g.launch_overhead);
-            }
-        }
-        h
+    /// Precomputed FNV fold of the target and every field of its active
+    /// spec — the memo-key prefix that makes block-memo entries a
+    /// function of the simulator's *configuration*, not its identity
+    /// (equal specs share entries; an edited spec can never be served
+    /// another spec's values). Computed **once** at construction (and on
+    /// every [`Simulator::edit_cpu`] / [`Simulator::edit_gpu`]), so a
+    /// block lookup is one `fnv_u64` fold of the workload fingerprint
+    /// plus per-block folds — not a ten-field spec re-hash per call.
+    pub fn instance_key(&self) -> u64 {
+        self.instance_key
     }
 
     /// End-to-end latency (seconds) of a scheduled workload: per-block
     /// contributions summed (see [`Simulator::block_contrib`]).
     ///
     /// **Incremental**: each block's contribution is served from the
-    /// thread-local [`blockcache`] when its key — (spec, workload
-    /// fingerprint, block index, block-schedule fingerprint) — was
+    /// thread-local [`blockcache`] when its key — the precomputed
+    /// [`Simulator::instance_key`] folded with (workload fingerprint,
+    /// block index, block-schedule fingerprint) — was
     /// evaluated before on this thread, so the common search pattern
     /// (child schedule = parent with one mutated block) re-simulates only
     /// the mutated block. Observationally transparent: values are pure
@@ -150,7 +173,7 @@ impl Simulator {
     /// whether the memo is cold, warm, full, or absent (debug builds
     /// re-derive every served block and assert bit equality).
     pub fn latency(&self, s: &Schedule) -> f64 {
-        let h0 = fnv_u64(self.instance_key(), s.workload.fingerprint());
+        let h0 = fnv_u64(self.instance_key, s.workload.fingerprint());
         blockcache::with_thread(|bc| {
             let mut total = 0.0;
             for b in 0..s.workload.blocks.len() {
@@ -190,7 +213,7 @@ impl Simulator {
     /// [`Simulator::speedup`] used to rebuild `Schedule::initial` and
     /// re-simulate it on every call.
     pub fn baseline_latency(&self, w: &Arc<Workload>) -> f64 {
-        let key = fnv_u64(self.instance_key(), w.fingerprint());
+        let key = fnv_u64(self.instance_key, w.fingerprint());
         // lookup and compute are separate borrows: computing the baseline
         // re-enters the thread-local memo through `latency`
         if let Some(v) = blockcache::with_thread(|bc| bc.baseline_get(key)) {
@@ -227,6 +250,41 @@ impl Simulator {
             Target::Gpu => self.gpu.peak_gflops(),
         }
     }
+}
+
+/// The instance-key fold itself: FNV-1a over the target name and every
+/// field of the active spec, in declaration order. This is the single
+/// definition of the configuration prefix of every block-memo and
+/// baseline key; [`Simulator`] caches its result so the hot path never
+/// re-runs it.
+fn compute_instance_key(target: Target, cpu: &cpu::CpuSpec, gpu: &gpu::GpuSpec) -> u64 {
+    let mut h = fnv_str(FNV_OFFSET, target.name());
+    match target {
+        Target::Cpu => {
+            h = fnv_i64(h, cpu.cores);
+            h = fnv_f64(h, cpu.freq_ghz);
+            h = fnv_i64(h, cpu.simd_lanes);
+            h = fnv_f64(h, cpu.fma_ports);
+            h = fnv_f64(h, cpu.l1_bytes);
+            h = fnv_f64(h, cpu.l2_bytes);
+            h = fnv_f64(h, cpu.dram_gbs);
+            h = fnv_f64(h, cpu.l2_gbs);
+            h = fnv_f64(h, cpu.spawn_overhead);
+        }
+        Target::Gpu => {
+            h = fnv_i64(h, gpu.sms);
+            h = fnv_i64(h, gpu.cuda_cores_per_sm);
+            h = fnv_f64(h, gpu.freq_ghz);
+            h = fnv_i64(h, gpu.max_threads_per_sm);
+            h = fnv_i64(h, gpu.max_threads_per_block);
+            h = fnv_f64(h, gpu.smem_per_sm);
+            h = fnv_f64(h, gpu.dram_gbs);
+            h = fnv_f64(h, gpu.l2_bytes);
+            h = fnv_f64(h, gpu.l2_gbs);
+            h = fnv_f64(h, gpu.launch_overhead);
+        }
+    }
+    h
 }
 
 #[cfg(test)]
@@ -369,7 +427,7 @@ mod tests {
         let sim = Simulator::new(Target::Cpu);
         let l_default = sim.latency(&s);
         let mut slower = Simulator::new(Target::Cpu);
-        slower.cpu.freq_ghz /= 2.0;
+        slower.edit_cpu(|c| c.freq_ghz /= 2.0);
         // the edited spec folds into the key: fresh compute, not a stale hit
         let l_slow = slower.latency(&s);
         assert_ne!(l_default.to_bits(), l_slow.to_bits());
@@ -379,6 +437,33 @@ mod tests {
         assert_eq!(Simulator::new(Target::Cpu).latency(&s).to_bits(), l_default.to_bits());
         assert_eq!(blockcache::thread_stats().misses, 0, "equal specs share the memo");
         blockcache::clear_thread();
+    }
+
+    #[test]
+    fn differently_specced_simulators_never_collide_on_instance_key() {
+        // the precomputed key must separate every configuration a block
+        // could be memoized under: same target with an edited spec, and
+        // the two targets themselves
+        let base = Simulator::new(Target::Cpu);
+        let mut edited = Simulator::new(Target::Cpu);
+        edited.edit_cpu(|c| c.freq_ghz /= 2.0);
+        assert_ne!(base.instance_key(), edited.instance_key());
+        let gpu = Simulator::new(Target::Gpu);
+        let mut gpu_edited = Simulator::new(Target::Gpu);
+        gpu_edited.edit_gpu(|g| g.sms += 1);
+        assert_ne!(gpu.instance_key(), gpu_edited.instance_key());
+        assert_ne!(base.instance_key(), gpu.instance_key());
+        // editing the *inactive* spec leaves the key alone (only the
+        // active spec is folded), and identical configs share a key
+        let mut cpu_with_gpu_edit = Simulator::new(Target::Cpu);
+        cpu_with_gpu_edit.edit_gpu(|g| g.sms += 1);
+        assert_eq!(base.instance_key(), cpu_with_gpu_edit.instance_key());
+        assert_eq!(base.instance_key(), Simulator::new(Target::Cpu).instance_key());
+        // reverting an edit restores the original key bit for bit
+        let mut round_trip = Simulator::new(Target::Cpu);
+        round_trip.edit_cpu(|c| c.freq_ghz /= 2.0);
+        round_trip.edit_cpu(|c| c.freq_ghz *= 2.0);
+        assert_eq!(base.instance_key(), round_trip.instance_key());
     }
 
     #[test]

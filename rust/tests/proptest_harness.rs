@@ -505,6 +505,52 @@ fn prop_incremental_latency_is_bit_identical_to_full() {
 }
 
 #[test]
+fn prop_spec_edited_simulators_keep_precomputed_keys_honest() {
+    // the precomputed-instance-key contract (`Simulator::instance_key`):
+    // editing a spec re-folds the stored key prefix, so differently-specced
+    // simulators interleaving on ONE thread-local block memo must each stay
+    // bit-identical to their own full recompute at every step — a stale or
+    // colliding prefix would surface here as one simulator serving the
+    // other's memoized block contributions.
+    use litecoop::sim::Simulator;
+    check("spec-edit-instance-keys", 120, 0x5EED_0013, |rng| {
+        let spec = random_scenario(rng);
+        let name = spec.name();
+        let w = spec.lower().map_err(|e| format!("{name}: lower: {e}"))?;
+        let gpu = rng.chance(0.5);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        let stock = Simulator::new(target);
+        let mut edited = Simulator::new(target);
+        if gpu {
+            edited.edit_gpu(|g| g.freq_ghz *= 0.5);
+        } else {
+            edited.edit_cpu(|c| c.freq_ghz *= 0.5);
+        }
+        if stock.instance_key() == edited.instance_key() {
+            return Err(format!("{name}: edited spec kept the stock instance key"));
+        }
+        let vocab = TransformKind::vocabulary(gpu);
+        let mut s = Schedule::initial(Arc::new(w));
+        for step in 0..(3 + rng.below(8)) {
+            if let Ok(next) = apply(&s, *rng.choice(&vocab), rng, gpu) {
+                s = next;
+            }
+            for (tag, sim) in [("stock", &stock), ("edited", &edited)] {
+                let inc = sim.latency(&s);
+                let full = sim.latency_full(&s);
+                if inc.to_bits() != full.to_bits() {
+                    return Err(format!(
+                        "{name} ({target:?}) step {step} {tag}: memo-served \
+                         {inc:e} != full recompute {full:e}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_scenario_workloads_survive_transform_storms() {
     // scenario-lowered workloads are first-class search substrates: any
     // transform sequence keeps them valid with positive finite latency
