@@ -7,6 +7,7 @@
 //! paper-shaped tables from the [`SearchResult`]s.
 
 pub mod report;
+pub mod serve;
 
 use crate::baselines;
 use crate::mcts::evalcache::EvalCache;

@@ -1,0 +1,372 @@
+//! Resident serve loop: a line-oriented daemon that answers repeated
+//! tuning requests against a per-scenario registry of persisted MCTS
+//! trees.
+//!
+//! Protocol: one scenario name per stdin line (a registry workload name
+//! or a scenario-grammar name like `gemm@m=512`; see
+//! [`crate::workloads::scenarios`]). For each request the daemon
+//! resumes the scenario's persisted tree (or starts cold on the first
+//! request), runs `--budget-per-request` more search samples on it,
+//! persists the tree back, and prints the incumbent schedule and
+//! speedup. A tree served once stays **resident** — later requests for
+//! the same scenario continue in memory without a reload — up to
+//! `--max-trees` scenarios; beyond that the least-recently-used tree is
+//! persisted and dropped.
+//!
+//! Degradation contract: a request must never take the daemon down. An
+//! unresolvable scenario name reports an error line and the loop
+//! continues; a corrupt tree file falls back to a cold tree with a
+//! stderr warning ([`Mcts::resume_file_or_cold`]).
+//!
+//! The `expect_warm_on_repeat` self-check (CI smoke) turns the warm-
+//! start contract into a hard failure: any repeated request must resume
+//! a tree (not start cold), report nonzero eval-cache hits, and report
+//! a speedup no worse than its previous segment's — speedups are
+//! monotone under continued search because the incumbent latency never
+//! increases.
+
+use crate::llm::registry::paper_config;
+use crate::llm::ModelSet;
+use crate::mcts::{Mcts, SearchConfig};
+use crate::schedule::Schedule;
+use crate::sim::{Simulator, Target};
+use crate::util::fnv::{fnv_str, FNV_OFFSET};
+use crate::workloads;
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+/// Serve-daemon configuration (one per `litecoop serve` invocation).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Directory holding one persisted tree file per scenario.
+    pub registry_dir: String,
+    /// Resident-tree cap: beyond this many distinct scenarios, the
+    /// least-recently-used tree is persisted and dropped.
+    pub max_trees: usize,
+    /// Search samples added per request.
+    pub budget_per_request: usize,
+    /// Model-pool size for cold trees (resumed trees keep the roster
+    /// they were persisted with — it must match this configuration).
+    pub n_llms: usize,
+    /// Largest model of the pool.
+    pub largest: String,
+    pub target: Target,
+    /// In-search tree parallelism per request.
+    pub search_threads: usize,
+    /// Seed for cold trees.
+    pub seed: u64,
+    /// CI self-check: fail hard if a repeated request does not resume a
+    /// warm tree with cache hits and a monotone speedup.
+    pub expect_warm_on_repeat: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            registry_dir: "trees".to_string(),
+            max_trees: 8,
+            budget_per_request: 60,
+            n_llms: 4,
+            largest: "gpt-5.2".to_string(),
+            target: Target::Cpu,
+            search_threads: 1,
+            seed: 7,
+            expect_warm_on_repeat: false,
+        }
+    }
+}
+
+/// What the serve loop did, for the caller's exit report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeSummary {
+    pub requests: usize,
+    /// Requests answered by continuing an existing tree (resident or
+    /// loaded from the registry) rather than starting cold.
+    pub resumed: usize,
+    pub evictions: usize,
+    pub errors: usize,
+}
+
+/// Scenario names contain characters that don't belong in filenames
+/// (`@`, `=`, `,`, `.`); the registry file name is the sanitized name
+/// plus a short hash of the exact name, so distinct scenarios can never
+/// collide on a shared sanitized form.
+pub fn tree_file_name(scenario: &str) -> String {
+    let safe: String = scenario
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect();
+    format!("{safe}-{:08x}.tree.json", fnv_str(FNV_OFFSET, scenario) & 0xFFFF_FFFF)
+}
+
+/// The per-scenario tree registry: persisted files under `dir`, plus an
+/// LRU-bounded resident set so repeated requests skip the load.
+pub struct TreeRegistry {
+    dir: String,
+    max_trees: usize,
+    /// LRU order: least-recently-used first. Small (≤ max_trees), so a
+    /// linear scan beats a hash map + separate order list.
+    resident: Vec<(String, Mcts)>,
+    pub evictions: usize,
+}
+
+impl TreeRegistry {
+    pub fn new(dir: &str, max_trees: usize) -> Result<TreeRegistry, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("registry dir {dir}: {e}"))?;
+        Ok(TreeRegistry {
+            dir: dir.to_string(),
+            max_trees: max_trees.max(1),
+            resident: Vec::new(),
+            evictions: 0,
+        })
+    }
+
+    /// Registry path of a scenario's persisted tree.
+    pub fn tree_path(&self, scenario: &str) -> String {
+        format!("{}/{}", self.dir, tree_file_name(scenario))
+    }
+
+    /// Remove and return the resident tree for `scenario`, if any.
+    pub fn take(&mut self, scenario: &str) -> Option<Mcts> {
+        let i = self.resident.iter().position(|(n, _)| n == scenario)?;
+        Some(self.resident.remove(i).1)
+    }
+
+    /// Make `scenario`'s tree resident (most recently used). If the cap
+    /// is now exceeded, the least-recently-used tree is persisted to its
+    /// registry file and dropped — eviction never loses search state.
+    pub fn put(&mut self, scenario: &str, engine: Mcts) -> Result<(), String> {
+        self.resident.push((scenario.to_string(), engine));
+        while self.resident.len() > self.max_trees {
+            let (name, tree) = self.resident.remove(0);
+            tree.save_file(&self.tree_path(&name))?;
+            self.evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// Persist every resident tree (shutdown path).
+    pub fn flush(&mut self) -> Result<(), String> {
+        for (name, tree) in &self.resident {
+            tree.save_file(&self.tree_path(name))?;
+        }
+        Ok(())
+    }
+}
+
+/// Answer one request: resume (resident → registry file → cold, in that
+/// order), search `budget_per_request` more samples, persist, park the
+/// tree resident. Returns (resumed, samples, speedup, cache hits).
+fn serve_one(
+    registry: &mut TreeRegistry,
+    opts: &ServeOpts,
+    scenario: &str,
+) -> Result<(bool, usize, f64, u64), String> {
+    let (mut engine, resumed) = match registry.take(scenario) {
+        Some(engine) => (engine, true),
+        None => {
+            let workload = workloads::resolve(scenario)
+                .map_err(|e| format!("unknown scenario {scenario}: {e}"))?;
+            let root = Schedule::initial(Arc::new(workload));
+            let models = ModelSet::new(paper_config(opts.n_llms, &opts.largest));
+            let sim = Simulator::new(opts.target);
+            let cfg = SearchConfig {
+                budget: 0, // grown per request below
+                seed: opts.seed,
+                search_threads: opts.search_threads,
+                checkpoints: Vec::new(),
+                ..SearchConfig::default()
+            };
+            Mcts::resume_file_or_cold(&registry.tree_path(scenario), cfg, models, sim, root)
+        }
+    };
+    engine.extend_budget(opts.budget_per_request);
+    let goal = engine.samples().saturating_add(opts.budget_per_request);
+    engine = if opts.search_threads > 1 {
+        engine.run_parallel_until(opts.search_threads, goal)
+    } else {
+        engine.run_until(goal)
+    };
+    let samples = engine.samples();
+    let speedup = engine.best_speedup();
+    let hits = engine.eval_cache_stats().hits;
+    engine.save_file(&registry.tree_path(scenario))?;
+    registry.put(scenario, engine)?;
+    Ok((resumed, samples, speedup, hits))
+}
+
+/// The daemon loop: read scenario names off `input` until EOF, answer
+/// each, write one status line per request to `out`. Factored over
+/// generic reader/writer so tests drive it with in-memory buffers.
+pub fn serve(
+    opts: &ServeOpts,
+    input: impl BufRead,
+    mut out: impl Write,
+) -> Result<ServeSummary, String> {
+    let mut registry = TreeRegistry::new(&opts.registry_dir, opts.max_trees)?;
+    let mut summary = ServeSummary::default();
+    // per-scenario speedup of the previous segment, for the self-check
+    let mut last_speedup: HashMap<String, f64> = HashMap::new();
+    for line in input.lines() {
+        let line = line.map_err(|e| format!("serve: stdin: {e}"))?;
+        let scenario = line.trim();
+        if scenario.is_empty() || scenario.starts_with('#') {
+            continue;
+        }
+        summary.requests += 1;
+        match serve_one(&mut registry, opts, scenario) {
+            Ok((resumed, samples, speedup, hits)) => {
+                if resumed {
+                    summary.resumed += 1;
+                }
+                writeln!(
+                    out,
+                    "serve {scenario}: tree={} samples={samples} speedup={speedup:.3}x \
+                     cache_hits={hits}",
+                    if resumed { "resumed" } else { "cold" },
+                )
+                .map_err(|e| format!("serve: stdout: {e}"))?;
+                if opts.expect_warm_on_repeat {
+                    if let Some(&prev) = last_speedup.get(scenario) {
+                        if !resumed {
+                            return Err(format!(
+                                "serve self-check: repeated request for {scenario} started cold"
+                            ));
+                        }
+                        if hits == 0 {
+                            return Err(format!(
+                                "serve self-check: repeated request for {scenario} reported zero \
+                                 eval-cache hits"
+                            ));
+                        }
+                        if speedup < prev {
+                            return Err(format!(
+                                "serve self-check: speedup regressed for {scenario}: \
+                                 {speedup:.4} < {prev:.4}"
+                            ));
+                        }
+                    }
+                }
+                last_speedup.insert(scenario.to_string(), speedup);
+            }
+            Err(e) => {
+                summary.errors += 1;
+                writeln!(out, "serve {scenario}: error: {e}")
+                    .map_err(|e| format!("serve: stdout: {e}"))?;
+            }
+        }
+    }
+    registry.flush()?;
+    summary.evictions = registry.evictions;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!(
+            "litecoop_serve_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_string_lossy().into_owned()
+    }
+
+    fn quick_opts(dir: &str) -> ServeOpts {
+        ServeOpts {
+            registry_dir: dir.to_string(),
+            max_trees: 2,
+            budget_per_request: 24,
+            n_llms: 2,
+            seed: 11,
+            ..ServeOpts::default()
+        }
+    }
+
+    #[test]
+    fn repeated_requests_resume_and_improve() {
+        let dir = tmp_dir("repeat");
+        let opts = ServeOpts {
+            expect_warm_on_repeat: true, // the CI smoke contract, enforced in-test
+            ..quick_opts(&dir)
+        };
+        let input = Cursor::new("gemm\n\n# comment line\ngemm\n");
+        let mut out = Vec::new();
+        let summary = serve(&opts, input, &mut out).expect("serve loop");
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.resumed, 1);
+        assert_eq!(summary.errors, 0);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("tree=cold"), "{}", lines[0]);
+        assert!(lines[1].contains("tree=resumed"), "{}", lines[1]);
+        assert!(lines[1].contains("samples=48"), "{}", lines[1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_process_loads_from_registry_file() {
+        let dir = tmp_dir("reload");
+        let opts = quick_opts(&dir);
+        let mut out = Vec::new();
+        serve(&opts, Cursor::new("gemm\n"), &mut out).expect("first daemon");
+        // a fresh registry (≅ a fresh daemon process) must resume the
+        // persisted tree, not start cold
+        let mut out2 = Vec::new();
+        let summary = serve(&opts, Cursor::new("gemm\n"), &mut out2).expect("second daemon");
+        assert_eq!(summary.resumed, 1);
+        let text = String::from_utf8(out2).unwrap();
+        assert!(text.contains("tree=resumed"), "{text}");
+        assert!(text.contains("samples=48"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_persists_before_dropping() {
+        let dir = tmp_dir("evict");
+        let opts = quick_opts(&dir); // max_trees = 2
+        let input = Cursor::new("gemm\ngemm@m=128\ngemm@m=256\ngemm\n");
+        let mut out = Vec::new();
+        let summary = serve(&opts, input, &mut out).expect("serve loop");
+        // the third distinct scenario evicts "gemm"; the fourth request
+        // reloads it from the registry file it was persisted to
+        assert!(summary.evictions >= 1, "{summary:?}");
+        assert_eq!(summary.resumed, 1);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.lines().last().unwrap().contains("tree=resumed"), "{text}");
+        for scenario in ["gemm", "gemm@m=128", "gemm@m=256"] {
+            let path = format!("{dir}/{}", tree_file_name(scenario));
+            assert!(std::path::Path::new(&path).exists(), "missing {path}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unresolvable_scenario_does_not_kill_the_loop() {
+        let dir = tmp_dir("badname");
+        let opts = quick_opts(&dir);
+        let input = Cursor::new("no_such_workload@x=1\ngemm\n");
+        let mut out = Vec::new();
+        let summary = serve(&opts, input, &mut out).expect("serve loop");
+        assert_eq!(summary.errors, 1);
+        assert_eq!(summary.requests, 2);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("error:"), "{text}");
+        assert!(text.contains("tree=cold"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tree_file_names_are_sanitized_and_collision_free() {
+        let a = tree_file_name("gemm@m=512,n=64");
+        assert!(a.ends_with(".tree.json"));
+        assert!(!a.contains('@') && !a.contains('=') && !a.contains(','));
+        // same sanitized form, different scenarios -> different hashes
+        assert_ne!(tree_file_name("gemm@m=1,n=2"), tree_file_name("gemm@m=1.n.2"));
+    }
+}

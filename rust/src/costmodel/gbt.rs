@@ -22,7 +22,8 @@
 //! representation and to scalar [`Gbt::predict`] (asserted in tests).
 
 use super::features::FeatureMatrix;
-use crate::util::Rng;
+use crate::util::json::{f64_from_bits_json, f64_to_bits_json, json_bits_f64, json_u32_arr, json_usize};
+use crate::util::{Json, Rng};
 
 /// One node of a regression tree during **training** (per-tree vector
 /// storage; flattened into the SoA arrays once the forest is fitted).
@@ -265,6 +266,99 @@ impl Gbt {
         let mut out = Vec::new();
         self.predict_batch_into(&m, &mut out);
         out
+    }
+
+    /// Serialize the fitted forest verbatim (tree snapshots). Refitting
+    /// on load would consume a different RNG stream and diverge, so the
+    /// flat SoA arrays are persisted exactly; floats go through the
+    /// bits-string form so predictions round-trip bit-for-bit.
+    pub fn to_json(&self) -> Json {
+        let ints = |v: &[u32]| Json::Arr(v.iter().map(|&i| Json::Num(i as f64)).collect());
+        let mut j = Json::obj();
+        j.set("n_trees", self.params.n_trees.into())
+            .set("max_depth", self.params.max_depth.into())
+            .set("learning_rate", f64_to_bits_json(self.params.learning_rate))
+            .set("min_samples_leaf", self.params.min_samples_leaf.into())
+            .set("subsample", f64_to_bits_json(self.params.subsample))
+            .set("n_thresholds", self.params.n_thresholds.into())
+            .set("base", f64_to_bits_json(self.base))
+            .set("roots", ints(&self.roots))
+            .set("feature", ints(&self.feature))
+            .set(
+                "threshold",
+                Json::Arr(self.threshold.iter().map(|&t| f64_to_bits_json(t)).collect()),
+            )
+            .set("left", ints(&self.left))
+            .set("right", ints(&self.right));
+        j
+    }
+
+    /// Rebuild a forest from [`Gbt::to_json`] output, validating the
+    /// layout so [`Gbt::walk`] can never panic or loop on a corrupt
+    /// file: all four node arrays equal length, roots in bounds, split
+    /// features below `n_features`, and children strictly forward
+    /// (flattening emits children after their parent, so `left/right > i`
+    /// also rules out traversal cycles).
+    pub fn from_json(v: &Json, n_features: usize) -> Result<Gbt, String> {
+        let params = GbtParams {
+            n_trees: json_usize(v, "n_trees")?,
+            max_depth: json_usize(v, "max_depth")?,
+            learning_rate: json_bits_f64(v, "learning_rate")?,
+            min_samples_leaf: json_usize(v, "min_samples_leaf")?,
+            subsample: json_bits_f64(v, "subsample")?,
+            n_thresholds: json_usize(v, "n_thresholds")?,
+        };
+        let base = json_bits_f64(v, "base")?;
+        let roots = json_u32_arr(v, "roots")?;
+        let feature = json_u32_arr(v, "feature")?;
+        let left = json_u32_arr(v, "left")?;
+        let right = json_u32_arr(v, "right")?;
+        let threshold: Vec<f64> = v
+            .get("threshold")
+            .and_then(Json::as_arr)
+            .ok_or("gbt threshold: expected array")?
+            .iter()
+            .map(f64_from_bits_json)
+            .collect::<Result<_, _>>()?;
+        let n = feature.len();
+        if threshold.len() != n || left.len() != n || right.len() != n {
+            return Err("gbt: node arrays disagree on length".into());
+        }
+        if roots.len() != params.n_trees {
+            return Err(format!(
+                "gbt: {} roots for {} trees",
+                roots.len(),
+                params.n_trees
+            ));
+        }
+        for &r in &roots {
+            if r as usize >= n {
+                return Err(format!("gbt: root {r} out of bounds ({n} nodes)"));
+            }
+        }
+        for i in 0..n {
+            if feature[i] == LEAF {
+                continue;
+            }
+            if (feature[i] as usize) >= n_features {
+                return Err(format!("gbt: node {i} splits on feature {}", feature[i]));
+            }
+            if (left[i] as usize) >= n || (right[i] as usize) >= n {
+                return Err(format!("gbt: node {i} child out of bounds"));
+            }
+            if (left[i] as usize) <= i || (right[i] as usize) <= i {
+                return Err(format!("gbt: node {i} child not strictly forward"));
+            }
+        }
+        Ok(Gbt {
+            params,
+            base,
+            roots,
+            feature,
+            threshold,
+            left,
+            right,
+        })
     }
 
     /// Training-set RMSE (diagnostic), via the batched path.
@@ -516,6 +610,35 @@ mod tests {
                 assert!((model.right[i] as usize) < n);
             }
         }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let mut rng = Rng::new(13);
+        let (x, y) = synth(300, &mut rng);
+        let model = Gbt::fit(GbtParams::default(), &x, &y, &mut rng);
+        let text = model.to_json().to_string();
+        let back = Gbt::from_json(&Json::parse(&text).unwrap(), x[0].len()).unwrap();
+        for row in &x[..32] {
+            assert_eq!(model.predict(row).to_bits(), back.predict(row).to_bits());
+        }
+        // corrupt layouts are rejected with an error, never walked
+        let mut bad = Json::parse(&text).unwrap();
+        bad.set("roots", Json::Arr(vec![Json::Num(1e9)]));
+        assert!(Gbt::from_json(&bad, x[0].len()).is_err());
+        let mut missing = Json::parse(&text).unwrap();
+        if let Json::Obj(m) = &mut missing {
+            m.remove("base");
+        }
+        assert!(Gbt::from_json(&missing, x[0].len()).is_err());
+        // a back-edge child (traversal cycle) must fail validation
+        let mut cyclic = Json::parse(&text).unwrap();
+        let n = model.feature.len();
+        cyclic.set(
+            "left",
+            Json::Arr((0..n).map(|_| Json::Num(0.0)).collect()),
+        );
+        assert!(Gbt::from_json(&cyclic, x[0].len()).is_err());
     }
 
     #[test]

@@ -12,7 +12,11 @@ pub mod gbt;
 
 use crate::schedule::Schedule;
 use crate::sim::{Simulator, Target};
-use crate::util::Rng;
+use crate::util::json::{
+    f64_from_bits_json, f64_to_bits_json, json_bits_f64, json_u64_str_arr, json_usize,
+    u64_str_arr_json,
+};
+use crate::util::{Json, Rng};
 use features::FeatureMatrix;
 use gbt::{Gbt, GbtParams};
 
@@ -209,6 +213,110 @@ impl CostModel {
             None => f64::NAN,
         }
     }
+
+    /// Serialize the full training trajectory (tree snapshots): hyper-
+    /// params, the fitted forest verbatim, the observation history
+    /// (retrains slide a window over it, so it must survive whole), the
+    /// training RNG stream position, and the score normalizers — all
+    /// floats in exact bits-string form. `salt` is deliberately NOT
+    /// persisted: it is a per-process identity nonce, and
+    /// [`CostModel::restore`] draws a fresh one.
+    pub fn snapshot(&self) -> Json {
+        let row = |r: &[f64]| Json::Arr(r.iter().map(|&x| f64_to_bits_json(x)).collect());
+        let mut j = Json::obj();
+        j.set("n_trees", self.params.n_trees.into())
+            .set("max_depth", self.params.max_depth.into())
+            .set("learning_rate", f64_to_bits_json(self.params.learning_rate))
+            .set("min_samples_leaf", self.params.min_samples_leaf.into())
+            .set("subsample", f64_to_bits_json(self.params.subsample))
+            .set("n_thresholds", self.params.n_thresholds.into())
+            .set(
+                "model",
+                match &self.model {
+                    Some(m) => m.to_json(),
+                    None => Json::Null,
+                },
+            )
+            .set("xs", Json::Arr(self.xs.iter().map(|r| row(r)).collect()))
+            .set("ys", row(&self.ys))
+            .set("rng", u64_str_arr_json(&self.rng.state()))
+            .set("retrain_interval", self.retrain_interval.into())
+            .set("since_train", self.since_train.into())
+            .set("best_latency", f64_to_bits_json(self.best_latency))
+            .set("baseline_latency", f64_to_bits_json(self.baseline_latency))
+            .set("n_measured", self.n_measured.into())
+            .set("n_trainings", self.n_trainings.into());
+        j
+    }
+
+    /// Rebuild a model from [`CostModel::snapshot`] output at an exact
+    /// training-stream position, under a **fresh** per-process salt.
+    /// Validates shapes (feature-row width, xs/ys agreement, forest
+    /// layout via [`Gbt::from_json`]) so corrupt input degrades to `Err`,
+    /// never a panic.
+    pub fn restore(target: Target, v: &Json) -> Result<CostModel, String> {
+        let mut cm = CostModel::new(target, 0); // draws the fresh salt
+        cm.params = GbtParams {
+            n_trees: json_usize(v, "n_trees")?,
+            max_depth: json_usize(v, "max_depth")?,
+            learning_rate: json_bits_f64(v, "learning_rate")?,
+            min_samples_leaf: json_usize(v, "min_samples_leaf")?,
+            subsample: json_bits_f64(v, "subsample")?,
+            n_thresholds: json_usize(v, "n_thresholds")?,
+        };
+        cm.model = match v.get("model") {
+            Some(Json::Null) => None,
+            Some(m) => Some(Gbt::from_json(m, features::N_FEATURES)?),
+            None => return Err("missing field \"model\"".into()),
+        };
+        let xs_arr = v
+            .get("xs")
+            .and_then(Json::as_arr)
+            .ok_or("missing array \"xs\"")?;
+        cm.xs = xs_arr
+            .iter()
+            .map(|r| {
+                let row = r.as_arr().ok_or("cost-model xs: non-array row")?;
+                if row.len() != features::N_FEATURES {
+                    return Err(format!(
+                        "cost-model xs: row of {} features (want {})",
+                        row.len(),
+                        features::N_FEATURES
+                    ));
+                }
+                row.iter().map(f64_from_bits_json).collect()
+            })
+            .collect::<Result<_, String>>()?;
+        cm.ys = v
+            .get("ys")
+            .and_then(Json::as_arr)
+            .ok_or("missing array \"ys\"")?
+            .iter()
+            .map(f64_from_bits_json)
+            .collect::<Result<_, _>>()?;
+        if cm.ys.len() != cm.xs.len() {
+            return Err(format!(
+                "cost-model: {} targets for {} feature rows",
+                cm.ys.len(),
+                cm.xs.len()
+            ));
+        }
+        if let Some(y) = cm.ys.iter().find(|y| !y.is_finite()) {
+            return Err(format!("cost-model: non-finite training target {y}"));
+        }
+        let rng = json_u64_str_arr(v, "rng")?;
+        let rng: [u64; 4] = rng
+            .try_into()
+            .map_err(|_| "cost-model: rng state is not 4 words".to_string())?;
+        cm.rng = Rng::from_state(rng);
+        cm.retrain_interval = json_usize(v, "retrain_interval")?;
+        cm.since_train = json_usize(v, "since_train")?;
+        cm.best_latency = json_bits_f64(v, "best_latency")?;
+        cm.baseline_latency = json_bits_f64(v, "baseline_latency")?;
+        cm.n_measured = json_usize(v, "n_measured")?;
+        cm.n_trainings = json_usize(v, "n_trainings")?;
+        Ok(cm)
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +430,40 @@ mod tests {
                 assert_eq!(cm.predict_latency(s).to_bits(), p.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn snapshot_restore_continues_training_bitwise() {
+        let sim = Simulator::new(Target::Cpu);
+        let mut a = CostModel::new(Target::Cpu, 21);
+        let variants = random_variants(60, 8);
+        let (first, rest) = variants.split_at(25);
+        for s in first {
+            a.measure(&sim, s);
+        }
+        let snap = a.snapshot();
+        let mut b = CostModel::restore(Target::Cpu, &Json::parse(&snap.to_string()).unwrap())
+            .expect("restore");
+        assert_ne!(a.salt, b.salt, "restore must draw a fresh salt");
+        // both models now see the same continuation: predictions, retrain
+        // points, and normalizers must stay bit-identical
+        for s in rest {
+            assert_eq!(a.predict_latency(s).to_bits(), b.predict_latency(s).to_bits());
+            a.measure(&sim, s);
+            b.measure(&sim, s);
+            assert_eq!(a.n_trainings, b.n_trainings);
+            assert_eq!(a.best_latency.to_bits(), b.best_latency.to_bits());
+        }
+        assert_eq!(a.generation(), b.generation());
+        // corruption degrades to Err, never a panic
+        let mut bad = snap.clone();
+        bad.set("ys", Json::Arr(vec![]));
+        assert!(CostModel::restore(Target::Cpu, &bad).is_err());
+        let mut bad = snap.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.remove("rng");
+        }
+        assert!(CostModel::restore(Target::Cpu, &bad).is_err());
     }
 
     #[test]

@@ -16,6 +16,17 @@
 //!            random transform storm. Prints all diagnostics and exits
 //!            nonzero if any Deny-level lint fires (which would mean the
 //!            apply-time gate is broken — see `litecoop::analysis`).
+//!   serve    --registry-dir DIR [--max-trees K] [--budget-per-request N]
+//!            [--llms N] [--largest M] [--target cpu|gpu]
+//!            [--search-threads S] [--seed S] [--expect-warm-on-repeat]
+//!            resident daemon: read scenario names from stdin (one per
+//!            line), resume each scenario's persisted MCTS tree from the
+//!            registry (cold on first request), run N more samples,
+//!            persist the tree back, and print the incumbent speedup.
+//!            Up to K trees stay resident (LRU; eviction persists
+//!            first). --expect-warm-on-repeat exits nonzero unless every
+//!            repeated request resumes warm with cache hits and a
+//!            monotone speedup (the CI smoke contract).
 //!   models   (print the LLM catalog)
 //!   workloads (print the benchmark registry)
 //!   runtime  --artifact <name>  (load + execute an AOT artifact via PJRT)
@@ -56,6 +67,7 @@ fn main() -> litecoop::Result<()> {
             Ok(())
         }
         Some("lint") => cmd_lint(&args),
+        Some("serve") => cmd_serve(&args),
         Some("runtime") => cmd_runtime(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other}; see --help in README");
@@ -179,6 +191,38 @@ fn cmd_lint(args: &Args) -> litecoop::Result<()> {
         eprintln!("error: Deny-level diagnostics on reachable schedules — the apply gate is broken");
         std::process::exit(1);
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> litecoop::Result<()> {
+    use litecoop::coordinator::serve::{serve, ServeOpts};
+    let opts = ServeOpts {
+        registry_dir: args.str_or("registry-dir", "trees"),
+        max_trees: args.usize_or("max-trees", 8).max(1),
+        budget_per_request: args.usize_or("budget-per-request", 60).max(1),
+        n_llms: args.usize_or("llms", 4),
+        largest: args.str_or("largest", "gpt-5.2"),
+        target: if args.str_or("target", "cpu") == "gpu" {
+            Target::Gpu
+        } else {
+            Target::Cpu
+        },
+        search_threads: args.usize_or("search-threads", 1).max(1),
+        seed: args.u64_or("seed", 7),
+        expect_warm_on_repeat: args.has("expect-warm-on-repeat"),
+    };
+    eprintln!(
+        "litecoop serve: registry {} (max {} resident trees), {} samples/request, {} LLMs; \
+         reading scenario names from stdin",
+        opts.registry_dir, opts.max_trees, opts.budget_per_request, opts.n_llms
+    );
+    let stdin = std::io::stdin();
+    let summary = serve(&opts, stdin.lock(), std::io::stdout().lock())
+        .map_err(|e| litecoop::err!("{e}"))?;
+    eprintln!(
+        "serve: {} requests ({} resumed, {} errors), {} evictions",
+        summary.requests, summary.resumed, summary.errors, summary.evictions
+    );
     Ok(())
 }
 

@@ -425,6 +425,82 @@ impl EvalCache {
             }
         }
     }
+
+    /// Full-state snapshot for mid-search checkpoints (tree snapshots,
+    /// [`crate::mcts::Mcts::snapshot`]) — unlike the cross-process
+    /// [`EvalCache::to_json`] warm-start format, this keeps everything
+    /// resume equivalence needs: prediction entries (stored **salt-free**
+    /// as `tracekey:generation`, since the salt is a per-process nonce
+    /// the restoring process re-draws) and the live hit/miss counters.
+    /// Only predictions owned by `salt` (the snapshotting cost model) are
+    /// included; values use the exact bits-string form.
+    pub fn snapshot_full(&self, salt: u64) -> Json {
+        use crate::util::json::f64_to_bits_json;
+        let mut lat = Json::obj();
+        for (k, v) in &self.lat {
+            lat.set(&k.to_string(), f64_to_bits_json(*v));
+        }
+        let mut pred = Json::obj();
+        for (k, v) in &self.pred {
+            if k.1 == salt {
+                pred.set(&format!("{}:{}", k.0, k.2), f64_to_bits_json(*v));
+            }
+        }
+        let mut root = Json::obj();
+        root.set("max_entries", self.max_entries.into())
+            .set("hits", self.stats.hits.to_string().into())
+            .set("misses", self.stats.misses.to_string().into())
+            .set("lat", lat)
+            .set("pred", pred);
+        root
+    }
+
+    /// Inverse of [`EvalCache::snapshot_full`]: rebuild the full cache
+    /// state, re-keying every prediction entry under the restoring cost
+    /// model's fresh `salt`. Corrupt input degrades to `Err`, never a
+    /// panic.
+    pub fn restore_full(v: &Json, salt: u64) -> Result<EvalCache, String> {
+        use crate::util::json::{f64_from_bits_json, json_u64_str, json_usize};
+        let max_entries = json_usize(v, "max_entries")?;
+        let stats = CacheStats {
+            hits: json_u64_str(v, "hits")?,
+            misses: json_u64_str(v, "misses")?,
+        };
+        let lat_obj = v
+            .get("lat")
+            .and_then(Json::as_obj)
+            .ok_or("cache snapshot: missing lat map")?;
+        let mut lat = HashMap::with_capacity(lat_obj.len());
+        for (k, val) in lat_obj {
+            let key: u64 = k
+                .parse()
+                .map_err(|_| format!("cache snapshot: bad lat key {k:?}"))?;
+            lat.insert(key, f64_from_bits_json(val)?);
+        }
+        let pred_obj = v
+            .get("pred")
+            .and_then(Json::as_obj)
+            .ok_or("cache snapshot: missing pred map")?;
+        let mut pred = HashMap::with_capacity(pred_obj.len());
+        for (k, val) in pred_obj {
+            let (tk, gen) = k
+                .split_once(':')
+                .ok_or_else(|| format!("cache snapshot: bad pred key {k:?}"))?;
+            let tk: u64 = tk
+                .parse()
+                .map_err(|_| format!("cache snapshot: bad pred key {k:?}"))?;
+            let gen: usize = gen
+                .parse()
+                .map_err(|_| format!("cache snapshot: bad pred key {k:?}"))?;
+            pred.insert((tk, salt, gen), f64_from_bits_json(val)?);
+        }
+        Ok(EvalCache {
+            lat,
+            pred,
+            stats,
+            max_entries,
+        })
+    }
 }
 
 /// Outcome of one ground-truth measurement: the latency plus whether the

@@ -13,6 +13,7 @@
 
 pub mod evalcache;
 pub mod la_uct;
+pub mod treestore;
 
 use crate::costmodel::CostModel;
 use crate::llm::prompts::{PromptCtx, VariantCtx};
@@ -258,8 +259,18 @@ pub struct Mcts<E = CachedEvaluator> {
     /// Value of the per-thread [`crate::analysis::lint_rejects`] counter
     /// when this search was constructed (before cost-model seeding, so
     /// seeding rejections count toward the search's total); `finish`
-    /// reports the delta.
+    /// reports `lint_rejects_base` plus the delta.
     lint_rejects_at_start: u64,
+    /// Lint rejections accumulated by earlier segments of a resumed
+    /// search ([`Mcts::resume`] restores the snapshot's running total
+    /// here; 0 for a fresh search). Keeps the reported counter honest
+    /// across process boundaries, where the per-thread counter restarts.
+    lint_rejects_base: u64,
+    /// Next tree-parallel round index. Lifted out of the round loop into
+    /// engine state so a checkpointed parallel search resumes the exact
+    /// per-round lane-seed sequence ([`round_seed`]) an uninterrupted run
+    /// would have used. Serial search never touches it.
+    round: u64,
 }
 
 /// How many trailing trace steps a node contributes to prompt context.
@@ -402,11 +413,105 @@ impl Mcts {
             sel_stats: Vec::new(),
             sel_path: Vec::new(),
             lint_rejects_at_start,
+            lint_rejects_base: 0,
+            round: 0,
         }
     }
 }
 
+impl<E> Mcts<E> {
+    /// Samples spent so far (read by the checkpoint and serve layers).
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Grow the budget for another incremental segment: future stepping
+    /// runs until `samples + extra`. The serve loop calls this between
+    /// requests on a resumed tree.
+    pub fn extend_budget(&mut self, extra: usize) {
+        self.cfg.budget = self.samples.saturating_add(extra);
+    }
+
+    /// Best measured speedup so far (baseline / incumbent latency).
+    pub fn best_speedup(&self) -> f64 {
+        self.baseline_latency / self.best_latency
+    }
+
+    /// The incumbent (best measured) schedule.
+    pub fn incumbent(&self) -> &Schedule {
+        &self.best_schedule
+    }
+
+    /// Swap the evaluator, handing the old one back — the single place
+    /// the engine's full field list is threaded through, shared by the
+    /// serial↔parallel conversions and the checkpoint/resume paths (a
+    /// new engine field added here is added everywhere).
+    fn replace_eval<F>(self, eval: F) -> (Mcts<F>, E) {
+        let Mcts {
+            cfg,
+            models,
+            eval: old,
+            nodes,
+            rng,
+            rr_ptr,
+            samples,
+            measure_time_s,
+            n_ca_events,
+            n_errors,
+            best_latency,
+            best_schedule,
+            baseline_latency,
+            unmeasured,
+            curve,
+            max_depth,
+            checkpoints_sorted,
+            checkpoint_cursor,
+            sel_children,
+            sel_stats,
+            sel_path,
+            lint_rejects_at_start,
+            lint_rejects_base,
+            round,
+        } = self;
+        (
+            Mcts {
+                cfg,
+                models,
+                eval,
+                nodes,
+                rng,
+                rr_ptr,
+                samples,
+                measure_time_s,
+                n_ca_events,
+                n_errors,
+                best_latency,
+                best_schedule,
+                baseline_latency,
+                unmeasured,
+                curve,
+                max_depth,
+                checkpoints_sorted,
+                checkpoint_cursor,
+                sel_children,
+                sel_stats,
+                sel_path,
+                lint_rejects_at_start,
+                lint_rejects_base,
+                round,
+            },
+            old,
+        )
+    }
+}
+
 impl<E: Evaluator> Mcts<E> {
+    /// Cumulative evaluation-cache counters (restored totals included on
+    /// a resumed search); read by the serve loop between segments.
+    pub fn eval_cache_stats(&self) -> CacheStats {
+        self.eval.cache_stats()
+    }
+
     fn phi(&self, model: usize) -> f64 {
         if self.models.len() == 1 {
             0.0
@@ -899,9 +1004,11 @@ impl<E: Evaluator> Mcts<E> {
                 .collect(),
             eval_cache: self.eval.cache_stats(),
             // every apply of this search ran on this (the coordinator)
-            // thread, so the per-thread delta is this search's count
-            lint_rejects: crate::analysis::lint_rejects()
-                .saturating_sub(self.lint_rejects_at_start),
+            // thread, so the per-thread delta is this search's count;
+            // the base carries totals from pre-resume segments of a
+            // checkpointed search across process boundaries
+            lint_rejects: self.lint_rejects_base
+                + crate::analysis::lint_rejects().saturating_sub(self.lint_rejects_at_start),
             best_schedule: (*self.best_schedule).clone(),
         };
         (result, self.eval)
@@ -963,68 +1070,84 @@ impl Mcts {
         if threads <= 1 {
             return self.run_with_cache(workload_name);
         }
-        let Mcts {
-            cfg,
-            models,
-            eval,
-            nodes,
-            rng,
-            rr_ptr,
-            samples,
-            measure_time_s,
-            n_ca_events,
-            n_errors,
-            best_latency,
-            best_schedule,
-            baseline_latency,
-            unmeasured,
-            curve,
-            max_depth,
-            checkpoints_sorted,
-            checkpoint_cursor,
-            sel_children,
-            sel_stats,
-            sel_path,
-            lint_rejects_at_start,
-        } = self;
-        let CachedEvaluator {
+        let (this, CachedEvaluator {
             cost,
             sim,
             cache,
             scratch,
-        } = eval;
+        }) = self.replace_eval(());
         let shared = SharedEvalCache::from_cache(cache, SharedEvalCache::DEFAULT_SHARDS);
-        let engine: Mcts<SharedCachedEvaluator<'_>> = Mcts {
-            cfg,
-            models,
-            eval: SharedCachedEvaluator {
-                cost,
-                sim,
-                cache: &shared,
-                scratch,
-            },
-            nodes,
-            rng,
-            rr_ptr,
-            samples,
-            measure_time_s,
-            n_ca_events,
-            n_errors,
-            best_latency,
-            best_schedule,
-            baseline_latency,
-            unmeasured,
-            curve,
-            max_depth,
-            checkpoints_sorted,
-            checkpoint_cursor,
-            sel_children,
-            sel_stats,
-            sel_path,
-            lint_rejects_at_start,
-        };
+        let (engine, ()) = this.replace_eval(SharedCachedEvaluator {
+            cost,
+            sim,
+            cache: &shared,
+            scratch,
+        });
         let result = engine.run_parallel_rounds(workload_name, threads);
         (result, shared.into_cache())
+    }
+
+    /// Step the serial engine until at least `k` samples are spent (or
+    /// the budget / stall guard stops it) and hand the engine back —
+    /// the checkpoint point for [`Mcts::snapshot`]. Running the
+    /// remainder afterwards (e.g. after a snapshot/resume round-trip)
+    /// is bit-identical to an uninterrupted run: the loop is the same
+    /// `step()` sequence [`Mcts::run`] drives.
+    pub fn run_until(mut self, k: usize) -> Mcts {
+        let k = k.min(self.cfg.budget);
+        let mut stall = 0;
+        while self.samples < k && stall < 10_000 {
+            let before = self.samples;
+            self.step();
+            if self.samples == before {
+                stall += 1;
+            } else {
+                stall = 0;
+            }
+        }
+        self
+    }
+
+    /// Tree-parallel analogue of [`Mcts::run_until`]: run whole parallel
+    /// rounds until at least `k` samples are spent, then convert back to
+    /// the serial (checkpointable) engine form. Checkpoints land on
+    /// round boundaries; lane counts are computed against the full
+    /// configured budget, so the rounds executed here are exactly the
+    /// prefix an uninterrupted [`Mcts::run_parallel`] at the same
+    /// `(seed, threads)` would run — the persisted `round` counter keeps
+    /// the continuation on the same per-round lane-seed sequence.
+    pub fn run_parallel_until(self, threads: usize, k: usize) -> Mcts {
+        if threads <= 1 {
+            return self.run_until(k);
+        }
+        let k = k.min(self.cfg.budget);
+        let (this, CachedEvaluator {
+            cost,
+            sim,
+            cache,
+            scratch,
+        }) = self.replace_eval(());
+        let shared = SharedEvalCache::from_cache(cache, SharedEvalCache::DEFAULT_SHARDS);
+        let (mut engine, ()) = this.replace_eval(SharedCachedEvaluator {
+            cost,
+            sim,
+            cache: &shared,
+            scratch,
+        });
+        engine.run_parallel_rounds_until(threads, k);
+        let (this, SharedCachedEvaluator {
+            cost,
+            sim,
+            scratch,
+            ..
+        }) = engine.replace_eval(());
+        let (engine, ()) = this.replace_eval(CachedEvaluator {
+            cost,
+            sim,
+            cache: shared.into_cache(),
+            scratch,
+        });
+        engine
     }
 }
 
@@ -1064,6 +1187,18 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
     /// simulator evaluation through the shared cache) is small enough
     /// that per-round thread spawning would dominate it.
     fn run_parallel_rounds(mut self, workload_name: &str, threads: usize) -> SearchResult {
+        let until = self.cfg.budget;
+        self.run_parallel_rounds_until(threads, until);
+        self.finish(workload_name).0
+    }
+
+    /// Run whole parallel rounds until at least `until` samples are
+    /// spent (or the stall guard trips). The persistent `self.round`
+    /// counter — not a local — feeds [`round_seed`], so a search
+    /// checkpointed here and resumed later replays the exact same
+    /// per-round lane-seed sequence an uninterrupted run would.
+    fn run_parallel_rounds_until(&mut self, threads: usize, until: usize) {
+        let until = until.min(self.cfg.budget);
         let shared = self.eval.cache;
         let target = self.eval.target();
         let sim = self.eval.sim.clone();
@@ -1075,34 +1210,33 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
                         .0
                 });
             let mut stall = 0;
-            let mut round: u64 = 0;
-            while self.samples < self.cfg.budget && stall < 10_000 {
+            while self.samples < until && stall < 10_000 {
                 let before = self.samples;
+                let round = self.round;
                 self.parallel_round(round, threads, &pool);
-                round = round.wrapping_add(1);
+                self.round = self.round.wrapping_add(1);
                 if self.samples == before {
                     stall += 1;
                 } else {
                     stall = 0;
                 }
             }
-            debug_assert!(
-                self.nodes
-                    .iter()
-                    .all(|n| n.virtual_loss == 0.0 && n.pending_children == 0),
-                "virtual loss / pending-expansion marks leaked past a round"
-            );
-            debug_assert!(
-                self.nodes
-                    .iter()
-                    .all(|n| n.depth >= self.max_depth
-                        || n.children.len() <= self.cfg.branching.max(1)),
-                "branching factor violated by parallel expansion"
-            );
             // the pool drops when this closure returns, shutting the
             // workers down before the scope joins them
-            self.finish(workload_name).0
-        })
+        });
+        debug_assert!(
+            self.nodes
+                .iter()
+                .all(|n| n.virtual_loss == 0.0 && n.pending_children == 0),
+            "virtual loss / pending-expansion marks leaked past a round"
+        );
+        debug_assert!(
+            self.nodes
+                .iter()
+                .all(|n| n.depth >= self.max_depth
+                    || n.children.len() <= self.cfg.branching.max(1)),
+            "branching factor violated by parallel expansion"
+        );
     }
 
     /// One tree-parallel round:

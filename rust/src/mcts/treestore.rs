@@ -1,0 +1,844 @@
+//! Versioned persistence for the MCTS search tree.
+//!
+//! A snapshot captures **everything** the engine needs to continue a
+//! search bit-identically: the node arena (schedules delta-encoded
+//! against their parents), the engine RNG stream position, the
+//! course-alteration and routing state, the incumbent, the measurement
+//! queue, the trained cost model (forest weights verbatim — refitting
+//! would consume RNG draws and diverge), and the full evaluation cache
+//! including prediction entries and hit/miss counters.
+//!
+//! The resume-equivalence contract: a search snapshotted at sample `k`
+//! ([`Mcts::run_until`] / [`Mcts::run_parallel_until`]) and resumed with
+//! [`Mcts::resume`] — possibly in another process — then run to its
+//! budget `N` reports results bit-identical to an uninterrupted
+//! `N`-sample run: same speedup, same incumbent trace hash, same sample
+//! and cache counters. `rust/tests/tree_persist.rs` and the
+//! `prop_tree_roundtrip_preserves_search` property test enforce it.
+//!
+//! What is deliberately **not** serialized:
+//! * the lazy prompt renderings (`code`, `trace_tail`) — re-rendered on
+//!   first prompt use after resume, which draws no randomness and so
+//!   cannot perturb the search;
+//! * node depths and children lists — recomputed from the parent links;
+//! * the cost model's identity salt — a restored model draws a fresh
+//!   process-local nonce and its cached predictions are re-keyed under
+//!   it (see [`crate::costmodel::CostModel::restore`]).
+//!
+//! Like the eval-cache store, saves are atomic (write to a pid-suffixed
+//! temp file, then rename) and loads degrade: a missing file starts
+//! cold silently, a corrupt or version-mismatched file starts cold with
+//! a stderr warning — never a panic. [`validate`] re-checks the whole
+//! arena on load (parent links acyclic and backward-pointing, model
+//! indices in range, statistics finite), so a truncated or hand-edited
+//! file is rejected as a clean `Err`, not an index panic deep in the
+//! engine.
+
+use super::evalcache::{CachedEvaluator, EvalCache};
+use super::{Mcts, Node, Routing, SearchConfig};
+use crate::costmodel::{CostModel, ScoreScratch};
+use crate::llm::{CallKind, ModelSet, ModelStats};
+use crate::schedule::Schedule;
+use crate::sim::Simulator;
+use crate::util::json::{
+    f64_to_bits_json, json_bits_f64, json_u64_str, json_usize, u64_str_arr_json,
+};
+use crate::util::{Json, Rng};
+use std::sync::{Arc, OnceLock};
+
+/// Bump on any incompatible change to the snapshot layout. Loads of any
+/// other version degrade to a cold tree (with a warning), never to a
+/// misinterpreted one.
+pub const TREE_FORMAT_VERSION: f64 = 1.0;
+
+// ---------------------------------------------------------------------
+// small field helpers (local conventions: usizes as JSON numbers, u64s
+// as decimal strings, f64 engine state as to_bits strings)
+// ---------------------------------------------------------------------
+
+fn opt_usize_json(x: Option<usize>) -> Json {
+    match x {
+        Some(v) => v.into(),
+        None => Json::Null,
+    }
+}
+
+fn num_usize(v: &Json, what: &str) -> Result<usize, String> {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9e15 => Ok(*n as usize),
+        _ => Err(format!("tree file: {what} must be a non-negative integer")),
+    }
+}
+
+fn num_i64(v: &Json, what: &str) -> Result<i64, String> {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => Ok(*n as i64),
+        _ => Err(format!("tree file: {what} must be an integer")),
+    }
+}
+
+fn json_opt_usize(v: &Json, key: &str) -> Result<Option<usize>, String> {
+    match v.get(key) {
+        Some(Json::Null) => Ok(None),
+        Some(n) => Ok(Some(num_usize(n, key)?)),
+        None => Err(format!("tree file: missing field {key}")),
+    }
+}
+
+fn json_bool(v: &Json, key: &str) -> Result<bool, String> {
+    match v.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(format!("tree file: missing or non-boolean field {key}")),
+    }
+}
+
+fn usize_arr_json(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn json_usize_arr(v: &Json, key: &str) -> Result<Vec<usize>, String> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .ok_or(format!("tree file: missing array field {key}"))?
+        .iter()
+        .map(|e| num_usize(e, key))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// search configuration
+// ---------------------------------------------------------------------
+
+fn routing_name(r: Routing) -> &'static str {
+    match r {
+        Routing::Endogenous => "endogenous",
+        Routing::Random => "random",
+        Routing::RoundRobin => "round_robin",
+    }
+}
+
+fn cfg_to_json(cfg: &SearchConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("lambda", f64_to_bits_json(cfg.lambda))
+        .set("exploration_c", f64_to_bits_json(cfg.exploration_c))
+        .set("measure_overhead_s", f64_to_bits_json(cfg.measure_overhead_s))
+        .set("branching", cfg.branching.into())
+        .set("budget", cfg.budget.into())
+        .set("rollout_depth", cfg.rollout_depth.into())
+        .set("measure_interval", cfg.measure_interval.into())
+        .set("measure_top_k", cfg.measure_top_k.into())
+        .set("search_threads", cfg.search_threads.into())
+        .set("ca_threshold", opt_usize_json(cfg.ca_threshold))
+        .set("routing", routing_name(cfg.routing).into())
+        .set("seed", Json::Str(cfg.seed.to_string()))
+        .set("checkpoints", usize_arr_json(&cfg.checkpoints));
+    j
+}
+
+fn cfg_from_json(v: &Json) -> Result<SearchConfig, String> {
+    let routing = match v.get("routing").and_then(Json::as_str) {
+        Some("endogenous") => Routing::Endogenous,
+        Some("random") => Routing::Random,
+        Some("round_robin") => Routing::RoundRobin,
+        other => return Err(format!("tree file: unknown routing policy {other:?}")),
+    };
+    Ok(SearchConfig {
+        lambda: json_bits_f64(v, "lambda")?,
+        exploration_c: json_bits_f64(v, "exploration_c")?,
+        measure_overhead_s: json_bits_f64(v, "measure_overhead_s")?,
+        branching: json_usize(v, "branching")?,
+        budget: json_usize(v, "budget")?,
+        rollout_depth: json_usize(v, "rollout_depth")?,
+        measure_interval: json_usize(v, "measure_interval")?.max(1),
+        measure_top_k: json_usize(v, "measure_top_k")?,
+        search_threads: json_usize(v, "search_threads")?,
+        ca_threshold: json_opt_usize(v, "ca_threshold")?,
+        routing,
+        seed: json_u64_str(v, "seed")?,
+        checkpoints: json_usize_arr(v, "checkpoints")?,
+        warm_cache: None,
+    })
+}
+
+// ---------------------------------------------------------------------
+// model accounting
+// ---------------------------------------------------------------------
+
+fn models_to_json(models: &ModelSet) -> Json {
+    Json::Arr(
+        models
+            .specs
+            .iter()
+            .zip(&models.stats)
+            .map(|(spec, st)| {
+                let mut j = Json::obj();
+                j.set("name", spec.name.into())
+                    .set("regular_calls", st.regular_calls.into())
+                    .set("regular_hits", st.regular_hits.into())
+                    .set("ca_calls", st.ca_calls.into())
+                    .set("ca_hits", st.ca_hits.into())
+                    .set("errors", st.errors.into())
+                    .set("total_cost_usd", f64_to_bits_json(st.total_cost_usd))
+                    .set("total_latency_s", f64_to_bits_json(st.total_latency_s))
+                    .set("tokens_in", f64_to_bits_json(st.tokens_in))
+                    .set("tokens_out", f64_to_bits_json(st.tokens_out));
+                j
+            })
+            .collect(),
+    )
+}
+
+/// Restore per-model accounting into a freshly built model set. The
+/// snapshot's spec list must match the caller's exactly (same models in
+/// the same order) — a tree saved under one model roster cannot silently
+/// continue under another.
+fn restore_model_stats(models: &mut ModelSet, v: &Json) -> Result<(), String> {
+    let arr = v.as_arr().ok_or("tree file: models must be an array")?;
+    if arr.len() != models.specs.len() {
+        return Err(format!(
+            "tree file: {} models persisted, {} configured",
+            arr.len(),
+            models.specs.len()
+        ));
+    }
+    for (i, mj) in arr.iter().enumerate() {
+        let name = mj
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or(format!("tree file: model {i}: missing name"))?;
+        if name != models.specs[i].name {
+            return Err(format!(
+                "tree file: model {i} is {name}, configured set has {}",
+                models.specs[i].name
+            ));
+        }
+        models.stats[i] = ModelStats {
+            regular_calls: json_usize(mj, "regular_calls")?,
+            regular_hits: json_usize(mj, "regular_hits")?,
+            ca_calls: json_usize(mj, "ca_calls")?,
+            ca_hits: json_usize(mj, "ca_hits")?,
+            errors: json_usize(mj, "errors")?,
+            total_cost_usd: json_bits_f64(mj, "total_cost_usd")?,
+            total_latency_s: json_bits_f64(mj, "total_latency_s")?,
+            tokens_in: json_bits_f64(mj, "tokens_in")?,
+            tokens_out: json_bits_f64(mj, "tokens_out")?,
+        };
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// node arena: schedules delta-encoded against the parent
+// ---------------------------------------------------------------------
+
+/// Serialize one block's full schedule state (emitted only for blocks
+/// that differ from the parent node's schedule).
+fn block_to_json(b: usize, blk: &crate::schedule::BlockSched) -> Json {
+    let mut j = Json::obj();
+    j.set("block", b.into())
+        .set(
+            "tiles",
+            Json::Arr(
+                blk.tiles
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|&t| Json::Num(t as f64)).collect()))
+                    .collect(),
+            ),
+        )
+        .set(
+            "order",
+            Json::Arr(
+                blk.order
+                    .iter()
+                    .map(|&(a, l)| Json::Arr(vec![Json::Num(a as f64), Json::Num(l as f64)]))
+                    .collect(),
+            ),
+        )
+        .set("parallel", blk.parallel.into())
+        .set("thread_tiles", blk.thread_tiles.into())
+        .set("vectorize", blk.vectorize.into())
+        .set("unroll", blk.unroll.into())
+        .set("cache_write", blk.cache_write.into())
+        .set(
+            "cache_reads",
+            Json::Arr(blk.cache_reads.iter().map(|&r| opt_usize_json(r)).collect()),
+        )
+        .set("compute_at", opt_usize_json(blk.compute_at))
+        .set("decomposed", blk.decomposed.into());
+    j
+}
+
+/// Apply one persisted block delta to a schedule under rebuild. Shape is
+/// validated against the workload **before** any mutation (axis/read
+/// counts are workload invariants), and the mutated block is re-checked
+/// by the static structural lint, so a corrupt delta yields `Err` — not
+/// a panic inside the simulator.
+fn apply_block_delta(sched: &mut Schedule, v: &Json) -> Result<(), String> {
+    let b = json_usize(v, "block")?;
+    if b >= sched.blocks.len() {
+        return Err(format!(
+            "tree file: block delta index {b} out of range ({} blocks)",
+            sched.blocks.len()
+        ));
+    }
+    let n_axes = sched.blocks[b].tiles.len();
+    let n_reads = sched.blocks[b].cache_reads.len();
+
+    let tiles: Vec<Vec<i64>> = v
+        .get("tiles")
+        .and_then(Json::as_arr)
+        .ok_or("tree file: block delta missing tiles")?
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or("tree file: tiles row must be an array".to_string())?
+                .iter()
+                .map(|t| num_i64(t, "tile factor"))
+                .collect::<Result<Vec<i64>, String>>()
+        })
+        .collect::<Result<_, _>>()?;
+    if tiles.len() != n_axes || tiles.iter().any(|row| row.is_empty()) {
+        return Err(format!(
+            "tree file: block {b}: tiles shape mismatch ({} axes persisted, {n_axes} in workload)",
+            tiles.len()
+        ));
+    }
+    let order: Vec<(usize, usize)> = v
+        .get("order")
+        .and_then(Json::as_arr)
+        .ok_or("tree file: block delta missing order")?
+        .iter()
+        .map(|p| {
+            let pair = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or("tree file: order entry must be an [axis, level] pair".to_string())?;
+            Ok((num_usize(&pair[0], "order axis")?, num_usize(&pair[1], "order level")?))
+        })
+        .collect::<Result<_, String>>()?;
+    for &(a, l) in &order {
+        if a >= tiles.len() || l >= tiles[a].len() {
+            return Err(format!("tree file: block {b}: order entry ({a}, {l}) out of range"));
+        }
+    }
+    let cache_reads: Vec<Option<usize>> = v
+        .get("cache_reads")
+        .and_then(Json::as_arr)
+        .ok_or("tree file: block delta missing cache_reads")?
+        .iter()
+        .map(|e| match e {
+            Json::Null => Ok(None),
+            n => num_usize(n, "cache_reads depth").map(Some),
+        })
+        .collect::<Result<_, String>>()?;
+    if cache_reads.len() != n_reads {
+        return Err(format!(
+            "tree file: block {b}: {} cache_reads persisted, {n_reads} reads in workload",
+            cache_reads.len()
+        ));
+    }
+    let parallel = json_usize(v, "parallel")?;
+    let thread_tiles = json_usize(v, "thread_tiles")?;
+    let unroll = json_usize(v, "unroll")?;
+    let vectorize = json_bool(v, "vectorize")?;
+    let cache_write = json_bool(v, "cache_write")?;
+    let decomposed = json_bool(v, "decomposed")?;
+    let compute_at = json_opt_usize(v, "compute_at")?;
+
+    let bs = sched.block_mut(b);
+    bs.tiles = tiles;
+    bs.order = order;
+    bs.parallel = parallel;
+    bs.thread_tiles = thread_tiles;
+    bs.vectorize = vectorize;
+    bs.unroll = unroll;
+    bs.cache_write = cache_write;
+    bs.cache_reads = cache_reads;
+    bs.compute_at = compute_at;
+    bs.decomposed = decomposed;
+    let workload = Arc::clone(&sched.workload);
+    sched.blocks[b]
+        .validate(&workload, b)
+        .map_err(|e| format!("tree file: block {b}: structurally invalid after delta: {e}"))
+}
+
+/// Serialize node `i`. The schedule is delta-encoded: the trace steps
+/// beyond the parent's trace length (a child's trace always extends its
+/// parent's — schedules are built by applying transforms to the parent
+/// program), and only the per-block states whose `Arc` differs from the
+/// parent's (copy-on-write: untouched blocks share the allocation). The
+/// root is delta-encoded against the workload's initial schedule.
+fn node_to_json(nodes: &[Node], i: usize, initial: &Schedule) -> Json {
+    let n = &nodes[i];
+    let mut j = Json::obj();
+    j.set("parent", opt_usize_json(n.parent))
+        .set("llm", n.llm.into())
+        .set("visits", f64_to_bits_json(n.visits))
+        .set("reward_sum", f64_to_bits_json(n.reward_sum))
+        .set("predicted_score", f64_to_bits_json(n.predicted_score))
+        .set(
+            "expanded_by",
+            match n.expanded_by {
+                None => Json::Null,
+                Some((m, k)) => Json::Arr(vec![
+                    Json::Num(m as f64),
+                    Json::Num(match k {
+                        CallKind::Regular => 0.0,
+                        CallKind::CourseAlteration => 1.0,
+                    }),
+                ]),
+            },
+        )
+        .set("regression_chain", n.regression_chain.into())
+        .set("pruned", n.pruned.into())
+        .set("measured", n.measured.into());
+
+    let base_sched: &Schedule = match n.parent {
+        Some(p) => &nodes[p].schedule,
+        None => initial,
+    };
+    let base_len = base_sched.trace.len();
+    let steps = n.schedule.trace.steps();
+    debug_assert!(steps.len() >= base_len, "child trace must extend its parent's");
+    j.set(
+        "trace_delta",
+        Json::Arr(
+            steps[base_len..]
+                .iter()
+                .map(|s| {
+                    Json::Arr(vec![
+                        s.name.as_ref().into(),
+                        s.block.as_ref().into(),
+                        s.detail.as_str().into(),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    let mut blocks = Vec::new();
+    for (b, blk) in n.schedule.blocks.iter().enumerate() {
+        let changed = match n.parent {
+            // CoW: a block untouched since the parent shares its Arc
+            Some(p) => !Arc::ptr_eq(blk, &nodes[p].schedule.blocks[b]),
+            None => **blk != *initial.blocks[b],
+        };
+        if changed {
+            blocks.push(block_to_json(b, blk));
+        }
+    }
+    j.set("blocks_delta", Json::Arr(blocks));
+    j
+}
+
+/// Explicit post-load arena check: every structural invariant the engine
+/// assumes but never re-checks on its hot paths. Rejecting here turns a
+/// corrupt file into a cold-start warning instead of an index panic.
+fn validate(nodes: &[Node], n_models: usize) -> Result<(), String> {
+    if nodes.is_empty() {
+        return Err("tree file: empty node arena".to_string());
+    }
+    if nodes[0].parent.is_some() {
+        return Err("tree file: root node has a parent".to_string());
+    }
+    for (i, n) in nodes.iter().enumerate() {
+        match n.parent {
+            None if i > 0 => {
+                return Err(format!("tree file: non-root node {i} has no parent"));
+            }
+            Some(p) if p >= i => {
+                return Err(format!(
+                    "tree file: node {i} has dangling parent index {p} (must be < {i})"
+                ));
+            }
+            _ => {}
+        }
+        if n.llm >= n_models {
+            return Err(format!(
+                "tree file: node {i} assigned to model {} of {n_models}",
+                n.llm
+            ));
+        }
+        if let Some((m, _)) = n.expanded_by {
+            if m >= n_models {
+                return Err(format!(
+                    "tree file: node {i} expanded by model {m} of {n_models}"
+                ));
+            }
+        }
+        if !n.visits.is_finite() || !n.reward_sum.is_finite() || !n.predicted_score.is_finite() {
+            return Err(format!(
+                "tree file: node {i} has non-finite statistics (visits {}, reward {}, score {})",
+                n.visits, n.reward_sum, n.predicted_score
+            ));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// the engine snapshot itself
+// ---------------------------------------------------------------------
+
+impl Mcts {
+    /// Serialize the complete search state to a version-tagged JSON
+    /// value. Only valid between samples (never mid-round): tree-parallel
+    /// in-flight marks must be clear, which [`Mcts::run_until`] /
+    /// [`Mcts::run_parallel_until`] guarantee at their return points.
+    pub fn snapshot(&self) -> Json {
+        debug_assert!(
+            self.nodes
+                .iter()
+                .all(|n| n.virtual_loss == 0.0 && n.pending_children == 0),
+            "snapshot taken mid-round: in-flight marks present"
+        );
+        let initial = Schedule::initial(Arc::clone(&self.nodes[0].schedule.workload));
+        let best_node = self
+            .nodes
+            .iter()
+            .position(|n| Arc::ptr_eq(&n.schedule, &self.best_schedule))
+            .unwrap_or(0);
+        let mut j = Json::obj();
+        j.set("version", TREE_FORMAT_VERSION.into())
+            .set("workload", self.nodes[0].schedule.workload.name.as_str().into())
+            .set("target", self.eval.sim.target().name().into())
+            .set("cfg", cfg_to_json(&self.cfg))
+            .set("models", models_to_json(&self.models))
+            .set(
+                "nodes",
+                Json::Arr(
+                    (0..self.nodes.len())
+                        .map(|i| node_to_json(&self.nodes, i, &initial))
+                        .collect(),
+                ),
+            )
+            .set("rng", u64_str_arr_json(&self.rng.state()))
+            .set("rr_ptr", self.rr_ptr.into())
+            .set("samples", self.samples.into())
+            .set("measure_time_s", f64_to_bits_json(self.measure_time_s))
+            .set("n_ca_events", self.n_ca_events.into())
+            .set("n_errors", self.n_errors.into())
+            .set("best_latency", f64_to_bits_json(self.best_latency))
+            .set("best_node", best_node.into())
+            .set("baseline_latency", f64_to_bits_json(self.baseline_latency))
+            .set("unmeasured", usize_arr_json(&self.unmeasured))
+            .set(
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|&(s, v)| Json::Arr(vec![Json::Num(s as f64), f64_to_bits_json(v)]))
+                        .collect(),
+                ),
+            )
+            .set("checkpoint_cursor", self.checkpoint_cursor.into())
+            .set("max_depth", self.max_depth.into())
+            .set("round", Json::Str(self.round.to_string()))
+            .set(
+                "lint_rejects",
+                Json::Str(
+                    (self.lint_rejects_base
+                        + crate::analysis::lint_rejects()
+                            .saturating_sub(self.lint_rejects_at_start))
+                    .to_string(),
+                ),
+            )
+            .set("cost_model", self.eval.cost.snapshot())
+            .set("eval_cache", self.eval.cache.snapshot_full(self.eval.cost.salt));
+        j
+    }
+
+    /// Rebuild a resumable engine from a snapshot. The caller supplies
+    /// the process-local pieces a snapshot cannot carry — a fresh model
+    /// set (specs validated by name against the persisted roster), the
+    /// simulator, and the workload's **initial** schedule (trace must be
+    /// empty) — and gets back an engine that continues the persisted
+    /// search exactly where it stood. The persisted configuration wins:
+    /// the search continues under the config it was started with (the
+    /// serve loop then grows the budget per request with
+    /// [`Mcts::extend_budget`]).
+    pub fn resume(
+        v: &Json,
+        models: ModelSet,
+        sim: Simulator,
+        root: Schedule,
+    ) -> Result<Mcts, String> {
+        let version = v
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or("tree file: missing version tag")?;
+        if version != TREE_FORMAT_VERSION {
+            return Err(format!(
+                "tree file: unsupported version {version} (this build reads {TREE_FORMAT_VERSION})"
+            ));
+        }
+        let wname = v
+            .get("workload")
+            .and_then(Json::as_str)
+            .ok_or("tree file: missing workload name")?;
+        if wname != root.workload.name {
+            return Err(format!(
+                "tree file: persisted for workload {wname}, resuming {}",
+                root.workload.name
+            ));
+        }
+        let tname = v
+            .get("target")
+            .and_then(Json::as_str)
+            .ok_or("tree file: missing target name")?;
+        if tname != sim.target().name() {
+            return Err(format!(
+                "tree file: persisted for target {tname}, resuming {}",
+                sim.target().name()
+            ));
+        }
+        if !root.trace.is_empty() {
+            return Err("tree file: resume root must be an initial (untraced) schedule".to_string());
+        }
+        let cfg = cfg_from_json(v.get("cfg").ok_or("tree file: missing cfg")?)?;
+        let mut models = models;
+        restore_model_stats(&mut models, v.get("models").ok_or("tree file: missing models")?)?;
+
+        // ---- node arena: rebuild schedules parent-first ----------------
+        let nodes_json = v
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or("tree file: missing nodes")?;
+        let initial = Schedule::initial(Arc::clone(&root.workload));
+        let mut nodes: Vec<Node> = Vec::with_capacity(nodes_json.len());
+        for (i, nj) in nodes_json.iter().enumerate() {
+            let parent = json_opt_usize(nj, "parent").map_err(|e| format!("node {i}: {e}"))?;
+            if let Some(p) = parent {
+                if p >= i {
+                    return Err(format!(
+                        "tree file: node {i} has dangling parent index {p} (must be < {i})"
+                    ));
+                }
+            }
+            let mut sched = match parent {
+                Some(p) => (*nodes[p].schedule).clone(),
+                None => initial.clone(),
+            };
+            let steps = nj
+                .get("trace_delta")
+                .and_then(Json::as_arr)
+                .ok_or(format!("tree file: node {i}: missing trace_delta"))?;
+            for step in steps {
+                let parts = step
+                    .as_arr()
+                    .filter(|a| a.len() == 3)
+                    .ok_or(format!("tree file: node {i}: malformed trace step"))?;
+                match (parts[0].as_str(), parts[1].as_str(), parts[2].as_str()) {
+                    (Some(name), Some(block), Some(detail)) => {
+                        sched.trace.push(name, block, detail.to_string());
+                    }
+                    _ => return Err(format!("tree file: node {i}: malformed trace step")),
+                }
+            }
+            let deltas = nj
+                .get("blocks_delta")
+                .and_then(Json::as_arr)
+                .ok_or(format!("tree file: node {i}: missing blocks_delta"))?;
+            for bd in deltas {
+                apply_block_delta(&mut sched, bd).map_err(|e| format!("node {i}: {e}"))?;
+            }
+            let expanded_by = match nj.get("expanded_by") {
+                Some(Json::Null) => None,
+                Some(Json::Arr(a)) if a.len() == 2 => {
+                    let m = num_usize(&a[0], "expanded_by model")?;
+                    let k = match a[1].as_f64() {
+                        Some(x) if x == 0.0 => CallKind::Regular,
+                        Some(x) if x == 1.0 => CallKind::CourseAlteration,
+                        _ => {
+                            return Err(format!("tree file: node {i}: unknown call kind"));
+                        }
+                    };
+                    Some((m, k))
+                }
+                _ => return Err(format!("tree file: node {i}: malformed expanded_by")),
+            };
+            let depth = parent.map_or(0, |p| nodes[p].depth + 1);
+            nodes.push(Node {
+                parent,
+                children: Vec::new(),
+                schedule: Arc::new(sched),
+                code: OnceLock::new(),
+                trace_tail: OnceLock::new(),
+                llm: json_usize(nj, "llm").map_err(|e| format!("node {i}: {e}"))?,
+                visits: json_bits_f64(nj, "visits").map_err(|e| format!("node {i}: {e}"))?,
+                reward_sum: json_bits_f64(nj, "reward_sum")
+                    .map_err(|e| format!("node {i}: {e}"))?,
+                predicted_score: json_bits_f64(nj, "predicted_score")
+                    .map_err(|e| format!("node {i}: {e}"))?,
+                expanded_by,
+                depth,
+                regression_chain: json_usize(nj, "regression_chain")
+                    .map_err(|e| format!("node {i}: {e}"))?,
+                pruned: json_bool(nj, "pruned").map_err(|e| format!("node {i}: {e}"))?,
+                measured: json_bool(nj, "measured").map_err(|e| format!("node {i}: {e}"))?,
+                virtual_loss: 0.0,
+                pending_children: 0,
+            });
+        }
+        validate(&nodes, models.len())?;
+        // children rebuild from parent links: insertion allocates node
+        // indices in order and appends to the parent's list at the same
+        // moment, so index order IS the historical child order
+        for i in 1..nodes.len() {
+            let p = nodes[i].parent.expect("validated above");
+            nodes[p].children.push(i);
+        }
+
+        // ---- scalar engine state ---------------------------------------
+        let rng_state: [u64; 4] = crate::util::json::json_u64_str_arr(v, "rng")?
+            .try_into()
+            .map_err(|_| "tree file: rng state must be exactly 4 words".to_string())?;
+        let samples = json_usize(v, "samples")?;
+        let best_node = json_usize(v, "best_node")?;
+        if best_node >= nodes.len() {
+            return Err(format!(
+                "tree file: best_node {best_node} out of range ({} nodes)",
+                nodes.len()
+            ));
+        }
+        let unmeasured = json_usize_arr(v, "unmeasured")?;
+        if let Some(&bad) = unmeasured.iter().find(|&&u| u >= nodes.len()) {
+            return Err(format!(
+                "tree file: unmeasured index {bad} out of range ({} nodes)",
+                nodes.len()
+            ));
+        }
+        let curve: Vec<(usize, f64)> = v
+            .get("curve")
+            .and_then(Json::as_arr)
+            .ok_or("tree file: missing curve")?
+            .iter()
+            .map(|p| {
+                let pair = p
+                    .as_arr()
+                    .filter(|a| a.len() == 2)
+                    .ok_or("tree file: malformed curve point".to_string())?;
+                Ok((
+                    num_usize(&pair[0], "curve samples")?,
+                    crate::util::json::f64_from_bits_json(&pair[1])
+                        .map_err(|e| format!("curve point: {e}"))?,
+                ))
+            })
+            .collect::<Result<_, String>>()?;
+        let mut checkpoints_sorted = cfg.checkpoints.clone();
+        checkpoints_sorted.sort_unstable();
+        checkpoints_sorted.dedup();
+        let checkpoint_cursor = json_usize(v, "checkpoint_cursor")?;
+        if checkpoint_cursor > checkpoints_sorted.len() {
+            return Err(format!(
+                "tree file: checkpoint cursor {checkpoint_cursor} past {} checkpoints",
+                checkpoints_sorted.len()
+            ));
+        }
+        let best_latency = json_bits_f64(v, "best_latency")?;
+        let baseline_latency = json_bits_f64(v, "baseline_latency")?;
+        if !best_latency.is_finite() || !baseline_latency.is_finite() {
+            return Err("tree file: non-finite incumbent/baseline latency".to_string());
+        }
+
+        let cost = CostModel::restore(
+            sim.target(),
+            v.get("cost_model").ok_or("tree file: missing cost_model")?,
+        )?;
+        let cache = EvalCache::restore_full(
+            v.get("eval_cache").ok_or("tree file: missing eval_cache")?,
+            cost.salt,
+        )?;
+        let best_schedule = Arc::clone(&nodes[best_node].schedule);
+        Ok(Mcts {
+            cfg,
+            models,
+            eval: CachedEvaluator {
+                cost,
+                sim,
+                cache,
+                scratch: ScoreScratch::default(),
+            },
+            nodes,
+            rng: Rng::from_state(rng_state),
+            rr_ptr: json_usize(v, "rr_ptr")?,
+            samples,
+            measure_time_s: json_bits_f64(v, "measure_time_s")?,
+            n_ca_events: json_usize(v, "n_ca_events")?,
+            n_errors: json_usize(v, "n_errors")?,
+            best_latency,
+            best_schedule,
+            baseline_latency,
+            unmeasured,
+            curve,
+            max_depth: json_usize(v, "max_depth")?.max(1),
+            checkpoints_sorted,
+            checkpoint_cursor,
+            sel_children: Vec::new(),
+            sel_stats: Vec::new(),
+            sel_path: Vec::new(),
+            lint_rejects_at_start: crate::analysis::lint_rejects(),
+            lint_rejects_base: json_u64_str(v, "lint_rejects")?,
+            round: json_u64_str(v, "round")?,
+        })
+    }
+
+    /// Lint every schedule in the tree through the static legality
+    /// analyzer, returning the first Deny-level diagnostic (as `(node
+    /// index, rendered diagnostic)`) or `None` when the whole tree is
+    /// clean. Every node a search inserts passes the apply-time Deny
+    /// gate, so a live tree is clean by construction — this is the
+    /// trust-but-verify check for trees rebuilt from disk, where a
+    /// hand-edited or subtly corrupt file could smuggle in a schedule
+    /// the gate never saw.
+    pub fn first_tree_deny(&self) -> Option<(usize, String)> {
+        let gpu = self.eval.sim.target().is_gpu();
+        self.nodes.iter().enumerate().find_map(|(i, n)| {
+            crate::analysis::first_deny(&n.schedule, gpu).map(|d| (i, d.to_string()))
+        })
+    }
+
+    /// Atomic snapshot-to-disk: write to a pid-suffixed temp file in the
+    /// same directory, then rename over the target — a crash mid-write
+    /// leaves the previous snapshot intact, and a reader never sees a
+    /// half-written file.
+    pub fn save_file(&self, path: &str) -> Result<(), String> {
+        let tmp = format!("{path}.tmp.{}", std::process::id());
+        std::fs::write(&tmp, format!("{}\n", self.snapshot()))
+            .map_err(|e| format!("{tmp}: {e}"))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Strict load: parse + [`Mcts::resume`], errors surfaced.
+    pub fn load_file(
+        path: &str,
+        models: ModelSet,
+        sim: Simulator,
+        root: Schedule,
+    ) -> Result<Mcts, String> {
+        Mcts::resume(&Json::parse_file(path)?, models, sim, root)
+    }
+
+    /// Degrading load for long-lived serve loops: a missing file starts a
+    /// cold search silently (the normal first-request path); an
+    /// unreadable, corrupt, or version-mismatched file starts cold with a
+    /// stderr warning — persistence failures must never take the daemon
+    /// down. Returns whether a persisted tree was actually resumed.
+    pub fn resume_file_or_cold(
+        path: &str,
+        cfg: SearchConfig,
+        models: ModelSet,
+        sim: Simulator,
+        root: Schedule,
+    ) -> (Mcts, bool) {
+        if !std::path::Path::new(path).exists() {
+            return (Mcts::new(cfg, models, sim, root), false);
+        }
+        match Mcts::load_file(path, models.clone(), sim.clone(), root.clone()) {
+            Ok(engine) => (engine, true),
+            Err(e) => {
+                eprintln!("warning: tree file {e}; starting cold");
+                (Mcts::new(cfg, models, sim, root), false)
+            }
+        }
+    }
+}

@@ -96,6 +96,102 @@ impl Json {
     }
 }
 
+/// Encode an `f64` **exactly** as the decimal string of its IEEE-754 bit
+/// pattern. `Json::Num` is lossy for engine state: the writer's integer
+/// fast path collapses `-0.0` to `0`, and JSON has no NaN/±inf at all.
+/// Persistence code (tree snapshots, cost-model state) uses this form
+/// wherever bit-for-bit round-tripping is load-bearing.
+pub fn f64_to_bits_json(x: f64) -> Json {
+    Json::Str(format!("{}", x.to_bits()))
+}
+
+/// Decode a bits-string produced by [`f64_to_bits_json`].
+pub fn f64_from_bits_json(v: &Json) -> Result<f64, String> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| "expected f64 bits string".to_string())?;
+    let bits: u64 = s
+        .parse()
+        .map_err(|_| format!("bad f64 bits string {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Fetch object field `key` as a non-negative integer. Persistence
+/// loaders use these accessors so every missing/mistyped field becomes a
+/// named `Err` (degrading to a cold start) instead of a panic.
+pub fn json_usize(v: &Json, key: &str) -> Result<usize, String> {
+    let n = v
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing field {key:?}"))?;
+    if n.fract() != 0.0 || !(0.0..=9e15).contains(&n) {
+        return Err(format!("field {key:?}: bad integer {n}"));
+    }
+    Ok(n as usize)
+}
+
+/// Fetch object field `key` as a `u64` stored in decimal-string form
+/// (full 64-bit range; `Json::Num` only holds 53 exact bits).
+pub fn json_u64_str(v: &Json, key: &str) -> Result<u64, String> {
+    let s = v
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing field {key:?}"))?;
+    s.parse()
+        .map_err(|_| format!("field {key:?}: bad u64 string {s:?}"))
+}
+
+/// Fetch object field `key` as an exact f64 bits-string
+/// (see [`f64_to_bits_json`]).
+pub fn json_bits_f64(v: &Json, key: &str) -> Result<f64, String> {
+    f64_from_bits_json(
+        v.get(key)
+            .ok_or_else(|| format!("missing field {key:?}"))?,
+    )
+    .map_err(|e| format!("field {key:?}: {e}"))
+}
+
+/// Encode a `u64` slice as an array of decimal strings (full 64-bit
+/// range — RNG stream positions, trace hashes).
+pub fn u64_str_arr_json(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Str(x.to_string())).collect())
+}
+
+/// Fetch object field `key` as an array of decimal-string `u64`s
+/// (see [`u64_str_arr_json`]).
+pub fn json_u64_str_arr(v: &Json, key: &str) -> Result<Vec<u64>, String> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("missing array {key:?}"))?;
+    arr.iter()
+        .map(|x| {
+            let s = x
+                .as_str()
+                .ok_or_else(|| format!("array {key:?}: non-string"))?;
+            s.parse()
+                .map_err(|_| format!("array {key:?}: bad u64 string {s:?}"))
+        })
+        .collect()
+}
+
+/// Fetch object field `key` as an array of non-negative `u32` indices.
+pub fn json_u32_arr(v: &Json, key: &str) -> Result<Vec<u32>, String> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("missing array {key:?}"))?;
+    arr.iter()
+        .map(|x| {
+            let n = x.as_f64().ok_or_else(|| format!("array {key:?}: non-number"))?;
+            if n.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&n) {
+                return Err(format!("array {key:?}: bad index {n}"));
+            }
+            Ok(n as u32)
+        })
+        .collect()
+}
+
 impl From<&str> for Json {
     fn from(s: &str) -> Json {
         Json::Str(s.to_string())
@@ -446,6 +542,27 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""éx""#).unwrap();
         assert_eq!(j.as_str(), Some("éx"));
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_is_exact() {
+        for x in [
+            0.0,
+            -0.0,
+            1.5,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            -3.141592653589793,
+        ] {
+            let j = f64_to_bits_json(x);
+            let text = j.to_string();
+            let back = f64_from_bits_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x}");
+        }
+        assert!(f64_from_bits_json(&Json::Num(1.0)).is_err());
+        assert!(f64_from_bits_json(&Json::Str("xyz".into())).is_err());
     }
 
     #[test]

@@ -42,6 +42,19 @@ impl Rng {
         Rng::new(self.next_u64() ^ salt.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw 256-bit stream position, for search-state persistence
+    /// (tree snapshots). `Rng::from_state(r.state())` continues the
+    /// stream exactly where `r` stands.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact stream position captured by
+    /// [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -223,6 +236,18 @@ mod tests {
         let mut s = v.clone();
         s.sort_unstable();
         assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_roundtrip_continues_stream() {
+        let mut a = Rng::new(11);
+        for _ in 0..37 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -630,6 +630,108 @@ fn prop_reachable_schedules_lint_clean() {
     assert_eq!(targets_seen.len(), 2, "both targets must be exercised");
 }
 
+#[test]
+fn prop_tree_roundtrip_preserves_search() {
+    // the tree-persistence contract (`litecoop::mcts::treestore`): for
+    // random scenarios, budgets, seeds, model rosters, targets, and
+    // engines (serial and tree-parallel) — checkpoint a search at a
+    // random sample k, snapshot, resume from the snapshot with freshly
+    // constructed process-local state, and run to budget N: the result
+    // is bit-identical to the uninterrupted N-sample run, the resumed
+    // tree re-snapshots byte-identically (save→load→save fixed point),
+    // and every node in the resumed tree passes the static legality
+    // analyzer (`analysis::first_deny` is None tree-wide).
+    use litecoop::llm::registry::paper_config;
+    use litecoop::llm::ModelSet;
+    use litecoop::mcts::{Mcts, SearchConfig, SearchResult};
+    use litecoop::sim::Simulator;
+
+    fn diff(a: &SearchResult, b: &SearchResult) -> Result<(), String> {
+        let checks: [(&str, bool); 13] = [
+            ("workload", a.workload == b.workload),
+            ("best_speedup", a.best_speedup.to_bits() == b.best_speedup.to_bits()),
+            ("best_latency", a.best_latency_s.to_bits() == b.best_latency_s.to_bits()),
+            (
+                "baseline_latency",
+                a.baseline_latency_s.to_bits() == b.baseline_latency_s.to_bits(),
+            ),
+            ("curve", a.curve == b.curve),
+            ("compile_time", a.compile_time_s.to_bits() == b.compile_time_s.to_bits()),
+            ("api_cost", a.api_cost_usd.to_bits() == b.api_cost_usd.to_bits()),
+            ("n_samples", a.n_samples == b.n_samples),
+            ("n_ca_events", a.n_ca_events == b.n_ca_events),
+            ("n_errors", a.n_errors == b.n_errors),
+            ("call_counts", a.call_counts == b.call_counts),
+            ("eval_cache", a.eval_cache == b.eval_cache),
+            ("lint_rejects", a.lint_rejects == b.lint_rejects),
+        ];
+        if let Some((field, _)) = checks.iter().find(|(_, ok)| !ok) {
+            return Err(format!("field '{field}' diverged after resume"));
+        }
+        if a.best_schedule.trace.running_hash() != b.best_schedule.trace.running_hash()
+            || a.best_schedule.fingerprint() != b.best_schedule.fingerprint()
+        {
+            return Err("incumbent schedule diverged after resume".to_string());
+        }
+        Ok(())
+    }
+
+    check("tree-roundtrip-preserves-search", 200, 0x7EE_5701, |rng| {
+        let spec = random_scenario(rng);
+        let name = spec.name();
+        let w = spec.lower().map_err(|e| format!("{name}: lower: {e}"))?;
+        let root = Schedule::initial(Arc::new(w));
+        let gpu = rng.chance(0.3);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        let budget = 6 + rng.below(30);
+        let k = 1 + rng.below(budget - 1); // strictly inside the run
+        let threads = if rng.chance(0.25) { 2 } else { 1 };
+        let n_llms = 2 + rng.below(3);
+        let seed = rng.next_u64();
+        let cfg = SearchConfig {
+            budget,
+            seed,
+            checkpoints: vec![budget / 2, budget],
+            ..SearchConfig::default()
+        };
+        let models = || ModelSet::new(paper_config(n_llms, "gpt-5.2"));
+        let engine =
+            || Mcts::new(cfg.clone(), models(), Simulator::new(target), root.clone());
+
+        let uninterrupted = if threads > 1 {
+            engine().run_parallel(&name, threads)
+        } else {
+            engine().run(&name)
+        };
+        let part = if threads > 1 {
+            engine().run_parallel_until(threads, k)
+        } else {
+            engine().run_until(k)
+        };
+        let snap = part.snapshot();
+        let resumed = Mcts::resume(&snap, models(), Simulator::new(target), root.clone())
+            .map_err(|e| format!("{name}: resume failed: {e}"))?;
+        if let Some((i, d)) = resumed.first_tree_deny() {
+            return Err(format!("{name}: resumed tree node {i} carries Deny: {d}"));
+        }
+        let resnap = resumed.snapshot();
+        if format!("{snap}") != format!("{resnap}") {
+            return Err(format!(
+                "{name}: snapshot -> resume -> snapshot is not a fixed point \
+                 (k={k}, budget={budget}, threads={threads})"
+            ));
+        }
+        let continued = if threads > 1 {
+            resumed.run_parallel(&name, threads)
+        } else {
+            resumed.run(&name)
+        };
+        diff(&uninterrupted, &continued).map_err(|e| {
+            format!("{name} (k={k}, budget={budget}, threads={threads}, gpu={gpu}): {e}")
+        })
+    });
+}
+
 // ------------------------------------------------------------------ harness
 
 #[test]

@@ -1,0 +1,302 @@
+//! Versioned MCTS tree persistence integration tests: the
+//! resume-equivalence contract (checkpoint at sample k, resume from
+//! disk, run to budget N — bit-identical to an uninterrupted N-sample
+//! run), save→load→save byte-identity, and the corruption suite (every
+//! malformed tree file degrades to a cold search, never a panic).
+//!
+//! Mirrors `cache_persist.rs` for the eval-cache layer; this file locks
+//! the tree layer above it (`litecoop::mcts::treestore`).
+
+use litecoop::llm::registry::paper_config;
+use litecoop::llm::ModelSet;
+use litecoop::mcts::{Mcts, SearchConfig, SearchResult};
+use litecoop::schedule::Schedule;
+use litecoop::sim::{Simulator, Target};
+use litecoop::util::json::f64_to_bits_json;
+use litecoop::util::Json;
+use litecoop::workloads;
+use std::sync::Arc;
+
+/// Unique temp path per test (tests run concurrently in one process).
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("litecoop_tree_persist_{tag}_{}.json", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+fn search_cfg(budget: usize, seed: u64) -> SearchConfig {
+    SearchConfig {
+        budget,
+        seed,
+        checkpoints: vec![budget / 2, budget],
+        ..SearchConfig::default()
+    }
+}
+
+/// The process-local pieces a snapshot cannot carry — what a resuming
+/// process must reconstruct itself before calling [`Mcts::resume`].
+fn fresh_parts(workload: &str) -> (ModelSet, Simulator, Schedule) {
+    let w = workloads::resolve(workload).unwrap();
+    (
+        ModelSet::new(paper_config(4, "gpt-5.2")),
+        Simulator::new(Target::Cpu),
+        Schedule::initial(Arc::new(w)),
+    )
+}
+
+fn engine_for(workload: &str, budget: usize, seed: u64) -> Mcts {
+    let (models, sim, root) = fresh_parts(workload);
+    Mcts::new(search_cfg(budget, seed), models, sim, root)
+}
+
+/// Full bit-equality of two search reports — unlike the warm-cache
+/// contract in `cache_persist.rs` this includes `compile_time_s`,
+/// `eval_cache`, and `lint_rejects`: a resumed tree restores the model
+/// latency accounting, the cache counters, and the running analyzer
+/// tally, so nothing is allowed to drift.
+fn assert_bit_identical(a: &SearchResult, b: &SearchResult) {
+    assert_eq!(a.workload, b.workload);
+    assert_eq!(a.best_speedup.to_bits(), b.best_speedup.to_bits());
+    assert_eq!(a.best_latency_s.to_bits(), b.best_latency_s.to_bits());
+    assert_eq!(a.baseline_latency_s.to_bits(), b.baseline_latency_s.to_bits());
+    assert_eq!(a.curve, b.curve);
+    assert_eq!(a.compile_time_s.to_bits(), b.compile_time_s.to_bits());
+    assert_eq!(a.api_cost_usd.to_bits(), b.api_cost_usd.to_bits());
+    assert_eq!(a.n_samples, b.n_samples);
+    assert_eq!(a.n_ca_events, b.n_ca_events);
+    assert_eq!(a.n_errors, b.n_errors);
+    assert_eq!(a.call_counts, b.call_counts);
+    assert_eq!(a.eval_cache, b.eval_cache);
+    assert_eq!(a.lint_rejects, b.lint_rejects);
+    assert_eq!(
+        a.best_schedule.trace.running_hash(),
+        b.best_schedule.trace.running_hash()
+    );
+    assert_eq!(a.best_schedule.fingerprint(), b.best_schedule.fingerprint());
+}
+
+// ------------------------------------------------------- resume equivalence
+
+#[test]
+fn serial_resume_from_disk_is_bit_identical_to_uninterrupted() {
+    // save at sample k, resume in a "new process" (fresh models, sim,
+    // root), run to budget N: identical to the uninterrupted N-run —
+    // and to just continuing the checkpointed engine in-process.
+    for workload in ["gemm", "llama3_attention"] {
+        let path = tmp_path(&format!("serial_{workload}"));
+        let uninterrupted = engine_for(workload, 96, 13).run(workload);
+
+        let part = engine_for(workload, 96, 13).run_until(40);
+        assert_eq!(part.samples(), 40);
+        part.save_file(&path).unwrap();
+
+        let (models, sim, root) = fresh_parts(workload);
+        let resumed = Mcts::load_file(&path, models, sim, root).unwrap();
+        assert_eq!(resumed.samples(), 40);
+        let from_disk = resumed.run(workload);
+        assert_bit_identical(&uninterrupted, &from_disk);
+
+        // the checkpointed engine itself continues identically too
+        let in_process = part.run(workload);
+        assert_bit_identical(&uninterrupted, &in_process);
+
+        assert_eq!(uninterrupted.n_samples, 96);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn parallel_resume_from_disk_is_bit_identical_to_uninterrupted() {
+    // the same contract for the tree-parallel engine: checkpoints land
+    // on round boundaries (no in-flight marks), and a resumed search
+    // replays the identical per-round lane-seed sequence.
+    for workload in ["gemm", "llama3_attention"] {
+        let path = tmp_path(&format!("parallel_{workload}"));
+        let uninterrupted = engine_for(workload, 64, 9).run_parallel(workload, 4);
+
+        let part = engine_for(workload, 64, 9).run_parallel_until(4, 24);
+        assert!(part.samples() >= 24, "stopped short: {}", part.samples());
+        assert!(part.samples() < 64, "ran past the checkpoint");
+        part.save_file(&path).unwrap();
+
+        let (models, sim, root) = fresh_parts(workload);
+        let resumed = Mcts::load_file(&path, models, sim, root).unwrap();
+        let from_disk = resumed.run_parallel(workload, 4);
+        assert_bit_identical(&uninterrupted, &from_disk);
+        assert_eq!(uninterrupted.n_samples, 64);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+// ------------------------------------------------------------- round trips
+
+#[test]
+fn save_load_save_is_byte_identical_and_skips_rendered_artifacts() {
+    let path_a = tmp_path("roundtrip_a");
+    let path_b = tmp_path("roundtrip_b");
+    let part = engine_for("gemm", 80, 5).run_until(48);
+    part.save_file(&path_a).unwrap();
+
+    let (models, sim, root) = fresh_parts("gemm");
+    let loaded = Mcts::load_file(&path_a, models, sim, root).unwrap();
+    assert_eq!(loaded.samples(), 48);
+    // a tree rebuilt from disk passes the full static legality analyzer
+    // on every node — nothing illegal was smuggled in by deserialization
+    assert_eq!(loaded.first_tree_deny(), None);
+    loaded.save_file(&path_b).unwrap();
+
+    // deterministic serialization: sorted keys, exact bit-level f64
+    // rendering — the second save reproduces the first byte-for-byte
+    let first = std::fs::read_to_string(&path_a).unwrap();
+    let second = std::fs::read_to_string(&path_b).unwrap();
+    assert_eq!(first, second, "save -> load -> save drifted");
+
+    // rendered code and trace tails are derived artifacts: re-rendered
+    // lazily on demand, never serialized
+    let snap = Json::parse(&first).unwrap();
+    let nodes = snap.get("nodes").and_then(Json::as_arr).unwrap();
+    assert!(nodes.len() > 1, "search grew no tree");
+    for n in nodes {
+        assert!(n.get("code").is_none(), "rendered code was persisted");
+        assert!(n.get("trace_tail").is_none(), "trace tail was persisted");
+    }
+    std::fs::remove_file(&path_a).ok();
+    std::fs::remove_file(&path_b).ok();
+}
+
+#[test]
+fn missing_file_starts_cold_silently() {
+    let path = tmp_path("no_such_file");
+    std::fs::remove_file(&path).ok();
+    let (models, sim, root) = fresh_parts("gemm");
+    let (engine, resumed) =
+        Mcts::resume_file_or_cold(&path, search_cfg(16, 3), models, sim, root);
+    assert!(!resumed);
+    assert_eq!(engine.samples(), 0);
+}
+
+// --------------------------------------------------------- corruption suite
+
+/// Every corrupt variant of a valid tree file must (a) surface an error
+/// from the strict loader and (b) degrade to a cold tree through the
+/// serving loader — never a panic, never a half-resumed tree.
+#[test]
+fn corrupt_tree_files_degrade_to_cold_never_panic() {
+    let path = tmp_path("corrupt");
+    let part = engine_for("gemm", 48, 21).run_until(30);
+    part.save_file(&path).unwrap();
+    let valid = std::fs::read_to_string(&path).unwrap();
+    let n_nodes = Json::parse(&valid)
+        .unwrap()
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .len();
+    assert!(n_nodes > 1, "need a non-trivial tree to corrupt");
+
+    // structured surgery on the parsed snapshot, re-serialized to text
+    let mutate = |f: &dyn Fn(&mut Json)| {
+        let mut v = Json::parse(&valid).unwrap();
+        f(&mut v);
+        format!("{v}")
+    };
+    let mutate_node = |i: usize, key: &'static str, val: Json| {
+        mutate(&|v: &mut Json| {
+            if let Json::Obj(m) = v {
+                if let Some(Json::Arr(nodes)) = m.get_mut("nodes") {
+                    nodes[i].set(key, val.clone());
+                }
+            }
+        })
+    };
+
+    let cases: Vec<(&str, String)> = vec![
+        ("truncated file", valid[..valid.len() / 2].to_string()),
+        ("not json", "this is not { json".to_string()),
+        (
+            "unsupported version",
+            mutate(&|v| {
+                v.set("version", Json::Num(99.0));
+            }),
+        ),
+        (
+            "missing rng field",
+            mutate(&|v| {
+                if let Json::Obj(m) = v {
+                    m.remove("rng");
+                }
+            }),
+        ),
+        (
+            "dangling parent index",
+            mutate_node(1, "parent", Json::Num(1_000_000.0)),
+        ),
+        (
+            "non-finite visit count",
+            mutate_node(1, "visits", f64_to_bits_json(f64::NAN)),
+        ),
+        (
+            "non-array nodes",
+            mutate(&|v| {
+                v.set("nodes", Json::Str("gone".into()));
+            }),
+        ),
+    ];
+
+    for (what, text) in cases {
+        std::fs::write(&path, text).unwrap();
+        let (models, sim, root) = fresh_parts("gemm");
+        let err = Mcts::load_file(&path, models, sim, root)
+            .err()
+            .unwrap_or_else(|| panic!("strict load accepted a tree file with {what}"));
+        assert!(!err.is_empty(), "{what}: empty error message");
+
+        // the serving path: warn + cold, and the cold engine still works
+        let (models, sim, root) = fresh_parts("gemm");
+        let (engine, resumed) =
+            Mcts::resume_file_or_cold(&path, search_cfg(12, 2), models, sim, root);
+        assert!(!resumed, "{what}: corrupt file was reported as resumed");
+        assert_eq!(engine.samples(), 0, "{what}: cold tree is not cold");
+    }
+
+    // a cold-started engine after corruption is a fully working search
+    let (models, sim, root) = fresh_parts("gemm");
+    let (engine, _) = Mcts::resume_file_or_cold(&path, search_cfg(12, 2), models, sim, root);
+    let r = engine.run("gemm");
+    assert_eq!(r.n_samples, 12);
+    assert!(r.best_speedup >= 1.0);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Resuming against the wrong process-local pieces is refused with a
+/// clear error: wrong workload, wrong target, wrong model roster, or a
+/// non-initial root schedule.
+#[test]
+fn resume_refuses_mismatched_process_state() {
+    let path = tmp_path("mismatch");
+    let part = engine_for("gemm", 32, 17).run_until(20);
+    part.save_file(&path).unwrap();
+
+    // wrong workload
+    let (models, sim, root) = fresh_parts("llama3_attention");
+    assert!(Mcts::load_file(&path, models, sim, root).is_err());
+
+    // wrong target
+    let (models, _, root) = fresh_parts("gemm");
+    assert!(Mcts::load_file(&path, models, Simulator::new(Target::Gpu), root).is_err());
+
+    // wrong model roster (2 models persisted as 4)
+    let (_, sim, root) = fresh_parts("gemm");
+    let small = ModelSet::new(paper_config(2, "gpt-5.2"));
+    assert!(Mcts::load_file(&path, small, sim, root).is_err());
+
+    // root that already carries trace steps is not an initial schedule
+    let (models, sim, _) = fresh_parts("gemm");
+    let traced = part.incumbent().clone();
+    if !traced.trace.is_empty() {
+        assert!(Mcts::load_file(&path, models, sim, traced).is_err());
+    }
+    std::fs::remove_file(&path).ok();
+}
