@@ -19,6 +19,22 @@
 //! nonzero unless the run truly warm-started: entries loaded, hits
 //! reported, and no new ground-truth entries computed — the CI smoke
 //! contract.
+//! `--lanes N` routes every grid scenario through the root-parallel
+//! fleet driver ([`litecoop::coordinator::run_lanes`]) instead: N
+//! independent lanes per scenario on distinct seed streams, a
+//! deterministic keyed-union merge of the lane trees, optional
+//! `--registry-dir` persistence of each merged tree into the serve
+//! registry, and `--cache-file` federation of every lane's ground
+//! truth.
+//!
+//! Distributed-merge gate:
+//!   experiments lanes_smoke [--scenario S] [--budget N] [--llms N]
+//!               [--seed S] [--registry-dir DIR] [--keep-registry]
+//! runs the same scenario as a 1-lane fleet and then a 4-lane fleet at
+//! equal total budget against one serve registry; exits 7 unless the
+//! 4-lane merged speedup is >= the 1-lane speedup, every lane survived
+//! the merge, and a follow-up serve request resumes the merged tree
+//! warm — the root-parallel CI contract.
 //!
 //! Incremental-evaluation gate:
 //!   experiments blockmemo_smoke [--workload W] [--seed S] [--llms N]
@@ -606,6 +622,9 @@ fn sweep(o: &Opts, args: &Args) {
         })
         .collect();
     let n_llms = args.usize_or("llms", 8);
+    if args.usize_or("lanes", 0) > 0 {
+        return sweep_lanes(o, args, &scenarios, &targets, n_llms);
+    }
     let searcher = if n_llms <= 1 {
         Searcher::Single(o.largest.clone())
     } else {
@@ -683,6 +702,175 @@ fn sweep(o: &Opts, args: &Args) {
             warmed.len()
         );
         std::process::exit(3);
+    }
+}
+
+/// `sweep --lanes N`: the fleet-driver path of the scenario sweep. One
+/// root-parallel fleet per scenario × target, sharing the persistent
+/// eval-cache file so fleet k+1 warm-starts from fleet k's ground
+/// truth; merged trees land in `--registry-dir` when one is given.
+fn sweep_lanes(
+    o: &Opts,
+    args: &Args,
+    scenarios: &[litecoop::workloads::scenarios::ScenarioSpec],
+    targets: &[Target],
+    n_llms: usize,
+) {
+    use litecoop::coordinator::FleetOpts;
+
+    let lanes = args.usize_or("lanes", 4);
+    let names: Vec<String> = scenarios.iter().map(|s| s.name()).collect();
+    println!(
+        "sweep: {} scenario(s) x {} target(s), {lanes}-lane fleets (total budget {} each)",
+        names.len(),
+        targets.len(),
+        o.budget
+    );
+    let mut t = Table::new(
+        &format!("Sweep: {lanes}-lane root-parallel fleets (budget {} per fleet)", o.budget),
+        &["Scenario", "Target", "Lanes merged", "Merged speedup ×", "Samples", "Nodes"],
+    );
+    let mut skipped: Vec<(String, String)> = Vec::new();
+    for &target in targets {
+        let base = FleetOpts {
+            target,
+            lanes,
+            total_budget: o.budget,
+            n_llms,
+            largest: o.largest.clone(),
+            base_seed: args.u64_or("seed", 7),
+            search_threads: o.search_threads,
+            threads: o.threads,
+            registry_dir: args.flag("registry-dir").map(str::to_string),
+            cache_file: args.flag("cache-file").map(str::to_string),
+            keep_lane_files: args.has("keep-lane-files"),
+            ..FleetOpts::default()
+        };
+        let results = coordinator::run_lanes(&base, &names).unwrap_or_else(|e| {
+            eprintln!("sweep --lanes: {e}");
+            std::process::exit(2);
+        });
+        for r in &results {
+            t.row(vec![
+                r.scenario.clone(),
+                target.name().to_string(),
+                format!("{}/{}", r.lanes_merged, r.lanes_run),
+                format!("{:.2}", r.merged_speedup),
+                format!("{}", r.merged_samples),
+                format!("{}", r.merged_nodes),
+            ]);
+            for (what, why) in &r.skipped {
+                skipped.push((format!("{} ({}) {what}", r.scenario, target.name()), why.clone()));
+            }
+        }
+    }
+    let mut out = t.to_markdown();
+    for (what, why) in &skipped {
+        out.push_str(&format!("- skipped: {what}: {why}\n"));
+    }
+    print!("{out}");
+    report::emit("sweep", &out).unwrap();
+}
+
+/// CI gate for the root-parallel merge contract: run ONE scenario as a
+/// 1-lane fleet and then a 4-lane fleet at the same total sample budget
+/// against the same serve registry. The 4-lane fleet warm-starts its
+/// lanes from the 1-lane fleet's persisted tree, so its merged incumbent
+/// must be at least as good; a follow-up serve request against the same
+/// registry must then resume the merged tree warm. Exit 7 on any miss.
+fn lanes_smoke(o: &Opts, args: &Args) {
+    use litecoop::coordinator::serve::{serve, ServeOpts};
+    use litecoop::coordinator::FleetOpts;
+    use std::io::Cursor;
+
+    let scenario = args.str_or("scenario", "gemm");
+    let seed = args.u64_or("seed", 7);
+    let n_llms = args.usize_or("llms", 2);
+    let dir = args.str_or(
+        "registry-dir",
+        &std::env::temp_dir()
+            .join(format!("litecoop_lanes_smoke_{}", std::process::id()))
+            .to_string_lossy(),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let base = FleetOpts {
+        scenario: scenario.clone(),
+        lanes: 1,
+        total_budget: o.budget,
+        n_llms,
+        largest: o.largest.clone(),
+        base_seed: seed,
+        search_threads: o.search_threads,
+        threads: o.threads,
+        registry_dir: Some(dir.clone()),
+        ..FleetOpts::default()
+    };
+    let r1 = coordinator::run_fleet(&base).unwrap_or_else(|e| {
+        eprintln!("lanes-smoke: 1-lane fleet failed: {e}");
+        std::process::exit(7);
+    });
+    let r2 = coordinator::run_fleet(&FleetOpts { lanes: 4, ..base.clone() }).unwrap_or_else(|e| {
+        eprintln!("lanes-smoke: 4-lane fleet failed: {e}");
+        std::process::exit(7);
+    });
+    println!(
+        "lanes-smoke: {scenario} budget {} — 1-lane speedup {:.4}, 4-lane merged {:.4} \
+         ({} nodes, {} samples)",
+        o.budget, r1.merged_speedup, r2.merged_speedup, r2.merged_nodes, r2.merged_samples
+    );
+
+    let mut failures = Vec::new();
+    if r2.lanes_merged != r2.lanes_run {
+        failures.push(format!(
+            "only {} of {} lanes survived the merge: {:?}",
+            r2.lanes_merged, r2.lanes_run, r2.skipped
+        ));
+    }
+    if r2.merged_speedup < r1.merged_speedup {
+        failures.push(format!(
+            "4-lane merged speedup {:.6} regressed below the 1-lane speedup {:.6} at equal \
+             total budget",
+            r2.merged_speedup, r1.merged_speedup
+        ));
+    }
+
+    // the merged tree must be servable: a follow-up daemon request on the
+    // same registry resumes it warm rather than starting cold
+    let serve_opts = ServeOpts {
+        registry_dir: dir.clone(),
+        budget_per_request: 16,
+        n_llms,
+        largest: o.largest.clone(),
+        seed,
+        ..ServeOpts::default()
+    };
+    let mut out = Vec::new();
+    match serve(&serve_opts, Cursor::new(format!("{scenario}\n")), &mut out) {
+        Ok(summary) => {
+            let text = String::from_utf8_lossy(&out);
+            print!("{text}");
+            if summary.resumed != 1 || !text.contains("tree=resumed") {
+                failures.push(format!(
+                    "serve request did not resume the merged tree warm ({} of {} resumed)",
+                    summary.resumed, summary.requests
+                ));
+            }
+        }
+        Err(e) => failures.push(format!("follow-up serve request failed: {e}")),
+    }
+
+    if failures.is_empty() {
+        println!("  OK: merged fleet >= single lane and the merged tree serves warm");
+        if !args.has("keep-registry") {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    } else {
+        for f in &failures {
+            eprintln!("lanes-smoke: {f}");
+        }
+        eprintln!("lanes-smoke: registry kept at {dir} for inspection");
+        std::process::exit(7);
     }
 }
 
@@ -971,6 +1159,7 @@ fn main() {
         "call_counts" => call_counts(&o),
         "sample_efficiency" => table3(&o), // Table 16 is emitted with Table 3
         "sweep" => sweep(&o, &args),
+        "lanes_smoke" => lanes_smoke(&o, &args),
         "blockmemo_smoke" => blockmemo_smoke(&o, &args),
         "lint_audit" => lint_audit(&o, &args),
         "perfgate" => perfgate(&args),

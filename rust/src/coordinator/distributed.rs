@@ -1,0 +1,379 @@
+//! Root-parallel distributed search: lane orchestration over one
+//! scenario, and fleet sweeps over many.
+//!
+//! One fleet run fans a scenario out into N independent search lanes.
+//! Each lane is a full engine on a distinct deterministic seed stream
+//! ([`lane_seed`]), warm-started from the scenario's serve-registry tree
+//! when one exists (resume → [`Mcts::reseed`] → budget extension), cold
+//! otherwise, and each checkpoints its finished tree through the
+//! treestore snapshot format. Lanes communicate **only** through those
+//! snapshot files and the federated eval cache — the same contract a
+//! multi-process fleet has — and are executed across worker threads by
+//! [`run_jobs`] (one OS process here; the file-mediated protocol is what
+//! keeps the merge semantics process-boundary-clean, including the
+//! per-thread lint-reject accounting fixed at snapshot time).
+//!
+//! The lanes are then folded into one tree by
+//! [`treemerge::merge_snapshot_files`] (keyed union; corrupt or missing
+//! lane files degrade to warnings), re-validated with
+//! [`Mcts::first_tree_deny`], persisted back to the serve registry so
+//! the daemon absorbs the fleet's result on its next request, and every
+//! lane's ground-truth evaluations are federated into the shared
+//! persistent cache file ([`EvalCache::federate`]).
+//!
+//! Two invariants the CI merge smoke leans on:
+//! * **Determinism**: a fleet's merged tree is a pure function of
+//!   (scenario, config, seed set, lane count, warm-start state) — lanes
+//!   are deterministic engines and the merge is canonical.
+//! * **Monotonicity at equal total budget**: lanes warm-started from the
+//!   registry tree begin at its incumbent, incumbents never regress, and
+//!   the merge takes the best across lanes — so an N-lane fleet resumed
+//!   on top of a prior run's tree reports a speedup ≥ that run's.
+//!
+//! Merged sample counters sum over lanes, so the shared warm-start
+//! prefix is counted once per lane that inherited it — the standard
+//! root-parallel accounting artifact; samples stay consistent with the
+//! summed budgets, and *new* samples per fleet run still total exactly
+//! the requested budget.
+
+use super::serve::tree_file_name;
+use crate::llm::registry::paper_config;
+use crate::llm::ModelSet;
+use crate::mcts::evalcache::EvalCache;
+use crate::mcts::treemerge;
+use crate::mcts::{Mcts, SearchConfig};
+use crate::runtime::driver::{default_threads, lane_seed, run_jobs};
+use crate::schedule::Schedule;
+use crate::sim::{Simulator, Target};
+use crate::workloads;
+use std::sync::Arc;
+
+/// Configuration of one fleet run (and the base config of a sweep).
+#[derive(Clone, Debug)]
+pub struct FleetOpts {
+    /// Scenario name: a registry workload or `family@key=val,...` form.
+    pub scenario: String,
+    pub target: Target,
+    /// Number of root-parallel lanes.
+    pub lanes: usize,
+    /// Total *new* sample budget, split across lanes (earlier lanes take
+    /// the remainder), so fleets of different widths are comparable at
+    /// equal total budget.
+    pub total_budget: usize,
+    pub n_llms: usize,
+    pub largest: String,
+    /// Base of the per-lane seed stream ([`lane_seed`]).
+    pub base_seed: u64,
+    /// Within-lane tree parallelism (threads of one engine).
+    pub search_threads: usize,
+    /// Lane fan-out: how many lanes run concurrently.
+    pub threads: usize,
+    /// Serve registry to warm-start lanes from and persist the merged
+    /// tree into; `None` runs cold and keeps lane files in a temp dir.
+    pub registry_dir: Option<String>,
+    /// Persistent eval-cache file: loaded before the lanes, federated
+    /// with every lane's ground truth after, saved back.
+    pub cache_file: Option<String>,
+    /// Keep per-lane snapshot files after the merge (debugging).
+    pub keep_lane_files: bool,
+}
+
+impl Default for FleetOpts {
+    fn default() -> FleetOpts {
+        FleetOpts {
+            scenario: "gemm".to_string(),
+            target: Target::Cpu,
+            lanes: 4,
+            total_budget: 240,
+            n_llms: 4,
+            largest: "gpt-5.2".to_string(),
+            base_seed: 7,
+            search_threads: 1,
+            threads: default_threads(),
+            registry_dir: None,
+            cache_file: None,
+            keep_lane_files: false,
+        }
+    }
+}
+
+/// What one fleet run produced.
+#[derive(Clone, Debug)]
+pub struct FleetResult {
+    pub scenario: String,
+    /// Lanes dispatched.
+    pub lanes_run: usize,
+    /// Lanes whose snapshots survived into the merge.
+    pub lanes_merged: usize,
+    /// Per-lane incumbent speedups, lane order.
+    pub lane_speedups: Vec<f64>,
+    /// Merged incumbent speedup (= max of the surviving lanes').
+    pub merged_speedup: f64,
+    pub merged_samples: usize,
+    pub merged_nodes: usize,
+    /// Registry path the merged tree was persisted to, when a registry
+    /// was configured.
+    pub tree_path: Option<String>,
+    /// `(path-or-lane, reason)` of lanes that failed to run or merge.
+    pub skipped: Vec<(String, String)>,
+}
+
+/// One finished lane, as handed from a worker to the merge step.
+struct LaneOut {
+    path: String,
+    speedup: f64,
+    cache: EvalCache,
+}
+
+/// Split `total` into `lanes` near-equal parts, remainder to the front —
+/// fleet widths stay comparable at equal total budget.
+pub fn lane_budgets(total: usize, lanes: usize) -> Vec<usize> {
+    let lanes = lanes.max(1);
+    (0..lanes).map(|l| total / lanes + usize::from(l < total % lanes)).collect()
+}
+
+/// Run one root-parallel fleet: N lanes, snapshot checkpoints, cache
+/// federation, keyed-union merge, registry persistence. See the module
+/// docs for the protocol.
+pub fn run_fleet(opts: &FleetOpts) -> Result<FleetResult, String> {
+    let lanes = opts.lanes.max(1);
+    let workload = workloads::resolve(&opts.scenario)
+        .map_err(|e| format!("fleet: unknown scenario {}: {e}", opts.scenario))?;
+    let workload = Arc::new(workload);
+    let warm = Arc::new(match &opts.cache_file {
+        Some(path) => EvalCache::load_file_or_cold(path),
+        None => EvalCache::default(),
+    });
+
+    // lane snapshots live next to the registry tree (or in a temp dir
+    // for registry-less runs)
+    let (lane_dir, temp_dir) = match &opts.registry_dir {
+        Some(dir) => (dir.clone(), None),
+        None => {
+            let d = std::env::temp_dir()
+                .join(format!("litecoop_fleet_{}", std::process::id()))
+                .to_string_lossy()
+                .into_owned();
+            (d.clone(), Some(d))
+        }
+    };
+    std::fs::create_dir_all(&lane_dir).map_err(|e| format!("fleet: lane dir {lane_dir}: {e}"))?;
+    let tree_base = format!("{lane_dir}/{}", tree_file_name(&opts.scenario));
+
+    let budgets = lane_budgets(opts.total_budget, lanes);
+    let jobs: Vec<_> = (0..lanes)
+        .map(|l| {
+            let workload = Arc::clone(&workload);
+            let warm = Arc::clone(&warm);
+            let opts = opts.clone();
+            let lane_path = format!("{tree_base}.lane{l}");
+            let registry_tree = opts.registry_dir.as_ref().map(|_| tree_base.clone());
+            let lane_budget = budgets[l];
+            move || -> Result<LaneOut, String> {
+                let seed = lane_seed(opts.base_seed, l as u64);
+                let models = ModelSet::new(paper_config(opts.n_llms, &opts.largest));
+                let sim = Simulator::new(opts.target);
+                let root = Schedule::initial(Arc::clone(&workload));
+                let cfg = SearchConfig {
+                    budget: lane_budget,
+                    seed,
+                    search_threads: opts.search_threads,
+                    checkpoints: Vec::new(),
+                    ..SearchConfig::default()
+                };
+                // warm start: resume the scenario's registry tree onto
+                // this lane's seed stream; cold otherwise
+                let mut engine = match registry_tree
+                    .filter(|p| std::path::Path::new(p).exists())
+                    .and_then(|p| {
+                        Mcts::load_file(&p, models.clone(), sim.clone(), root.clone())
+                            .map_err(|e| {
+                                eprintln!("warning: fleet lane {l}: tree file {e}; starting cold")
+                            })
+                            .ok()
+                    }) {
+                    Some(mut resumed) => {
+                        resumed.reseed(seed);
+                        resumed.cfg.search_threads = opts.search_threads;
+                        resumed.eval.cache.absorb(EvalCache::clone(&warm));
+                        resumed.extend_budget(lane_budget);
+                        resumed
+                    }
+                    None => Mcts::with_cache(cfg, models, sim, root, EvalCache::clone(&warm)),
+                };
+                engine = if opts.search_threads > 1 {
+                    engine.run_parallel_until(opts.search_threads, usize::MAX)
+                } else {
+                    engine.run_until(usize::MAX)
+                };
+                engine.save_file(&lane_path)?;
+                let speedup = engine.best_speedup();
+                Ok(LaneOut { path: lane_path, speedup, cache: engine.eval.cache })
+            }
+        })
+        .collect();
+    let outs = run_jobs(jobs, opts.threads.max(1).min(lanes));
+
+    // federate every lane's ground truth into the shared persistent
+    // cache (lane order; the union is order-independent)
+    let mut fleet_cache = EvalCache::clone(&warm);
+    let mut skipped: Vec<(String, String)> = Vec::new();
+    let mut lane_speedups: Vec<f64> = Vec::new();
+    let mut lane_paths: Vec<String> = Vec::new();
+    for (l, out) in outs.into_iter().enumerate() {
+        match out {
+            Ok(lane) => {
+                fleet_cache.federate(lane.cache);
+                lane_speedups.push(lane.speedup);
+                lane_paths.push(lane.path);
+            }
+            Err(e) => {
+                eprintln!("warning: fleet lane {l}: {e}; skipping lane");
+                skipped.push((format!("lane {l}"), e));
+            }
+        }
+    }
+    if let Some(path) = &opts.cache_file {
+        if let Err(e) = fleet_cache.save_file(path) {
+            eprintln!("warning: fleet: failed to save eval cache: {e}");
+        }
+    }
+
+    // keyed-union merge over the surviving lane snapshots, then the
+    // trust-but-verify lint pass every from-disk tree gets
+    let (merged, report) = treemerge::merge_snapshot_files(&lane_paths, || {
+        (
+            ModelSet::new(paper_config(opts.n_llms, &opts.largest)),
+            Simulator::new(opts.target),
+            Schedule::initial(Arc::clone(&workload)),
+        )
+    })?;
+    if let Some((node, diag)) = merged.first_tree_deny() {
+        return Err(format!(
+            "fleet: merged tree failed the legality analyzer at node {node}: {diag}"
+        ));
+    }
+    let tree_path = match &opts.registry_dir {
+        Some(_) => {
+            merged.save_file(&tree_base)?;
+            Some(tree_base.clone())
+        }
+        None => None,
+    };
+
+    if !opts.keep_lane_files {
+        for p in &lane_paths {
+            let _ = std::fs::remove_file(p);
+        }
+        if let Some(d) = &temp_dir {
+            let _ = std::fs::remove_dir(d);
+        }
+    }
+    skipped.extend(report.skipped.iter().cloned());
+
+    Ok(FleetResult {
+        scenario: opts.scenario.clone(),
+        lanes_run: lanes,
+        lanes_merged: report.lanes_merged,
+        lane_speedups,
+        merged_speedup: report.best_speedup,
+        merged_samples: merged.samples(),
+        merged_nodes: report.n_nodes,
+        tree_path,
+        skipped,
+    })
+}
+
+/// Shard a scenario list (e.g. an expanded
+/// [`crate::workloads::scenarios::ScenarioGrid`]) across root-parallel
+/// fleets, one scenario at a time, federating every fleet's ground
+/// truth through the shared cache file: fleet k+1 warm-starts from the
+/// cache fleet k saved. Lane fan-out happens inside each fleet.
+pub fn run_lanes(base: &FleetOpts, scenarios: &[String]) -> Result<Vec<FleetResult>, String> {
+    let mut results = Vec::with_capacity(scenarios.len());
+    for scenario in scenarios {
+        let mut opts = base.clone();
+        opts.scenario = scenario.clone();
+        results.push(run_fleet(&opts)?);
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("litecoop_fleet_{tag}_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn quick_opts(lanes: usize, budget: usize) -> FleetOpts {
+        FleetOpts {
+            lanes,
+            total_budget: budget,
+            n_llms: 2,
+            threads: 2,
+            ..FleetOpts::default()
+        }
+    }
+
+    #[test]
+    fn lane_budgets_partition_the_total() {
+        assert_eq!(lane_budgets(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(lane_budgets(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(lane_budgets(3, 4), vec![1, 1, 1, 0]);
+        assert_eq!(lane_budgets(5, 1), vec![5]);
+        let total: usize = lane_budgets(97, 6).iter().sum();
+        assert_eq!(total, 97);
+    }
+
+    #[test]
+    fn fleet_merges_all_lanes_and_beats_no_lane() {
+        let r = run_fleet(&quick_opts(3, 36)).expect("fleet");
+        assert_eq!(r.lanes_run, 3);
+        assert_eq!(r.lanes_merged, 3);
+        assert_eq!(r.lane_speedups.len(), 3);
+        assert!(r.skipped.is_empty(), "{:?}", r.skipped);
+        let best_lane = r.lane_speedups.iter().cloned().fold(f64::MIN, f64::max);
+        assert_eq!(r.merged_speedup.to_bits(), best_lane.to_bits());
+        assert_eq!(r.merged_samples, 36);
+        assert!(r.tree_path.is_none());
+    }
+
+    #[test]
+    fn fleet_is_deterministic_per_seed_set() {
+        let a = run_fleet(&quick_opts(2, 24)).expect("fleet a");
+        let b = run_fleet(&quick_opts(2, 24)).expect("fleet b");
+        assert_eq!(a.merged_speedup.to_bits(), b.merged_speedup.to_bits());
+        assert_eq!(a.merged_nodes, b.merged_nodes);
+        assert_eq!(a.lane_speedups.len(), b.lane_speedups.len());
+        for (x, y) in a.lane_speedups.iter().zip(&b.lane_speedups) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn registry_warm_start_is_monotone_at_equal_budget() {
+        let dir = tmp_dir("warm");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut first = quick_opts(1, 24);
+        first.registry_dir = Some(dir.clone());
+        let r1 = run_fleet(&first).expect("fleet 1");
+        assert!(r1.tree_path.is_some());
+        let mut second = quick_opts(4, 24);
+        second.registry_dir = Some(dir.clone());
+        let r2 = run_fleet(&second).expect("fleet 2");
+        assert!(
+            r2.merged_speedup >= r1.merged_speedup,
+            "4-lane warm fleet {} regressed below 1-lane {}",
+            r2.merged_speedup,
+            r1.merged_speedup
+        );
+        // every lane inherited the prior tree's samples, plus its share
+        assert!(r2.merged_samples > r1.merged_samples);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -6,8 +6,11 @@
 //! deterministic in its seed) and the `experiments` binary assembles the
 //! paper-shaped tables from the [`SearchResult`]s.
 
+pub mod distributed;
 pub mod report;
 pub mod serve;
+
+pub use distributed::{run_fleet, run_lanes, FleetOpts, FleetResult};
 
 use crate::baselines;
 use crate::mcts::evalcache::EvalCache;

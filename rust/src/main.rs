@@ -4,12 +4,20 @@
 //!   search   --workload <name> --target cpu|gpu --llms N --budget N
 //!            [--largest M] [--lambda X] [--search-threads S]
 //!            [--cache-file PATH]
+//!            [--lanes N [--lane-threads T] [--registry-dir DIR]
+//!             [--keep-lane-files]]
 //!            <name> is a registry name (`workloads` subcommand) or a
 //!            scenario name like `attention@seq=1024,heads=16` (see
 //!            workloads::scenarios). --cache-file loads a persistent
 //!            eval cache before the search and saves the warmed cache
 //!            after it, so repeated searches across processes reuse
-//!            ground-truth evaluations.
+//!            ground-truth evaluations. --lanes N runs a root-parallel
+//!            fleet instead of one search: N independent lanes on
+//!            distinct seed streams split the budget, checkpoint
+//!            through tree snapshots, and are merged into one resumable
+//!            tree (coordinator::distributed); with --registry-dir the
+//!            lanes warm-start from the scenario's serve-registry tree
+//!            and the merged tree is persisted back for the daemon.
 //!   lint     <scenario> [--storm N --seed S] [--target cpu|gpu]
 //!            run the static legality analyzer on a workload's initial
 //!            schedule, or (with --storm N) on every state of an N-step
@@ -83,6 +91,9 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
     } else {
         Target::Cpu
     };
+    if args.usize_or("lanes", 0) > 0 {
+        return cmd_search_lanes(args, target, &workload_name);
+    }
     let n_llms = args.usize_or("llms", 8);
     let largest = args.str_or("largest", "gpt-5.2");
     let workload = workloads::resolve(&workload_name)
@@ -141,6 +152,43 @@ fn cmd_search(args: &Args) -> litecoop::Result<()> {
         }
     }
     println!("\nbest schedule trace (tail):\n{}", r.best_schedule.trace.render_tail(12));
+    Ok(())
+}
+
+fn cmd_search_lanes(args: &Args, target: Target, scenario: &str) -> litecoop::Result<()> {
+    use litecoop::coordinator::distributed::{run_fleet, FleetOpts};
+    use litecoop::runtime::driver::default_threads;
+    let opts = FleetOpts {
+        scenario: scenario.to_string(),
+        target,
+        lanes: args.usize_or("lanes", 4).max(1),
+        total_budget: args.usize_or("budget", 300),
+        n_llms: args.usize_or("llms", 8),
+        largest: args.str_or("largest", "gpt-5.2"),
+        base_seed: args.u64_or("seed", 7),
+        search_threads: args.usize_or("search-threads", 1).max(1),
+        threads: args.usize_or("lane-threads", default_threads()).max(1),
+        registry_dir: args.flag("registry-dir").map(str::to_string),
+        cache_file: args.flag("cache-file").map(str::to_string),
+        keep_lane_files: args.has("keep-lane-files"),
+    };
+    println!(
+        "LiteCoOp fleet: {scenario} on {:?}, {} lanes x {} LLMs, total budget {} (split across lanes)",
+        target, opts.lanes, opts.n_llms, opts.total_budget
+    );
+    let r = run_fleet(&opts).map_err(|e| litecoop::err!("{e}"))?;
+    for (l, s) in r.lane_speedups.iter().enumerate() {
+        println!("lane {l:<2} speedup     : {s:.2}x");
+    }
+    for (what, why) in &r.skipped {
+        println!("skipped {what}      : {why}");
+    }
+    println!("merged speedup     : {:.2}x ({} of {} lanes)", r.merged_speedup, r.lanes_merged, r.lanes_run);
+    println!("merged tree        : {} nodes, {} samples", r.merged_nodes, r.merged_samples);
+    match &r.tree_path {
+        Some(p) => println!("registry tree      : {p}"),
+        None => println!("registry tree      : (no --registry-dir; merged tree not persisted)"),
+    }
     Ok(())
 }
 

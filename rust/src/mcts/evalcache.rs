@@ -241,6 +241,18 @@ impl EvalCache {
         }
     }
 
+    /// [`EvalCache::absorb`] plus counter federation: the other cache's
+    /// hit/miss totals are summed into this one's before its ground-truth
+    /// entries are unioned in. This is the root-parallel lane merge
+    /// ([`crate::mcts::treemerge`]): the merged tree's cache must report
+    /// the fleet's cumulative lookup counters, not one lane's. Prediction
+    /// entries still follow the absorb rule (dropped — they are keyed per
+    /// cost-model instance and only the surviving model's are valid).
+    pub fn federate(&mut self, other: EvalCache) {
+        self.stats.merge(&other.stats);
+        self.absorb(other);
+    }
+
     /// Ground-truth latency for `key`, computing (and caching) via `f` on
     /// a miss.
     pub fn latency_or(&mut self, key: u64, f: impl FnOnce() -> f64) -> f64 {

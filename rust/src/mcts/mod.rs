@@ -13,6 +13,7 @@
 
 pub mod evalcache;
 pub mod la_uct;
+pub mod treemerge;
 pub mod treestore;
 
 use crate::costmodel::CostModel;
@@ -430,6 +431,20 @@ impl<E> Mcts<E> {
     /// requests on a resumed tree.
     pub fn extend_budget(&mut self, extra: usize) {
         self.cfg.budget = self.samples.saturating_add(extra);
+    }
+
+    /// Redirect this engine onto a fresh seed stream: the tree, cost
+    /// model, cache, and incumbent are kept, but future randomness draws
+    /// from `seed` and the parallel round counter restarts on that
+    /// seed's round-seed sequence. The root-parallel driver
+    /// ([`crate::coordinator::distributed`]) uses this to fan a shared
+    /// warm tree out into lanes that explore along distinct streams —
+    /// and distinct `cfg.seed`s are what [`treemerge::merge_engines`]
+    /// keys its canonical lane order on.
+    pub fn reseed(&mut self, seed: u64) {
+        self.cfg.seed = seed;
+        self.rng = Rng::new(seed ^ 0x6C17_E600);
+        self.round = 0;
     }
 
     /// Best measured speedup so far (baseline / incumbent latency).
@@ -1199,6 +1214,13 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
     /// per-round lane-seed sequence an uninterrupted run would.
     fn run_parallel_rounds_until(&mut self, threads: usize, until: usize) {
         let until = until.min(self.cfg.budget);
+        // trees merged from root-parallel lanes (mcts::treemerge) can
+        // legitimately hold more than `branching` children per node (the
+        // union of each lane's children); such nodes never grow —
+        // selection only expands nodes with spare capacity — so the
+        // post-round invariant is checked against each node's width at
+        // entry, not the branching factor alone
+        let entry_width: Vec<usize> = self.nodes.iter().map(|n| n.children.len()).collect();
         let shared = self.eval.cache;
         let target = self.eval.target();
         let sim = self.eval.sim.clone();
@@ -1231,10 +1253,11 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
             "virtual loss / pending-expansion marks leaked past a round"
         );
         debug_assert!(
-            self.nodes
-                .iter()
-                .all(|n| n.depth >= self.max_depth
-                    || n.children.len() <= self.cfg.branching.max(1)),
+            self.nodes.iter().enumerate().all(|(i, n)| {
+                n.depth >= self.max_depth
+                    || n.children.len() <= self.cfg.branching.max(1)
+                    || (i < entry_width.len() && n.children.len() <= entry_width[i])
+            }),
             "branching factor violated by parallel expansion"
         );
     }

@@ -1,0 +1,596 @@
+//! Deterministic keyed-union merging of root-parallel search trees.
+//!
+//! Root-parallel distributed search runs N independent lanes of the same
+//! scenario — same workload, target, and search configuration, distinct
+//! RNG seeds — then folds their trees back into **one** resumable engine,
+//! preserving the single-shared-tree semantics the paper's cross-model
+//! value propagation depends on. Nodes are matched across lanes by their
+//! O(1) canonical trace key ([`super::evalcache::trace_key`]: the trace's
+//! cached running hash folded with workload, target, and the structural
+//! fingerprint), so two lanes that discovered the same program through
+//! the same transform history share one merged node.
+//!
+//! ## The merge algebra
+//!
+//! The merge is an honest-to-goodness commutative, associative operation
+//! **up to bit equality of the canonical re-serialization**
+//! ([`Mcts::snapshot`]), which the merge-algebra property tests lock:
+//!
+//! * **Canonical lane order.** Lanes are sorted by `cfg.seed` before
+//!   anything else, and duplicate seeds are an `Err` — every tie-break
+//!   below falls back to the seed, giving each comparison a strict total
+//!   order.
+//! * **Grid-quantized sums.** Every summed f64 (node visits and reward
+//!   sums, per-model cost/latency/token totals, measurement time) is
+//!   first snapped to the dyadic grid 2⁻²⁶ by [`qgrid`]. Grid values of
+//!   magnitude below 2²⁷ are exactly representable and close under
+//!   addition, so grid sums are exact and therefore order-independent,
+//!   and `qgrid` is idempotent on its own outputs — nested merges
+//!   re-quantize without drift. That is what upgrades "commutative up to
+//!   float error" to bitwise commutative *and* associative.
+//! * **Winner lane.** The incumbent is the best (lowest measured
+//!   latency) across lanes; the winning lane — min by `(best_latency,
+//!   seed)` — also donates the pieces that cannot be meaningfully
+//!   averaged: the RNG stream, the trained cost model (with its
+//!   salt-keyed prediction-cache entries), the routing pointer, the
+//!   parallel round counter, and the merged `cfg.seed`.
+//! * **Maxima / minima / unions** everywhere else: per-node
+//!   `predicted_score` is the max, model assignment the min,
+//!   `measured`/`pruned` are ORs; the speedup curve is the running max
+//!   of the pointwise max over the union of sample coordinates;
+//!   checkpoints are the sorted deduped union; sample counts, budgets,
+//!   course-alteration, error, and lint-reject tallies are sums.
+//! * **Identity.** A single-lane merge is a pure passthrough — no
+//!   quantization, no reordering — so `merge([run]) ≡ run` bit-for-bit,
+//!   and merging against skipped (missing/corrupt) lanes degrades to
+//!   exactly the healthy-lanes merge.
+//!
+//! Schedules of merged nodes are **canonically rebuilt** parent-first:
+//! each node's schedule is its merged parent's clone plus the trace
+//! steps and content-changed blocks of its first contributor (in
+//! canonical lane order). Copy-on-write block `Arc`s therefore encode
+//! *content* change relative to the parent — not which lane happened to
+//! allocate them — which is what makes the snapshot's delta encoding a
+//! pure function of merged tree content.
+//!
+//! Merged trees can hold more than `cfg.branching` children per node
+//! (the union of each lane's children). The engine never grows such a
+//! node further — selection only expands nodes with spare branching
+//! capacity — so continued search remains well-defined; see the
+//! branching invariant in [`Mcts::run_parallel_until`]'s round loop.
+//!
+//! Lint-reject accounting caveat: a lane's running total reads the
+//! per-thread analyzer counter, so `merge_engines` over engines that ran
+//! *interleaved on the calling thread* attributes rejections to every
+//! lane constructed before them. Lane totals stay deterministic (the
+//! algebra holds), but for exact fleet tallies merge through snapshots
+//! ([`merge_snapshot_files`]), where each lane's total was fixed at
+//! snapshot time — which is what the distributed driver does.
+
+use super::evalcache::{trace_key, CachedEvaluator, EvalCache};
+use super::{Mcts, Node};
+use crate::costmodel::ScoreScratch;
+use crate::llm::{CallKind, ModelSet, ModelStats};
+use crate::schedule::Schedule;
+use crate::sim::Simulator;
+use crate::util::Json;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, OnceLock};
+
+/// 2²⁶ — the merge's dyadic quantization grid.
+const GRID: f64 = 67_108_864.0;
+
+/// Snap a summed statistic to the 2⁻²⁶ dyadic grid. Grid values below
+/// 2²⁷ in magnitude (comfortably covering visit counts, rewards in
+/// [0, 1.5], dollar and second totals) are exactly representable, and
+/// f64 addition of exactly representable results is exact — so sums of
+/// quantized values are order-independent and `qgrid` is idempotent on
+/// them. The foundation of the merge's bitwise associativity.
+fn qgrid(x: f64) -> f64 {
+    (x * GRID).round() / GRID
+}
+
+/// Strict total order for `expanded_by` provenance: `None` (the root /
+/// synthetic nodes) sorts first, then by model index, then call kind.
+fn exp_rank(e: Option<(usize, CallKind)>) -> (u8, usize, u8) {
+    match e {
+        None => (0, 0, 0),
+        Some((m, k)) => (
+            1,
+            m,
+            match k {
+                CallKind::Regular => 0,
+                CallKind::CourseAlteration => 1,
+            },
+        ),
+    }
+}
+
+/// What a fleet merge did — surfaced by the distributed driver and the
+/// corruption tests.
+#[derive(Clone, Debug)]
+pub struct MergeReport {
+    /// Healthy lanes that contributed to the merged tree.
+    pub lanes_merged: usize,
+    /// `(path, reason)` for every lane snapshot skipped by the degrading
+    /// loader (missing file, parse error, version mismatch, arena
+    /// validation failure, ...).
+    pub skipped: Vec<(String, String)>,
+    /// Node count of the merged tree.
+    pub n_nodes: usize,
+    /// Merged incumbent speedup (best across lanes).
+    pub best_speedup: f64,
+}
+
+/// Sanity checks that make a merge meaningful: all lanes must be
+/// searches of the same scenario under the same configuration (only the
+/// seed streams — and consequently trees, stats, and caches — differ).
+fn check_consistent(lanes: &[Mcts]) -> Result<(), String> {
+    let a = &lanes[0];
+    let wname = a.nodes[0].schedule.workload.name.as_str();
+    let tname = a.eval.sim.target().name();
+    for e in &lanes[1..] {
+        if e.nodes[0].schedule.workload.name != wname {
+            return Err(format!(
+                "tree merge: workload mismatch ({} vs {wname})",
+                e.nodes[0].schedule.workload.name
+            ));
+        }
+        if e.eval.sim.target().name() != tname {
+            return Err(format!(
+                "tree merge: target mismatch ({} vs {tname})",
+                e.eval.sim.target().name()
+            ));
+        }
+        if e.cfg.branching != a.cfg.branching
+            || e.cfg.lambda.to_bits() != a.cfg.lambda.to_bits()
+            || e.cfg.exploration_c.to_bits() != a.cfg.exploration_c.to_bits()
+            || e.cfg.rollout_depth != a.cfg.rollout_depth
+            || e.cfg.ca_threshold != a.cfg.ca_threshold
+            || e.cfg.routing != a.cfg.routing
+            || e.cfg.measure_interval != a.cfg.measure_interval
+            || e.cfg.measure_top_k != a.cfg.measure_top_k
+            || e.cfg.measure_overhead_s.to_bits() != a.cfg.measure_overhead_s.to_bits()
+        {
+            return Err("tree merge: lane search configurations differ".to_string());
+        }
+        if e.models.specs.len() != a.models.specs.len()
+            || e.models.specs.iter().zip(&a.models.specs).any(|(x, y)| x.name != y.name)
+        {
+            return Err("tree merge: lane model rosters differ".to_string());
+        }
+        if e.baseline_latency.to_bits() != a.baseline_latency.to_bits() {
+            return Err("tree merge: lane baseline latencies differ".to_string());
+        }
+    }
+    Ok(())
+}
+
+/// Combine one group of matched nodes (same canonical key, same
+/// per-parent occurrence) into a merged node. `contribs` is `(lane,
+/// node)` in canonical lane order; `out` holds the already-built merged
+/// ancestors (the parent's canonical schedule is rebuilt against).
+fn combine_node(lanes: &[Mcts], contribs: &[(usize, usize)], parent: Option<usize>, out: &[Node]) -> Node {
+    let (l0, n0) = contribs[0];
+    let src = &lanes[l0].nodes[n0];
+    // canonical schedule rebuild: parent clone + the first contributor's
+    // trace extension, sharing the parent's block Arcs wherever the
+    // content is unchanged (see the module docs)
+    let sched = match parent {
+        None => Schedule::initial(Arc::clone(&src.schedule.workload)),
+        Some(p) => {
+            let base: &Schedule = &out[p].schedule;
+            let mut s = base.clone();
+            let steps = src.schedule.trace.steps();
+            debug_assert!(
+                steps.len() >= base.trace.len(),
+                "matched child trace must extend its merged parent's"
+            );
+            for st in steps.into_iter().skip(base.trace.len()) {
+                s.trace.push_step(st);
+            }
+            for b in 0..s.blocks.len() {
+                if *src.schedule.blocks[b] != *s.blocks[b] {
+                    *s.block_mut(b) = (*src.schedule.blocks[b]).clone();
+                }
+            }
+            s
+        }
+    };
+    let mut visits = 0.0f64;
+    let mut reward_sum = 0.0f64;
+    let mut predicted_score = f64::NEG_INFINITY;
+    let mut llm = usize::MAX;
+    let mut expanded_by = src.expanded_by;
+    let mut regression_chain = usize::MAX;
+    let mut pruned = false;
+    let mut measured = false;
+    for &(l, n) in contribs {
+        let nd = &lanes[l].nodes[n];
+        debug_assert_eq!(nd.depth, src.depth, "matched nodes must share a depth");
+        visits += qgrid(nd.visits);
+        reward_sum += qgrid(nd.reward_sum);
+        if nd.predicted_score.total_cmp(&predicted_score).is_gt() {
+            predicted_score = nd.predicted_score;
+        }
+        llm = llm.min(nd.llm);
+        if exp_rank(nd.expanded_by) < exp_rank(expanded_by) {
+            expanded_by = nd.expanded_by;
+        }
+        regression_chain = regression_chain.min(nd.regression_chain);
+        pruned |= nd.pruned;
+        measured |= nd.measured;
+    }
+    Node {
+        parent,
+        children: Vec::new(),
+        schedule: Arc::new(sched),
+        code: OnceLock::new(),
+        trace_tail: OnceLock::new(),
+        llm,
+        visits,
+        reward_sum,
+        predicted_score,
+        expanded_by,
+        depth: parent.map_or(0, |p| out[p].depth + 1),
+        regression_chain,
+        pruned,
+        measured,
+        virtual_loss: 0.0,
+        pending_children: 0,
+    }
+}
+
+/// Merge N root-parallel lanes of one scenario into a single resumable
+/// engine. See the module docs for the full algebra. `Err` on an empty
+/// lane list, duplicate lane seeds, or configuration/scenario mismatch;
+/// a single lane is returned unchanged (the merge identity).
+pub fn merge_engines(mut lanes: Vec<Mcts>) -> Result<Mcts, String> {
+    if lanes.is_empty() {
+        return Err("tree merge: no lanes to merge".to_string());
+    }
+    if lanes.len() == 1 {
+        return Ok(lanes.pop().expect("len checked"));
+    }
+    lanes.sort_by_key(|e| e.cfg.seed);
+    for w in lanes.windows(2) {
+        if w[0].cfg.seed == w[1].cfg.seed {
+            return Err(format!(
+                "tree merge: duplicate lane seed {} (lanes must use distinct seed streams)",
+                w[0].cfg.seed
+            ));
+        }
+    }
+    check_consistent(&lanes)?;
+
+    // winner lane: best incumbent, seed-ascending tie-break (lanes are
+    // already seed-sorted, so keeping the earlier lane on ties is exact)
+    let winner = (1..lanes.len()).fold(0usize, |w, i| {
+        if lanes[i].best_latency.total_cmp(&lanes[w].best_latency).is_lt() {
+            i
+        } else {
+            w
+        }
+    });
+    let winner_best = lanes[winner]
+        .nodes
+        .iter()
+        .position(|n| Arc::ptr_eq(&n.schedule, &lanes[winner].best_schedule))
+        .unwrap_or(0);
+
+    // ---- keyed-union walk (BFS, so parents precede children and each
+    // parent's children land at consecutive, sorted indices — the order
+    // `Mcts::resume` rebuilds children lists in) -----------------------
+    let target = lanes[0].eval.sim.target();
+    let mut out: Vec<Node> = Vec::new();
+    let mut merged_best = 0usize;
+    let mut queue: VecDeque<(Option<usize>, Vec<(usize, usize)>)> = VecDeque::new();
+    queue.push_back((None, (0..lanes.len()).map(|l| (l, 0usize)).collect()));
+    while let Some((parent, contribs)) = queue.pop_front() {
+        let idx = out.len();
+        let node = combine_node(&lanes, &contribs, parent, &out);
+        if let Some(p) = parent {
+            out[p].children.push(idx);
+        }
+        if contribs.iter().any(|&(l, n)| l == winner && n == winner_best) {
+            merged_best = idx;
+        }
+        out.push(node);
+        // group the contributors' children by (canonical trace key,
+        // occurrence among same-key siblings): pairing each lane's j-th
+        // same-key child with every other lane's j-th keeps the grouping
+        // stable under nested merges, and the (key, occurrence) sort
+        // fixes the canonical child order
+        let mut kids: Vec<(u64, usize, usize, usize)> = Vec::new();
+        for &(l, n) in &contribs {
+            let mut occ: HashMap<u64, usize> = HashMap::new();
+            for &c in &lanes[l].nodes[n].children {
+                let k = trace_key(&lanes[l].nodes[c].schedule, target);
+                let e = occ.entry(k).or_insert(0usize);
+                kids.push((k, *e, l, c));
+                *e += 1;
+            }
+        }
+        kids.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+        let mut i = 0usize;
+        while i < kids.len() {
+            let (k, o, ..) = kids[i];
+            let mut group: Vec<(usize, usize)> = Vec::new();
+            while i < kids.len() && kids[i].0 == k && kids[i].1 == o {
+                group.push((kids[i].2, kids[i].3));
+                i += 1;
+            }
+            queue.push_back((Some(idx), group));
+        }
+    }
+
+    // ---- scalar engine state -----------------------------------------
+    let samples: usize = lanes.iter().map(|e| e.samples).sum();
+    let budget: usize = lanes.iter().map(|e| e.cfg.budget).sum();
+    let n_ca_events: usize = lanes.iter().map(|e| e.n_ca_events).sum();
+    let n_errors: usize = lanes.iter().map(|e| e.n_errors).sum();
+    let measure_time_s: f64 = lanes.iter().map(|e| qgrid(e.measure_time_s)).sum();
+    let max_depth = lanes.iter().map(|e| e.max_depth).max().expect("non-empty");
+    let best_latency = lanes[winner].best_latency;
+    let baseline_latency = lanes[0].baseline_latency;
+    let lint_total: u64 = lanes
+        .iter()
+        .map(|e| {
+            e.lint_rejects_base
+                + crate::analysis::lint_rejects().saturating_sub(e.lint_rejects_at_start)
+        })
+        .sum();
+
+    // speedup curve: running max of the pointwise max over the union of
+    // sample coordinates (each lane's curve is already nondecreasing)
+    let mut pts: BTreeMap<usize, f64> = BTreeMap::new();
+    for e in &lanes {
+        for &(s, v) in &e.curve {
+            pts.entry(s)
+                .and_modify(|cur| {
+                    if v.total_cmp(cur).is_gt() {
+                        *cur = v;
+                    }
+                })
+                .or_insert(v);
+        }
+    }
+    let mut curve: Vec<(usize, f64)> = Vec::with_capacity(pts.len());
+    let mut run = f64::NEG_INFINITY;
+    for (s, v) in pts {
+        if v.total_cmp(&run).is_gt() {
+            run = v;
+        }
+        curve.push((s, run));
+    }
+
+    let mut checkpoints: Vec<usize> =
+        lanes.iter().flat_map(|e| e.cfg.checkpoints.iter().copied()).collect();
+    checkpoints.sort_unstable();
+    checkpoints.dedup();
+    let checkpoint_cursor = checkpoints.iter().filter(|&&c| c <= samples).count();
+
+    let unmeasured: Vec<usize> = out
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| !n.measured)
+        .map(|(i, _)| i)
+        .collect();
+
+    // per-model stats: usize tallies summed, f64 totals grid-summed, in
+    // canonical lane order
+    let mut models: ModelSet = lanes[winner].models.clone();
+    for m in 0..models.stats.len() {
+        let mut st = ModelStats {
+            regular_calls: 0,
+            regular_hits: 0,
+            ca_calls: 0,
+            ca_hits: 0,
+            errors: 0,
+            total_cost_usd: 0.0,
+            total_latency_s: 0.0,
+            tokens_in: 0.0,
+            tokens_out: 0.0,
+        };
+        for e in &lanes {
+            let s = &e.models.stats[m];
+            st.regular_calls += s.regular_calls;
+            st.regular_hits += s.regular_hits;
+            st.ca_calls += s.ca_calls;
+            st.ca_hits += s.ca_hits;
+            st.errors += s.errors;
+            st.total_cost_usd += qgrid(s.total_cost_usd);
+            st.total_latency_s += qgrid(s.total_latency_s);
+            st.tokens_in += qgrid(s.tokens_in);
+            st.tokens_out += qgrid(s.tokens_out);
+        }
+        models.stats[m] = st;
+    }
+
+    let best_schedule = Arc::clone(&out[merged_best].schedule);
+
+    // consume the lanes: the winner donates config, RNG, cost model (and
+    // its salt-keyed prediction entries); every other lane's cache is
+    // federated in canonical order (ground-truth union + summed counters)
+    let mut winner_parts = None;
+    let mut other_caches: Vec<EvalCache> = Vec::new();
+    for (i, e) in lanes.into_iter().enumerate() {
+        if i == winner {
+            winner_parts = Some((e.cfg, e.eval, e.rng, e.rr_ptr, e.round));
+        } else {
+            other_caches.push(e.eval.cache);
+        }
+    }
+    let (mut cfg, eval, rng, rr_ptr, round) = winner_parts.expect("winner in range");
+    cfg.budget = budget;
+    cfg.checkpoints = checkpoints.clone();
+    let CachedEvaluator { cost, sim, cache: mut merged_cache, scratch: _ } = eval;
+    for c in other_caches {
+        merged_cache.federate(c);
+    }
+
+    Ok(Mcts {
+        cfg,
+        models,
+        eval: CachedEvaluator {
+            cost,
+            sim,
+            cache: merged_cache,
+            scratch: ScoreScratch::default(),
+        },
+        nodes: out,
+        rng,
+        rr_ptr,
+        samples,
+        measure_time_s,
+        n_ca_events,
+        n_errors,
+        best_latency,
+        best_schedule,
+        baseline_latency,
+        unmeasured,
+        curve,
+        max_depth,
+        checkpoints_sorted: checkpoints,
+        checkpoint_cursor,
+        sel_children: Vec::new(),
+        sel_stats: Vec::new(),
+        sel_path: Vec::new(),
+        lint_rejects_at_start: crate::analysis::lint_rejects(),
+        lint_rejects_base: lint_total,
+        round,
+    })
+}
+
+/// Degrading fleet merge over persisted lane snapshots: a missing,
+/// unparseable, version-mismatched, or structurally invalid lane file is
+/// **skipped with a stderr warning** — it never panics and never poisons
+/// the surviving lanes, whose merge is bit-identical to a merge that
+/// only ever saw the healthy files. `parts` supplies the process-local
+/// pieces a snapshot cannot carry (fresh model set, simulator, initial
+/// schedule), once per lane file. `Err` only when *no* lane resumes.
+pub fn merge_snapshot_files<F>(paths: &[String], mut parts: F) -> Result<(Mcts, MergeReport), String>
+where
+    F: FnMut() -> (ModelSet, Simulator, Schedule),
+{
+    let mut healthy: Vec<Mcts> = Vec::new();
+    let mut skipped: Vec<(String, String)> = Vec::new();
+    for p in paths {
+        if !std::path::Path::new(p).exists() {
+            eprintln!("warning: lane snapshot {p}: missing; skipping lane");
+            skipped.push((p.clone(), "missing".to_string()));
+            continue;
+        }
+        let (models, sim, root) = parts();
+        match Json::parse_file(p).and_then(|v| Mcts::resume(&v, models, sim, root)) {
+            Ok(engine) => healthy.push(engine),
+            Err(e) => {
+                eprintln!("warning: lane snapshot {p}: {e}; skipping lane");
+                skipped.push((p.clone(), e));
+            }
+        }
+    }
+    if healthy.is_empty() {
+        return Err(format!(
+            "tree merge: no healthy lane snapshots among {} paths",
+            paths.len()
+        ));
+    }
+    let lanes_merged = healthy.len();
+    let merged = merge_engines(healthy)?;
+    let report = MergeReport {
+        lanes_merged,
+        skipped,
+        n_nodes: merged.nodes.len(),
+        best_speedup: merged.best_speedup(),
+    };
+    Ok((merged, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::registry::paper_config;
+    use crate::mcts::SearchConfig;
+    use crate::sim::Target;
+    use crate::workloads;
+
+    fn lane(seed: u64, budget: usize) -> Mcts {
+        let w = workloads::by_name("gemm").unwrap();
+        let root = Schedule::initial(Arc::new(w));
+        let cfg = SearchConfig {
+            budget,
+            seed,
+            checkpoints: vec![budget / 2, budget],
+            ..SearchConfig::default()
+        };
+        let models = ModelSet::new(paper_config(2, "gpt-5.2"));
+        Mcts::new(cfg, models, Simulator::new(Target::Cpu), root).run_until(budget)
+    }
+
+    #[test]
+    fn qgrid_idempotent_and_exact() {
+        for x in [0.0, 1.0, 0.3, 17.25, 123.456, 1e6, -2.5] {
+            let q = qgrid(x);
+            assert_eq!(q.to_bits(), qgrid(q).to_bits(), "qgrid not idempotent at {x}");
+        }
+        // grid sums are exact: associativity of quantized addition
+        let (a, b, c) = (qgrid(0.1), qgrid(0.2), qgrid(0.3));
+        assert_eq!(((a + b) + c).to_bits(), (a + (b + c)).to_bits());
+    }
+
+    #[test]
+    fn single_lane_merge_is_identity() {
+        let e = lane(3, 20);
+        let snap = format!("{}", e.snapshot());
+        let merged = merge_engines(vec![e]).unwrap();
+        assert_eq!(snap, format!("{}", merged.snapshot()));
+    }
+
+    #[test]
+    fn duplicate_seeds_rejected() {
+        let (a, b) = (lane(5, 12), lane(5, 12));
+        assert!(merge_engines(vec![a, b]).unwrap_err().contains("duplicate lane seed"));
+    }
+
+    #[test]
+    fn merged_incumbent_is_best_across_lanes() {
+        let (a, b) = (lane(1, 24), lane(2, 24));
+        let best = a.best_speedup().max(b.best_speedup());
+        let samples = a.samples() + b.samples();
+        let merged = merge_engines(vec![a, b]).unwrap();
+        assert_eq!(merged.best_speedup().to_bits(), best.to_bits());
+        assert_eq!(merged.samples(), samples);
+        assert!(merged.first_tree_deny().is_none());
+        // the merged incumbent must be a live tree node (snapshot's
+        // best_node lookup depends on Arc identity)
+        assert!(merged
+            .nodes
+            .iter()
+            .any(|n| Arc::ptr_eq(&n.schedule, &merged.best_schedule)));
+    }
+
+    #[test]
+    fn merge_is_commutative_on_the_snapshot() {
+        let ab = merge_engines(vec![lane(1, 16), lane(2, 16)]).unwrap();
+        let ba = merge_engines(vec![lane(2, 16), lane(1, 16)]).unwrap();
+        assert_eq!(format!("{}", ab.snapshot()), format!("{}", ba.snapshot()));
+    }
+
+    #[test]
+    fn merged_tree_resumes_and_continues() {
+        let merged = merge_engines(vec![lane(1, 16), lane(2, 16)]).unwrap();
+        let snap = merged.snapshot();
+        let w = workloads::by_name("gemm").unwrap();
+        let root = Schedule::initial(Arc::new(w));
+        let models = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let mut resumed =
+            Mcts::resume(&snap, models, Simulator::new(Target::Cpu), root).unwrap();
+        assert_eq!(format!("{}", resumed.snapshot()), format!("{snap}"));
+        let before = resumed.best_speedup();
+        resumed.extend_budget(8);
+        let done = resumed.run_until(usize::MAX);
+        assert!(done.samples() >= 40, "merged search must keep sampling");
+        assert!(done.best_speedup() >= before, "incumbent must stay monotone");
+    }
+}

@@ -732,6 +732,116 @@ fn prop_tree_roundtrip_preserves_search() {
     });
 }
 
+#[test]
+fn prop_tree_merge_is_commutative_associative_and_resumable() {
+    // the merge algebra (`litecoop::mcts::treemerge`): for random
+    // scenarios, targets, budgets, and 3-lane seed sets drawn from the
+    // distributed driver's own seed stream (`lane_seed`), the keyed-union
+    // merge is commutative AND associative up to f64 bit equality of the
+    // canonical re-serialization — visit counts, reward sums, and
+    // per-model stat totals included, since the snapshot renders them at
+    // bit precision. The merged snapshot → resume → snapshot loop is a
+    // byte fixed point, and merged trees lint clean tree-wide. Lanes are
+    // snapshotted once and every merge arrangement resumes from those
+    // snapshots — the file-mediated protocol the fleet driver uses.
+    use litecoop::llm::registry::paper_config;
+    use litecoop::llm::ModelSet;
+    use litecoop::mcts::treemerge::merge_engines;
+    use litecoop::mcts::{Mcts, SearchConfig};
+    use litecoop::runtime::driver::lane_seed;
+    use litecoop::sim::Simulator;
+    use litecoop::util::Json;
+
+    check("tree-merge-algebra", 200, 0x3E26_E001, |rng| {
+        let spec = random_scenario(rng);
+        let name = spec.name();
+        let w = spec.lower().map_err(|e| format!("{name}: lower: {e}"))?;
+        let root = Schedule::initial(Arc::new(w));
+        let gpu = rng.chance(0.25);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        let budget = 8 + rng.below(9);
+        let case_seed = rng.next_u64();
+        let seeds: Vec<u64> = (0..3).map(|i| lane_seed(case_seed, i)).collect();
+        if seeds[0] == seeds[1] || seeds[0] == seeds[2] || seeds[1] == seeds[2] {
+            return Ok(()); // ~2^-63 splitmix collision: not this property's bug
+        }
+
+        let models = || ModelSet::new(paper_config(2, "gpt-5.2"));
+        let snaps: Vec<String> = seeds
+            .iter()
+            .map(|&seed| {
+                let cfg = SearchConfig {
+                    budget,
+                    seed,
+                    checkpoints: vec![budget],
+                    ..SearchConfig::default()
+                };
+                let e = Mcts::new(cfg, models(), Simulator::new(target), root.clone())
+                    .run_until(budget);
+                format!("{}", e.snapshot())
+            })
+            .collect();
+        let lane_at = |i: usize| -> Result<Mcts, String> {
+            let v = Json::parse(&snaps[i]).map_err(|e| format!("{name}: lane {i}: {e}"))?;
+            Mcts::resume(&v, models(), Simulator::new(target), root.clone())
+                .map_err(|e| format!("{name}: lane {i} resume: {e}"))
+        };
+        let merge_of = |order: &[usize]| -> Result<String, String> {
+            let lanes = order.iter().map(|&i| lane_at(i)).collect::<Result<Vec<_>, _>>()?;
+            let merged = merge_engines(lanes).map_err(|e| format!("{name}: merge: {e}"))?;
+            Ok(format!("{}", merged.snapshot()))
+        };
+
+        let canonical = merge_of(&[0, 1, 2])?;
+
+        // commutativity: any lane order re-serializes identically
+        let perms: [[usize; 3]; 5] =
+            [[0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        let perm = *rng.choice(&perms);
+        if merge_of(&perm)? != canonical {
+            return Err(format!("{name}: merge not commutative under order {perm:?}"));
+        }
+
+        // associativity: nested pairwise merges equal the flat 3-way one
+        let left = {
+            let inner = merge_engines(vec![lane_at(0)?, lane_at(1)?])
+                .map_err(|e| format!("{name}: merge(0,1): {e}"))?;
+            let outer = merge_engines(vec![inner, lane_at(2)?])
+                .map_err(|e| format!("{name}: merge((0,1),2): {e}"))?;
+            format!("{}", outer.snapshot())
+        };
+        if left != canonical {
+            return Err(format!("{name}: merge((a,b),c) != merge(a,b,c)"));
+        }
+        let right = {
+            let inner = merge_engines(vec![lane_at(1)?, lane_at(2)?])
+                .map_err(|e| format!("{name}: merge(1,2): {e}"))?;
+            let outer = merge_engines(vec![lane_at(0)?, inner])
+                .map_err(|e| format!("{name}: merge(0,(1,2)): {e}"))?;
+            format!("{}", outer.snapshot())
+        };
+        if right != canonical {
+            return Err(format!("{name}: merge(a,(b,c)) != merge(a,b,c)"));
+        }
+
+        // merged snapshot -> resume -> snapshot is a byte fixed point,
+        // and the merged tree lints clean on every node
+        let v = Json::parse(&canonical).map_err(|e| format!("{name}: reparse: {e}"))?;
+        let resumed = Mcts::resume(&v, models(), Simulator::new(target), root.clone())
+            .map_err(|e| format!("{name}: merged resume: {e}"))?;
+        if let Some((i, d)) = resumed.first_tree_deny() {
+            return Err(format!("{name}: merged tree node {i} carries Deny: {d}"));
+        }
+        if format!("{}", resumed.snapshot()) != canonical {
+            return Err(format!(
+                "{name}: merged snapshot -> resume -> snapshot drifted \
+                 (budget={budget}, seeds={seeds:?})"
+            ));
+        }
+        Ok(())
+    });
+}
+
 // ------------------------------------------------------------------ harness
 
 #[test]

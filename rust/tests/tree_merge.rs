@@ -1,0 +1,255 @@
+//! Root-parallel tree-merge integration tests: the merge differential
+//! contract (at equal total sample budget the merged tree's incumbent is
+//! at least the best single lane's, on every registry workload and on
+//! parameterized scenarios), bit-determinism per (seed-set, N), the
+//! merge identities (single lane ≡ plain search, merging against a
+//! missing lane ≡ the tree alone), and the corruption suite (a
+//! truncated / garbage / version-mismatched / dangling-parent lane
+//! snapshot is skipped with a warning and never poisons the surviving
+//! lanes — their merge is bit-identical to a healthy-lanes-only merge).
+//!
+//! Mirrors `tree_persist.rs` for the persistence layer; this file locks
+//! the merge layer above it (`litecoop::mcts::treemerge`).
+
+use litecoop::llm::registry::paper_config;
+use litecoop::llm::ModelSet;
+use litecoop::mcts::treemerge::{merge_engines, merge_snapshot_files};
+use litecoop::mcts::{Mcts, SearchConfig};
+use litecoop::schedule::Schedule;
+use litecoop::sim::{Simulator, Target};
+use litecoop::util::Json;
+use litecoop::workloads;
+use std::sync::Arc;
+
+/// The six registry workloads plus two parameterized scenario points —
+/// the differential contract's coverage set.
+const DIFFERENTIAL_SET: [&str; 8] = [
+    "llama3_attention",
+    "deepseek_moe",
+    "flux_attention",
+    "flux_conv",
+    "llama4_mlp",
+    "gemm",
+    "gemm@m=128,n=128",
+    "attention@seq=128",
+];
+
+/// Unique temp path per test (tests run concurrently in one process).
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("litecoop_tree_merge_{tag}_{}.json", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// The process-local pieces a lane snapshot cannot carry.
+fn fresh_parts(scenario: &str) -> (ModelSet, Simulator, Schedule) {
+    let w = workloads::resolve(scenario).unwrap();
+    (
+        ModelSet::new(paper_config(2, "gpt-5.2")),
+        Simulator::new(Target::Cpu),
+        Schedule::initial(Arc::new(w)),
+    )
+}
+
+/// One finished lane: an independent fixed-seed search of `scenario`.
+fn lane(scenario: &str, seed: u64, budget: usize) -> Mcts {
+    let (models, sim, root) = fresh_parts(scenario);
+    let cfg = SearchConfig {
+        budget,
+        seed,
+        checkpoints: vec![budget / 2, budget],
+        ..SearchConfig::default()
+    };
+    Mcts::new(cfg, models, sim, root).run_until(budget)
+}
+
+fn snap_string(e: &Mcts) -> String {
+    format!("{}", e.snapshot())
+}
+
+// ----------------------------------------------------------- differential
+
+#[test]
+fn merged_result_dominates_every_lane_across_workloads_and_scenarios() {
+    // N lanes at budget B/N each vs the merged tree at total budget B:
+    // the merged incumbent must match the best lane's bit for bit (never
+    // below it), the sample ledger must cover the full budget, and the
+    // merged tree must pass the legality analyzer tree-wide.
+    for scenario in DIFFERENTIAL_SET {
+        let lanes: Vec<Mcts> = [1u64, 2].iter().map(|&s| lane(scenario, s, 12)).collect();
+        let speedups: Vec<f64> = lanes.iter().map(Mcts::best_speedup).collect();
+        let best = speedups.iter().cloned().fold(f64::MIN, f64::max);
+        let total: usize = lanes.iter().map(Mcts::samples).sum();
+        assert_eq!(total, 24, "{scenario}: lanes under-sampled their budgets");
+
+        let merged = merge_engines(lanes).unwrap_or_else(|e| panic!("{scenario}: {e}"));
+        for (i, &s) in speedups.iter().enumerate() {
+            assert!(
+                merged.best_speedup() >= s,
+                "{scenario}: merged speedup {} below lane {i}'s {s}",
+                merged.best_speedup()
+            );
+        }
+        assert_eq!(
+            merged.best_speedup().to_bits(),
+            best.to_bits(),
+            "{scenario}: merged incumbent is not the best lane's"
+        );
+        assert_eq!(merged.samples(), total, "{scenario}: sample ledger drifted");
+        assert_eq!(merged.first_tree_deny(), None, "{scenario}: merged tree lints dirty");
+    }
+}
+
+#[test]
+fn merged_tree_is_bit_deterministic_per_seed_set() {
+    // the merged tree is a pure function of (scenario, seed set, N):
+    // rebuilding the lanes from scratch and re-merging reproduces the
+    // canonical serialization byte for byte.
+    let build = || {
+        let lanes: Vec<Mcts> = [5u64, 9, 13].iter().map(|&s| lane("gemm", s, 10)).collect();
+        snap_string(&merge_engines(lanes).unwrap())
+    };
+    assert_eq!(build(), build(), "same (seed-set, N) produced different merged trees");
+}
+
+// -------------------------------------------------------------- identities
+
+#[test]
+fn single_lane_file_merge_is_plain_search() {
+    // merging a one-element lane list is the identity: the merged tree
+    // re-serializes to exactly the snapshot the plain search persisted.
+    let path = tmp_path("single");
+    lane("gemm", 3, 16).save_file(&path).unwrap();
+    let persisted = std::fs::read_to_string(&path).unwrap();
+
+    let (merged, report) =
+        merge_snapshot_files(&[path.clone()], || fresh_parts("gemm")).unwrap();
+    assert_eq!(report.lanes_merged, 1);
+    assert!(report.skipped.is_empty(), "{:?}", report.skipped);
+    assert_eq!(format!("{}\n", merged.snapshot()), persisted);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn merge_with_missing_lane_is_identity() {
+    // merge(tree, empty) ≡ tree: a lane that never produced a snapshot
+    // is skipped, and the surviving tree passes through untouched.
+    let path = tmp_path("present");
+    let ghost = tmp_path("ghost_never_written");
+    std::fs::remove_file(&ghost).ok();
+    lane("gemm", 11, 16).save_file(&path).unwrap();
+    let persisted = std::fs::read_to_string(&path).unwrap();
+
+    let (merged, report) =
+        merge_snapshot_files(&[path.clone(), ghost.clone()], || fresh_parts("gemm")).unwrap();
+    assert_eq!(report.lanes_merged, 1);
+    assert_eq!(report.skipped.len(), 1);
+    assert_eq!(report.skipped[0].0, ghost);
+    assert_eq!(report.skipped[0].1, "missing");
+    assert_eq!(format!("{}\n", merged.snapshot()), persisted);
+    std::fs::remove_file(&path).ok();
+}
+
+// -------------------------------------------------------- corruption suite
+
+#[test]
+fn corrupt_lane_snapshots_never_poison_the_surviving_lanes() {
+    // two healthy lanes plus one corrupt lane file, for every corruption
+    // mode: the merge must degrade to skipping the corrupt lane — never
+    // a panic — and the result must be bit-identical to a merge that
+    // only ever saw the healthy files.
+    let p1 = tmp_path("healthy_1");
+    let p2 = tmp_path("healthy_2");
+    let p3 = tmp_path("corrupt_3");
+    lane("gemm", 1, 16).save_file(&p1).unwrap();
+    lane("gemm", 2, 16).save_file(&p2).unwrap();
+    let (healthy, healthy_report) =
+        merge_snapshot_files(&[p1.clone(), p2.clone()], || fresh_parts("gemm")).unwrap();
+    assert_eq!(healthy_report.lanes_merged, 2);
+    let healthy_snap = snap_string(&healthy);
+
+    // a valid third lane to corrupt, via structured surgery on the
+    // parsed snapshot (the same idiom as tree_persist.rs)
+    let valid = snap_string(&lane("gemm", 3, 16));
+    let mutate = |f: &dyn Fn(&mut Json)| {
+        let mut v = Json::parse(&valid).unwrap();
+        f(&mut v);
+        format!("{v}")
+    };
+    let cases: Vec<(&str, String)> = vec![
+        ("truncated file", valid[..valid.len() / 2].to_string()),
+        ("garbage bytes", "this is not { json".to_string()),
+        (
+            "unsupported version",
+            mutate(&|v| {
+                v.set("version", Json::Num(99.0));
+            }),
+        ),
+        (
+            "dangling parent index",
+            mutate(&|v| {
+                if let Json::Obj(m) = v {
+                    if let Some(Json::Arr(nodes)) = m.get_mut("nodes") {
+                        nodes[1].set("parent", Json::Num(1_000_000.0));
+                    }
+                }
+            }),
+        ),
+    ];
+
+    for (what, text) in &cases {
+        std::fs::write(&p3, text).unwrap();
+        let (merged, report) =
+            merge_snapshot_files(&[p1.clone(), p2.clone(), p3.clone()], || fresh_parts("gemm"))
+                .unwrap_or_else(|e| panic!("{what}: merge refused to degrade: {e}"));
+        assert_eq!(report.lanes_merged, 2, "{what}: wrong lane count");
+        assert_eq!(report.skipped.len(), 1, "{what}: {:?}", report.skipped);
+        assert_eq!(report.skipped[0].0, p3, "{what}");
+        assert!(!report.skipped[0].1.is_empty(), "{what}: empty skip reason");
+        assert_eq!(
+            snap_string(&merged),
+            healthy_snap,
+            "{what}: corrupt lane leaked into the merged tree"
+        );
+    }
+
+    // no healthy lane at all is the one hard error
+    std::fs::write(&p3, "still not json").unwrap();
+    let ghost = tmp_path("corrupt_ghost");
+    std::fs::remove_file(&ghost).ok();
+    let err = merge_snapshot_files(&[p3.clone(), ghost], || fresh_parts("gemm"))
+        .err()
+        .expect("all-corrupt merge must fail");
+    assert!(err.contains("no healthy lane"), "{err}");
+
+    for p in [&p1, &p2, &p3] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+// ------------------------------------------------------------- resumability
+
+#[test]
+fn merged_snapshot_resumes_from_disk_and_keeps_searching() {
+    // a merged tree persisted to disk is a first-class registry tree:
+    // it reloads, re-serializes byte-identically, and continues the
+    // search with a monotone incumbent.
+    let path = tmp_path("resume");
+    let lanes: Vec<Mcts> = [4u64, 8].iter().map(|&s| lane("gemm", s, 14)).collect();
+    let merged = merge_engines(lanes).unwrap();
+    let before_speedup = merged.best_speedup();
+    let before_samples = merged.samples();
+    merged.save_file(&path).unwrap();
+
+    let (models, sim, root) = fresh_parts("gemm");
+    let mut resumed = Mcts::load_file(&path, models, sim, root).unwrap();
+    assert_eq!(format!("{}\n", resumed.snapshot()), std::fs::read_to_string(&path).unwrap());
+    assert_eq!(resumed.samples(), before_samples);
+    resumed.extend_budget(8);
+    let done = resumed.run_until(usize::MAX);
+    assert_eq!(done.samples(), before_samples + 8);
+    assert!(done.best_speedup() >= before_speedup, "incumbent regressed after resume");
+    std::fs::remove_file(&path).ok();
+}
