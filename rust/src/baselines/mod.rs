@@ -191,6 +191,8 @@ pub fn evolutionary(
         call_counts: vec![],
         eval_cache: crate::mcts::evalcache::CacheStats::default(),
         lint_rejects: crate::analysis::lint_rejects().saturating_sub(lint_rejects_at_start),
+        // the LLM-free baseline makes no model calls, so nothing can fault
+        faults: crate::llm::faults::FaultReport::default(),
         best_schedule,
     }
 }

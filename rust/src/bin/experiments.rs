@@ -36,6 +36,17 @@
 //! the merge, and a follow-up serve request resumes the merged tree
 //! warm — the root-parallel CI contract.
 //!
+//! Chaos gate (see `litecoop::llm::faults`):
+//!   experiments chaos_smoke [--scenario S] [--budget N] [--llms N]
+//!               [--seed S]
+//! checks the fault-injection contract: an all-zero-rate FaultPlan is a
+//! bit-identical passthrough; a fixed-seed faulted run is
+//! bit-deterministic, finishes with speedup >= 1, accounts every
+//! retry/backoff/fallback into its reported latency, and survives a
+//! mid-run snapshot/resume round-trip; a 4-lane fleet with one lane
+//! forced dead merges its survivors bit-identically to a healthy
+//! fleet's merge over the same lanes. Exits 8 on any miss.
+//!
 //! Incremental-evaluation gate:
 //!   experiments blockmemo_smoke [--workload W] [--seed S] [--llms N]
 //!               [--budget N]
@@ -165,7 +176,12 @@ fn fig_speedup_curves(o: &Opts, id: &str) {
         }
     }
     let all: Vec<&SearchResult> = results.iter().collect();
-    out.push_str(&format!("\n{}\n{}\n", report::cache_line(&all), report::lint_line(&all)));
+    out.push_str(&format!(
+        "\n{}\n{}\n{}\n",
+        report::cache_line(&all),
+        report::lint_line(&all),
+        report::fault_line(&all)
+    ));
     report::emit(id, &out).unwrap();
 }
 
@@ -238,7 +254,12 @@ fn table1(o: &Opts) {
         out.push_str(&format!("- {label} reduction: {:.2}x\n", stats::geomean(&agg[i])));
     }
     let all: Vec<&SearchResult> = results.iter().collect();
-    out.push_str(&format!("\n{}\n{}\n", report::cache_line(&all), report::lint_line(&all)));
+    out.push_str(&format!(
+        "\n{}\n{}\n{}\n",
+        report::cache_line(&all),
+        report::lint_line(&all),
+        report::fault_line(&all)
+    ));
     report::emit("table1", &out).unwrap();
 }
 
@@ -874,6 +895,236 @@ fn lanes_smoke(o: &Opts, args: &Args) {
     }
 }
 
+/// CI gate for the fault-injection contract (see `litecoop::llm::faults`):
+///
+/// 1. **Passthrough**: a search with an explicit all-zero-rate
+///    `FaultPlan` installed must be bit-identical (canonical snapshot
+///    equality) to the same search with no plan at all.
+/// 2. **Faulted resilience**: a fixed-seed search under nonzero rates is
+///    bit-deterministic, completes with speedup >= 1, charges every
+///    retry/backoff/fallback into the latency it reports, surfaces
+///    injected faults in per-model error counters — and a mid-run
+///    snapshot/resume round-trip (fault stream persisted in the tree
+///    file) reproduces the uninterrupted faulted run bit-identically.
+/// 3. **Supervised fleet**: a 4-lane fleet with one lane forced dead
+///    merges the survivors into a tree bit-identical to a healthy
+///    fleet's merge over the same lanes.
+///
+/// Exit 8 on any miss.
+fn chaos_smoke(o: &Opts, args: &Args) {
+    use litecoop::coordinator::FleetOpts;
+    use litecoop::llm::faults::{FaultPlan, FaultRates};
+    use litecoop::llm::registry::paper_config;
+    use litecoop::llm::ModelSet;
+    use litecoop::mcts::{treemerge, Mcts, SearchConfig};
+    use litecoop::schedule::Schedule;
+    use litecoop::sim::Simulator;
+    use std::sync::Arc;
+
+    let scenario = args.str_or("scenario", "gemm");
+    let seed = args.u64_or("seed", 7);
+    let n_llms = args.usize_or("llms", 2);
+    let budget = o.budget;
+    let mut failures: Vec<String> = Vec::new();
+
+    let parts = || {
+        let workload = workloads::resolve(&scenario).unwrap_or_else(|e| {
+            eprintln!("chaos-smoke: unknown scenario {scenario}: {e}");
+            std::process::exit(8);
+        });
+        (
+            ModelSet::new(paper_config(n_llms, &o.largest)),
+            Simulator::new(Target::Cpu),
+            Schedule::initial(Arc::new(workload)),
+        )
+    };
+    let build = |plan: Option<FaultPlan>| -> Mcts {
+        let (mut models, sim, root) = parts();
+        if let Some(p) = plan {
+            models.set_fault_plan(p);
+        }
+        let cfg = SearchConfig {
+            budget,
+            seed,
+            checkpoints: Vec::new(),
+            ..SearchConfig::default()
+        };
+        Mcts::new(cfg, models, sim, root)
+    };
+
+    // ---- 1. zero-rate plan is a bit-identical passthrough --------------
+    let clean = build(None).run_until(usize::MAX);
+    let zeroed = build(Some(FaultPlan::uniform(n_llms, FaultRates::default(), seed ^ 0x5EED)))
+        .run_until(usize::MAX);
+    let snap_clean = format!("{}", clean.snapshot());
+    if snap_clean != format!("{}", zeroed.snapshot()) {
+        failures.push(
+            "zero-rate FaultPlan perturbed the search: canonical snapshots differ".to_string(),
+        );
+    } else {
+        println!(
+            "chaos-smoke: passthrough OK — zero-rate plan bit-identical over {} samples",
+            clean.samples()
+        );
+    }
+
+    // ---- 2. faulted run: deterministic, resilient, fully accounted -----
+    let plan = FaultPlan::uniform(n_llms, FaultRates::uniform(0.05), seed ^ 0x00C0_FFEE);
+    let faulted = build(Some(plan.clone())).run_until(usize::MAX);
+    let snap_faulted = format!("{}", faulted.snapshot());
+    if snap_faulted != format!("{}", build(Some(plan.clone())).run_until(usize::MAX).snapshot()) {
+        failures.push("faulted run is not bit-deterministic for a fixed (plan, seed)".to_string());
+    }
+    let report = faulted.models.fault_report.clone();
+    if report.injected() == 0 {
+        failures.push(format!(
+            "no faults fired over {} samples at rate 0.05/class — raise --budget",
+            faulted.samples()
+        ));
+    }
+    if faulted.best_speedup() < 1.0 {
+        failures.push(format!(
+            "faulted search finished below baseline: speedup {:.4}",
+            faulted.best_speedup()
+        ));
+    }
+    let charged = report.fault_latency_s + report.backoff_latency_s;
+    if report.injected() > 0 && (charged <= 0.0 || faulted.simulated_time_s() < charged) {
+        failures.push(format!(
+            "fault charges not accounted: {charged:.3}s of fault+backoff latency vs {:.3}s total",
+            faulted.simulated_time_s()
+        ));
+    }
+    if report.retries > 0 && report.backoff_latency_s <= 0.0 {
+        failures.push(format!(
+            "{} retries reported but no backoff latency charged",
+            report.retries
+        ));
+    }
+    let errors: usize = faulted.models.stats.iter().map(|s| s.errors).sum();
+    if errors < report.injected() {
+        failures.push(format!(
+            "per-model error counters ({errors}) undercount injected faults ({})",
+            report.injected()
+        ));
+    }
+    println!(
+        "chaos-smoke: faulted run speedup {:.4} — {}",
+        faulted.best_speedup(),
+        report.summary()
+    );
+
+    // mid-run snapshot/resume round-trip: the fault stream is persisted,
+    // so the continuation must reproduce the uninterrupted run exactly
+    let half = build(Some(plan)).run_until(budget / 2);
+    let snap_half = half.snapshot();
+    let (models, sim, root) = parts(); // note: NO plan — the snapshot's must win
+    match Mcts::resume(&snap_half, models, sim, root) {
+        Ok(resumed) => {
+            let done = resumed.run_until(usize::MAX);
+            if format!("{}", done.snapshot()) != snap_faulted {
+                failures.push(
+                    "faulted snapshot/resume round-trip diverged from the uninterrupted run"
+                        .to_string(),
+                );
+            }
+        }
+        Err(e) => failures.push(format!("faulted snapshot failed to resume: {e}")),
+    }
+
+    // ---- 3. supervised fleet merge matches healthy-lanes-only merge ----
+    let dir_f = std::env::temp_dir()
+        .join(format!("litecoop_chaos_smoke_f_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let dir_h = std::env::temp_dir()
+        .join(format!("litecoop_chaos_smoke_h_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    for d in [&dir_f, &dir_h] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let base = FleetOpts {
+        scenario: scenario.clone(),
+        lanes: 4,
+        total_budget: budget,
+        n_llms,
+        largest: o.largest.clone(),
+        base_seed: seed,
+        search_threads: o.search_threads,
+        threads: o.threads,
+        keep_lane_files: true,
+        ..FleetOpts::default()
+    };
+    let faulted_fleet = coordinator::run_fleet(&FleetOpts {
+        fail_lanes: vec![2],
+        registry_dir: Some(dir_f.clone()),
+        ..base.clone()
+    });
+    let healthy_fleet = coordinator::run_fleet(&FleetOpts {
+        registry_dir: Some(dir_h.clone()),
+        ..base
+    });
+    match (faulted_fleet, healthy_fleet) {
+        (Ok(rf), Ok(rh)) => {
+            println!("chaos-smoke: {}", rf.health_summary());
+            if rf.lanes_failed != 1 || rf.lanes_merged != 3 {
+                failures.push(format!(
+                    "supervisor miscounted the dead lane: {} failed / {} merged of {}",
+                    rf.lanes_failed, rf.lanes_merged, rf.lanes_run
+                ));
+            }
+            if rh.lanes_merged != 4 {
+                failures.push(format!("healthy fleet lost lanes: {:?}", rh.skipped));
+            }
+            // merge the healthy fleet's lanes 0, 1, 3 by hand and compare
+            // canonical bits with the supervised fleet's persisted merge
+            let base_h = format!(
+                "{dir_h}/{}",
+                litecoop::coordinator::serve::tree_file_name(&scenario)
+            );
+            let survivors: Vec<String> =
+                [0usize, 1, 3].iter().map(|l| format!("{base_h}.lane{l}")).collect();
+            match treemerge::merge_snapshot_files(&survivors, parts) {
+                Ok((manual, _)) => {
+                    let persisted = rf
+                        .tree_path
+                        .as_ref()
+                        .and_then(|p| std::fs::read_to_string(p).ok())
+                        .unwrap_or_default();
+                    if persisted.trim_end() != format!("{}", manual.snapshot()) {
+                        failures.push(
+                            "supervised fleet merge diverged from the healthy-lanes-only merge"
+                                .to_string(),
+                        );
+                    } else {
+                        println!(
+                            "chaos-smoke: supervised merge OK — survivors match the \
+                             healthy-lanes-only merge bit-for-bit"
+                        );
+                    }
+                }
+                Err(e) => failures.push(format!("manual survivor merge failed: {e}")),
+            }
+        }
+        (Err(e), _) => failures.push(format!("supervised fleet failed outright: {e}")),
+        (_, Err(e)) => failures.push(format!("healthy reference fleet failed: {e}")),
+    }
+
+    if failures.is_empty() {
+        println!("chaos-smoke: OK — passthrough, faulted resilience, and supervised merge hold");
+        for d in [&dir_f, &dir_h] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    } else {
+        for f in &failures {
+            eprintln!("chaos-smoke: {f}");
+        }
+        eprintln!("chaos-smoke: fleet dirs kept at {dir_f} and {dir_h} for inspection");
+        std::process::exit(8);
+    }
+}
+
 /// CI gate for the legality-analyzer contract: storm every scenario
 /// family on both targets through the Deny-gated `apply`, lint every
 /// endpoint, and tabulate diagnostics per lint code. Reachable schedules
@@ -1160,6 +1411,7 @@ fn main() {
         "sample_efficiency" => table3(&o), // Table 16 is emitted with Table 3
         "sweep" => sweep(&o, &args),
         "lanes_smoke" => lanes_smoke(&o, &args),
+        "chaos_smoke" => chaos_smoke(&o, &args),
         "blockmemo_smoke" => blockmemo_smoke(&o, &args),
         "lint_audit" => lint_audit(&o, &args),
         "perfgate" => perfgate(&args),

@@ -76,6 +76,14 @@ pub struct FleetOpts {
     pub cache_file: Option<String>,
     /// Keep per-lane snapshot files after the merge (debugging).
     pub keep_lane_files: bool,
+    /// Chaos hook: these lanes panic on **every** attempt — contained by
+    /// the supervisor, skipped after the retry, merge proceeds on the
+    /// survivors. Exercised by the `chaos_smoke` CI gate.
+    pub fail_lanes: Vec<usize>,
+    /// Chaos hook: these lanes panic on their **first** attempt only —
+    /// the supervisor's single retry (on a fresh seed stream) recovers
+    /// them.
+    pub flaky_lanes: Vec<usize>,
 }
 
 impl Default for FleetOpts {
@@ -93,6 +101,8 @@ impl Default for FleetOpts {
             registry_dir: None,
             cache_file: None,
             keep_lane_files: false,
+            fail_lanes: Vec::new(),
+            flaky_lanes: Vec::new(),
         }
     }
 }
@@ -116,6 +126,27 @@ pub struct FleetResult {
     pub tree_path: Option<String>,
     /// `(path-or-lane, reason)` of lanes that failed to run or merge.
     pub skipped: Vec<(String, String)>,
+    /// Lanes that failed both attempts and were excluded from the merge.
+    pub lanes_failed: usize,
+    /// Lanes recovered by the supervisor's single retry.
+    pub lanes_retried: usize,
+}
+
+impl FleetResult {
+    /// One-line fleet health digest for operators and smoke gates.
+    pub fn health_summary(&self) -> String {
+        format!(
+            "fleet {}: {}/{} lanes merged ({} failed, {} recovered by retry), \
+             merged speedup {:.3}x over {} samples",
+            self.scenario,
+            self.lanes_merged,
+            self.lanes_run,
+            self.lanes_failed,
+            self.lanes_retried,
+            self.merged_speedup,
+            self.merged_samples,
+        )
+    }
 }
 
 /// One finished lane, as handed from a worker to the merge step.
@@ -130,6 +161,65 @@ struct LaneOut {
 pub fn lane_budgets(total: usize, lanes: usize) -> Vec<usize> {
     let lanes = lanes.max(1);
     (0..lanes).map(|l| total / lanes + usize::from(l < total % lanes)).collect()
+}
+
+/// One lane attempt: build (or warm-start) the engine on `seed`, run it
+/// to its budget, checkpoint the tree. Factored out of the job closure
+/// so the supervisor can wrap it in panic containment and retry it on a
+/// fresh seed stream.
+#[allow(clippy::too_many_arguments)]
+fn run_lane_attempt(
+    workload: &Arc<crate::tir::Workload>,
+    warm: &EvalCache,
+    opts: &FleetOpts,
+    lane_path: &str,
+    registry_tree: Option<&str>,
+    lane_budget: usize,
+    l: usize,
+    seed: u64,
+    attempt: usize,
+) -> Result<LaneOut, String> {
+    if opts.fail_lanes.contains(&l) || (attempt == 0 && opts.flaky_lanes.contains(&l)) {
+        panic!("chaos: injected failure in fleet lane {l} (attempt {attempt})");
+    }
+    let models = ModelSet::new(paper_config(opts.n_llms, &opts.largest));
+    let sim = Simulator::new(opts.target);
+    let root = Schedule::initial(Arc::clone(workload));
+    let cfg = SearchConfig {
+        budget: lane_budget,
+        seed,
+        search_threads: opts.search_threads,
+        checkpoints: Vec::new(),
+        ..SearchConfig::default()
+    };
+    // warm start: resume the scenario's registry tree onto this lane's
+    // seed stream; cold otherwise
+    let mut engine = match registry_tree
+        .filter(|p| std::path::Path::new(p).exists())
+        .and_then(|p| {
+            Mcts::load_file(p, models.clone(), sim.clone(), root.clone())
+                .map_err(|e| {
+                    eprintln!("warning: fleet lane {l}: tree file {e}; starting cold")
+                })
+                .ok()
+        }) {
+        Some(mut resumed) => {
+            resumed.reseed(seed);
+            resumed.cfg.search_threads = opts.search_threads;
+            resumed.eval.cache.absorb(warm.clone());
+            resumed.extend_budget(lane_budget);
+            resumed
+        }
+        None => Mcts::with_cache(cfg, models, sim, root, warm.clone()),
+    };
+    engine = if opts.search_threads > 1 {
+        engine.run_parallel_until(opts.search_threads, usize::MAX)
+    } else {
+        engine.run_until(usize::MAX)
+    };
+    engine.save_file(lane_path)?;
+    let speedup = engine.best_speedup();
+    Ok(LaneOut { path: lane_path.to_string(), speedup, cache: engine.eval.cache })
 }
 
 /// Run one root-parallel fleet: N lanes, snapshot checkpoints, cache
@@ -169,46 +259,49 @@ pub fn run_fleet(opts: &FleetOpts) -> Result<FleetResult, String> {
             let lane_path = format!("{tree_base}.lane{l}");
             let registry_tree = opts.registry_dir.as_ref().map(|_| tree_base.clone());
             let lane_budget = budgets[l];
-            move || -> Result<LaneOut, String> {
-                let seed = lane_seed(opts.base_seed, l as u64);
-                let models = ModelSet::new(paper_config(opts.n_llms, &opts.largest));
-                let sim = Simulator::new(opts.target);
-                let root = Schedule::initial(Arc::clone(&workload));
-                let cfg = SearchConfig {
-                    budget: lane_budget,
-                    seed,
-                    search_threads: opts.search_threads,
-                    checkpoints: Vec::new(),
-                    ..SearchConfig::default()
-                };
-                // warm start: resume the scenario's registry tree onto
-                // this lane's seed stream; cold otherwise
-                let mut engine = match registry_tree
-                    .filter(|p| std::path::Path::new(p).exists())
-                    .and_then(|p| {
-                        Mcts::load_file(&p, models.clone(), sim.clone(), root.clone())
-                            .map_err(|e| {
-                                eprintln!("warning: fleet lane {l}: tree file {e}; starting cold")
-                            })
-                            .ok()
-                    }) {
-                    Some(mut resumed) => {
-                        resumed.reseed(seed);
-                        resumed.cfg.search_threads = opts.search_threads;
-                        resumed.eval.cache.absorb(EvalCache::clone(&warm));
-                        resumed.extend_budget(lane_budget);
-                        resumed
+            // the lane supervisor: contain a failed attempt (Err *or*
+            // panic), retry exactly once on a fresh deterministic seed
+            // stream, report the second failure for the merge to skip
+            move || -> Result<(LaneOut, bool), String> {
+                let mut last_err = String::new();
+                for attempt in 0..2 {
+                    let seed = if attempt == 0 {
+                        lane_seed(opts.base_seed, l as u64)
+                    } else {
+                        lane_seed(opts.base_seed ^ 0xFA17, l as u64)
+                    };
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_lane_attempt(
+                            &workload,
+                            &warm,
+                            &opts,
+                            &lane_path,
+                            registry_tree.as_deref(),
+                            lane_budget,
+                            l,
+                            seed,
+                            attempt,
+                        )
+                    }))
+                    .unwrap_or_else(|p| {
+                        let what = p
+                            .downcast_ref::<String>()
+                            .map(String::as_str)
+                            .or_else(|| p.downcast_ref::<&str>().copied())
+                            .unwrap_or("panic");
+                        Err(format!("lane execution panicked: {what}"))
+                    });
+                    match out {
+                        Ok(lane) => return Ok((lane, attempt > 0)),
+                        Err(e) => {
+                            eprintln!(
+                                "warning: fleet lane {l} attempt {attempt} (seed {seed}): {e}"
+                            );
+                            last_err = e;
+                        }
                     }
-                    None => Mcts::with_cache(cfg, models, sim, root, EvalCache::clone(&warm)),
-                };
-                engine = if opts.search_threads > 1 {
-                    engine.run_parallel_until(opts.search_threads, usize::MAX)
-                } else {
-                    engine.run_until(usize::MAX)
-                };
-                engine.save_file(&lane_path)?;
-                let speedup = engine.best_speedup();
-                Ok(LaneOut { path: lane_path, speedup, cache: engine.eval.cache })
+                }
+                Err(last_err)
             }
         })
         .collect();
@@ -220,18 +313,31 @@ pub fn run_fleet(opts: &FleetOpts) -> Result<FleetResult, String> {
     let mut skipped: Vec<(String, String)> = Vec::new();
     let mut lane_speedups: Vec<f64> = Vec::new();
     let mut lane_paths: Vec<String> = Vec::new();
+    let mut lanes_failed = 0usize;
+    let mut lanes_retried = 0usize;
     for (l, out) in outs.into_iter().enumerate() {
         match out {
-            Ok(lane) => {
+            Ok((lane, retried)) => {
+                if retried {
+                    lanes_retried += 1;
+                }
                 fleet_cache.federate(lane.cache);
                 lane_speedups.push(lane.speedup);
                 lane_paths.push(lane.path);
             }
             Err(e) => {
                 eprintln!("warning: fleet lane {l}: {e}; skipping lane");
+                lanes_failed += 1;
                 skipped.push((format!("lane {l}"), e));
             }
         }
+    }
+    if lanes_failed > 0 || lanes_retried > 0 {
+        eprintln!(
+            "warning: fleet {}: {lanes_failed} of {lanes} lanes failed permanently, \
+             {lanes_retried} recovered by retry; merging the survivors",
+            opts.scenario
+        );
     }
     if let Some(path) = &opts.cache_file {
         if let Err(e) = fleet_cache.save_file(path) {
@@ -281,6 +387,8 @@ pub fn run_fleet(opts: &FleetOpts) -> Result<FleetResult, String> {
         merged_nodes: report.n_nodes,
         tree_path,
         skipped,
+        lanes_failed,
+        lanes_retried,
     })
 }
 
@@ -352,6 +460,81 @@ mod tests {
         assert_eq!(a.lane_speedups.len(), b.lane_speedups.len());
         for (x, y) in a.lane_speedups.iter().zip(&b.lane_speedups) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn flaky_lane_is_recovered_by_one_retry() {
+        let opts = FleetOpts {
+            flaky_lanes: vec![1],
+            ..quick_opts(2, 24)
+        };
+        let r = run_fleet(&opts).expect("fleet");
+        assert_eq!(r.lanes_merged, 2, "{:?}", r.skipped);
+        assert_eq!(r.lanes_retried, 1);
+        assert_eq!(r.lanes_failed, 0);
+        assert!(r.skipped.is_empty(), "{:?}", r.skipped);
+        assert_eq!(r.lane_speedups.len(), 2);
+        assert!(r.health_summary().contains("1 recovered by retry"), "{}", r.health_summary());
+    }
+
+    #[test]
+    fn permanently_failed_lane_is_skipped_and_survivors_merge() {
+        let opts = FleetOpts {
+            fail_lanes: vec![1],
+            ..quick_opts(3, 36)
+        };
+        let r = run_fleet(&opts).expect("fleet must survive a dead lane");
+        assert_eq!(r.lanes_run, 3);
+        assert_eq!(r.lanes_merged, 2);
+        assert_eq!(r.lanes_failed, 1);
+        assert_eq!(r.skipped.len(), 1);
+        assert!(r.skipped[0].1.contains("panicked"), "{:?}", r.skipped);
+        let best_survivor = r.lane_speedups.iter().cloned().fold(f64::MIN, f64::max);
+        assert_eq!(r.merged_speedup.to_bits(), best_survivor.to_bits());
+        assert!(r.health_summary().contains("2/3 lanes merged"), "{}", r.health_summary());
+    }
+
+    #[test]
+    fn supervised_merge_matches_healthy_lanes_only_merge() {
+        // a fleet with one lane forced dead must merge to bit-identical
+        // state as a healthy fleet's merge over the same surviving lanes
+        let dir_f = tmp_dir("chaosmerge_f");
+        let dir_h = tmp_dir("chaosmerge_h");
+        for d in [&dir_f, &dir_h] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+        let mut faulted = quick_opts(3, 36);
+        faulted.fail_lanes = vec![2];
+        faulted.registry_dir = Some(dir_f.clone());
+        faulted.keep_lane_files = true;
+        let rf = run_fleet(&faulted).expect("faulted fleet");
+        assert_eq!(rf.lanes_merged, 2);
+        let mut healthy = quick_opts(3, 36);
+        healthy.registry_dir = Some(dir_h.clone());
+        healthy.keep_lane_files = true;
+        let rh = run_fleet(&healthy).expect("healthy fleet");
+        assert_eq!(rh.lanes_merged, 3);
+        // manually merge only the healthy fleet's lanes 0 and 1 (the
+        // faulted fleet's survivors) and compare canonical snapshots
+        let base_h = format!("{dir_h}/{}", tree_file_name("gemm"));
+        let survivors = vec![format!("{base_h}.lane0"), format!("{base_h}.lane1")];
+        let (manual, _) = treemerge::merge_snapshot_files(&survivors, || {
+            (
+                ModelSet::new(paper_config(2, "gpt-5.2")),
+                Simulator::new(Target::Cpu),
+                Schedule::initial(Arc::new(workloads::by_name("gemm").unwrap())),
+            )
+        })
+        .expect("manual merge");
+        let persisted = std::fs::read_to_string(rf.tree_path.as_ref().unwrap()).unwrap();
+        assert_eq!(
+            persisted.trim_end(),
+            format!("{}", manual.snapshot()),
+            "supervised merge diverged from the healthy-lanes-only merge"
+        );
+        for d in [&dir_f, &dir_h] {
+            let _ = std::fs::remove_dir_all(d);
         }
     }
 

@@ -57,6 +57,35 @@ pub fn lint_line(runs: &[&SearchResult]) -> String {
     )
 }
 
+/// Aggregate fault-injection/recovery counters over runs (see
+/// [`crate::llm::faults`]).
+pub fn total_faults(runs: &[&SearchResult]) -> crate::llm::faults::FaultReport {
+    let mut t = crate::llm::faults::FaultReport::default();
+    for r in runs {
+        let f = &r.faults;
+        t.timeouts += f.timeouts;
+        t.rate_limits += f.rate_limits;
+        t.transients += f.transients;
+        t.malformed += f.malformed;
+        t.retries += f.retries;
+        t.fallbacks += f.fallbacks;
+        t.forced += f.forced;
+        t.backoff_latency_s += f.backoff_latency_s;
+        t.fault_latency_s += f.fault_latency_s;
+        t.fault_cost_usd += f.fault_cost_usd;
+    }
+    t
+}
+
+/// One-line fault digest for a report footer.
+pub fn fault_line(runs: &[&SearchResult]) -> String {
+    format!(
+        "faults: {} across {} runs",
+        total_faults(runs).summary(),
+        runs.len()
+    )
+}
+
 /// Mean speedup at each curve checkpoint (runs must share checkpoints).
 pub fn mean_curve(runs: &[&SearchResult]) -> Vec<(usize, f64)> {
     let mut acc: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
@@ -156,6 +185,11 @@ mod tests {
             call_counts: vec![("m".into(), 10, 2)],
             eval_cache: CacheStats { hits: 3, misses: 7 },
             lint_rejects: 2,
+            faults: crate::llm::faults::FaultReport {
+                timeouts: 1,
+                retries: 2,
+                ..Default::default()
+            },
             best_schedule: Schedule::initial(Arc::new(gemm::gemm(8, 8, 8))),
         }
     }
@@ -175,6 +209,9 @@ mod tests {
         assert!(cache_line(&runs).contains("30.0% hit rate"));
         assert_eq!(total_lint_rejects(&runs), 4);
         assert!(lint_line(&runs).contains("4 Deny-lint rejections across 2 runs"));
+        let faults = total_faults(&runs);
+        assert_eq!((faults.timeouts, faults.retries), (2, 4));
+        assert!(fault_line(&runs).contains("2 injected") && fault_line(&runs).contains("2 runs"));
     }
 
     #[test]

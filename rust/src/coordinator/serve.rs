@@ -59,6 +59,16 @@ pub struct ServeOpts {
     /// CI self-check: fail hard if a repeated request does not resume a
     /// warm tree with cache hits and a monotone speedup.
     pub expect_warm_on_repeat: bool,
+    /// Per-request deadline in **simulated** seconds (LLM latency +
+    /// measurement time, [`Mcts::simulated_time_s`]): the incremental
+    /// budget is run in chunks and trimmed once the request's simulated
+    /// time crosses the deadline. Simulated time is deterministic, so
+    /// trimming is too. `None` = no deadline.
+    pub deadline_s: Option<f64>,
+    /// Chaos hook: requests for these scenarios panic inside the serve
+    /// path, exercising the degraded-mode response (contained by the
+    /// loop, answered from the persisted incumbent).
+    pub chaos_panic_scenarios: Vec<String>,
 }
 
 impl Default for ServeOpts {
@@ -73,6 +83,8 @@ impl Default for ServeOpts {
             search_threads: 1,
             seed: 7,
             expect_warm_on_repeat: false,
+            deadline_s: None,
+            chaos_panic_scenarios: Vec::new(),
         }
     }
 }
@@ -86,6 +98,11 @@ pub struct ServeSummary {
     pub resumed: usize,
     pub evictions: usize,
     pub errors: usize,
+    /// Requests whose search blew up and were answered degraded (the
+    /// persisted incumbent, `degraded=` marker) instead of erroring.
+    pub degraded: usize,
+    /// Requests whose incremental budget was trimmed by the deadline.
+    pub trimmed: usize,
 }
 
 /// Scenario names contain characters that don't belong in filenames
@@ -114,6 +131,10 @@ pub struct TreeRegistry {
 impl TreeRegistry {
     pub fn new(dir: &str, max_trees: usize) -> Result<TreeRegistry, String> {
         std::fs::create_dir_all(dir).map_err(|e| format!("registry dir {dir}: {e}"))?;
+        // startup hygiene: reclaim temp files stranded by a daemon that
+        // died mid-save (atomic saves rename within the same call, so any
+        // surviving *.tmp.<pid> is an orphan by definition)
+        crate::util::fsx::sweep_orphan_tmp_dir(dir);
         Ok(TreeRegistry {
             dir: dir.to_string(),
             max_trees: max_trees.max(1),
@@ -155,14 +176,27 @@ impl TreeRegistry {
     }
 }
 
+/// One answered request, for the status line.
+struct ServeReply {
+    resumed: bool,
+    samples: usize,
+    speedup: f64,
+    hits: u64,
+    /// Budget cut short by the per-request deadline.
+    trimmed: bool,
+}
+
 /// Answer one request: resume (resident → registry file → cold, in that
-/// order), search `budget_per_request` more samples, persist, park the
-/// tree resident. Returns (resumed, samples, speedup, cache hits).
+/// order), search `budget_per_request` more samples (trimmed by the
+/// deadline, if any), persist, park the tree resident.
 fn serve_one(
     registry: &mut TreeRegistry,
     opts: &ServeOpts,
     scenario: &str,
-) -> Result<(bool, usize, f64, u64), String> {
+) -> Result<ServeReply, String> {
+    if opts.chaos_panic_scenarios.iter().any(|s| s == scenario) {
+        panic!("chaos: injected serve failure for {scenario}");
+    }
     let (mut engine, resumed) = match registry.take(scenario) {
         Some(engine) => (engine, true),
         None => {
@@ -183,17 +217,49 @@ fn serve_one(
     };
     engine.extend_budget(opts.budget_per_request);
     let goal = engine.samples().saturating_add(opts.budget_per_request);
-    engine = if opts.search_threads > 1 {
-        engine.run_parallel_until(opts.search_threads, goal)
-    } else {
-        engine.run_until(goal)
+    let run_to = |engine: Mcts, to: usize| {
+        if opts.search_threads > 1 {
+            engine.run_parallel_until(opts.search_threads, to)
+        } else {
+            engine.run_until(to)
+        }
     };
+    let mut trimmed = false;
+    match opts.deadline_s {
+        None => engine = run_to(engine, goal),
+        Some(deadline) => {
+            // chunked stepping: check the request's simulated-time spend
+            // between chunks, trim the remaining budget once it crosses
+            // the deadline (never mid-chunk, so the tree stays valid at a
+            // between-samples point)
+            let start = engine.simulated_time_s();
+            let chunk = (opts.budget_per_request / 8).max(1);
+            while engine.samples() < goal {
+                if engine.simulated_time_s() - start >= deadline {
+                    trimmed = true;
+                    break;
+                }
+                let next = engine.samples().saturating_add(chunk).min(goal);
+                engine = run_to(engine, next);
+            }
+        }
+    }
     let samples = engine.samples();
     let speedup = engine.best_speedup();
     let hits = engine.eval_cache_stats().hits;
     engine.save_file(&registry.tree_path(scenario))?;
     registry.put(scenario, engine)?;
-    Ok((resumed, samples, speedup, hits))
+    Ok(ServeReply { resumed, samples, speedup, hits, trimmed })
+}
+
+/// Read the persisted incumbent's speedup straight off a snapshot file —
+/// the degraded-mode answer when the live engine blew up (no full
+/// resume: the file may be the only healthy state left).
+fn persisted_speedup(path: &str) -> Option<f64> {
+    let v = crate::util::Json::parse_file(path).ok()?;
+    let best = crate::util::json::json_bits_f64(&v, "best_latency").ok()?;
+    let base = crate::util::json::json_bits_f64(&v, "baseline_latency").ok()?;
+    (best > 0.0).then(|| base / best)
 }
 
 /// The daemon loop: read scenario names off `input` until EOF, answer
@@ -215,16 +281,24 @@ pub fn serve(
             continue;
         }
         summary.requests += 1;
-        match serve_one(&mut registry, opts, scenario) {
-            Ok((resumed, samples, speedup, hits)) => {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_one(&mut registry, opts, scenario)
+        }));
+        match outcome {
+            Ok(Ok(r)) => {
+                let ServeReply { resumed, samples, speedup, hits, trimmed } = r;
                 if resumed {
                     summary.resumed += 1;
+                }
+                if trimmed {
+                    summary.trimmed += 1;
                 }
                 writeln!(
                     out,
                     "serve {scenario}: tree={} samples={samples} speedup={speedup:.3}x \
-                     cache_hits={hits}",
+                     cache_hits={hits}{}",
                     if resumed { "resumed" } else { "cold" },
+                    if trimmed { " deadline=trimmed" } else { "" },
                 )
                 .map_err(|e| format!("serve: stdout: {e}"))?;
                 if opts.expect_warm_on_repeat {
@@ -250,10 +324,31 @@ pub fn serve(
                 }
                 last_speedup.insert(scenario.to_string(), speedup);
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 summary.errors += 1;
                 writeln!(out, "serve {scenario}: error: {e}")
                     .map_err(|e| format!("serve: stdout: {e}"))?;
+            }
+            Err(_) => {
+                // degraded mode: the request's engine blew up mid-search.
+                // The engine (taken out of the resident set before the
+                // search) is gone, but the registry file persisted by the
+                // previous request still holds a valid incumbent — answer
+                // from it instead of erroring.
+                summary.degraded += 1;
+                match persisted_speedup(&registry.tree_path(scenario)) {
+                    Some(speedup) => writeln!(
+                        out,
+                        "serve {scenario}: degraded=engine-panic speedup={speedup:.3}x \
+                         (persisted incumbent)"
+                    ),
+                    None => writeln!(
+                        out,
+                        "serve {scenario}: degraded=engine-panic speedup=unknown \
+                         (no persisted incumbent)"
+                    ),
+                }
+                .map_err(|e| format!("serve: stdout: {e}"))?;
             }
         }
     }
@@ -358,6 +453,78 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("error:"), "{text}");
         assert!(text.contains("tree=cold"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn deadline_trims_incremental_budget_deterministically() {
+        let run = |tag: &str| {
+            let dir = tmp_dir(tag);
+            let opts = ServeOpts {
+                // tiny simulated-time allowance: the first chunk always
+                // exceeds it, so the request trims well short of the
+                // 24-sample budget
+                deadline_s: Some(1e-9),
+                ..quick_opts(&dir)
+            };
+            let mut out = Vec::new();
+            let summary = serve(&opts, Cursor::new("gemm\n"), &mut out).expect("serve loop");
+            let _ = std::fs::remove_dir_all(&dir);
+            (summary, String::from_utf8(out).unwrap())
+        };
+        let (summary, text) = run("deadline_a");
+        assert_eq!(summary.trimmed, 1, "{summary:?}");
+        assert_eq!(summary.errors, 0);
+        assert!(text.contains("deadline=trimmed"), "{text}");
+        // trimmed short of the full budget, but the chunk that did run
+        // is persisted and reported
+        let samples: usize = text
+            .split("samples=")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .unwrap();
+        assert!(samples > 0 && samples < 24, "samples={samples}");
+        // simulated time is deterministic, so trimming is too
+        let (_, text_b) = run("deadline_b");
+        assert_eq!(text, text_b);
+    }
+
+    #[test]
+    fn chaos_panic_is_contained_and_answered_degraded() {
+        let dir = tmp_dir("degraded");
+        let opts = quick_opts(&dir);
+        // a healthy first request persists an incumbent to the registry
+        serve(&opts, Cursor::new("gemm\n"), &mut Vec::new()).expect("healthy serve");
+        let chaos = ServeOpts {
+            chaos_panic_scenarios: vec!["gemm".to_string()],
+            ..opts
+        };
+        let mut out = Vec::new();
+        let summary =
+            serve(&chaos, Cursor::new("gemm\ngemm\n"), &mut out).expect("daemon must survive");
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.degraded, 2, "{summary:?}");
+        assert_eq!(summary.errors, 0);
+        let text = String::from_utf8(out).unwrap();
+        for line in text.lines() {
+            assert!(line.contains("degraded=engine-panic"), "{line}");
+            assert!(line.contains("persisted incumbent"), "{line}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_startup_sweeps_orphaned_tmp_files() {
+        let dir = tmp_dir("sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let orphan = format!("{dir}/x.tree.json.tmp.4242");
+        let keeper = format!("{dir}/x.tree.json");
+        std::fs::write(&orphan, "half-written").unwrap();
+        std::fs::write(&keeper, "{}").unwrap();
+        TreeRegistry::new(&dir, 2).expect("registry");
+        assert!(!std::path::Path::new(&orphan).exists(), "orphan survived startup");
+        assert!(std::path::Path::new(&keeper).exists(), "final file must be untouched");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

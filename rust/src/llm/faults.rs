@@ -1,0 +1,340 @@
+//! Deterministic fault injection for the simulated LLM serving substrate.
+//!
+//! COLT's premise is that the framework absorbs the unreliability of its
+//! small models; a production serving system additionally has to absorb
+//! the unreliability of the *APIs* those models sit behind. [`FaultPlan`]
+//! makes that unreliability injectable and reproducible: per-model rates
+//! for the four failure classes real serving endpoints exhibit —
+//! timeouts, 429 rate limits, transient 5xx errors, and malformed
+//! (unparseable) proposals — drawn from a **dedicated SplitMix64 stream**
+//! that is completely separate from the engine RNG.
+//!
+//! Determinism contract:
+//! * a plan whose rates are all zero performs **no stream draws at all**,
+//!   so every fault-free search is bit-identical to a search with no plan
+//!   installed (locked by `prop_zero_rate_fault_plan_is_bit_identical_…`
+//!   in the property harness and the `chaos_smoke` CI gate);
+//! * with a fixed `(plan, seed)`, faulted runs are bit-deterministic: the
+//!   stream advances exactly once per faulted-model call attempt, and the
+//!   stream state is persisted in tree snapshots so checkpoint/resume
+//!   keeps the fault schedule intact.
+//!
+//! Recovery protocol (implemented by `ModelSet::resolve_call`): each
+//! faulted attempt is charged honestly (see [`FaultKind`] semantics),
+//! retried up to [`FaultPlan::max_retries`] times with exponential
+//! backoff `backoff_base_s * 2^attempt`; on retry exhaustion the call
+//! falls back to the next-larger roster model (dovetailing with the
+//! paper's course-alteration escalation toward the largest model); at the
+//! top of the roster the call proceeds anyway ("forced"), so a search can
+//! degrade but never stall. Everything is tallied in [`FaultReport`].
+
+use crate::util::rng::splitmix64;
+
+/// Simulated latency of one 429 round trip (the server answers fast —
+/// the point of a rate limit is that *no work* was done).
+pub const RATE_LIMIT_LATENCY_S: f64 = 0.05;
+
+/// One injected failure class, with its charging semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The call never answered: charged the plan's full `timeout_s` of
+    /// wall-clock, no tokens, no cost.
+    Timeout,
+    /// HTTP 429: charged [`RATE_LIMIT_LATENCY_S`], no cost.
+    RateLimit,
+    /// Transient 5xx: charged the model's base round-trip latency, no
+    /// cost.
+    Transient,
+    /// The call "succeeded" but returned an unparseable proposal: charged
+    /// the **full** call latency, tokens, and USD cost — paid freight for
+    /// unusable output.
+    Malformed,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Timeout => "timeout",
+            FaultKind::RateLimit => "rate_limit",
+            FaultKind::Transient => "transient",
+            FaultKind::Malformed => "malformed",
+        }
+    }
+}
+
+/// Per-model injection rates: the probability of each fault class per
+/// call *attempt* (retries re-draw).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultRates {
+    pub timeout: f64,
+    pub rate_limit: f64,
+    pub transient: f64,
+    pub malformed: f64,
+}
+
+impl FaultRates {
+    /// Same rate for every fault class.
+    pub fn uniform(rate: f64) -> FaultRates {
+        FaultRates {
+            timeout: rate,
+            rate_limit: rate,
+            transient: rate,
+            malformed: rate,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.timeout == 0.0
+            && self.rate_limit == 0.0
+            && self.transient == 0.0
+            && self.malformed == 0.0
+    }
+}
+
+/// A seeded, per-model fault schedule. See the module docs for the
+/// determinism contract and the recovery protocol built around it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// `rates[i]` applies to roster model `i`; missing trailing entries
+    /// mean zero rates for those models.
+    pub rates: Vec<FaultRates>,
+    /// Dedicated SplitMix64 stream state — advanced exactly once per
+    /// call attempt on a nonzero-rate model, never by anything else.
+    pub stream: u64,
+    /// Retries per model after the first failed attempt (so a model gets
+    /// `max_retries + 1` attempts before the call escalates).
+    pub max_retries: usize,
+    /// Backoff before retry `k` (0-based): `backoff_base_s * 2^k`,
+    /// charged into the model's `total_latency_s`.
+    pub backoff_base_s: f64,
+    /// Simulated wall-clock cost of one timed-out attempt.
+    pub timeout_s: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The zero plan: no rates, no draws, bit-identical passthrough.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            rates: Vec::new(),
+            stream: 0,
+            max_retries: 2,
+            backoff_base_s: 0.5,
+            timeout_s: 30.0,
+        }
+    }
+
+    /// The same rates for all `n_models` roster models, streamed from
+    /// `seed` (the usual chaos-test construction).
+    pub fn uniform(n_models: usize, rates: FaultRates, seed: u64) -> FaultPlan {
+        FaultPlan {
+            rates: vec![rates; n_models],
+            stream: seed,
+            ..FaultPlan::none()
+        }
+    }
+
+    /// True iff this plan can never fire (and therefore never draws).
+    pub fn is_zero(&self) -> bool {
+        self.rates.iter().all(FaultRates::is_zero)
+    }
+
+    pub fn rates_for(&self, model: usize) -> FaultRates {
+        self.rates.get(model).copied().unwrap_or_default()
+    }
+
+    /// Decide one call attempt on `model`: `None` = the attempt succeeds.
+    /// Models with all-zero rates return `None` **without advancing the
+    /// stream**, so installing rates for one model leaves every other
+    /// model's schedule untouched.
+    pub fn draw(&mut self, model: usize) -> Option<FaultKind> {
+        let r = self.rates_for(model);
+        if r.is_zero() {
+            return None;
+        }
+        let u = unit(&mut self.stream);
+        let mut acc = r.timeout;
+        if u < acc {
+            return Some(FaultKind::Timeout);
+        }
+        acc += r.rate_limit;
+        if u < acc {
+            return Some(FaultKind::RateLimit);
+        }
+        acc += r.transient;
+        if u < acc {
+            return Some(FaultKind::Transient);
+        }
+        acc += r.malformed;
+        if u < acc {
+            return Some(FaultKind::Malformed);
+        }
+        None
+    }
+}
+
+/// Uniform `[0,1)` from a SplitMix64 stream — the same 53-high-bit recipe
+/// as `Rng::f64`, so rates behave identically across both RNG layers.
+pub fn unit(state: &mut u64) -> f64 {
+    (splitmix64(state) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Aggregate tally of everything the resilient call path did — surfaced
+/// in `SearchResult::faults`, report lines, and tree snapshots, and
+/// grid-summed across fleet lanes by the tree merge.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultReport {
+    pub timeouts: usize,
+    pub rate_limits: usize,
+    pub transients: usize,
+    pub malformed: usize,
+    /// Backoff-then-retry events (each charged `backoff_base_s * 2^k`).
+    pub retries: usize,
+    /// Retry-exhaustion escalations to the next-larger roster model.
+    pub fallbacks: usize,
+    /// Calls that exhausted retries at the top of the roster and
+    /// proceeded anyway (the no-stall guarantee).
+    pub forced: usize,
+    /// Total backoff wall-clock charged into `total_latency_s`.
+    pub backoff_latency_s: f64,
+    /// Total latency of the faulted attempts themselves.
+    pub fault_latency_s: f64,
+    /// USD paid for malformed (completed-but-unusable) attempts.
+    pub fault_cost_usd: f64,
+}
+
+impl FaultReport {
+    /// Total faults injected across all classes.
+    pub fn injected(&self) -> usize {
+        self.timeouts + self.rate_limits + self.transients + self.malformed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == FaultReport::default()
+    }
+
+    pub fn record(&mut self, kind: FaultKind) {
+        match kind {
+            FaultKind::Timeout => self.timeouts += 1,
+            FaultKind::RateLimit => self.rate_limits += 1,
+            FaultKind::Transient => self.transients += 1,
+            FaultKind::Malformed => self.malformed += 1,
+        }
+    }
+
+    /// One-line human summary (CLI + report emitters).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} injected ({} timeout, {} rate-limit, {} transient, {} malformed), \
+             {} retries, {} fallbacks, {} forced, {:.2}s backoff, {:.2}s fault latency, \
+             ${:.4} fault cost",
+            self.injected(),
+            self.timeouts,
+            self.rate_limits,
+            self.transients,
+            self.malformed,
+            self.retries,
+            self.fallbacks,
+            self.forced,
+            self.backoff_latency_s,
+            self.fault_latency_s,
+            self.fault_cost_usd,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_plan_never_draws() {
+        let mut p = FaultPlan::none();
+        assert!(p.is_zero());
+        let before = p.stream;
+        for m in 0..8 {
+            assert_eq!(p.draw(m), None);
+        }
+        assert_eq!(p.stream, before, "zero plan advanced its stream");
+        // zero rates installed explicitly behave the same
+        let mut p = FaultPlan::uniform(4, FaultRates::default(), 123);
+        assert!(p.is_zero());
+        for m in 0..4 {
+            assert_eq!(p.draw(m), None);
+        }
+        assert_eq!(p.stream, 123);
+    }
+
+    #[test]
+    fn zero_rate_models_do_not_perturb_others() {
+        // model 1 has rates, model 0 does not: interleaving calls to
+        // model 0 must not shift model 1's fault schedule
+        let mk = || FaultPlan {
+            rates: vec![FaultRates::default(), FaultRates::uniform(0.25)],
+            stream: 7,
+            ..FaultPlan::none()
+        };
+        let mut a = mk();
+        let seq_a: Vec<_> = (0..64).map(|_| a.draw(1)).collect();
+        let mut b = mk();
+        let seq_b: Vec<_> = (0..64)
+            .map(|_| {
+                assert_eq!(b.draw(0), None);
+                b.draw(1)
+            })
+            .collect();
+        assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn draw_is_deterministic_and_rate_faithful() {
+        let rates = FaultRates {
+            timeout: 0.1,
+            rate_limit: 0.1,
+            transient: 0.1,
+            malformed: 0.1,
+        };
+        let mut p = FaultPlan::uniform(1, rates, 42);
+        let seq: Vec<_> = (0..10_000).map(|_| p.draw(0)).collect();
+        let mut q = FaultPlan::uniform(1, rates, 42);
+        let again: Vec<_> = (0..10_000).map(|_| q.draw(0)).collect();
+        assert_eq!(seq, again, "same seed, same schedule");
+        let faults = seq.iter().filter(|f| f.is_some()).count();
+        // total rate 0.4: the empirical frequency lands near it
+        assert!(
+            (3500..4500).contains(&faults),
+            "empirical fault count {faults} wildly off 0.4 rate"
+        );
+        // every kind shows up under equal per-kind rates
+        for kind in [
+            FaultKind::Timeout,
+            FaultKind::RateLimit,
+            FaultKind::Transient,
+            FaultKind::Malformed,
+        ] {
+            assert!(
+                seq.iter().any(|f| *f == Some(kind)),
+                "{} never drawn",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn report_counts_and_summary() {
+        let mut r = FaultReport::default();
+        assert!(r.is_empty());
+        r.record(FaultKind::Timeout);
+        r.record(FaultKind::Malformed);
+        r.retries = 3;
+        assert_eq!(r.injected(), 2);
+        assert!(!r.is_empty());
+        let s = r.summary();
+        assert!(s.contains("2 injected") && s.contains("1 timeout") && s.contains("3 retries"));
+    }
+}

@@ -11,11 +11,13 @@
 //! single model — the diversity mechanism the paper's scaling results
 //! attribute the 8-LLM gains to.
 
+pub mod faults;
 pub mod registry;
 pub mod prompts;
 
 use crate::schedule::transforms::TransformKind;
 use crate::util::Rng;
+use faults::{FaultKind, FaultPlan, FaultReport};
 use prompts::{count_tokens, PromptCtx};
 use registry::ModelSpec;
 
@@ -89,6 +91,11 @@ pub struct ModelSet {
     pub stats: Vec<ModelStats>,
     /// Index of the largest model (course-alteration target).
     pub largest: usize,
+    /// Injected fault schedule (see [`faults`]); the default zero plan
+    /// never draws and leaves every call path bit-identical.
+    pub faults: FaultPlan,
+    /// Tally of everything the resilient call path absorbed.
+    pub fault_report: FaultReport,
     /// Per-model, per-transform affinity weights (idiosyncrasy).
     affinity: Vec<Vec<f64>>,
 }
@@ -123,8 +130,16 @@ impl ModelSet {
             specs,
             stats,
             largest,
+            faults: FaultPlan::none(),
+            fault_report: FaultReport::default(),
             affinity,
         }
+    }
+
+    /// Install a fault schedule (see [`faults::FaultPlan`]). A zero-rate
+    /// plan is a bit-identical passthrough.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = plan;
     }
 
     pub fn len(&self) -> usize {
@@ -200,6 +215,110 @@ impl ModelSet {
             CallKind::Regular => self.stats[model].regular_hits += 1,
             CallKind::CourseAlteration => self.stats[model].ca_hits += 1,
         }
+    }
+
+    /// The fallback-escalation target: the roster model with the smallest
+    /// parameter count strictly greater than `model`'s (first roster
+    /// index on ties, so escalation is deterministic).
+    pub fn next_larger(&self, model: usize) -> Option<usize> {
+        let here = self.specs[model].params_b;
+        self.specs
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.params_b > here)
+            .min_by(|a, b| a.1.params_b.total_cmp(&b.1.params_b))
+            .map(|(i, _)| i)
+    }
+
+    /// The resilient call path (see [`faults`] module docs): decide which
+    /// model actually serves this call, charging every faulted attempt,
+    /// backoff, and escalation on the way. Runs **before** the call's
+    /// candidate deliberation and draws only from the plan's dedicated
+    /// stream — a zero plan returns `model` untouched without a single
+    /// draw, keeping fault-free runs bit-identical.
+    fn resolve_call(
+        &mut self,
+        mut model: usize,
+        ctx: &PromptCtx,
+        kind: CallKind,
+        banned: &[TransformKind],
+    ) -> usize {
+        if self.faults.is_zero() {
+            return model;
+        }
+        loop {
+            for attempt in 0..=self.faults.max_retries {
+                let Some(fault) = self.faults.draw(model) else {
+                    return model; // this attempt succeeds
+                };
+                self.charge_fault(model, fault, ctx, kind, banned);
+                if attempt < self.faults.max_retries {
+                    let backoff = self.faults.backoff_base_s * (1u64 << attempt) as f64;
+                    self.stats[model].total_latency_s += backoff;
+                    self.fault_report.retries += 1;
+                    self.fault_report.backoff_latency_s += backoff;
+                }
+            }
+            // retries exhausted on this model: escalate toward the top of
+            // the roster (the same direction course-alteration takes)
+            match self.next_larger(model) {
+                Some(next) => {
+                    self.fault_report.fallbacks += 1;
+                    model = next;
+                }
+                None => {
+                    // top of the roster: proceed with the call anyway —
+                    // a search can degrade but never stall
+                    self.fault_report.forced += 1;
+                    return model;
+                }
+            }
+        }
+    }
+
+    /// Charge one faulted attempt per [`FaultKind`] semantics: every
+    /// fault counts as a model error; timeouts/rate-limits/transients
+    /// cost wall-clock only, malformed proposals pay full call freight
+    /// (latency, tokens, and USD) for output the engine had to discard.
+    fn charge_fault(
+        &mut self,
+        model: usize,
+        fault: FaultKind,
+        ctx: &PromptCtx,
+        kind: CallKind,
+        banned: &[TransformKind],
+    ) {
+        self.stats[model].errors += 1;
+        self.fault_report.record(fault);
+        let spec = self.specs[model].clone();
+        let (lat, cost) = match fault {
+            FaultKind::Timeout => (self.faults.timeout_s, 0.0),
+            FaultKind::RateLimit => (faults::RATE_LIMIT_LATENCY_S, 0.0),
+            FaultKind::Transient => (spec.base_latency_s, 0.0),
+            FaultKind::Malformed => {
+                let prompt_text = match kind {
+                    CallKind::Regular => prompts::regular_prompt(ctx),
+                    CallKind::CourseAlteration => prompts::course_alteration_prompt(
+                        ctx,
+                        "small-model",
+                        banned,
+                        spec.name,
+                        0.0,
+                    ),
+                };
+                let tin = count_tokens(&prompt_text);
+                let out = 30.0 + 60.0 * spec.capability;
+                let st = &mut self.stats[model];
+                st.tokens_in += tin;
+                st.tokens_out += out;
+                (spec.call_latency(tin, out), spec.call_cost(tin, out))
+            }
+        };
+        let st = &mut self.stats[model];
+        st.total_latency_s += lat;
+        st.total_cost_usd += cost;
+        self.fault_report.fault_latency_s += lat;
+        self.fault_report.fault_cost_usd += cost;
     }
 
     /// The vocabulary a call actually samples from: `banned` removed,
@@ -354,6 +473,9 @@ impl ModelSet {
         score_candidates: &mut dyn FnMut(&[TransformKind]) -> f64,
         rng: &mut Rng,
     ) -> (Proposal, CallRecord) {
+        // the resilient pre-call loop may escalate to a larger model; the
+        // returned CallRecord's `model` names whoever actually served
+        let model = self.resolve_call(model, ctx, kind, banned);
         let vocab = Self::effective_vocab(&ctx.vocabulary, banned);
 
         // --- transformation sequence: capability-scaled lookahead -------
@@ -416,6 +538,10 @@ impl ModelSet {
         scored: Vec<(Vec<TransformKind>, f64)>,
         rng: &mut Rng,
     ) -> (Proposal, CallRecord) {
+        // same resilient pre-call loop as `propose`; on escalation the
+        // larger model adjudicates the candidates the original (faulted)
+        // model drew — its judgment noise and routing, its bill
+        let model = self.resolve_call(model, ctx, kind, banned);
         let vocab = Self::effective_vocab(&ctx.vocabulary, banned);
         let noise_sigma = self.noise_sigma(model);
         let mut best_seq: Vec<TransformKind> = Vec::new();
@@ -630,6 +756,268 @@ mod tests {
         assert!(rec.cost_usd > 0.0 && rec.latency_s > 0.0);
         assert_eq!(set.stats[largest].regular_calls, 1);
         assert!(set.total_cost_usd() > 0.0);
+    }
+
+    // ---------------------------------------------------- fault injection
+
+    const ALL_FAULT_KINDS: [FaultKind; 4] = [
+        FaultKind::Timeout,
+        FaultKind::RateLimit,
+        FaultKind::Transient,
+        FaultKind::Malformed,
+    ];
+
+    /// Rates that can only ever produce `kind`.
+    fn rates_only(kind: FaultKind, rate: f64) -> faults::FaultRates {
+        let mut r = faults::FaultRates::default();
+        match kind {
+            FaultKind::Timeout => r.timeout = rate,
+            FaultKind::RateLimit => r.rate_limit = rate,
+            FaultKind::Transient => r.transient = rate,
+            FaultKind::Malformed => r.malformed = rate,
+        }
+        r
+    }
+
+    /// Find a stream seed whose first draws fault exactly per `pattern`
+    /// at the given rate — deterministic, no test-only injection hooks:
+    /// the real stream is simply seeded to produce the wanted schedule.
+    fn seed_with_pattern(rate: f64, pattern: &[bool]) -> u64 {
+        'seed: for seed in 0..100_000u64 {
+            let mut s = seed;
+            for &want in pattern {
+                if (faults::unit(&mut s) < rate) != want {
+                    continue 'seed;
+                }
+            }
+            return seed;
+        }
+        panic!("no seed produces pattern {pattern:?} at rate {rate}");
+    }
+
+    /// The exact (latency, cost) one faulted attempt charges, per the
+    /// [`FaultKind`] semantics table.
+    fn fault_charge(
+        set: &ModelSet,
+        plan: &FaultPlan,
+        model: usize,
+        kind: FaultKind,
+        c: &PromptCtx,
+    ) -> (f64, f64) {
+        let spec = &set.specs[model];
+        match kind {
+            FaultKind::Timeout => (plan.timeout_s, 0.0),
+            FaultKind::RateLimit => (faults::RATE_LIMIT_LATENCY_S, 0.0),
+            FaultKind::Transient => (spec.base_latency_s, 0.0),
+            FaultKind::Malformed => {
+                let tin = count_tokens(&prompts::regular_prompt(c));
+                let out = 30.0 + 60.0 * spec.capability;
+                (spec.call_latency(tin, out), spec.call_cost(tin, out))
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_zero_rate_plan_is_bit_identical_passthrough() {
+        // same seed, one set with no plan, one with an all-zero plan
+        // installed: identical proposal, record, and accounting bits
+        let mut plain = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let mut zeroed = ModelSet::new(paper_config(2, "gpt-5.2"));
+        zeroed.set_fault_plan(FaultPlan::uniform(2, faults::FaultRates::default(), 99));
+        let c = ctx(&plain);
+        for call in 0..20 {
+            let mut ra = Rng::new(call);
+            let mut rb = Rng::new(call);
+            let (pa, ca) = plain.propose(1, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut ra);
+            let (pb, cb) = zeroed.propose(1, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rb);
+            assert_eq!(pa.transforms, pb.transforms);
+            assert_eq!(pa.next_model, pb.next_model);
+            assert_eq!(ca.latency_s.to_bits(), cb.latency_s.to_bits());
+            assert_eq!(ca.cost_usd.to_bits(), cb.cost_usd.to_bits());
+            assert_eq!(ra.state(), rb.state(), "engine RNG perturbed");
+        }
+        assert!(zeroed.fault_report.is_empty());
+        for (a, b) in plain.stats.iter().zip(&zeroed.stats) {
+            assert_eq!(a.total_latency_s.to_bits(), b.total_latency_s.to_bits());
+            assert_eq!(a.total_cost_usd.to_bits(), b.total_cost_usd.to_bits());
+            assert_eq!(a.errors, b.errors);
+        }
+    }
+
+    #[test]
+    fn fault_matrix_retry_success_exact_accounting() {
+        // each kind: fault once on the small model, succeed on retry 1 —
+        // charged exactly one fault + one backoff on top of the clean call
+        for kind in ALL_FAULT_KINDS {
+            let rate = 0.5;
+            let stream = seed_with_pattern(rate, &[true, false]);
+            let mut base = ModelSet::new(paper_config(2, "gpt-5.2"));
+            let c = ctx(&base);
+            let mut rng = Rng::new(11);
+            let (_, base_rec) = base.propose(1, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+
+            let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+            let mut plan = FaultPlan::none();
+            plan.rates = vec![faults::FaultRates::default(), rates_only(kind, rate)];
+            plan.stream = stream;
+            let (flat, fcost) = fault_charge(&set, &plan, 1, kind, &c);
+            set.set_fault_plan(plan);
+            let mut rng = Rng::new(11);
+            let (_, rec) = set.propose(1, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+
+            assert_eq!(rec.model, 1, "{}: no escalation on retry success", kind.name());
+            assert_eq!(set.stats[1].errors, base.stats[1].errors + 1);
+            assert_eq!(set.stats[1].regular_calls, 1, "faults must not count as calls");
+            let r = &set.fault_report;
+            assert_eq!((r.injected(), r.retries, r.fallbacks, r.forced), (1, 1, 0, 0));
+            // exact accounting, accumulated in the call path's order:
+            // fault, backoff(2^0), then the clean call
+            let mut want_lat = flat;
+            want_lat += set.faults.backoff_base_s;
+            want_lat += base_rec.latency_s;
+            assert_eq!(
+                set.stats[1].total_latency_s.to_bits(),
+                want_lat.to_bits(),
+                "{}: latency misaccounted",
+                kind.name()
+            );
+            let mut want_cost = fcost;
+            want_cost += base_rec.cost_usd;
+            assert_eq!(
+                set.stats[1].total_cost_usd.to_bits(),
+                want_cost.to_bits(),
+                "{}: cost misaccounted",
+                kind.name()
+            );
+            assert_eq!(r.backoff_latency_s.to_bits(), set.faults.backoff_base_s.to_bits());
+            assert_eq!(r.fault_latency_s.to_bits(), flat.to_bits());
+            assert_eq!(r.fault_cost_usd.to_bits(), fcost.to_bits());
+        }
+    }
+
+    #[test]
+    fn fault_matrix_fallback_escalation_exact_accounting() {
+        // each kind: the small model always faults → 3 attempts + 2
+        // backoffs charged to it, then the call escalates to the larger
+        // model, which serves it cleanly
+        for kind in ALL_FAULT_KINDS {
+            let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+            let c = ctx(&set);
+            let mut plan = FaultPlan::none();
+            plan.rates = vec![faults::FaultRates::default(), rates_only(kind, 1.0)];
+            plan.stream = 7;
+            let (flat, fcost) = fault_charge(&set, &plan, 1, kind, &c);
+            let backoff_base = plan.backoff_base_s;
+            set.set_fault_plan(plan);
+            let mut rng = Rng::new(13);
+            let (_, rec) = set.propose(1, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+
+            assert_eq!(rec.model, 0, "{}: must escalate to the largest", kind.name());
+            assert_eq!(set.stats[0].regular_calls, 1);
+            assert_eq!(set.stats[1].regular_calls, 0);
+            assert_eq!(set.stats[1].errors, 3);
+            let r = &set.fault_report;
+            assert_eq!((r.injected(), r.retries, r.fallbacks, r.forced), (3, 2, 1, 0));
+            // fault, backoff(2^0), fault, backoff(2^1), fault — all on
+            // the small model; the clean call lands on the big one
+            let mut want_lat = flat;
+            want_lat += backoff_base;
+            want_lat += flat;
+            want_lat += backoff_base * 2.0;
+            want_lat += flat;
+            assert_eq!(
+                set.stats[1].total_latency_s.to_bits(),
+                want_lat.to_bits(),
+                "{}: faulted-model latency misaccounted",
+                kind.name()
+            );
+            let mut want_cost = fcost;
+            want_cost += fcost;
+            want_cost += fcost;
+            assert_eq!(set.stats[1].total_cost_usd.to_bits(), want_cost.to_bits());
+            assert_eq!(set.stats[0].total_latency_s.to_bits(), rec.latency_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn fault_matrix_retry_exhaustion_at_largest_is_forced_not_stalled() {
+        // each kind: the largest model always faults → retries exhaust
+        // with nowhere to escalate; the call proceeds anyway ("forced")
+        for kind in ALL_FAULT_KINDS {
+            let mut base = ModelSet::new(paper_config(2, "gpt-5.2"));
+            let c = ctx(&base);
+            let mut rng = Rng::new(17);
+            let (_, base_rec) = base.propose(0, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+
+            let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+            let mut plan = FaultPlan::none();
+            plan.rates = vec![rates_only(kind, 1.0)];
+            plan.stream = 21;
+            let (flat, fcost) = fault_charge(&set, &plan, 0, kind, &c);
+            let backoff_base = plan.backoff_base_s;
+            set.set_fault_plan(plan);
+            let mut rng = Rng::new(17);
+            let (_, rec) = set.propose(0, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+
+            assert_eq!(rec.model, 0);
+            assert_eq!(set.stats[0].regular_calls, 1);
+            assert_eq!(set.stats[0].errors, base.stats[0].errors + 3);
+            let r = &set.fault_report;
+            assert_eq!((r.injected(), r.retries, r.fallbacks, r.forced), (3, 2, 0, 1));
+            // fault, backoff(2^0), fault, backoff(2^1), fault, clean call
+            let mut want_lat = flat;
+            want_lat += backoff_base;
+            want_lat += flat;
+            want_lat += backoff_base * 2.0;
+            want_lat += flat;
+            want_lat += base_rec.latency_s;
+            assert_eq!(
+                set.stats[0].total_latency_s.to_bits(),
+                want_lat.to_bits(),
+                "{}: forced-path latency misaccounted",
+                kind.name()
+            );
+            let mut want_cost = fcost;
+            want_cost += fcost;
+            want_cost += fcost;
+            want_cost += base_rec.cost_usd;
+            assert_eq!(set.stats[0].total_cost_usd.to_bits(), want_cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn faulted_propose_scored_escalates_too() {
+        // the split (tree-parallel) call path runs the same resilient
+        // loop: candidates drawn by the small model, adjudicated and
+        // billed by the escalation target after exhaustion
+        let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let c = ctx(&set);
+        let mut plan = FaultPlan::none();
+        plan.rates = vec![faults::FaultRates::default(), rates_only(FaultKind::Transient, 1.0)];
+        plan.stream = 3;
+        set.set_fault_plan(plan);
+        let mut rng = Rng::new(23);
+        let cands = set.draw_candidates(1, &c.vocabulary, CallKind::Regular, &[], &mut rng);
+        let scored: Vec<(Vec<TransformKind>, f64)> =
+            cands.into_iter().map(|s| (s, 0.5)).collect();
+        let (_, rec) = set.propose_scored(1, &c, CallKind::Regular, &[], scored, &mut rng);
+        assert_eq!(rec.model, 0, "split path must escalate like the fused path");
+        assert_eq!(set.stats[0].regular_calls, 1);
+        assert_eq!(set.fault_report.fallbacks, 1);
+        assert_eq!(set.stats[1].errors, 3);
+    }
+
+    #[test]
+    fn fault_errors_surface_in_stat_lines() {
+        let mut set = ModelSet::new(paper_config(2, "gpt-5.2"));
+        let c = ctx(&set);
+        let mut plan = FaultPlan::none();
+        plan.rates = vec![faults::FaultRates::default(), rates_only(FaultKind::RateLimit, 1.0)];
+        set.set_fault_plan(plan);
+        let mut rng = Rng::new(29);
+        set.propose(1, &c, CallKind::Regular, &[], &mut |_| 0.5, &mut rng);
+        let lines = set.stat_lines();
+        assert_eq!(lines[1].errors, 3, "fault errors must reach the prompt stats");
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //!   serve    --registry-dir DIR [--max-trees K] [--budget-per-request N]
 //!            [--llms N] [--largest M] [--target cpu|gpu]
 //!            [--search-threads S] [--seed S] [--expect-warm-on-repeat]
+//!            [--deadline SECS]
 //!            resident daemon: read scenario names from stdin (one per
 //!            line), resume each scenario's persisted MCTS tree from the
 //!            registry (cold on first request), run N more samples,
@@ -34,7 +35,11 @@
 //!            Up to K trees stay resident (LRU; eviction persists
 //!            first). --expect-warm-on-repeat exits nonzero unless every
 //!            repeated request resumes warm with cache hits and a
-//!            monotone speedup (the CI smoke contract).
+//!            monotone speedup (the CI smoke contract). --deadline SECS
+//!            caps each request's simulated compile time: the sampling
+//!            budget is trimmed deterministically once the engine's
+//!            simulated clock exceeds the deadline, and trimmed replies
+//!            carry a `deadline=trimmed` marker.
 //!   models   (print the LLM catalog)
 //!   workloads (print the benchmark registry)
 //!   runtime  --artifact <name>  (load + execute an AOT artifact via PJRT)
@@ -171,6 +176,8 @@ fn cmd_search_lanes(args: &Args, target: Target, scenario: &str) -> litecoop::Re
         registry_dir: args.flag("registry-dir").map(str::to_string),
         cache_file: args.flag("cache-file").map(str::to_string),
         keep_lane_files: args.has("keep-lane-files"),
+        fail_lanes: Vec::new(),
+        flaky_lanes: Vec::new(),
     };
     println!(
         "LiteCoOp fleet: {scenario} on {:?}, {} lanes x {} LLMs, total budget {} (split across lanes)",
@@ -258,6 +265,8 @@ fn cmd_serve(args: &Args) -> litecoop::Result<()> {
         search_threads: args.usize_or("search-threads", 1).max(1),
         seed: args.u64_or("seed", 7),
         expect_warm_on_repeat: args.has("expect-warm-on-repeat"),
+        deadline_s: args.flag("deadline").and_then(|s| s.parse().ok()),
+        chaos_panic_scenarios: Vec::new(),
     };
     eprintln!(
         "litecoop serve: registry {} (max {} resident trees), {} samples/request, {} LLMs; \
@@ -268,8 +277,13 @@ fn cmd_serve(args: &Args) -> litecoop::Result<()> {
     let summary = serve(&opts, stdin.lock(), std::io::stdout().lock())
         .map_err(|e| litecoop::err!("{e}"))?;
     eprintln!(
-        "serve: {} requests ({} resumed, {} errors), {} evictions",
-        summary.requests, summary.resumed, summary.errors, summary.evictions
+        "serve: {} requests ({} resumed, {} errors, {} degraded, {} deadline-trimmed), {} evictions",
+        summary.requests,
+        summary.resumed,
+        summary.errors,
+        summary.degraded,
+        summary.trimmed,
+        summary.evictions
     );
     Ok(())
 }

@@ -416,8 +416,12 @@ impl EvalCache {
         std::fs::rename(&tmp, path).map_err(|e| format!("{path}: {e}"))
     }
 
-    /// Load a cache saved by [`EvalCache::save_file`].
+    /// Load a cache saved by [`EvalCache::save_file`]. Also sweeps any
+    /// orphaned `<path>.tmp.<pid>` siblings a crashed writer left behind
+    /// (warned per file on stderr) — the load is the natural hygiene
+    /// point, since it runs once per process before any save.
     pub fn load_file(path: &str) -> Result<EvalCache, String> {
+        crate::util::fsx::sweep_orphan_tmp(path);
         EvalCache::from_json(&Json::parse_file(path)?)
     }
 
@@ -426,6 +430,9 @@ impl EvalCache {
     /// truncated, or unreadable file degrades to a cold cache with a
     /// warning on stderr. Never panics, never aborts the run.
     pub fn load_file_or_cold(path: &str) -> EvalCache {
+        // hygiene even on cold starts: a crashed writer may have left a
+        // temp file without ever completing a final one
+        crate::util::fsx::sweep_orphan_tmp(path);
         if !std::path::Path::new(path).exists() {
             return EvalCache::default();
         }

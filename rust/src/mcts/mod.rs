@@ -17,6 +17,7 @@ pub mod treemerge;
 pub mod treestore;
 
 use crate::costmodel::CostModel;
+use crate::llm::faults::FaultReport;
 use crate::llm::prompts::{PromptCtx, VariantCtx};
 use crate::llm::{CallKind, ModelSet};
 use crate::runtime::driver::WorkerPool;
@@ -179,6 +180,12 @@ pub struct SearchResult {
     /// never saw. Deterministic per (config, seed): every `apply` of a
     /// search runs on its coordinator thread.
     pub lint_rejects: u64,
+    /// Everything the resilient model-call path absorbed (see
+    /// [`crate::llm::faults`]): injected fault counts per kind, retries,
+    /// fallback escalations, forced calls, and their honest latency/cost
+    /// charges. Empty unless a nonzero [`crate::llm::faults::FaultPlan`]
+    /// was installed on the model set.
+    pub faults: FaultReport,
     pub best_schedule: Schedule,
 }
 
@@ -450,6 +457,15 @@ impl<E> Mcts<E> {
     /// Best measured speedup so far (baseline / incumbent latency).
     pub fn best_speedup(&self) -> f64 {
         self.baseline_latency / self.best_latency
+    }
+
+    /// Cumulative simulated wall-clock so far: serial LLM latency
+    /// (including fault retries and backoff) plus measurement time —
+    /// the running form of `SearchResult::compile_time_s`. Deterministic
+    /// for a fixed seed, which is what makes the serve loop's
+    /// per-request deadline check deterministic too.
+    pub fn simulated_time_s(&self) -> f64 {
+        self.models.total_latency_s() + self.measure_time_s
     }
 
     /// The incumbent (best measured) schedule.
@@ -751,9 +767,13 @@ impl<E: Evaluator> Mcts<E> {
                 Err(_) => 0.0,
             }
         };
-        let (proposal, _rec) =
+        let (proposal, rec) =
             self.models
                 .propose(active, &ctx, CallKind::Regular, &[], &mut score_fn, &mut self.rng);
+        // fault-path escalation may have handed the call to a larger
+        // model; credit hits and provenance to whoever actually served
+        // (identical to `active` whenever no fault plan is installed)
+        let served = rec.model;
         self.n_errors += proposal.n_errors;
 
         let child_sched = match apply_sequence(
@@ -770,9 +790,9 @@ impl<E: Evaluator> Mcts<E> {
         let parent_score = self.nodes[leaf].predicted_score;
         let parent_chain = self.nodes[leaf].regression_chain;
         let (regressed, chain, trigger_ca) =
-            self.regression_outcome(active, child_score, parent_score, parent_chain);
+            self.regression_outcome(served, child_score, parent_score, parent_chain);
         if !regressed {
-            self.models.credit_hit(active, CallKind::Regular);
+            self.models.credit_hit(served, CallKind::Regular);
         }
 
         // ---- course alteration ------------------------------------------
@@ -801,7 +821,7 @@ impl<E: Evaluator> Mcts<E> {
                 sched: child_sched,
                 score: child_score,
                 llm: next_llm,
-                expanded_by: Some((active, CallKind::Regular)),
+                expanded_by: Some((served, CallKind::Regular)),
                 chain,
             })
         }
@@ -1024,6 +1044,7 @@ impl<E: Evaluator> Mcts<E> {
             // checkpointed search across process boundaries
             lint_rejects: self.lint_rejects_base
                 + crate::analysis::lint_rejects().saturating_sub(self.lint_rejects_at_start),
+            faults: self.models.fault_report.clone(),
             best_schedule: (*self.best_schedule).clone(),
         };
         (result, self.eval)
@@ -1404,9 +1425,11 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
         let ctx = self.prompt_ctx(leaf);
         let active = self.nodes[leaf].llm;
         let parent_sched = Arc::clone(&self.nodes[leaf].schedule);
-        let (proposal, _rec) =
+        let (proposal, rec) =
             self.models
                 .propose_scored(active, &ctx, CallKind::Regular, &[], scored, &mut rng);
+        // see `expand`: attribute the call to whoever actually served it
+        let served = rec.model;
         self.n_errors += proposal.n_errors;
         let child_sched =
             match apply_sequence(parent_sched.as_ref(), &proposal.transforms, &mut rng, gpu) {
@@ -1422,9 +1445,9 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
         let parent_score = self.nodes[leaf].predicted_score;
         let parent_chain = self.nodes[leaf].regression_chain;
         let (regressed, chain, trigger_ca) =
-            self.regression_outcome(active, child_score, parent_score, parent_chain);
+            self.regression_outcome(served, child_score, parent_score, parent_chain);
         if !regressed {
-            self.models.credit_hit(active, CallKind::Regular);
+            self.models.credit_hit(served, CallKind::Regular);
         }
 
         let exp = if trigger_ca {
@@ -1454,7 +1477,7 @@ impl<'s> Mcts<SharedCachedEvaluator<'s>> {
                 sched: child_sched,
                 score: child_score,
                 llm: next_llm,
-                expanded_by: Some((active, CallKind::Regular)),
+                expanded_by: Some((served, CallKind::Regular)),
                 chain,
             }
         };
@@ -1720,6 +1743,7 @@ mod tests {
         assert_eq!(a.call_counts, b.call_counts);
         assert_eq!(a.eval_cache, b.eval_cache);
         assert_eq!(a.lint_rejects, b.lint_rejects);
+        assert_eq!(a.faults, b.faults);
         assert_eq!(
             a.best_schedule.trace.running_hash(),
             b.best_schedule.trace.running_hash()

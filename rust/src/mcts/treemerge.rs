@@ -407,6 +407,26 @@ pub fn merge_engines(mut lanes: Vec<Mcts>) -> Result<Mcts, String> {
         models.stats[m] = st;
     }
 
+    // fault accounting: counters summed, f64 charges grid-summed, in
+    // canonical lane order; the winner's clone already donated the fault
+    // *plan* (rates + stream position — a stream, like the RNG, cannot be
+    // meaningfully averaged)
+    let mut fr = crate::llm::faults::FaultReport::default();
+    for e in &lanes {
+        let f = &e.models.fault_report;
+        fr.timeouts += f.timeouts;
+        fr.rate_limits += f.rate_limits;
+        fr.transients += f.transients;
+        fr.malformed += f.malformed;
+        fr.retries += f.retries;
+        fr.fallbacks += f.fallbacks;
+        fr.forced += f.forced;
+        fr.backoff_latency_s += qgrid(f.backoff_latency_s);
+        fr.fault_latency_s += qgrid(f.fault_latency_s);
+        fr.fault_cost_usd += qgrid(f.fault_cost_usd);
+    }
+    models.fault_report = fr;
+
     let best_schedule = Arc::clone(&out[merged_best].schedule);
 
     // consume the lanes: the winner donates config, RNG, cost model (and

@@ -37,6 +37,7 @@
 use super::evalcache::{CachedEvaluator, EvalCache};
 use super::{Mcts, Node, Routing, SearchConfig};
 use crate::costmodel::{CostModel, ScoreScratch};
+use crate::llm::faults::{FaultPlan, FaultRates, FaultReport};
 use crate::llm::{CallKind, ModelSet, ModelStats};
 use crate::schedule::Schedule;
 use crate::sim::Simulator;
@@ -225,6 +226,99 @@ fn restore_model_stats(models: &mut ModelSet, v: &Json) -> Result<(), String> {
         };
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------
+// fault injection state (optional keys: a zero plan and an empty report
+// are omitted entirely, so fault-free snapshots are byte-identical to
+// snapshots written before fault injection existed)
+// ---------------------------------------------------------------------
+
+fn fault_plan_to_json(p: &FaultPlan) -> Json {
+    let mut j = Json::obj();
+    j.set(
+        "rates",
+        Json::Arr(
+            p.rates
+                .iter()
+                .map(|r| {
+                    Json::Arr(vec![
+                        f64_to_bits_json(r.timeout),
+                        f64_to_bits_json(r.rate_limit),
+                        f64_to_bits_json(r.transient),
+                        f64_to_bits_json(r.malformed),
+                    ])
+                })
+                .collect(),
+        ),
+    )
+    .set("stream", Json::Str(p.stream.to_string()))
+    .set("max_retries", p.max_retries.into())
+    .set("backoff_base_s", f64_to_bits_json(p.backoff_base_s))
+    .set("timeout_s", f64_to_bits_json(p.timeout_s));
+    j
+}
+
+fn fault_plan_from_json(v: &Json) -> Result<FaultPlan, String> {
+    let rates = v
+        .get("rates")
+        .and_then(Json::as_arr)
+        .ok_or("tree file: fault_plan missing rates")?
+        .iter()
+        .map(|r| {
+            let quad = r
+                .as_arr()
+                .filter(|a| a.len() == 4)
+                .ok_or("tree file: fault rates must be 4-element arrays".to_string())?;
+            let bit = |j: &Json| {
+                crate::util::json::f64_from_bits_json(j)
+                    .map_err(|e| format!("tree file: fault rate: {e}"))
+            };
+            Ok(FaultRates {
+                timeout: bit(&quad[0])?,
+                rate_limit: bit(&quad[1])?,
+                transient: bit(&quad[2])?,
+                malformed: bit(&quad[3])?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(FaultPlan {
+        rates,
+        stream: json_u64_str(v, "stream")?,
+        max_retries: json_usize(v, "max_retries")?,
+        backoff_base_s: json_bits_f64(v, "backoff_base_s")?,
+        timeout_s: json_bits_f64(v, "timeout_s")?,
+    })
+}
+
+fn fault_report_to_json(r: &FaultReport) -> Json {
+    let mut j = Json::obj();
+    j.set("timeouts", r.timeouts.into())
+        .set("rate_limits", r.rate_limits.into())
+        .set("transients", r.transients.into())
+        .set("malformed", r.malformed.into())
+        .set("retries", r.retries.into())
+        .set("fallbacks", r.fallbacks.into())
+        .set("forced", r.forced.into())
+        .set("backoff_latency_s", f64_to_bits_json(r.backoff_latency_s))
+        .set("fault_latency_s", f64_to_bits_json(r.fault_latency_s))
+        .set("fault_cost_usd", f64_to_bits_json(r.fault_cost_usd));
+    j
+}
+
+fn fault_report_from_json(v: &Json) -> Result<FaultReport, String> {
+    Ok(FaultReport {
+        timeouts: json_usize(v, "timeouts")?,
+        rate_limits: json_usize(v, "rate_limits")?,
+        transients: json_usize(v, "transients")?,
+        malformed: json_usize(v, "malformed")?,
+        retries: json_usize(v, "retries")?,
+        fallbacks: json_usize(v, "fallbacks")?,
+        forced: json_usize(v, "forced")?,
+        backoff_latency_s: json_bits_f64(v, "backoff_latency_s")?,
+        fault_latency_s: json_bits_f64(v, "fault_latency_s")?,
+        fault_cost_usd: json_bits_f64(v, "fault_cost_usd")?,
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -544,6 +638,14 @@ impl Mcts {
             )
             .set("cost_model", self.eval.cost.snapshot())
             .set("eval_cache", self.eval.cache.snapshot_full(self.eval.cost.salt));
+        // optional keys: omitted when inert, so fault-free snapshots are
+        // byte-identical to pre-fault-injection ones
+        if !self.models.faults.is_zero() {
+            j.set("fault_plan", fault_plan_to_json(&self.models.faults));
+        }
+        if !self.models.fault_report.is_empty() {
+            j.set("fault_report", fault_report_to_json(&self.models.fault_report));
+        }
         j
     }
 
@@ -597,6 +699,14 @@ impl Mcts {
         let cfg = cfg_from_json(v.get("cfg").ok_or("tree file: missing cfg")?)?;
         let mut models = models;
         restore_model_stats(&mut models, v.get("models").ok_or("tree file: missing models")?)?;
+        // the persisted fault schedule wins over whatever the caller's
+        // fresh model set carries: resume must continue the exact stream
+        if let Some(fp) = v.get("fault_plan") {
+            models.faults = fault_plan_from_json(fp)?;
+        }
+        if let Some(fr) = v.get("fault_report") {
+            models.fault_report = fault_report_from_json(fr)?;
+        }
 
         // ---- node arena: rebuild schedules parent-first ----------------
         let nodes_json = v

@@ -1,0 +1,152 @@
+//! Filesystem hygiene helpers shared by the persistence layers.
+//!
+//! Every atomic save in this codebase (tree snapshots, eval-cache files)
+//! writes to a pid-suffixed sibling — `<final>.tmp.<pid>` — then renames
+//! over the target. A crash between the write and the rename strands the
+//! temp file forever: the pid is gone, no writer will ever come back for
+//! it, and a directory that serves long-lived daemons slowly fills with
+//! dead bytes. [`sweep_orphan_tmp`] and [`sweep_orphan_tmp_dir`] reclaim
+//! them on startup/load, warning on stderr once per file so operators see
+//! the evidence of the crash that produced it.
+//!
+//! Only filenames matching the exact convention — a `.tmp.` infix whose
+//! suffix is all decimal digits — are touched; anything else in the
+//! directory is left alone.
+
+use std::path::Path;
+
+/// True iff `name` looks like one of our atomic-save temp files:
+/// `<stem>.tmp.<digits>`.
+fn is_tmp_name(name: &str) -> bool {
+    match name.rfind(".tmp.") {
+        Some(i) => {
+            let suffix = &name[i + ".tmp.".len()..];
+            !suffix.is_empty() && suffix.bytes().all(|b| b.is_ascii_digit())
+        }
+        None => false,
+    }
+}
+
+/// Remove orphaned `<final_path>.tmp.<pid>` siblings left behind by a
+/// writer that crashed between write and rename. Returns the number of
+/// files removed; each removal is announced with a stderr warning. I/O
+/// errors (unreadable directory, racing unlink) are swallowed — hygiene
+/// must never take the caller down.
+pub fn sweep_orphan_tmp(final_path: &str) -> usize {
+    let p = Path::new(final_path);
+    let dir = p.parent().filter(|d| !d.as_os_str().is_empty());
+    let stem = match p.file_name().and_then(|n| n.to_str()) {
+        Some(s) => s,
+        None => return 0,
+    };
+    let entries = match std::fs::read_dir(dir.unwrap_or(Path::new("."))) {
+        Ok(e) => e,
+        Err(_) => return 0,
+    };
+    let mut removed = 0;
+    let mut names: Vec<String> = entries
+        .flatten()
+        .filter_map(|e| e.file_name().to_str().map(String::from))
+        .filter(|n| n.starts_with(stem) && is_tmp_name(n) && n[stem.len()..].starts_with(".tmp."))
+        .collect();
+    names.sort();
+    for name in names {
+        let path = dir.map_or_else(|| Path::new(&name).to_path_buf(), |d| d.join(&name));
+        if std::fs::remove_file(&path).is_ok() {
+            eprintln!(
+                "warning: removed orphaned checkpoint temp file {} (writer died mid-save)",
+                path.display()
+            );
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// [`sweep_orphan_tmp`] over a whole directory: every `*.tmp.<digits>`
+/// file is an orphan by definition (live writers rename within the same
+/// call that created them). Used by registry startup, where the set of
+/// final paths isn't known until requests arrive.
+pub fn sweep_orphan_tmp_dir(dir: &str) -> usize {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return 0,
+    };
+    let mut removed = 0;
+    let mut names: Vec<String> = entries
+        .flatten()
+        .filter_map(|e| e.file_name().to_str().map(String::from))
+        .filter(|n| is_tmp_name(n))
+        .collect();
+    names.sort();
+    for name in names {
+        let path = Path::new(dir).join(&name);
+        if std::fs::remove_file(&path).is_ok() {
+            eprintln!(
+                "warning: removed orphaned checkpoint temp file {} (writer died mid-save)",
+                path.display()
+            );
+            removed += 1;
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("fsx_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn tmp_name_convention() {
+        assert!(is_tmp_name("tree.json.tmp.1234"));
+        assert!(is_tmp_name("cache.tmp.7"));
+        assert!(!is_tmp_name("tree.json"));
+        assert!(!is_tmp_name("tree.json.tmp."));
+        assert!(!is_tmp_name("tree.json.tmp.12a4"));
+        assert!(!is_tmp_name("tmp.1234.json"));
+    }
+
+    #[test]
+    fn sweeps_only_matching_siblings() {
+        let d = tdir("sib");
+        let fin = format!("{d}/tree.json");
+        std::fs::write(&fin, "{}").unwrap();
+        std::fs::write(format!("{d}/tree.json.tmp.999"), "junk").unwrap();
+        std::fs::write(format!("{d}/tree.json.tmp.abc"), "keep").unwrap();
+        std::fs::write(format!("{d}/other.json.tmp.999"), "keep").unwrap();
+        assert_eq!(sweep_orphan_tmp(&fin), 1);
+        assert!(std::path::Path::new(&fin).exists());
+        assert!(!std::path::Path::new(&format!("{d}/tree.json.tmp.999")).exists());
+        assert!(std::path::Path::new(&format!("{d}/tree.json.tmp.abc")).exists());
+        assert!(std::path::Path::new(&format!("{d}/other.json.tmp.999")).exists());
+        assert_eq!(sweep_orphan_tmp(&fin), 0, "second sweep finds nothing");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn dir_sweep_reclaims_all_orphans() {
+        let d = tdir("dir");
+        std::fs::write(format!("{d}/a.json"), "{}").unwrap();
+        std::fs::write(format!("{d}/a.json.tmp.11"), "x").unwrap();
+        std::fs::write(format!("{d}/b.json.tmp.22"), "y").unwrap();
+        std::fs::write(format!("{d}/notes.txt"), "z").unwrap();
+        assert_eq!(sweep_orphan_tmp_dir(&d), 2);
+        assert!(std::path::Path::new(&format!("{d}/a.json")).exists());
+        assert!(std::path::Path::new(&format!("{d}/notes.txt")).exists());
+        assert_eq!(sweep_orphan_tmp_dir(&d), 0);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_dir_is_harmless() {
+        assert_eq!(sweep_orphan_tmp_dir("/nonexistent/definitely/not/here"), 0);
+        assert_eq!(sweep_orphan_tmp("/nonexistent/definitely/not/here/t.json"), 0);
+    }
+}

@@ -11,6 +11,7 @@
 
 pub mod error;
 pub mod fnv;
+pub mod fsx;
 pub mod rng;
 pub mod json;
 pub mod tomlmini;

@@ -647,7 +647,7 @@ fn prop_tree_roundtrip_preserves_search() {
     use litecoop::sim::Simulator;
 
     fn diff(a: &SearchResult, b: &SearchResult) -> Result<(), String> {
-        let checks: [(&str, bool); 13] = [
+        let checks: [(&str, bool); 14] = [
             ("workload", a.workload == b.workload),
             ("best_speedup", a.best_speedup.to_bits() == b.best_speedup.to_bits()),
             ("best_latency", a.best_latency_s.to_bits() == b.best_latency_s.to_bits()),
@@ -664,6 +664,7 @@ fn prop_tree_roundtrip_preserves_search() {
             ("call_counts", a.call_counts == b.call_counts),
             ("eval_cache", a.eval_cache == b.eval_cache),
             ("lint_rejects", a.lint_rejects == b.lint_rejects),
+            ("faults", a.faults == b.faults),
         ];
         if let Some((field, _)) = checks.iter().find(|(_, ok)| !ok) {
             return Err(format!("field '{field}' diverged after resume"));
@@ -729,6 +730,100 @@ fn prop_tree_roundtrip_preserves_search() {
         diff(&uninterrupted, &continued).map_err(|e| {
             format!("{name} (k={k}, budget={budget}, threads={threads}, gpu={gpu}): {e}")
         })
+    });
+}
+
+#[test]
+fn prop_zero_rate_fault_plan_is_bit_identical_passthrough() {
+    // the passthrough half of the fault-injection determinism contract
+    // (`litecoop::llm::faults`): an installed FaultPlan whose rates are
+    // all zero must be observationally ABSENT — for random scenarios,
+    // budgets, seeds, rosters, targets, and engines (serial and
+    // tree-parallel), the search with a zero-rate plan produces a
+    // byte-identical snapshot and a bit-identical result to the search
+    // with no plan at all. Zero-rate models never draw from the fault
+    // stream, so not even the plan's private RNG position can leak into
+    // the search; the only allowed difference is the plan object itself
+    // (which the snapshot omits when `is_zero()`).
+    use litecoop::llm::faults::{FaultPlan, FaultRates};
+    use litecoop::llm::registry::paper_config;
+    use litecoop::llm::ModelSet;
+    use litecoop::mcts::{Mcts, SearchConfig};
+    use litecoop::sim::Simulator;
+
+    check("zero-rate-fault-passthrough", 200, 0xFA17_0001, |rng| {
+        let spec = random_scenario(rng);
+        let name = spec.name();
+        let w = spec.lower().map_err(|e| format!("{name}: lower: {e}"))?;
+        let root = Schedule::initial(Arc::new(w));
+        let gpu = rng.chance(0.3);
+        let target = if gpu { Target::Gpu } else { Target::Cpu };
+        let budget = 5 + rng.below(20);
+        let threads = if rng.chance(0.25) { 2 } else { 1 };
+        let n_llms = 2 + rng.below(3);
+        let seed = rng.next_u64();
+        let plan_seed = rng.next_u64();
+        let cfg = SearchConfig {
+            budget,
+            seed,
+            checkpoints: vec![budget],
+            ..SearchConfig::default()
+        };
+        // a zero-rate plan with a live, nonzero seed: the stream is armed
+        // but must never be drawn from
+        let zero_plan = FaultPlan::uniform(n_llms, FaultRates::uniform(0.0), plan_seed);
+        if !zero_plan.is_zero() {
+            return Err(format!("{name}: uniform(0.0) plan is not zero"));
+        }
+        let engine = |plan: Option<FaultPlan>| {
+            let mut models = ModelSet::new(paper_config(n_llms, "gpt-5.2"));
+            if let Some(p) = plan {
+                models.set_fault_plan(p);
+            }
+            Mcts::new(cfg.clone(), models, Simulator::new(target), root.clone())
+        };
+        // `run` consumes the engine, so snapshots come from `run_until`
+        // engines and results from separate (deterministic) `run` calls
+        let snap_of = |plan: Option<FaultPlan>| {
+            let done = if threads > 1 {
+                engine(plan).run_parallel_until(threads, budget)
+            } else {
+                engine(plan).run_until(budget)
+            };
+            format!("{}", done.snapshot())
+        };
+        let result_of = |plan: Option<FaultPlan>| {
+            if threads > 1 {
+                engine(plan).run_parallel(&name, threads)
+            } else {
+                engine(plan).run(&name)
+            }
+        };
+        let snap_clean = snap_of(None);
+        let snap_plan = snap_of(Some(zero_plan.clone()));
+        let r_clean = result_of(None);
+        let r_plan = result_of(Some(zero_plan));
+        if snap_clean != snap_plan {
+            return Err(format!(
+                "{name}: zero-rate plan perturbed the snapshot \
+                 (budget={budget}, threads={threads}, plan_seed={plan_seed:#x})"
+            ));
+        }
+        if r_clean.best_speedup.to_bits() != r_plan.best_speedup.to_bits()
+            || r_clean.compile_time_s.to_bits() != r_plan.compile_time_s.to_bits()
+            || r_clean.api_cost_usd.to_bits() != r_plan.api_cost_usd.to_bits()
+            || r_clean.call_counts != r_plan.call_counts
+            || r_clean.n_errors != r_plan.n_errors
+        {
+            return Err(format!("{name}: zero-rate plan perturbed the result"));
+        }
+        if !r_plan.faults.is_empty() {
+            return Err(format!(
+                "{name}: zero-rate plan reported injected faults: {}",
+                r_plan.faults.summary()
+            ));
+        }
+        Ok(())
     });
 }
 
